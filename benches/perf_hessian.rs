@@ -1,0 +1,45 @@
+//! Perf: the Hessian contraction hot path (Phase 1). Compares the L1 Pallas
+//! kernel artifact (via PJRT, including transfer cost) against the CPU
+//! `Mat::gram` fallback across the layer shapes of every config.
+//!
+//! Run: cargo bench --bench perf_hessian
+
+use oac::experiments::artifacts_root;
+use oac::model::ModelMeta;
+use oac::runtime::{literal_to_mat, Runtime};
+use oac::tensor::Mat;
+use oac::util::bench::{bench, black_box};
+use oac::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new()?;
+    let kernels = ModelMeta::load_kernels(artifacts_root())?;
+    let mut rng = Rng::new(0);
+
+    println!("\n== Hessian contraction: H += G^T G (GFLOP/s, higher better) ==");
+    for (&(m, n), rel) in &kernels.hessian_accum {
+        let mut g = Mat::zeros(m, n);
+        rng.fill_normal(&mut g.data, 1.0);
+        let h = Mat::zeros(n, n);
+        let flops = 2.0 * m as f64 * n as f64 * n as f64;
+
+        let r_cpu = bench(&format!("cpu_gram_{m}x{n}"), || {
+            black_box(g.gram());
+        });
+
+        let exe = rt.load(artifacts_root().join(rel))?;
+        let r_kernel = bench(&format!("pallas_kernel_{m}x{n}"), || {
+            let gb = rt.upload_mat(&g).unwrap();
+            let hb = rt.upload_mat(&h).unwrap();
+            let outs = rt.run_b(&exe, &[&gb, &hb]).unwrap();
+            black_box(literal_to_mat(&outs[0]).unwrap());
+        });
+        println!(
+            "  -> {m}x{n}: cpu {:.2} GFLOP/s, kernel(+transfer) {:.2} GFLOP/s, speedup {:.2}x\n",
+            flops / r_cpu.mean_ns,
+            flops / r_kernel.mean_ns,
+            r_cpu.mean_ns / r_kernel.mean_ns
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Perf: the OPTQ column loop + Hessian preparation (Phase 2 hot path).
+//! Measures per-layer-shape cost of `prepare` (Cholesky/inverse) and
+//! `optq_core`, which dominate quantization wall-clock.
+//!
+//! Run: cargo bench --bench perf_optq
+
+use oac::calib::optq::{optq_core, GroupMode, OutlierPolicy};
+use oac::hessian::{prepare, Hessian, HessianKind, Reduction};
+use oac::tensor::Mat;
+use oac::util::bench::{bench, black_box, BenchConfig};
+use oac::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let shapes = [(128usize, 128usize), (512, 128), (128, 512), (256, 256), (1024, 256), (256, 1024)];
+    let cfg = BenchConfig { warmup_iters: 1, min_iters: 5, max_iters: 30, target_time: std::time::Duration::from_secs(2) };
+
+    for (rows, cols) in shapes {
+        let mut w = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.5);
+        let mut h = Hessian::zeros(cols, HessianKind::Agnostic);
+        for _ in 0..2 {
+            let mut x = Mat::zeros(cols.min(256), cols);
+            rng.fill_normal(&mut x.data, 1.0);
+            h.accumulate(&x);
+        }
+        let damped = h.regularized(0.1, Reduction::Sum);
+
+        let mut prep = None;
+        oac::util::bench::bench_cfg(&format!("prepare_hessian_{cols}"), cfg, &mut || {
+            prep = Some(prepare(damped.clone()).unwrap());
+        });
+        let prep = prep.unwrap();
+
+        let r = oac::util::bench::bench_cfg(&format!("optq_core_{rows}x{cols}"), cfg, &mut || {
+            black_box(optq_core(
+                w.clone(),
+                &prep,
+                GroupMode::Dynamic { bits: 2, group_size: 16 },
+                &OutlierPolicy::disabled(),
+            ));
+        });
+        // Update work: rows * cols^2 / 2 MACs.
+        let flops = rows as f64 * (cols as f64).powi(2);
+        println!(
+            "  -> {rows}x{cols}: {:.2} GFLOP/s effective\n",
+            flops / r.mean_ns
+        );
+    }
+
+    // Outlier policy overhead.
+    let (rows, cols) = (256, 256);
+    let mut w = Mat::zeros(rows, cols);
+    rng.fill_normal(&mut w.data, 0.5);
+    let mut h = Hessian::zeros(cols, HessianKind::Agnostic);
+    let mut x = Mat::zeros(256, cols);
+    rng.fill_normal(&mut x.data, 1.0);
+    h.accumulate(&x);
+    let prep = prepare(h.regularized(0.1, Reduction::Sum)).unwrap();
+    bench("optq_core_256x256_with_outliers", || {
+        black_box(optq_core(
+            w.clone(),
+            &prep,
+            GroupMode::Dynamic { bits: 2, group_size: 16 },
+            &OutlierPolicy::with_threshold(3.5),
+        ));
+    });
+}

@@ -1,0 +1,63 @@
+//! Perf: quantization primitives — CPU fused qdq vs the L1 Pallas qdq
+//! artifact (incl. transfer), bit packing, binarization.
+//!
+//! Run: cargo bench --bench perf_quant
+
+use oac::experiments::artifacts_root;
+use oac::model::ModelMeta;
+use oac::quant::{binary, packing, uniform};
+use oac::runtime::{literal_to_mat, Runtime};
+use oac::tensor::Mat;
+use oac::util::bench::{bench, black_box};
+use oac::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(0);
+
+    println!("\n== qdq: CPU vs Pallas artifact (GB/s of weights processed) ==");
+    let rt = Runtime::new()?;
+    let kernels = ModelMeta::load_kernels(artifacts_root())?;
+    for (&(rows, cols, group, bits), rel) in &kernels.qdq {
+        let mut w = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.5);
+        let bytes = (rows * cols * 4) as f64;
+
+        let r_cpu = bench(&format!("cpu_qdq_{rows}x{cols}_g{group}b{bits}"), || {
+            black_box(uniform::qdq_mat(&w, group, bits));
+        });
+        let exe = rt.load(artifacts_root().join(rel))?;
+        let r_k = bench(&format!("pallas_qdq_{rows}x{cols}_g{group}b{bits}"), || {
+            let wb = rt.upload_mat(&w).unwrap();
+            let outs = rt.run_b(&exe, &[&wb]).unwrap();
+            black_box(literal_to_mat(&outs[0]).unwrap());
+        });
+        println!(
+            "  -> cpu {:.2} GB/s, kernel {:.2} GB/s\n",
+            bytes / r_cpu.mean_ns,
+            bytes / r_k.mean_ns
+        );
+    }
+
+    println!("== packing ==");
+    let codes: Vec<u8> = (0..1 << 20).map(|_| rng.below(4) as u8).collect();
+    let r = bench("pack_2bit_1M", || {
+        black_box(packing::pack(&codes, 2));
+    });
+    println!("  -> {:.2} Melem/s\n", codes.len() as f64 / r.mean_ns * 1e3);
+    let packed = packing::pack(&codes, 2);
+    bench("unpack_2bit_1M", || {
+        black_box(packing::unpack(&packed, 2, codes.len()));
+    });
+
+    println!("\n== binarization ==");
+    let mut w = Mat::zeros(256, 1024);
+    rng.fill_normal(&mut w.data, 1.0);
+    bench("bell_binarize_256x1024", || {
+        black_box(binary::bell_binarize_mat(&w));
+    });
+    let row: Vec<f32> = w.row(0).to_vec();
+    bench("residual_binarize_row_1024", || {
+        black_box(binary::residual_binarize(&row));
+    });
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Perf: PJRT runtime path — artifact execute latency for the model
+//! computations (fwd / loss / grads / layer_inputs) and upload bandwidth.
+//! These bound Phase-1 throughput and evaluation speed.
+//!
+//! Run: cargo bench --bench perf_runtime
+
+use oac::data::{Flavor, Splits};
+use oac::eval::DeviceWeights;
+use oac::experiments::artifacts_root;
+use oac::model::{ModelMeta, WeightStore};
+use oac::runtime::Runtime;
+use oac::util::bench::{bench, black_box};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new()?;
+    for config in ["tiny", "small"] {
+        let Ok(meta) = ModelMeta::load(artifacts_root(), config) else {
+            continue;
+        };
+        let ws = WeightStore::init_random(&meta, 0);
+        let splits = Splits::new(meta.vocab, Flavor::C4Analog, 0);
+        let tokens = splits.calibration(1, meta.seq).pop().unwrap();
+
+        println!("\n== {config}: artifact execution latency ==");
+        let dw = DeviceWeights::upload(&rt, &ws)?;
+        for art in ["model_fwd", "model_loss", "model_grads", "layer_inputs"] {
+            let exe = rt.load(meta.artifact_path(art)?)?;
+            bench(&format!("{config}/{art}"), || {
+                let tok = rt.upload_i32(&tokens, &[meta.seq]).unwrap();
+                black_box(rt.run_b(&exe, &dw.args(&tok)).unwrap());
+            });
+        }
+
+        // Upload bandwidth: full weight set.
+        let bytes: usize = ws.entries.iter().map(|e| e.data.len() * 4).sum();
+        let r = bench(&format!("{config}/upload_all_weights"), || {
+            black_box(DeviceWeights::upload(&rt, &ws).unwrap());
+        });
+        println!(
+            "  -> weights {:.1} MB, upload {:.2} GB/s\n",
+            bytes as f64 / 1e6,
+            bytes as f64 / r.mean_ns
+        );
+    }
+    let stats = rt.stats.borrow();
+    println!(
+        "runtime totals: {} executions, {:.1} MB uploaded, {:.2}s exec time, {:.2}s compile",
+        stats.executions,
+        stats.upload_bytes as f64 / 1e6,
+        stats.execute_secs,
+        stats.compile_secs
+    );
+    Ok(())
+}

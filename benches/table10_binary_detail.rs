@@ -1,0 +1,57 @@
+//! Paper Table 10 (Appendix H): binary PTQ, detailed per-task breakdown —
+//! SpQR (misapplied at 1-bit, which the paper shows collapses), BiLLM, and
+//! OAC_BiLLM.
+//!
+//! Run: cargo bench --bench table10_binary_detail
+
+use oac::calib::{Backend, Method};
+use oac::experiments::{Workbench, WorkbenchConfig};
+use oac::report::{fmt_bits, fmt_ppl, Table};
+
+fn main() -> anyhow::Result<()> {
+    let config = std::env::var("OAC_BENCH_CONFIGS")
+        .unwrap_or_else(|_| "tiny".into())
+        .split_whitespace()
+        .next()
+        .unwrap()
+        .to_string();
+    let wb = Workbench::new(WorkbenchConfig::new(&config))?;
+
+    let headers = [
+        "Method", "Avg Bits", "C4↓", "WikiText2↓",
+        "RandDistract↑", "WrongContext↑", "NearMiss↑", "Average↑",
+    ];
+    let mut table = Table::new(
+        format!("Table 10 analog — binary PTQ detail on `{config}`"),
+        &headers,
+    );
+    let detail_row = |name: &str, bits: f64, er: &oac::eval::EvalReport| -> Vec<String> {
+        let mut row = vec![
+            name.to_string(),
+            fmt_bits(bits),
+            fmt_ppl(er.ppl_in_domain),
+            fmt_ppl(er.ppl_shifted),
+        ];
+        for (_, acc) in &er.tasks {
+            row.push(format!("{:.2}", 100.0 * acc));
+        }
+        row.push(format!("{:.2}", er.task_avg()));
+        row
+    };
+
+    let base = wb.eval_baseline()?;
+    table.row(detail_row("Baseline", 32.0, &base));
+    // SpQR at 1 bit: the paper's Table 10 keeps it "for completeness" and it
+    // collapses — uniform grids cannot binarize.
+    for (method, bits) in [
+        (Method::baseline(Backend::SpQR), 1),
+        (Method::baseline(Backend::BiLLM), 1),
+        (Method::oac(Backend::BiLLM), 1),
+    ] {
+        let (qr, er, _) = wb.run_tuned(method, bits)?;
+        let label = if method.backend == Backend::SpQR { "SpQR(1b)" } else { &qr.method };
+        table.row(detail_row(label, qr.avg_bits, &er));
+    }
+    table.print();
+    Ok(())
+}

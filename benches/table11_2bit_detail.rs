@@ -1,0 +1,60 @@
+//! Paper Table 11 (Appendix H): 2-bit OPT-family detail — per-task accuracy
+//! plus the PTB* split. Our OPT-family analog: the C4Analog corpus flavour
+//! (OPT models calibrate on C4 in the paper).
+//!
+//! Run: cargo bench --bench table11_2bit_detail
+
+use oac::calib::{Backend, Method};
+use oac::experiments::{Workbench, WorkbenchConfig};
+use oac::report::{fmt_bits, fmt_ppl, Table};
+
+fn main() -> anyhow::Result<()> {
+    let config = std::env::var("OAC_BENCH_CONFIGS")
+        .unwrap_or_else(|_| "tiny".into())
+        .split_whitespace()
+        .next()
+        .unwrap()
+        .to_string();
+    let mut wcfg = WorkbenchConfig::new(&config);
+    wcfg.flavor = oac::data::Flavor::C4Analog;
+    wcfg.eval.with_far_split = true; // PTB* column
+    let wb = Workbench::new(wcfg)?;
+
+    let headers = [
+        "Method", "Avg Bits", "C4↓", "WikiText2↓", "PTB↓",
+        "RandDistract↑", "WrongContext↑", "NearMiss↑", "Average↑",
+    ];
+    let mut table = Table::new(
+        format!("Table 11 analog — 2-bit OPT-family detail on `{config}` (C4* calib)"),
+        &headers,
+    );
+    let detail_row = |name: &str, bits: f64, er: &oac::eval::EvalReport| -> Vec<String> {
+        let mut row = vec![
+            name.to_string(),
+            fmt_bits(bits),
+            fmt_ppl(er.ppl_in_domain),
+            fmt_ppl(er.ppl_shifted),
+            fmt_ppl(er.ppl_far.unwrap_or(f64::NAN)),
+        ];
+        for (_, acc) in &er.tasks {
+            row.push(format!("{:.2}", 100.0 * acc));
+        }
+        row.push(format!("{:.2}", er.task_avg()));
+        row
+    };
+
+    table.row(detail_row("Baseline", 32.0, &wb.eval_baseline()?));
+    for method in [
+        Method::baseline(Backend::Rtn),
+        Method::baseline(Backend::Optq),
+        Method::baseline(Backend::OmniQuant),
+        Method::baseline(Backend::Quip),
+        Method::baseline(Backend::SpQR),
+        Method::oac(Backend::SpQR),
+    ] {
+        let (qr, er, _) = wb.run_tuned(method, 2)?;
+        table.row(detail_row(&qr.method, qr.avg_bits, &er));
+    }
+    table.print();
+    Ok(())
+}

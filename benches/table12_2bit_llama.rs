@@ -1,0 +1,57 @@
+//! Paper Table 12 (Appendix H): 2-bit LLaMa-family detail. Our LLaMa-family
+//! analog: the RedPajamaAnalog corpus flavour (LLaMa models calibrate on
+//! RedPajama in the paper) on the larger `small` config.
+//!
+//! Run: cargo bench --bench table12_2bit_llama
+
+use oac::calib::{Backend, Method};
+use oac::experiments::{Workbench, WorkbenchConfig};
+use oac::report::{fmt_bits, fmt_ppl, Table};
+
+fn main() -> anyhow::Result<()> {
+    let config = std::env::var("OAC_BENCH_CONFIGS")
+        .unwrap_or_else(|_| "tiny".into())
+        .split_whitespace()
+        .next()
+        .unwrap()
+        .to_string();
+    let mut wcfg = WorkbenchConfig::new(&config);
+    wcfg.flavor = oac::data::Flavor::RedPajamaAnalog;
+    let wb = Workbench::new(wcfg)?;
+
+    let headers = [
+        "Method", "Avg Bits", "C4↓", "WikiText2↓",
+        "RandDistract↑", "WrongContext↑", "NearMiss↑", "Average↑",
+    ];
+    let mut table = Table::new(
+        format!("Table 12 analog — 2-bit LLaMa-family detail on `{config}` (RedPajama* calib)"),
+        &headers,
+    );
+    let detail_row = |name: &str, bits: f64, er: &oac::eval::EvalReport| -> Vec<String> {
+        let mut row = vec![
+            name.to_string(),
+            fmt_bits(bits),
+            fmt_ppl(er.ppl_in_domain),
+            fmt_ppl(er.ppl_shifted),
+        ];
+        for (_, acc) in &er.tasks {
+            row.push(format!("{:.2}", 100.0 * acc));
+        }
+        row.push(format!("{:.2}", er.task_avg()));
+        row
+    };
+
+    table.row(detail_row("Baseline", 32.0, &wb.eval_baseline()?));
+    for method in [
+        Method::baseline(Backend::Rtn),
+        Method::baseline(Backend::Optq),
+        Method::baseline(Backend::Quip),
+        Method::baseline(Backend::SpQR),
+        Method::oac(Backend::SpQR),
+    ] {
+        let (qr, er, _) = wb.run_tuned(method, 2)?;
+        table.row(detail_row(&qr.method, qr.avg_bits, &er));
+    }
+    table.print();
+    Ok(())
+}

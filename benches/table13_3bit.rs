@@ -1,0 +1,36 @@
+//! Paper Table 13 (Appendix H): 3-bit PTQ — RTN / OPTQ / OmniQuant / QuIP /
+//! SqueezeLLM / SpQR / OAC. The reproduced shape: at 3 bits all calibrated
+//! methods bunch up near the baseline and OAC's margin narrows (the paper's
+//! point that output-adaptivity matters most at extreme compression).
+//!
+//! Run: cargo bench --bench table13_3bit
+
+use oac::calib::{Backend, Method};
+use oac::experiments::{baseline_row, method_row, Workbench, WorkbenchConfig, ROW_HEADERS};
+use oac::report::Table;
+
+fn main() -> anyhow::Result<()> {
+    let configs = std::env::var("OAC_BENCH_CONFIGS").unwrap_or_else(|_| "tiny".into());
+    for config in configs.split_whitespace() {
+        let wb = Workbench::new(WorkbenchConfig::new(config))?;
+        let mut table = Table::new(
+            format!("Table 13 analog — 3-bit PTQ on `{config}`"),
+            &ROW_HEADERS,
+        );
+        table.row(baseline_row(&wb.eval_baseline()?));
+        for method in [
+            Method::baseline(Backend::Rtn),
+            Method::baseline(Backend::Optq),
+            Method::baseline(Backend::OmniQuant),
+            Method::baseline(Backend::Quip),
+            Method::baseline(Backend::Squeeze),
+            Method::baseline(Backend::SpQR),
+            Method::oac(Backend::SpQR),
+        ] {
+            let (qr, er, _) = wb.run_tuned(method, 3)?;
+            table.row(method_row(&qr.method, qr.avg_bits, &er));
+        }
+        table.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,34 @@
+//! Paper Table 14 (Appendix I): OAC plugged into each Hessian-based
+//! calibration backend — OPTQ, QuIP, SpQR (2-bit) and BiLLM (binary). The
+//! reproduced claim: the output-adaptive Hessian improves *every* backend.
+//!
+//! Run: cargo bench --bench table14_backends
+
+use oac::calib::{Backend, Method};
+use oac::experiments::{method_row, Workbench, WorkbenchConfig, ROW_HEADERS};
+use oac::report::Table;
+
+fn main() -> anyhow::Result<()> {
+    let configs = std::env::var("OAC_BENCH_CONFIGS").unwrap_or_else(|_| "tiny".into());
+    for config in configs.split_whitespace() {
+        let wb = Workbench::new(WorkbenchConfig::new(config))?;
+        let mut table = Table::new(
+            format!("Table 14 analog — OAC × calibration backend on `{config}`"),
+            &ROW_HEADERS,
+        );
+        for (backend, bits) in [
+            (Backend::Optq, 2),
+            (Backend::Quip, 2),
+            (Backend::SpQR, 2),
+            (Backend::BiLLM, 1),
+        ] {
+            for method in [Method::baseline(backend), Method::oac(backend)] {
+                let (qr, er, alpha) = wb.run_tuned(method, bits)?;
+                eprintln!("  {:<10} α={alpha}", qr.method);
+                table.row(method_row(&qr.method, qr.avg_bits, &er));
+            }
+        }
+        table.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Paper Table 1: 2-bit PTQ across model sizes — RTN / OPTQ / OmniQuant /
+//! QuIP / SpQR / OAC, perplexity (C4*, WikiText2*) + LMEH* average.
+//!
+//! Expected shape (paper): RTN collapses; OPTQ poor; OmniQuant/QuIP mid;
+//! SpQR best baseline; OAC ≤ SpQR. Hessian-based methods run with the
+//! paper's α-tuning protocol.
+//!
+//! Run: cargo bench --bench table1_2bit   (configs via OAC_BENCH_CONFIGS)
+
+use oac::calib::{Backend, Method};
+use oac::experiments::{baseline_row, method_row, Workbench, WorkbenchConfig, ROW_HEADERS};
+use oac::report::Table;
+
+fn main() -> anyhow::Result<()> {
+    let configs = std::env::var("OAC_BENCH_CONFIGS").unwrap_or_else(|_| "tiny small".into());
+    for config in configs.split_whitespace() {
+        let wb = Workbench::new(WorkbenchConfig::new(config))?;
+        let mut table = Table::new(
+            format!("Table 1 analog — 2-bit PTQ on `{config}`"),
+            &ROW_HEADERS,
+        );
+        table.row(baseline_row(&wb.eval_baseline()?));
+        for method in [
+            Method::baseline(Backend::Rtn),
+            Method::baseline(Backend::Optq),
+            Method::baseline(Backend::OmniQuant),
+            Method::baseline(Backend::Quip),
+            Method::baseline(Backend::SpQR),
+            Method::oac(Backend::SpQR),
+        ] {
+            let t = std::time::Instant::now();
+            let (qr, er, alpha) = wb.run_tuned(method, 2)?;
+            eprintln!(
+                "  {:<10} done in {:.1}s (α={alpha})",
+                qr.method,
+                t.elapsed().as_secs_f64()
+            );
+            table.row(method_row(&qr.method, qr.avg_bits, &er));
+        }
+        table.print();
+    }
+    Ok(())
+}

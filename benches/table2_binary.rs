@@ -1,0 +1,27 @@
+//! Paper Table 2: binary (1-bit) PTQ — BiLLM vs OAC (OAC_BiLLM), perplexity
+//! + LMEH*. Expected shape: OAC_BiLLM < BiLLM by a clear margin.
+//!
+//! Run: cargo bench --bench table2_binary
+
+use oac::calib::{Backend, Method};
+use oac::experiments::{baseline_row, method_row, Workbench, WorkbenchConfig, ROW_HEADERS};
+use oac::report::Table;
+
+fn main() -> anyhow::Result<()> {
+    let configs = std::env::var("OAC_BENCH_CONFIGS").unwrap_or_else(|_| "tiny small".into());
+    for config in configs.split_whitespace() {
+        let wb = Workbench::new(WorkbenchConfig::new(config))?;
+        let mut table = Table::new(
+            format!("Table 2 analog — binary PTQ on `{config}`"),
+            &ROW_HEADERS,
+        );
+        table.row(baseline_row(&wb.eval_baseline()?));
+        for method in [Method::baseline(Backend::BiLLM), Method::oac(Backend::BiLLM)] {
+            let (qr, er, alpha) = wb.run_tuned(method, 1)?;
+            eprintln!("  {:<10} α={alpha}", qr.method);
+            table.row(method_row(&qr.method, qr.avg_bits, &er));
+        }
+        table.print();
+    }
+    Ok(())
+}

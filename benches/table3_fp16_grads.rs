@@ -1,0 +1,63 @@
+//! Paper Table 3 (Appendix C.1): FP32 vs FP16 gradient computation for the
+//! output-adaptive Hessian — wall-clock, peak memory, and WikiText2*
+//! perplexity (mean ± std over the loss-scale sweep {16,32,128,256,512,1024}).
+//!
+//! Run: cargo bench --bench table3_fp16_grads
+
+use oac::calib::{Backend, Method};
+use oac::experiments::{Workbench, WorkbenchConfig};
+use oac::report::{fmt_ppl, Table};
+use oac::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let config = std::env::var("OAC_BENCH_CONFIGS")
+        .unwrap_or_else(|_| "tiny".into())
+        .split_whitespace()
+        .next()
+        .unwrap()
+        .to_string();
+    let wb = Workbench::new(WorkbenchConfig::new(&config))?;
+    let method = Method::oac(Backend::SpQR);
+
+    let mut table = Table::new(
+        format!("Table 3 analog — gradient precision for OAC on `{config}`"),
+        &["Grad Type", "Time (s)", "Peak Mem (MB)", "WikiText2* ppl"],
+    );
+
+    // FP32 reference.
+    let t = std::time::Instant::now();
+    let (qr, er) = wb.run(&wb.pipeline(method, 2))?;
+    table.row(vec![
+        "FP32".into(),
+        format!("{:.1}", t.elapsed().as_secs_f64()),
+        format!("{:.1}", qr.peak_mem_bytes as f64 / 1e6),
+        fmt_ppl(er.ppl_shifted),
+    ]);
+
+    // FP16 with the paper's loss-scale sweep.
+    let scales = [16.0f32, 32.0, 128.0, 256.0, 512.0, 1024.0];
+    let mut ppls = Vec::new();
+    let mut times = Vec::new();
+    let mut mem = 0.0f64;
+    for &s in &scales {
+        let t = std::time::Instant::now();
+        let (qr, er) = wb.run_f16(method, 2, s)?;
+        times.push(t.elapsed().as_secs_f64());
+        // FP16 grads would halve the gradient-matrix footprint.
+        mem = qr.peak_mem_bytes as f64 / 1e6;
+        ppls.push(er.ppl_shifted);
+        eprintln!("  scale {s}: ppl {:.3}", er.ppl_shifted);
+    }
+    table.row(vec![
+        "FP16 (scales 16..1024)".into(),
+        format!("{:.1}", stats::mean(&times)),
+        format!("{mem:.1}"),
+        format!("{:.2} ±{:.3}", stats::mean(&ppls), stats::stddev(&ppls)),
+    ]);
+    table.print();
+    println!("(paper: FP16 cuts time ~64% / memory ~30% at equal perplexity;");
+    println!(" here the F16 emulation adds a round-trip pass, so the time");
+    println!(" column shows parity instead — the perplexity robustness to");
+    println!(" loss scale is the reproduced claim.)");
+    Ok(())
+}

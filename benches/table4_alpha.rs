@@ -1,0 +1,48 @@
+//! Paper Table 4 (Appendix C.2): WikiText2* perplexity as a function of the
+//! Hessian regularization α ∈ {0.001, 0.01, 0.1, 1} for SpQR / OAC (2-bit)
+//! and BiLLM / OAC_BiLLM (binary).
+//!
+//! Run: cargo bench --bench table4_alpha
+
+use oac::calib::{Backend, Method};
+use oac::coordinator::run_pipeline;
+use oac::eval::evaluate;
+use oac::experiments::{Workbench, WorkbenchConfig};
+use oac::report::{fmt_ppl, Table};
+
+fn main() -> anyhow::Result<()> {
+    let config = std::env::var("OAC_BENCH_CONFIGS")
+        .unwrap_or_else(|_| "tiny".into())
+        .split_whitespace()
+        .next()
+        .unwrap()
+        .to_string();
+    let wb = Workbench::new(WorkbenchConfig::new(&config))?;
+    let alphas = [0.001f32, 0.01, 0.1, 1.0];
+
+    let mut table = Table::new(
+        format!("Table 4 analog — α sweep on `{config}` (WikiText2* ppl)"),
+        &["Method", "α=0.001", "α=0.01", "α=0.1", "α=1"],
+    );
+    for (method, bits) in [
+        (Method::baseline(Backend::SpQR), 2),
+        (Method::oac(Backend::SpQR), 2),
+        (Method::baseline(Backend::BiLLM), 1),
+        (Method::oac(Backend::BiLLM), 1),
+    ] {
+        let mut row = vec![format!("{} ({bits}-bit)", method.name())];
+        for alpha in alphas {
+            let mut p = wb.pipeline(method, bits);
+            p.calib.alpha = alpha;
+            let mut ws = wb.weights.clone();
+            let calib = wb.splits.calibration(p.n_calib, wb.meta.seq);
+            run_pipeline(&wb.rt, &wb.meta, &mut ws, &calib, &p)?;
+            let er = evaluate(&wb.rt, &wb.meta, &ws, &wb.splits, &wb.cfg.eval)?;
+            row.push(fmt_ppl(er.ppl_shifted));
+            eprintln!("  {} α={alpha}: {:.3}", method.name(), er.ppl_shifted);
+        }
+        table.row(row);
+    }
+    table.print();
+    Ok(())
+}

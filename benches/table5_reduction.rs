@@ -1,0 +1,35 @@
+//! Paper Table 5 (Appendix C.3): Hessian reduction over calibration samples
+//! — Mean (eq. 14) vs Sum (eq. 22) for OAC. The paper reports Sum slightly
+//! better due to floating-point error from the division.
+//!
+//! Run: cargo bench --bench table5_reduction
+
+use oac::calib::{Backend, Method};
+use oac::experiments::{Workbench, WorkbenchConfig};
+use oac::hessian::Reduction;
+use oac::report::{fmt_ppl, Table};
+
+fn main() -> anyhow::Result<()> {
+    let config = std::env::var("OAC_BENCH_CONFIGS")
+        .unwrap_or_else(|_| "tiny".into())
+        .split_whitespace()
+        .next()
+        .unwrap()
+        .to_string();
+    let wb = Workbench::new(WorkbenchConfig::new(&config))?;
+
+    let mut table = Table::new(
+        format!("Table 5 analog — Hessian reduction for OAC on `{config}`"),
+        &["Hessian Reduction", "C4*", "WikiText2*"],
+    );
+    for (label, red) in [("Mean (eq. 14)", Reduction::Mean), ("Sum (eq. 22)", Reduction::Sum)] {
+        let mut p = wb.pipeline(Method::oac(Backend::SpQR), 2);
+        p.calib.reduction = red;
+        let (_, er) = wb.run(&p)?;
+        table.row(vec![label.into(), fmt_ppl(er.ppl_in_domain), fmt_ppl(er.ppl_shifted)]);
+    }
+    table.print();
+    println!("(scaling the Hessian is theoretically calibration-invariant;");
+    println!(" differences are floating-point only — the paper's point.)");
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Paper Table 7 (Appendix E): computational cost — time and peak memory of
+//! SpQR vs OAC(FP32) vs OAC(FP16) at 2-bit, plus the resulting WikiText2*
+//! perplexity. The reproduced claim: OAC costs more (it backpropagates per
+//! calibration sample) but buys accuracy; FP16 grads cut the overhead.
+//!
+//! Run: cargo bench --bench table7_cost
+
+use oac::calib::{Backend, Method};
+use oac::coordinator::GradPrecision;
+use oac::experiments::{Workbench, WorkbenchConfig};
+use oac::report::{fmt_ppl, Table};
+
+fn main() -> anyhow::Result<()> {
+    let configs = std::env::var("OAC_BENCH_CONFIGS").unwrap_or_else(|_| "tiny small".into());
+    for config in configs.split_whitespace() {
+        let wb = Workbench::new(WorkbenchConfig::new(config))?;
+        let mut table = Table::new(
+            format!("Table 7 analog — quantization cost on `{config}`"),
+            &["Method", "Time (s)", "Phase1 (s)", "Phase2 (s)", "Peak Mem (MB)", "WikiText2*"],
+        );
+        let runs: [(&str, Method, GradPrecision); 3] = [
+            ("SpQR", Method::baseline(Backend::SpQR), GradPrecision::F32),
+            ("OAC_FP32", Method::oac(Backend::SpQR), GradPrecision::F32),
+            ("OAC_FP16", Method::oac(Backend::SpQR), GradPrecision::F16 { loss_scale: 256.0 }),
+        ];
+        for (label, method, prec) in runs {
+            let mut p = wb.pipeline(method, 2);
+            p.grad_precision = prec;
+            let t = std::time::Instant::now();
+            let (qr, er) = wb.run(&p)?;
+            table.row(vec![
+                label.into(),
+                format!("{:.1}", t.elapsed().as_secs_f64()),
+                format!("{:.1}", qr.phase1_secs),
+                format!("{:.1}", qr.phase2_secs),
+                format!("{:.1}", qr.peak_mem_bytes as f64 / 1e6),
+                fmt_ppl(er.ppl_shifted),
+            ]);
+        }
+        table.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Backend ablation (paper Table 14 / Appendix I): plug the output-adaptive
+//! Hessian into each Hessian-based calibration backend and show it improves
+//! every one of them — the paper's claim that OAC is a *Hessian* upgrade,
+//! orthogonal to the update rule.
+//!
+//! Run: cargo run --release --example backend_ablation [-- --config tiny]
+
+use anyhow::Result;
+use oac::calib::{Backend, Method};
+use oac::experiments::{method_row, Workbench, WorkbenchConfig, ROW_HEADERS};
+use oac::report::Table;
+use oac::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[]);
+    let config = args.str_or("config", "tiny");
+    let wb = Workbench::new(WorkbenchConfig::new(&config))?;
+
+    let mut table = Table::new(
+        format!("OAC x backend ablation on `{config}` (paper Table 14 analog)"),
+        &ROW_HEADERS,
+    );
+    for backend in [Backend::Optq, Backend::Quip, Backend::SpQR] {
+        for method in [Method::baseline(backend), Method::oac(backend)] {
+            let (qr, er) = wb.run(&wb.pipeline(method, 2))?;
+            table.row(method_row(&qr.method, qr.avg_bits, &er));
+        }
+    }
+    // Binary pair.
+    for method in [Method::baseline(Backend::BiLLM), Method::oac(Backend::BiLLM)] {
+        let (qr, er) = wb.run(&wb.pipeline(method, 1))?;
+        table.row(method_row(&qr.method, qr.avg_bits, &er));
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,34 @@
+//! Binary (1-bit) PTQ demo (paper Table 2): BiLLM vs OAC_BiLLM, plus what
+//! happens if you naively binarize (RTN at 1 bit) — the paper's motivation
+//! for structural selection + residual binarization.
+//!
+//! Run: cargo run --release --example binary_quant [-- --config tiny]
+
+use anyhow::Result;
+use oac::calib::{Backend, Method};
+use oac::experiments::{baseline_row, method_row, Workbench, WorkbenchConfig, ROW_HEADERS};
+use oac::report::Table;
+use oac::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[]);
+    let config = args.str_or("config", "tiny");
+    let wb = Workbench::new(WorkbenchConfig::new(&config))?;
+
+    let mut table = Table::new(
+        format!("Binary PTQ on `{config}` (paper Table 2 analog)"),
+        &ROW_HEADERS,
+    );
+    table.row(baseline_row(&wb.eval_baseline()?));
+    for method in [
+        Method::baseline(Backend::Rtn),
+        Method::baseline(Backend::BiLLM),
+        Method::oac(Backend::BiLLM),
+    ] {
+        let (qr, er) = wb.run(&wb.pipeline(method, 1))?;
+        table.row(method_row(&qr.method, qr.avg_bits, &er));
+    }
+    table.print();
+    println!("expected shape: RTN collapses; OAC_BiLLM < BiLLM on perplexity.");
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! End-to-end driver (DESIGN.md §5, recorded in EXPERIMENTS.md):
+//!
+//! 1. **Train** a transformer LM from scratch on the synthetic corpus via
+//!    the AOT `train_step` artifact (fwd+bwd+Adam fused at build time; Rust
+//!    drives the loop). Logs the loss curve.
+//! 2. **Quantize** the trained checkpoint to 2 bits with RTN, SpQR and OAC
+//!    (paper Table 1 mini).
+//! 3. **Evaluate** perplexity (C4*/WikiText2* splits) + reasoning-task
+//!    accuracy for each, proving all three layers compose.
+//!
+//! Run: cargo run --release --example e2e_train_quant_eval [-- --config small]
+
+use anyhow::Result;
+use oac::calib::{Backend, Method};
+use oac::experiments::{baseline_row, method_row, Workbench, WorkbenchConfig, ROW_HEADERS};
+use oac::report::Table;
+use oac::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[]);
+    let config = args.str_or("config", "small");
+    let mut wcfg = WorkbenchConfig::new(&config);
+    wcfg.eval.with_far_split = true;
+
+    println!("== e2e: train -> quantize -> eval ({config}) ==");
+    let t0 = std::time::Instant::now();
+    let wb = Workbench::new(wcfg)?; // trains (or loads) the checkpoint
+    println!("[1/3] checkpoint ready in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let base = wb.eval_baseline()?;
+    println!(
+        "[2/3] baseline: ppl {:.2} (C4*) {:.2} (WikiText2*), tasks {:.1}%",
+        base.ppl_in_domain,
+        base.ppl_shifted,
+        base.task_avg()
+    );
+
+    let mut table = Table::new(
+        format!("2-bit PTQ on `{config}` (paper Table 1 mini)"),
+        &ROW_HEADERS,
+    );
+    table.row(baseline_row(&base));
+    for method in [
+        Method::baseline(Backend::Rtn),
+        Method::baseline(Backend::SpQR),
+        Method::oac(Backend::SpQR),
+    ] {
+        let t = std::time::Instant::now();
+        let (qr, er) = wb.run(&wb.pipeline(method, 2))?;
+        println!(
+            "[3/3] {:<6} quantized+evaluated in {:.1}s (phase1 {:.1}s, phase2 {:.1}s)",
+            qr.method,
+            t.elapsed().as_secs_f64(),
+            qr.phase1_secs,
+            qr.phase2_secs
+        );
+        table.row(method_row(&qr.method, qr.avg_bits, &er));
+    }
+    table.print();
+    println!("total e2e wall clock: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

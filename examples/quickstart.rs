@@ -1,0 +1,70 @@
+//! Quickstart: the public API on a single linear layer, no training needed.
+//!
+//! 1. Load the AOT artifact metadata (`make artifacts` first).
+//! 2. Build an output-adaptive Hessian from gradient matrices produced by
+//!    the `model_grads` artifact, contracted by the L1 Pallas kernel.
+//! 3. Quantize one layer to 2 bits with every backend and compare the
+//!    quadratic calibration error.
+//!
+//! Run: cargo run --release --example quickstart
+
+use anyhow::Result;
+use oac::calib::{calibrate, Backend, CalibConfig, Method};
+use oac::coordinator::{Coordinator, PipelineConfig};
+use oac::data::{Flavor, Splits};
+use oac::experiments::artifacts_root;
+use oac::model::{ModelMeta, WeightStore};
+use oac::report::Table;
+use oac::runtime::Runtime;
+
+fn main() -> Result<()> {
+    oac::util::logging::init();
+    let rt = Runtime::new()?;
+    let meta = ModelMeta::load(artifacts_root(), "tiny")?;
+    println!(
+        "model `tiny`: {} params, {} quantizable linear layers",
+        meta.total_params(),
+        meta.linear_layers.len()
+    );
+
+    // Random-init weights (quantization mechanics work the same; training
+    // matters for the *evaluation*, which the e2e example covers).
+    let ws = WeightStore::init_random(&meta, 0);
+    let splits = Splits::new(meta.vocab, Flavor::C4Analog, 0);
+    let calib = splits.calibration(4, meta.seq);
+
+    // Phase 1 (per paper Algorithm 1) for block 0, both Hessian kinds.
+    let coord = Coordinator::new(&rt, &meta)?;
+    let oac_cfg = PipelineConfig::new(Method::oac(Backend::SpQR), 2);
+    let agn_cfg = PipelineConfig::new(Method::baseline(Backend::SpQR), 2);
+    let h_oac = coord.block_hessians(&ws, 0, &calib, &oac_cfg)?;
+    let h_agn = coord.block_hessians(&ws, 0, &calib, &agn_cfg)?;
+
+    let layer = &meta.linear_layers[0]; // blocks.0.q
+    let w = ws.get_mat(&layer.name);
+    println!("\nquantizing {} ({}x{}) to 2 bits\n", layer.name, w.rows, w.cols);
+
+    let cfg = CalibConfig::for_bits(2);
+    let mut table = Table::new(
+        "Per-backend quadratic calibration error (lower is better)",
+        &["Backend", "Hessian", "tr(dW H dW^T)", "Avg Bits"],
+    );
+    for (kind, hmap) in [("agnostic", &h_agn), ("output-adaptive", &h_oac)] {
+        let damped = hmap[&layer.name].regularized(cfg.alpha, cfg.reduction);
+        let prepared = oac::hessian::prepare(damped)?;
+        for backend in [Backend::Rtn, Backend::Optq, Backend::SpQR, Backend::Quip] {
+            let method = Method { backend, hessian: hmap[&layer.name].kind };
+            let q = calibrate(&layer.name, &w, &prepared, method, &cfg);
+            table.row(vec![
+                backend.name().to_string(),
+                kind.to_string(),
+                format!("{:.4e}", q.calib_error),
+                format!("{:.2}", q.budget.avg_bits()),
+            ]);
+        }
+    }
+    table.print();
+    println!("note: errors across Hessian kinds are not directly comparable —");
+    println!("the metric itself changes; the e2e example compares end metrics.");
+    Ok(())
+}

@@ -1,0 +1,188 @@
+"""AOT driver: lower every L2/L1 computation to HLO *text* artifacts.
+
+Python runs ONCE, at build time (`make artifacts`); the Rust coordinator
+loads the emitted `.hlo.txt` files through the PJRT CPU client and never
+touches python again.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly. Lowered with return_tuple=True so the
+rust side always unpacks a tuple. (See /opt/xla-example/gen_hlo.py.)
+
+Emitted layout:
+
+  artifacts/<cfg>/{model_fwd,model_loss,model_grads,layer_inputs,train_step}.hlo.txt
+  artifacts/kernels/hessian_accum_<m>x<n>.hlo.txt
+  artifacts/kernels/qdq_<r>x<c>_g<g>b<b>.hlo.txt
+  artifacts/meta.json   (ordered weight names/shapes — the python<->rust ABI)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.hessian_accum import hessian_accum
+from .kernels.qdq import qdq
+
+# Group size / bit widths for the pre-lowered qdq kernel artifacts (perf +
+# RTN-on-artifact paths; rust has its own CPU implementation for the rest).
+QDQ_GROUP = 16
+QDQ_BITS = (2, 3, 4)
+
+
+def to_hlo_text(lowered, return_tuple=True):
+    """return_tuple=False only for single-output kernels: the raw (untupled)
+    output buffer can then be fed straight back as a PJRT input, which lets
+    the rust coordinator chain Hessian accumulation on-device without a
+    host round-trip per calibration sample (see runtime::run_b_raw)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _write(path, text):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+
+def lower_config(cfg, out_dir):
+    """Lower the five model artifacts for one ModelConfig."""
+    wspecs = M.weight_spec(cfg)
+    w_in = [_f32(s) for _, s in wspecs]
+    tok = _i32((cfg.seq,))
+    cdir = os.path.join(out_dir, cfg.name)
+    arts = {}
+
+    def emit(name, fn, *args):
+        lowered = jax.jit(fn).lower(*args)
+        _write(os.path.join(cdir, f"{name}.hlo.txt"), to_hlo_text(lowered))
+        arts[name] = f"{cfg.name}/{name}.hlo.txt"
+
+    emit("model_fwd",
+         lambda *a: (M.forward(cfg, a[:-1], a[-1]),), *w_in, tok)
+    emit("model_loss",
+         lambda *a: (M.loss_sum(cfg, a[:-1], a[-1]),), *w_in, tok)
+    emit("model_grads",
+         lambda *a: M.linear_grads(cfg, a[:-1], a[-1]), *w_in, tok)
+    emit("layer_inputs",
+         lambda *a: M.layer_inputs(cfg, a[:-1], a[-1]), *w_in, tok)
+
+    tok_hb = _i32((M.CALIB_BATCH, cfg.seq))
+    emit("hessians_oac",
+         lambda *a: M.batch_hessian_oac(cfg, a[:-1], a[-1]), *w_in, tok_hb)
+    emit("hessians_agnostic",
+         lambda *a: M.batch_hessian_agnostic(cfg, a[:-1], a[-1]), *w_in, tok_hb)
+
+    nw = len(w_in)
+    tok_b = _i32((cfg.train_batch, cfg.seq))
+
+    def ts(*a):
+        ws, ms, vs = a[:nw], a[nw:2 * nw], a[2 * nw:3 * nw]
+        step, lr, toks = a[3 * nw], a[3 * nw + 1], a[3 * nw + 2]
+        return M.train_step(cfg, ws, ms, vs, step, lr, toks)
+
+    emit("train_step", ts, *(w_in * 3), _f32(()), _f32(()), tok_b)
+    return arts
+
+
+def kernel_shapes(cfgs):
+    """Hessian-accum shapes needed at runtime, deduped across configs.
+
+    OAC Hessians contract gradient matrices [d_row, d_col]; the agnostic
+    baselines contract activations [seq, d_col]."""
+    shapes = set()
+    for cfg in cfgs:
+        d, f, s = cfg.d_model, cfg.d_ff, cfg.seq
+        shapes |= {(d, d), (f, d), (d, f), (s, d), (s, f)}
+    return sorted(shapes)
+
+
+def lower_kernels(cfgs, out_dir):
+    kdir = os.path.join(out_dir, "kernels")
+    hes = []
+    for (m, n) in kernel_shapes(cfgs):
+        name = f"hessian_accum_{m}x{n}"
+        lowered = jax.jit(
+            lambda g, h: hessian_accum(g, h)).lower(_f32((m, n)), _f32((n, n)))
+        _write(os.path.join(kdir, f"{name}.hlo.txt"),
+               to_hlo_text(lowered, return_tuple=False))
+        hes.append({"m": m, "n": n, "path": f"kernels/{name}.hlo.txt"})
+
+    qd = []
+    for cfg in cfgs:
+        d = cfg.d_model
+        for bits in QDQ_BITS:
+            name = f"qdq_{d}x{d}_g{QDQ_GROUP}b{bits}"
+            if any(e["path"].endswith(f"{name}.hlo.txt") for e in qd):
+                continue
+            lowered = jax.jit(
+                lambda w, b=bits: (qdq(w, group_size=QDQ_GROUP, bits=b),)
+            ).lower(_f32((d, d)))
+            _write(os.path.join(kdir, f"{name}.hlo.txt"), to_hlo_text(lowered))
+            qd.append({"rows": d, "cols": d, "group": QDQ_GROUP,
+                       "bits": bits, "path": f"kernels/{name}.hlo.txt"})
+    return {"hessian_accum": hes, "qdq": qd}
+
+
+def config_meta(cfg, arts):
+    return {
+        "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "vocab": cfg.vocab,
+        "seq": cfg.seq, "train_batch": cfg.train_batch,
+        "calib_batch": M.CALIB_BATCH,
+        "weights": [{"name": n, "shape": list(s)} for n, s in M.weight_spec(cfg)],
+        "linear_layers": [
+            {"name": n, "shape": list(s), "input": inp, "block": b}
+            for n, s, inp, b in M.linear_layer_spec(cfg)
+        ],
+        "layer_inputs_order": [
+            {"name": n, "shape": list(s)} for n, s in M.layer_input_spec(cfg)
+        ],
+        "artifacts": arts,
+        "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny small",
+                    help="space-separated subset of: " + " ".join(M.CONFIGS))
+    args = ap.parse_args()
+
+    names = args.configs.split()
+    cfgs = [M.get_config(n) for n in names]
+    meta = {"configs": {}, "kernels": {}}
+    for cfg in cfgs:
+        print(f"lowering config {cfg.name} ...")
+        arts = lower_config(cfg, args.out_dir)
+        meta["configs"][cfg.name] = config_meta(cfg, arts)
+    print("lowering kernels ...")
+    meta["kernels"] = lower_kernels(cfgs, args.out_dir)
+
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: tiled output-adaptive Hessian accumulation, H += G^T G.
+
+This is the compute hot-spot of OAC Phase 1 (paper eqs. 13-14/22): for every
+calibration sample i and every linear layer, the gradient matrix G[i]
+(d_row x d_col) contributes G[i]^T G[i] to the layer's aggregated
+output-adaptive Hessian. The same kernel also serves the output-agnostic
+baselines' Hessian (X^T X over layer inputs, eq. 1) since it is the identical
+contraction with G replaced by the activation matrix.
+
+Hardware adaptation (paper used CUDA GEMMs): the contraction is expressed as
+an MXU-shaped tiled matmul. Grid = (n/bn, n/bn, m/bk); for output tile (i, j)
+the kernel streams A = G[k, i-tile] and B = G[k, j-tile] blocks HBM->VMEM and
+accumulates into the resident H tile in f32. The k axis is innermost so each
+output tile is revisited across k steps while staying in VMEM (double
+buffering of the G tiles is left to the Mosaic pipeliner via BlockSpec).
+
+VMEM footprint per step: bk*bn (A) + bk*bn (B) + bn*bn (acc) f32 words.
+With bn = bk = 128 that is 3 * 64 KiB = 192 KiB << 16 MiB VMEM, leaving room
+for the pipeline's double buffers; the MXU sees (bk x bn)^T @ (bk x bn)
+= 128^3 MACs per step, i.e. full systolic-array tiles.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel is lowered through the interpreter into plain HLO
+(see DESIGN.md §3 / §8 for the real-TPU estimate).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_tile(dim, preferred=128):
+    """Largest divisor of `dim` that is <= preferred (tiles must divide)."""
+    t = min(preferred, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _kernel(g_a_ref, g_b_ref, h_in_ref, o_ref, *, k_steps):
+    """One (i, j, k) grid step: o[i,j] (+)= A_k^T B_k, seeded with h_in."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = h_in_ref[...]
+
+    a = g_a_ref[...].astype(jnp.float32)  # [bk, bn] rows of G, cols of tile i
+    b = g_b_ref[...].astype(jnp.float32)  # [bk, bn] rows of G, cols of tile j
+    o_ref[...] += jax.lax.dot_general(
+        a, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def hessian_accum(g, h, *, block_n=128, block_k=128, interpret=True):
+    """Pallas tiled ``h + g.T @ g``.
+
+    Args:
+      g: [m, n] gradient/activation matrix (f32 or bf16).
+      h: [n, n] f32 accumulator.
+      block_n / block_k: preferred tile sizes (clamped to divisors).
+
+    Returns: [n, n] f32.
+    """
+    m, n = g.shape
+    assert h.shape == (n, n), (g.shape, h.shape)
+    bn = _pick_tile(n, block_n)
+    bk = _pick_tile(m, block_k)
+    k_steps = m // bk
+    grid = (n // bn, n // bn, k_steps)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, i)),  # A: G[k, i]
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),  # B: G[k, j]
+            pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),  # H_in
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(g, g, h)  # g appears twice: once per side of the G^T G contraction

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: fused group-wise quantize-dequantize (RTN inner op).
+
+Every calibration backend in the repo (RTN, OPTQ, SpQR, OAC, ...) repeatedly
+quantizes weight groups; this kernel is the fused form used on the artifact
+path for whole-matrix quant-dequant (e.g. RTN baseline evaluation and the
+perf benches).
+
+Layout: groups run along the column (input) axis, scale/zero per (row,
+group). Each grid step owns a (block_rows x cols) tile so a full row of
+groups is resident in VMEM; min/max/round/clamp are VPU element-wise and
+lane-reduction ops — one HBM read + one HBM write per element, i.e. the
+kernel is purely bandwidth-bound (arithmetic intensity ~6 flops/byte-read).
+
+interpret=True: see hessian_accum.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, o_ref, *, group_size, bits):
+    rows, cols = w_ref.shape
+    levels = (1 << bits) - 1
+    w = w_ref[...].astype(jnp.float32).reshape(rows, cols // group_size, group_size)
+    lo = jnp.min(w, axis=-1, keepdims=True)
+    hi = jnp.max(w, axis=-1, keepdims=True)
+    rng = hi - lo
+    scale = rng / levels
+    safe = jnp.where(scale <= 0.0, 1.0, scale)
+    zero = jnp.round(-lo / safe)
+    q = jnp.clip(jnp.round(w / safe) + zero, 0.0, float(levels))
+    dq = jnp.where(rng <= 0.0, w, (q - zero) * safe)
+    o_ref[...] = dq.reshape(rows, cols)
+
+
+def qdq(w, *, group_size, bits, block_rows=64, interpret=True):
+    """Pallas fused group quantize-dequantize.
+
+    Args:
+      w: [rows, cols] weights; cols % group_size == 0.
+      group_size: columns per group (paper uses 16-128).
+      bits: bit width (static).
+
+    Returns: dequantized [rows, cols] f32.
+    """
+    rows, cols = w.shape
+    assert cols % group_size == 0, (w.shape, group_size)
+    br = min(block_rows, rows)
+    while rows % br != 0:
+        br -= 1
+
+    return pl.pallas_call(
+        functools.partial(_kernel, group_size=group_size, bits=bits),
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=interpret,
+    )(w)

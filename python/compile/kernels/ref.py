@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package is
+asserted allclose against the function of the same name here (see
+python/tests/test_kernel.py, which sweeps shapes/dtypes with hypothesis).
+"""
+
+import jax.numpy as jnp
+
+
+def hessian_accum_ref(g, h):
+    """Accumulate the output-adaptive Hessian contribution of one gradient
+    matrix (paper eq. 14 / 22): ``H <- H + G^T G``.
+
+    Args:
+      g: gradient (or activation) matrix, shape [m, n].
+      h: running Hessian accumulator, shape [n, n].
+
+    Returns:
+      h + g.T @ g, in f32.
+    """
+    g = g.astype(jnp.float32)
+    return h.astype(jnp.float32) + g.T @ g
+
+
+def qdq_ref(w, group_size, bits):
+    """Group-wise asymmetric uniform quantize-dequantize (RTN inner op).
+
+    Groups run along the input (column) dimension of the weight matrix,
+    matching SpQR/OPTQ convention. Scale/zero are per (row, group):
+
+      scale = (max - min) / (2^bits - 1),  zero = round(-min / scale)
+      q     = clip(round(w / scale) + zero, 0, 2^bits - 1)
+      dq    = (q - zero) * scale
+
+    Args:
+      w: weight matrix [rows, cols]; cols % group_size == 0.
+      group_size: columns per quantization group.
+      bits: integer bit width >= 1.
+
+    Returns:
+      Dequantized weights, same shape as w, f32.
+    """
+    rows, cols = w.shape
+    assert cols % group_size == 0
+    levels = (1 << bits) - 1
+    wg = w.astype(jnp.float32).reshape(rows, cols // group_size, group_size)
+    lo = jnp.min(wg, axis=-1, keepdims=True)
+    hi = jnp.max(wg, axis=-1, keepdims=True)
+    rng = hi - lo
+    scale = rng / levels
+    safe = jnp.where(scale <= 0.0, 1.0, scale)
+    zero = jnp.round(-lo / safe)
+    q = jnp.clip(jnp.round(wg / safe) + zero, 0.0, float(levels))
+    dq = (q - zero) * safe
+    # Degenerate all-equal groups: keep the value exactly.
+    dq = jnp.where(rng <= 0.0, wg, dq)
+    return dq.reshape(rows, cols)

@@ -1,0 +1,115 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+This is the CORE correctness signal for the kernel layer. hypothesis sweeps
+shapes and dtypes; every case asserts allclose against the oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.hessian_accum import hessian_accum
+from compile.kernels.qdq import qdq
+from compile.kernels.ref import hessian_accum_ref, qdq_ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(shape, seed, dtype=jnp.float32, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+# ----------------------------------------------------------------- hessian
+
+dims = st.sampled_from([8, 16, 32, 64, 96, 128, 160, 256])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, seed=st.integers(0, 2**31 - 1),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+def test_hessian_accum_matches_ref(m, n, seed, dtype):
+    g = rand((m, n), seed, dtype)
+    h = rand((n, n), seed + 1)
+    got = hessian_accum(g, h)
+    want = hessian_accum_ref(g, h)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_hessian_accum_accumulates(m, n, seed):
+    """Two sequential accumulations == sum of contributions (eq. 22)."""
+    g1 = rand((m, n), seed)
+    g2 = rand((m, n), seed + 7)
+    h0 = jnp.zeros((n, n), jnp.float32)
+    h = hessian_accum(g2, hessian_accum(g1, h0))
+    want = hessian_accum_ref(g2, hessian_accum_ref(g1, h0))
+    np.testing.assert_allclose(np.asarray(h), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_hessian_accum_non_preferred_tiles():
+    """Dims that don't divide 128 must still tile correctly."""
+    g = rand((48, 80), 0)
+    h = rand((80, 80), 1)
+    np.testing.assert_allclose(
+        np.asarray(hessian_accum(g, h, block_n=32, block_k=32)),
+        np.asarray(hessian_accum_ref(g, h)), rtol=1e-5, atol=1e-5)
+
+
+def test_hessian_accum_psd():
+    """Starting from zero, the accumulated Hessian is PSD."""
+    g = rand((64, 32), 3)
+    h = hessian_accum(g, jnp.zeros((32, 32), jnp.float32))
+    eig = np.linalg.eigvalsh(np.asarray(h))
+    assert eig.min() > -1e-4
+
+
+# --------------------------------------------------------------------- qdq
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.sampled_from([4, 16, 33, 64, 128]),
+       groups=st.integers(1, 8),
+       group_size=st.sampled_from([4, 8, 16, 32]),
+       bits=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_qdq_matches_ref(rows, groups, group_size, bits, seed):
+    w = rand((rows, groups * group_size), seed, scale=0.5)
+    got = qdq(w, group_size=group_size, bits=bits)
+    want = qdq_ref(w, group_size, bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(bits=st.integers(2, 4), seed=st.integers(0, 2**31 - 1))
+def test_qdq_level_count(bits, seed):
+    """Dequantized groups use at most 2^bits distinct values."""
+    w = rand((8, 32), seed)
+    dq = np.asarray(qdq(w, group_size=16, bits=bits))
+    for r in range(8):
+        for g in range(2):
+            vals = np.unique(dq[r, g * 16:(g + 1) * 16])
+            assert len(vals) <= (1 << bits)
+
+
+def test_qdq_error_shrinks_with_bits():
+    w = rand((32, 64), 11)
+    errs = []
+    for bits in (1, 2, 3, 4):
+        dq = np.asarray(qdq(w, group_size=16, bits=bits))
+        errs.append(np.abs(dq - np.asarray(w)).mean())
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_qdq_constant_group_exact():
+    """All-equal groups round-trip exactly (degenerate scale guard)."""
+    w = jnp.full((4, 16), 0.37, jnp.float32)
+    dq = qdq(w, group_size=16, bits=2)
+    np.testing.assert_allclose(np.asarray(dq), np.asarray(w), atol=1e-7)

@@ -1,0 +1,231 @@
+//! BiLLM binary calibration (Huang et al., ICML 2024; paper §5 "to show the
+//! effectiveness ... in binary PTQ, we integrated Ĥ_OAC into the calibration
+//! procedure of BiLLM").
+//!
+//! Pipeline per layer:
+//! 1. **Structural salient selection**: columns ranked by Hessian-weighted
+//!    saliency `Σ_r W[r,k]² / [H⁻¹]_{kk}`; the top `salient_frac` columns
+//!    become the salient set (kept column-structured so the format stays
+//!    hardware-friendly — BiLLM's point).
+//! 2. **Residual binarization** for salient columns: w ≈ α₁b₁ + α₂b₂.
+//! 3. **Bell-split binarization** for the rest: optimal magnitude threshold
+//!    splits the bell from the tails; each side gets its own α (per row).
+//! 4. The whole thing runs inside the OPTQ column loop so every quantized
+//!    column's error is compensated on later columns (eq. 3) — with Ĥ_OAC
+//!    this is OAC_BiLLM.
+
+use super::optq::{optq_core, GroupMode, OutlierPolicy};
+use super::{quad_error, CalibConfig};
+use crate::hessian::PreparedHessian;
+use crate::quant::binary;
+use crate::quant::{BitBudget, QuantizedLayer};
+use crate::tensor::Mat;
+
+/// Binarization plan precomputed from the original weights. Both the salient
+/// selection *and* the bell split are column-structured, so decode needs no
+/// per-element membership bitmap — only per-column flags (negligible) and
+/// per-row alphas. This keeps the format hardware-friendly, which is BiLLM's
+/// stated reason for structural selection.
+struct BinPlan {
+    /// Column -> salient?
+    salient: Vec<bool>,
+    /// Column -> member of the "bell" group (defined for non-salient cols)?
+    bell_col: Vec<bool>,
+    /// Per row: (α₁, α₂) for salient columns (residual binarization).
+    salient_alphas: Vec<(f32, f32)>,
+    /// Per row: (α_bell, α_tail) for the two non-salient column groups.
+    bell_alphas: Vec<(f32, f32)>,
+}
+
+fn build_plan(w: &Mat, hes: &PreparedHessian, cfg: &CalibConfig) -> BinPlan {
+    let (rows, cols) = (w.rows, w.cols);
+    // 1. Column saliency.
+    let mut scores: Vec<(f32, usize)> = (0..cols)
+        .map(|k| {
+            let hinv_kk = hes.hinv.at(k, k).max(1e-12);
+            let s: f32 = (0..rows).map(|r| w.at(r, k).powi(2)).sum::<f32>() / hinv_kk;
+            (s, k)
+        })
+        .collect();
+    scores.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let n_salient = ((cols as f32 * cfg.salient_frac).round() as usize).clamp(1, cols);
+    let mut salient = vec![false; cols];
+    for &(_, k) in scores.iter().take(n_salient) {
+        salient[k] = true;
+    }
+
+    // 2. Bell split over non-salient *columns* by mean magnitude; threshold
+    //    searched over percentiles to minimize total l2 binarization error
+    //    (BiLLM's "splitting search", column-structured).
+    let non_salient: Vec<usize> = (0..cols).filter(|&k| !salient[k]).collect();
+    let col_mag: Vec<f32> = non_salient
+        .iter()
+        .map(|&k| (0..rows).map(|r| w.at(r, k).abs()).sum::<f32>() / rows as f32)
+        .collect();
+    let mut sorted_mags = col_mag.clone();
+    sorted_mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut best: (f64, Vec<bool>) = (f64::INFINITY, vec![true; cols]);
+    for pct in [20usize, 30, 40, 50, 60, 70, 80] {
+        let idx = (sorted_mags.len() * pct / 100).min(sorted_mags.len().saturating_sub(1));
+        let thresh = sorted_mags[idx];
+        let mut bell_col = vec![false; cols];
+        for (i, &k) in non_salient.iter().enumerate() {
+            bell_col[k] = col_mag[i] < thresh;
+        }
+        // Evaluate: per-row alphas for this split.
+        let mut err = 0.0f64;
+        for r in 0..rows {
+            let bell_vals: Vec<f32> = non_salient
+                .iter()
+                .filter(|&&k| bell_col[k])
+                .map(|&k| w.at(r, k))
+                .collect();
+            let tail_vals: Vec<f32> = non_salient
+                .iter()
+                .filter(|&&k| !bell_col[k])
+                .map(|&k| w.at(r, k))
+                .collect();
+            let (_, ba) = binary::binarize(&bell_vals);
+            let (_, ta) = binary::binarize(&tail_vals);
+            err += bell_vals.iter().zip(&ba).map(|(v, a)| ((v - a) as f64).powi(2)).sum::<f64>();
+            err += tail_vals.iter().zip(&ta).map(|(v, a)| ((v - a) as f64).powi(2)).sum::<f64>();
+        }
+        if err < best.0 {
+            best = (err, bell_col);
+        }
+    }
+    let bell_col = best.1;
+
+    // 3. Per-row alphas from the original weights.
+    let mut salient_alphas = Vec::with_capacity(rows);
+    let mut bell_alphas = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let srow: Vec<f32> =
+            (0..cols).filter(|&k| salient[k]).map(|k| w.at(r, k)).collect();
+        let (a1, a2, _) = binary::residual_binarize(&srow);
+        salient_alphas.push((a1, a2));
+
+        let bell_vals: Vec<f32> = (0..cols)
+            .filter(|&k| !salient[k] && bell_col[k])
+            .map(|k| w.at(r, k))
+            .collect();
+        let tail_vals: Vec<f32> = (0..cols)
+            .filter(|&k| !salient[k] && !bell_col[k])
+            .map(|k| w.at(r, k))
+            .collect();
+        let (ab, _) = binary::binarize(&bell_vals);
+        let (at, _) = binary::binarize(&tail_vals);
+        bell_alphas.push((ab, at));
+    }
+    BinPlan { salient, bell_col, salient_alphas, bell_alphas }
+}
+
+pub fn billm(name: &str, w: &Mat, hes: &PreparedHessian, cfg: &CalibConfig) -> QuantizedLayer {
+    let plan = build_plan(w, hes, cfg);
+    let (rows, cols) = (w.rows, w.cols);
+    let salient = plan.salient.clone();
+    let bell_col = plan.bell_col.clone();
+    let salient_alphas = plan.salient_alphas.clone();
+    let bell_alphas = plan.bell_alphas.clone();
+
+    let res = optq_core(
+        w.clone(),
+        hes,
+        GroupMode::Custom(Box::new(move |r, q, v| {
+            if salient[q] {
+                // Residual binarization: α₁ sign(v) + α₂ sign(residual).
+                let (a1, a2) = salient_alphas[r];
+                let first = a1 * v.signum();
+                first + a2 * (v - first).signum()
+            } else {
+                let (ab, at) = bell_alphas[r];
+                if bell_col[q] {
+                    ab * v.signum()
+                } else {
+                    at * v.signum()
+                }
+            }
+        })),
+        &OutlierPolicy::disabled(),
+    );
+
+    let n_salient = plan.salient.iter().filter(|s| **s).count();
+    // Bits: 1 sign bit per weight; salient columns carry a second residual
+    // pass bit; group membership is per-*column* (2 bits/col: salient, bell);
+    // per-row params in fp16: 2 salient alphas + 2 bell alphas.
+    let weight_elems = rows * cols;
+    let extra_bits = rows * n_salient + 2 * cols;
+    let param_bits = rows * 4 * 16 + extra_bits;
+    let budget = BitBudget { weight_elems, weight_bits: 1, param_bits, outliers: 0 };
+    QuantizedLayer {
+        name: name.to_string(),
+        calib_error: quad_error(w, &res.dq, &hes.h),
+        dq: res.dq,
+        budget,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hessian::{prepare, Hessian, HessianKind, Reduction};
+    use crate::util::rng::Rng;
+
+    fn setup(rows: usize, cols: usize, seed: u64) -> (Mat, PreparedHessian) {
+        let mut rng = Rng::new(seed);
+        let mut w = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.5);
+        let mut h = Hessian::zeros(cols, HessianKind::Agnostic);
+        for _ in 0..3 {
+            let mut x = Mat::zeros(cols, cols);
+            rng.fill_normal(&mut x.data, 1.0);
+            h.accumulate(&x);
+        }
+        let hes = prepare(h.regularized(0.1, Reduction::Sum)).unwrap();
+        (w, hes)
+    }
+
+    #[test]
+    fn billm_runs_and_avg_bits_near_one() {
+        let (w, hes) = setup(16, 64, 0);
+        let q = billm("t", &w, &hes, &CalibConfig::for_bits(1));
+        let avg = q.budget.avg_bits();
+        assert!((1.0..2.6).contains(&avg), "avg bits {avg}");
+        assert!(!q.dq.has_non_finite());
+    }
+
+    #[test]
+    fn billm_beats_naive_sign_quant() {
+        let (w, hes) = setup(16, 64, 1);
+        let q = billm("t", &w, &hes, &CalibConfig::for_bits(1));
+        // Naive: single alpha per row, no compensation.
+        let mut naive = w.clone();
+        for r in 0..w.rows {
+            let (_, approx) = binary::binarize(w.row(r));
+            naive.row_mut(r).copy_from_slice(&approx);
+        }
+        let e_naive = quad_error(&w, &naive, &hes.h);
+        assert!(q.calib_error < e_naive, "{} vs {}", q.calib_error, e_naive);
+    }
+
+    #[test]
+    fn salient_fraction_respected() {
+        let (w, hes) = setup(8, 40, 2);
+        let cfg = CalibConfig { salient_frac: 0.25, ..CalibConfig::for_bits(1) };
+        let plan = build_plan(&w, &hes, &cfg);
+        let n = plan.salient.iter().filter(|s| **s).count();
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    fn better_hessian_improves_binary_too() {
+        // The OAC_BiLLM mechanism: calibrating under the true metric wins.
+        let (w, hes_true) = setup(8, 32, 3);
+        let (_, hes_wrong) = setup(8, 32, 77);
+        let cfg = CalibConfig::for_bits(1);
+        let right = billm("t", &w, &hes_true, &cfg);
+        let wrong = billm("t", &w, &hes_wrong, &cfg);
+        let wrong_err = quad_error(&w, &wrong.dq, &hes_true.h);
+        assert!(right.calib_error < wrong_err, "{} vs {wrong_err}", right.calib_error);
+    }
+}

@@ -1,0 +1,118 @@
+//! QuIP-lite calibration (Chee et al., NeurIPS 2023): incoherence
+//! pre-processing with a randomized Hadamard rotation, then the OPTQ core
+//! in the rotated basis, then the inverse rotation.
+//!
+//! Rotation: with orthogonal U, y = Wx = (WUᵀ)(Ux). Quantize W̃ = WUᵀ under
+//! H̃ = U H Uᵀ. Incoherence spreads salient directions across coordinates,
+//! which is what lets QuIP run *without* outlier isolation or groups
+//! (the published method uses lattice codebooks on top; the Hessian-update
+//! part — the part OAC composes with (paper Table 14) — is retained).
+
+use super::optq::{optq_core, GroupMode, OutlierPolicy};
+use super::{quad_error, CalibConfig};
+use crate::hessian::{self, PreparedHessian};
+use crate::quant::{BitBudget, QuantizedLayer};
+use crate::tensor::hadamard::RandHadamard;
+use crate::tensor::Mat;
+
+pub fn quip(name: &str, w: &Mat, hes: &PreparedHessian, cfg: &CalibConfig) -> QuantizedLayer {
+    assert!(w.cols.is_power_of_two(), "QuIP-lite requires power-of-two d_col");
+    let u = RandHadamard::new(w.cols, cfg.seed.wrapping_add(0x9019));
+    let w_rot = u.rotate_rows(w);
+    let mut h_rot = u.conjugate(&hes.h);
+    // Re-damp lightly: the conjugation is exact in theory but f32 roundoff
+    // can push tiny eigenvalues negative.
+    hessian::regularize_in_place(&mut h_rot, 1e-4);
+    let prepared = hessian::prepare(h_rot).expect("rotated Hessian SPD");
+
+    // QuIP proper has no groups: one grid per row over the whole rotated row.
+    let res = optq_core(
+        w_rot,
+        &prepared,
+        GroupMode::Dynamic { bits: cfg.bits, group_size: w.cols },
+        &OutlierPolicy::disabled(),
+    );
+    let dq = u.unrotate_rows(&res.dq);
+
+    let budget = BitBudget {
+        weight_elems: w.rows * w.cols,
+        weight_bits: cfg.bits,
+        // One fp16 scale/zero pair per row.
+        param_bits: crate::quant::scale_quant::fp16_param_bits(w.rows),
+        outliers: 0,
+    };
+    QuantizedLayer {
+        name: name.to_string(),
+        calib_error: quad_error(w, &dq, &hes.h),
+        dq,
+        budget,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hessian::{prepare, Hessian, HessianKind, Reduction};
+    use crate::util::rng::Rng;
+
+    fn setup(rows: usize, cols: usize, seed: u64) -> (Mat, PreparedHessian) {
+        let mut rng = Rng::new(seed);
+        let mut w = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.5);
+        let mut h = Hessian::zeros(cols, HessianKind::Agnostic);
+        for _ in 0..3 {
+            let mut x = Mat::zeros(cols, cols);
+            rng.fill_normal(&mut x.data, 1.0);
+            h.accumulate(&x);
+        }
+        let hes = prepare(h.regularized(0.1, Reduction::Sum)).unwrap();
+        (w, hes)
+    }
+
+    #[test]
+    fn quip_runs_and_is_finite() {
+        let (w, hes) = setup(8, 32, 0);
+        let q = quip("t", &w, &hes, &CalibConfig::for_bits(2));
+        assert!(!q.dq.has_non_finite());
+        assert!(q.calib_error.is_finite());
+    }
+
+    #[test]
+    fn rotation_beats_no_rotation_rowwise_grid() {
+        // With a single grid per row (no groups), incoherence should beat
+        // quantizing the raw weights whose energy is concentrated.
+        let mut rng = Rng::new(7);
+        let (mut w, hes) = setup(8, 64, 1);
+        // Concentrate energy: a few large columns.
+        for r in 0..w.rows {
+            for c in 0..4 {
+                *w.at_mut(r, c) = rng.normal_f32() * 5.0;
+            }
+        }
+        let cfg = CalibConfig::for_bits(2);
+        let with_rot = quip("t", &w, &hes, &cfg);
+        // Same core without rotation.
+        let no_rot = optq_core(
+            w.clone(),
+            &hes,
+            GroupMode::Dynamic { bits: 2, group_size: 64 },
+            &OutlierPolicy::disabled(),
+        );
+        let e_no = quad_error(&w, &no_rot.dq, &hes.h);
+        assert!(
+            with_rot.calib_error < e_no,
+            "rot {} vs raw {}",
+            with_rot.calib_error,
+            e_no
+        );
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let (w, hes) = setup(4, 32, 2);
+        let cfg = CalibConfig::for_bits(2);
+        let a = quip("t", &w, &hes, &cfg);
+        let b = quip("t", &w, &hes, &cfg);
+        assert_eq!(a.dq.data, b.dq.data);
+    }
+}

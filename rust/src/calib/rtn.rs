@@ -1,0 +1,159 @@
+//! Update-free baselines: RTN (round-to-nearest), OmniQuant-lite (per-group
+//! clip-ratio search) and SqueezeLLM-lite (sensitivity-weighted non-uniform
+//! k-means). None of these move other weights; they differ in how the grid
+//! (or codebook) is fit.
+
+use super::{quad_error, CalibConfig};
+use crate::hessian::PreparedHessian;
+use crate::quant::scale_quant::fp16_param_bits;
+use crate::quant::uniform::{group_params_clipped, qdq, qdq_mat};
+use crate::quant::{BitBudget, QuantizedLayer};
+use crate::tensor::Mat;
+
+/// Plain group-wise round-to-nearest.
+pub fn rtn(name: &str, w: &Mat, cfg: &CalibConfig) -> QuantizedLayer {
+    let dq = qdq_mat(w, cfg.group_size, cfg.bits);
+    let groups = w.rows * w.cols.div_ceil(cfg.group_size);
+    QuantizedLayer {
+        name: name.to_string(),
+        calib_error: 0.0, // no Hessian: proxy error not defined for RTN
+        dq,
+        budget: BitBudget {
+            weight_elems: w.rows * w.cols,
+            weight_bits: cfg.bits,
+            param_bits: fp16_param_bits(groups),
+            outliers: 0,
+        },
+    }
+}
+
+/// OmniQuant-lite: per-(row, group) clip-ratio grid search minimizing the
+/// Hessian-diagonal-weighted quantization error — the "learn the quantizer
+/// parameters, freeze the weights" behaviour of OmniQuant without SGD.
+pub fn omniquant_lite(
+    name: &str,
+    w: &Mat,
+    hes: &PreparedHessian,
+    cfg: &CalibConfig,
+) -> QuantizedLayer {
+    let g = cfg.group_size;
+    let mut dq = w.clone();
+    for r in 0..w.rows {
+        for g0 in (0..w.cols).step_by(g) {
+            let g1 = (g0 + g).min(w.cols);
+            let vals = &w.row(r)[g0..g1];
+            let diag: Vec<f32> = (g0..g1).map(|k| hes.h.at(k, k).max(1e-12)).collect();
+            let mut best = (f64::INFINITY, vals.to_vec());
+            for &clip in &cfg.clip_grid {
+                let p = group_params_clipped(vals, cfg.bits, clip);
+                let cand: Vec<f32> = vals.iter().map(|&v| qdq(v, p, cfg.bits)).collect();
+                let err: f64 = cand
+                    .iter()
+                    .zip(vals)
+                    .zip(&diag)
+                    .map(|((c, v), d)| ((c - v) as f64).powi(2) * *d as f64)
+                    .sum();
+                if err < best.0 {
+                    best = (err, cand);
+                }
+            }
+            dq.row_mut(r)[g0..g1].copy_from_slice(&best.1);
+        }
+    }
+    let groups = w.rows * w.cols.div_ceil(g);
+    QuantizedLayer {
+        name: name.to_string(),
+        calib_error: quad_error(w, &dq, &hes.h),
+        dq,
+        budget: BitBudget {
+            weight_elems: w.rows * w.cols,
+            weight_bits: cfg.bits,
+            param_bits: fp16_param_bits(groups),
+            outliers: 0,
+        },
+    }
+}
+
+/// SqueezeLLM-lite: per-row non-uniform codebook, diagonal-Fisher weighted.
+pub fn squeeze(name: &str, w: &Mat, hes: &PreparedHessian, cfg: &CalibConfig) -> QuantizedLayer {
+    let diag: Vec<f32> = (0..w.cols).map(|k| hes.h.at(k, k)).collect();
+    let dq = crate::quant::nonuniform::squeeze_quantize(w, &diag, cfg.bits);
+    // Codebook: 2^bits fp16 centroids per row.
+    let param_bits = w.rows * (1 << cfg.bits) * 16;
+    QuantizedLayer {
+        name: name.to_string(),
+        calib_error: quad_error(w, &dq, &hes.h),
+        dq,
+        budget: BitBudget {
+            weight_elems: w.rows * w.cols,
+            weight_bits: cfg.bits,
+            param_bits,
+            outliers: 0,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hessian::{prepare, Hessian, HessianKind, Reduction};
+    use crate::util::rng::Rng;
+
+    fn setup(rows: usize, cols: usize, seed: u64) -> (Mat, PreparedHessian) {
+        let mut rng = Rng::new(seed);
+        let mut w = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.5);
+        let mut h = Hessian::zeros(cols, HessianKind::Agnostic);
+        for _ in 0..3 {
+            let mut x = Mat::zeros(cols, cols);
+            rng.fill_normal(&mut x.data, 1.0);
+            h.accumulate(&x);
+        }
+        let hes = prepare(h.regularized(0.1, Reduction::Sum)).unwrap();
+        (w, hes)
+    }
+
+    #[test]
+    fn rtn_matches_qdq_mat() {
+        let (w, _) = setup(8, 32, 0);
+        let cfg = CalibConfig::for_bits(2);
+        let q = rtn("t", &w, &cfg);
+        assert_eq!(q.dq, qdq_mat(&w, cfg.group_size, cfg.bits));
+    }
+
+    #[test]
+    fn omniquant_at_least_as_good_as_rtn_weighted() {
+        let (mut w, hes) = setup(8, 32, 1);
+        // Heavy tails make clipping matter.
+        let mut rng = Rng::new(9);
+        for v in w.data.iter_mut() {
+            let z = rng.normal_f32();
+            *v = z * z * z * 0.3;
+        }
+        let cfg = CalibConfig::for_bits(2);
+        let oq = omniquant_lite("t", &w, &hes, &cfg);
+        let rt = rtn("t", &w, &cfg);
+        let e_rt = quad_error(&w, &rt.dq, &hes.h);
+        assert!(oq.calib_error <= e_rt + 1e-6, "{} vs {e_rt}", oq.calib_error);
+    }
+
+    #[test]
+    fn squeeze_beats_rtn_without_groups() {
+        // Non-uniform codebook over the whole row vs uniform over the whole
+        // row (same parameter budget shape as the paper's comparison).
+        let (w, hes) = setup(8, 64, 2);
+        let cfg = CalibConfig { group_size: 64, ..CalibConfig::for_bits(3) };
+        let sq = squeeze("t", &w, &hes, &cfg);
+        let rt = rtn("t", &w, &cfg);
+        let e_rt = quad_error(&w, &rt.dq, &hes.h);
+        assert!(sq.calib_error < e_rt, "{} vs {e_rt}", sq.calib_error);
+    }
+
+    #[test]
+    fn budgets_accounted() {
+        let (w, hes) = setup(8, 32, 3);
+        let cfg = CalibConfig::for_bits(2);
+        assert!(rtn("t", &w, &cfg).budget.avg_bits() > 2.0);
+        assert!(squeeze("t", &w, &hes, &cfg).budget.avg_bits() > 2.0);
+    }
+}

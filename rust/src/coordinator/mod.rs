@@ -1,0 +1,533 @@
+//! The OAC pipeline coordinator — paper Algorithm 1 / Fig. 3.
+//!
+//! Per transformer block (iterated in order, so later blocks see the
+//! already-quantized earlier blocks, exactly as the paper's layer-by-layer
+//! recipe prescribes):
+//!
+//! **Phase 1 — Hessian estimation.** For every calibration sample, run one
+//! full-model execution with the *current* weights:
+//! * OAC: the `model_grads` artifact (fwd + CE loss + bwd fused at AOT
+//!   time) yields the per-layer gradient matrices G[i]; each layer's
+//!   `Ĥ_OAC += G[i]ᵀG[i]` (eq. 14/22) is contracted by the L1 Pallas
+//!   `hessian_accum` kernel artifact (CPU `gram()` fallback otherwise).
+//! * Baselines: the `layer_inputs` artifact yields the activations X
+//!   entering each layer; `H̄ += XᵀX` (eq. 1) through the same kernel.
+//!
+//! **Phase 2 — Calibration.** Each linear layer in the block is quantized
+//! by the configured backend (RTN/OPTQ/SpQR/QuIP/BiLLM/... — see `calib`)
+//! using its Hessian; the dequantized weights replace the originals in the
+//! weight store (and therefore in every later block's Phase 1).
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::calib::{self, CalibConfig, Method};
+use crate::eval::DeviceWeights;
+use crate::hessian::{Hessian, HessianKind};
+use crate::model::{KernelIndex, LinearSpec, ModelMeta, WeightStore};
+use crate::quant::{BitBudget, QuantizedLayer};
+use crate::runtime::{literal_to_mat, Runtime};
+use crate::tensor::Mat;
+
+/// Gradient numeric mode (paper Appendix C.1 / Table 3). The artifact
+/// computes in f32; `F16` round-trips every gradient matrix through IEEE
+/// half precision with loss scaling, reproducing the paper's FP16 pipeline
+/// numerics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GradPrecision {
+    F32,
+    F16 { loss_scale: f32 },
+}
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub method: Method,
+    pub calib: CalibConfig,
+    /// Number of calibration sequences (paper: 128×2048; scaled here).
+    pub n_calib: usize,
+    pub grad_precision: GradPrecision,
+    /// Use the L1 Pallas kernel artifact for the Hessian contraction.
+    pub use_kernel: bool,
+}
+
+impl PipelineConfig {
+    pub fn new(method: Method, bits: usize) -> PipelineConfig {
+        PipelineConfig {
+            method,
+            calib: CalibConfig::for_bits(bits),
+            n_calib: 24,
+            grad_precision: GradPrecision::F32,
+            use_kernel: true,
+        }
+    }
+}
+
+/// Per-layer outcome + aggregate accounting.
+#[derive(Debug, Clone)]
+pub struct QuantReport {
+    pub method: String,
+    pub layers: Vec<LayerReport>,
+    pub avg_bits: f64,
+    pub total_outliers: usize,
+    /// Wall-clock split for the cost table (Table 7).
+    pub phase1_secs: f64,
+    pub phase2_secs: f64,
+    /// Peak transient memory estimate: largest simultaneously-held Hessian
+    /// set + gradient matrices, in bytes (Table 7's memory column analog).
+    pub peak_mem_bytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub name: String,
+    pub calib_error: f64,
+    pub avg_bits: f64,
+    pub outliers: usize,
+}
+
+/// The coordinator owns per-run state (kernel executables, metrics).
+pub struct Coordinator<'a> {
+    pub rt: &'a Runtime,
+    pub meta: &'a ModelMeta,
+    kernels: KernelIndex,
+}
+
+impl<'a> Coordinator<'a> {
+    pub fn new(rt: &'a Runtime, meta: &'a ModelMeta) -> Result<Coordinator<'a>> {
+        let kernels = ModelMeta::load_kernels(&meta.root).unwrap_or_default();
+        Ok(Coordinator { rt, meta, kernels })
+    }
+
+    /// Phase 1 for one block: Hessians for each of its linear layers.
+    ///
+    /// With `use_kernel`, each Hessian accumulator lives as a *device
+    /// buffer* chained through the L1 `hessian_accum` kernel (lowered
+    /// untupled, so its output buffer feeds the next call) — one download
+    /// per layer per block instead of one per sample (EXPERIMENTS.md §Perf).
+    /// Shared inputs (q/k/v read the same activation) are contracted once.
+    pub fn block_hessians(
+        &self,
+        ws: &WeightStore,
+        block: usize,
+        calib_tokens: &[Vec<i32>],
+        cfg: &PipelineConfig,
+    ) -> Result<BTreeMap<String, Hessian>> {
+        let layers = self.meta.block_layers(block);
+        let dw = DeviceWeights::upload(self.rt, ws)?;
+
+        // Accumulation keys: for OAC every layer has its own gradient
+        // stream; for the agnostic Hessian layers sharing an input capture
+        // share one accumulator.
+        let is_oac = cfg.method.hessian == HessianKind::OutputAdaptive;
+        let key_of = |l: &&crate::model::LinearSpec| -> String {
+            if is_oac {
+                l.name.clone()
+            } else {
+                l.input.clone()
+            }
+        };
+        // key -> contribution dims (rows of the contributed matrix).
+        let mut contrib_rows: BTreeMap<String, usize> = BTreeMap::new();
+        for l in &layers {
+            let rows = if is_oac { l.rows } else { self.meta.seq };
+            contrib_rows.insert(key_of(l), rows);
+        }
+        let dim_of = |key: &str| -> usize {
+            layers.iter().find(|l| key_of(l) == key).unwrap().cols
+        };
+
+        enum Acc {
+            Device(xla::PjRtBuffer),
+            Host(Mat),
+        }
+        let mut accs: BTreeMap<String, Acc> = BTreeMap::new();
+        let mut kernel_exe: BTreeMap<String, std::rc::Rc<crate::runtime::Executable>> =
+            BTreeMap::new();
+        for (key, &crows) in &contrib_rows {
+            let n = dim_of(key);
+            let use_k = cfg.use_kernel && self.kernels.hessian_accum.contains_key(&(crows, n));
+            if use_k {
+                let rel = &self.kernels.hessian_accum[&(crows, n)];
+                kernel_exe.insert(key.clone(), self.rt.load(self.meta.root.join(rel))?);
+                let zeros = Mat::zeros(n, n);
+                accs.insert(key.clone(), Acc::Device(self.rt.upload_mat(&zeros)?));
+            } else {
+                accs.insert(key.clone(), Acc::Host(Mat::zeros(n, n)));
+            }
+        }
+
+        // Which artifact produces the contributions, and the output index
+        // per accumulation key.
+        let (exe, out_idx): (_, BTreeMap<String, usize>) = if is_oac {
+            let exe = self.rt.load(self.meta.artifact_path("model_grads")?)?;
+            let idx = self
+                .meta
+                .linear_layers
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.block == block)
+                .map(|(i, l)| (l.name.clone(), i))
+                .collect();
+            (exe, idx)
+        } else {
+            let exe = self.rt.load(self.meta.artifact_path("layer_inputs")?)?;
+            let idx = self
+                .meta
+                .layer_inputs
+                .iter()
+                .enumerate()
+                .map(|(i, c)| (c.name.clone(), i))
+                .collect();
+            (exe, idx)
+        };
+
+        let needs_host_grad = matches!(cfg.grad_precision, GradPrecision::F16 { .. });
+
+        // Fast path: the batched Hessian artifact contracts a whole chunk of
+        // B samples on-device in ONE dispatch (vmapped fwd+bwd + the L1
+        // kernel, fused at AOT time) and returns only [n, n] contributions.
+        // Used for full chunks in F32 mode; the remainder (and the F16
+        // emulation, which needs host gradients) takes the per-sample path.
+        let batch_art = if is_oac { "hessians_oac" } else { "hessians_agnostic" };
+        let b = self.meta.calib_batch;
+        let mut remaining: &[Vec<i32>] = calib_tokens;
+        let mut samples = 0usize;
+        if cfg.use_kernel && !needs_host_grad && b > 1
+            && self.meta.artifacts.contains_key(batch_art)
+        {
+            let bexe = self.rt.load(self.meta.artifact_path(batch_art)?)?;
+            // Output order: OAC = linear_layers order; agnostic = captures.
+            let bidx: BTreeMap<String, usize> = if is_oac {
+                self.meta
+                    .linear_layers
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, l)| l.block == block)
+                    .map(|(i, l)| (l.name.clone(), i))
+                    .collect()
+            } else {
+                self.meta
+                    .layer_inputs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, c)| (c.name.clone(), i))
+                    .collect()
+            };
+            while remaining.len() >= b {
+                let chunk = &remaining[..b];
+                let flat: Vec<i32> = chunk.iter().flatten().copied().collect();
+                let tok = self.rt.upload_i32(&flat, &[b, self.meta.seq])?;
+                let outs = self.rt.run_b(&bexe, &dw.args(&tok))?;
+                for (key, acc) in accs.iter_mut() {
+                    let contrib = literal_to_mat(&outs[bidx[key]])?;
+                    match acc {
+                        Acc::Host(h) => h.add_assign(&contrib),
+                        Acc::Device(hbuf) => {
+                            // Merge on host at download time instead: demote.
+                            let mut h = self.rt.download_mat(hbuf)?;
+                            h.add_assign(&contrib);
+                            *acc = Acc::Host(h);
+                        }
+                    }
+                }
+                samples += b;
+                remaining = &remaining[b..];
+            }
+        }
+        let calib_tokens = remaining;
+        // PJRT executes asynchronously: nothing in the device chain is
+        // synchronized until the final download, so every input buffer fed
+        // to run_b_raw must stay alive until then (dropping one early is a
+        // use-after-free inside the pending execution — observed as a
+        // nondeterministic SIGSEGV).
+        let mut keepalive: Vec<xla::PjRtBuffer> = Vec::new();
+        // buffer_from_host_literal is also async (CopyFromLiteral runs on a
+        // worker thread referencing the literal) — the source literals must
+        // live as long as the chain, too.
+        let mut keepalive_lits: Vec<Vec<xla::Literal>> = Vec::new();
+        for tokens in calib_tokens {
+            let tok = self.rt.upload_i32(tokens, &[self.meta.seq])?;
+            let outs = self.rt.run_b(&exe, &dw.args(&tok))?;
+            samples += 1;
+            for (key, acc) in accs.iter_mut() {
+                let lit = &outs[out_idx[key]];
+                match acc {
+                    Acc::Device(hbuf) => {
+                        let gbuf = if needs_host_grad {
+                            let mut g = literal_to_mat(lit)?;
+                            if let GradPrecision::F16 { loss_scale } = cfg.grad_precision {
+                                crate::tensor::half::f16_roundtrip_scaled(
+                                    &mut g.data, loss_scale,
+                                );
+                            }
+                            self.rt.upload_mat(&g)?
+                        } else {
+                            self.rt.upload_literal(lit)?
+                        };
+                        let out = self
+                            .rt
+                            .run_b_raw(&kernel_exe[key], &[&gbuf, hbuf])?
+                            .into_iter()
+                            .next()
+                            .unwrap();
+                        keepalive.push(gbuf);
+                        keepalive.push(std::mem::replace(hbuf, out));
+                    }
+                    Acc::Host(h) => {
+                        let mut g = literal_to_mat(lit)?;
+                        if let GradPrecision::F16 { loss_scale } = cfg.grad_precision {
+                            crate::tensor::half::f16_roundtrip_scaled(&mut g.data, loss_scale);
+                        }
+                        h.add_assign(&g.gram());
+                    }
+                }
+            }
+            keepalive_lits.push(outs);
+        }
+
+        // Materialize per-layer Hessians (cloning shared accumulators).
+        // download_mat synchronizes each chain; only then may the chain's
+        // intermediate buffers be released.
+        let downloaded: BTreeMap<String, Mat> = accs
+            .into_iter()
+            .map(|(key, acc)| {
+                let m = match acc {
+                    Acc::Device(buf) => self.rt.download_mat(&buf)?,
+                    Acc::Host(m) => m,
+                };
+                Ok((key, m))
+            })
+            .collect::<Result<_>>()?;
+        drop(keepalive);
+        drop(keepalive_lits);
+        let mut hes = BTreeMap::new();
+        for l in &layers {
+            let mat = downloaded[&key_of(l)].clone();
+            hes.insert(
+                l.name.clone(),
+                Hessian { mat, samples, kind: cfg.method.hessian },
+            );
+        }
+        Ok(hes)
+    }
+
+    /// Phase 2 for one layer.
+    pub fn calibrate_layer(
+        &self,
+        ws: &WeightStore,
+        layer: &LinearSpec,
+        hessian: &Hessian,
+        cfg: &PipelineConfig,
+    ) -> Result<QuantizedLayer> {
+        let w = ws.get_mat(&layer.name);
+        let damped = hessian.regularized(cfg.calib.alpha, cfg.calib.reduction);
+        let prepared = crate::hessian::prepare(damped)
+            .with_context(|| format!("preparing Hessian for {}", layer.name))?;
+        Ok(calib::calibrate(&layer.name, &w, &prepared, cfg.method, &cfg.calib))
+    }
+
+    /// The full Algorithm-1 pipeline. Mutates `ws` in place (quantized
+    /// weights replace originals) and returns the report.
+    pub fn quantize_model(
+        &self,
+        ws: &mut WeightStore,
+        calib_tokens: &[Vec<i32>],
+        cfg: &PipelineConfig,
+    ) -> Result<QuantReport> {
+        let tokens = &calib_tokens[..cfg.n_calib.min(calib_tokens.len())];
+        let mut layers = Vec::new();
+        let mut budgets: Vec<BitBudget> = Vec::new();
+        let mut phase1 = 0.0f64;
+        let mut phase2 = 0.0f64;
+        let mut peak_mem = 0usize;
+
+        for block in 0..self.meta.n_layers {
+            let t1 = Instant::now();
+            let hes = self.block_hessians(ws, block, tokens, cfg)?;
+            phase1 += t1.elapsed().as_secs_f64();
+
+            // Memory accounting: Hessians of this block + one grad matrix.
+            let hess_bytes: usize = hes.values().map(|h| h.mat.data.len() * 4).sum();
+            let grad_bytes = self
+                .meta
+                .block_layers(block)
+                .iter()
+                .map(|l| l.rows * l.cols * 4)
+                .max()
+                .unwrap_or(0);
+            peak_mem = peak_mem.max(hess_bytes + grad_bytes);
+
+            let t2 = Instant::now();
+            for l in self.meta.block_layers(block) {
+                let q = self.calibrate_layer(ws, l, &hes[&l.name], cfg)?;
+                ws.set_mat(&l.name, &q.dq);
+                layers.push(LayerReport {
+                    name: q.name.clone(),
+                    calib_error: q.calib_error,
+                    avg_bits: q.budget.avg_bits(),
+                    outliers: q.budget.outliers,
+                });
+                budgets.push(q.budget);
+            }
+            phase2 += t2.elapsed().as_secs_f64();
+            log::info!(
+                "block {block}: phase1 {phase1:.1}s cum, phase2 {phase2:.1}s cum"
+            );
+        }
+
+        Ok(QuantReport {
+            method: cfg.method.name(),
+            avg_bits: BitBudget::merged_avg(&budgets),
+            total_outliers: budgets.iter().map(|b| b.outliers).sum(),
+            layers,
+            phase1_secs: phase1,
+            phase2_secs: phase2,
+            peak_mem_bytes: peak_mem,
+        })
+    }
+}
+
+/// Convenience: one-call quantization returning the report.
+pub fn run_pipeline(
+    rt: &Runtime,
+    meta: &ModelMeta,
+    ws: &mut WeightStore,
+    calib_tokens: &[Vec<i32>],
+    cfg: &PipelineConfig,
+) -> Result<QuantReport> {
+    Coordinator::new(rt, meta)?.quantize_model(ws, calib_tokens, cfg)
+}
+
+// Keep Rc import used when compiling without tests.
+#[allow(unused)]
+type _Unused = Rc<()>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::Backend;
+    use crate::data::{Flavor, Splits};
+    use std::path::PathBuf;
+
+    fn artifacts_root() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("meta.json").exists().then_some(p)
+    }
+
+    fn setup() -> Option<(Runtime, ModelMeta, WeightStore, Vec<Vec<i32>>)> {
+        let root = artifacts_root()?;
+        let rt = Runtime::new().unwrap();
+        let meta = ModelMeta::load(&root, "tiny").unwrap();
+        let splits = Splits::new(meta.vocab, Flavor::C4Analog, 0);
+        let ws = WeightStore::init_random(&meta, 0);
+        let calib = splits.calibration(4, meta.seq);
+        Some((rt, meta, ws, calib))
+    }
+
+    #[test]
+    fn oac_hessians_match_cpu_reference() {
+        // Kernel-artifact contraction == CPU gram accumulation.
+        let Some((rt, meta, ws, calib)) = setup() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let coord = Coordinator::new(&rt, &meta).unwrap();
+        let mut cfg = PipelineConfig::new(Method::oac(Backend::SpQR), 2);
+        cfg.n_calib = 2;
+        let with_kernel = coord.block_hessians(&ws, 0, &calib[..2], &cfg).unwrap();
+        cfg.use_kernel = false;
+        let cpu = coord.block_hessians(&ws, 0, &calib[..2], &cfg).unwrap();
+        for (name, h) in &with_kernel {
+            let diff = h.mat.max_abs_diff(&cpu[name].mat);
+            let scale = cpu[name].mat.fro_norm().max(1e-9) as f32;
+            assert!(diff / scale < 1e-3, "{name}: rel diff {}", diff / scale);
+        }
+    }
+
+    #[test]
+    fn batched_hessian_matches_per_sample() {
+        // The batched Phase-1 artifact (vmapped fwd+bwd + on-device
+        // contraction) must equal per-sample CPU accumulation exactly
+        // (up to f32 reduction order), for both Hessian kinds.
+        let Some((rt, meta, ws, _)) = setup() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let splits = Splits::new(meta.vocab, Flavor::C4Analog, 7);
+        let calib = splits.calibration(meta.calib_batch, meta.seq);
+        let coord = Coordinator::new(&rt, &meta).unwrap();
+        for method in [Method::oac(Backend::SpQR), Method::baseline(Backend::SpQR)] {
+            let mut cfg = PipelineConfig::new(method, 2);
+            cfg.n_calib = calib.len();
+            let fast = coord.block_hessians(&ws, 0, &calib, &cfg).unwrap();
+            cfg.use_kernel = false;
+            let slow = coord.block_hessians(&ws, 0, &calib, &cfg).unwrap();
+            for (name, h) in &fast {
+                assert_eq!(h.samples, slow[name].samples);
+                let rel = h.mat.sub(&slow[name].mat).fro_norm()
+                    / slow[name].mat.fro_norm().max(1e-12);
+                assert!(rel < 1e-3, "{method:?} {name}: rel {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn agnostic_hessian_dims_and_sharing() {
+        let Some((rt, meta, ws, calib)) = setup() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let coord = Coordinator::new(&rt, &meta).unwrap();
+        let cfg = PipelineConfig::new(Method::baseline(Backend::SpQR), 2);
+        let hes = coord.block_hessians(&ws, 0, &calib[..2], &cfg).unwrap();
+        // q, k, v share the same input so their Hessians must be identical.
+        let q = &hes["blocks.0.q"].mat;
+        let k = &hes["blocks.0.k"].mat;
+        assert!(q.max_abs_diff(k) < 1e-6);
+        assert_eq!(hes["blocks.0.up"].mat.rows, meta.d_model);
+        assert_eq!(hes["blocks.0.down"].mat.rows, meta.d_ff);
+    }
+
+    #[test]
+    fn full_pipeline_runs_and_mutates_weights() {
+        let Some((rt, meta, mut ws, calib)) = setup() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let before = ws.get_mat("blocks.0.q");
+        let mut cfg = PipelineConfig::new(Method::oac(Backend::SpQR), 2);
+        cfg.n_calib = 2;
+        let report = run_pipeline(&rt, &meta, &mut ws, &calib, &cfg).unwrap();
+        let after = ws.get_mat("blocks.0.q");
+        assert!(before.max_abs_diff(&after) > 0.0, "weights unchanged");
+        assert_eq!(report.layers.len(), meta.n_layers * 6);
+        assert!(report.avg_bits > 2.0 && report.avg_bits < 5.0, "{}", report.avg_bits);
+        assert!(report.phase1_secs > 0.0 && report.phase2_secs > 0.0);
+        // No NaNs anywhere.
+        for e in &ws.entries {
+            assert!(e.data.iter().all(|v| v.is_finite()), "{} has NaN", e.name);
+        }
+    }
+
+    #[test]
+    fn f16_gradients_close_to_f32() {
+        let Some((rt, meta, ws, calib)) = setup() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let coord = Coordinator::new(&rt, &meta).unwrap();
+        let mut cfg = PipelineConfig::new(Method::oac(Backend::SpQR), 2);
+        cfg.n_calib = 2;
+        let f32h = coord.block_hessians(&ws, 0, &calib[..2], &cfg).unwrap();
+        cfg.grad_precision = GradPrecision::F16 { loss_scale: 256.0 };
+        let f16h = coord.block_hessians(&ws, 0, &calib[..2], &cfg).unwrap();
+        for (name, h) in &f32h {
+            let rel = (h.mat.sub(&f16h[name].mat).fro_norm()) / h.mat.fro_norm().max(1e-12);
+            assert!(rel < 0.05, "{name}: rel {rel}");
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! Synthetic corpus substrate (C4/RedPajama/WikiText2/PTB are unavailable
+//! offline — see DESIGN.md §2).
+//!
+//! A first-order Markov "grammar" over the model vocabulary: each token has
+//! a sparse successor set with Zipfian transition weights, so the corpus has
+//! (a) learnable structure — a trained LM reaches perplexity far below the
+//! vocab size, and (b) non-trivial input covariance — which is what the
+//! calibration Hessians need. Test distributions analogous to the paper's:
+//!
+//! * `TestSplit::InDomain`   — same grammar, held-out walks (C4 analog:
+//!   calibration and this split come from the same distribution).
+//! * `TestSplit::Shifted`    — same grammar with 8% uniform-noise tokens
+//!   (WikiText2 analog: related but shifted).
+//! * `TestSplit::FarShifted` — 15% noise (PTB analog).
+
+use crate::util::rng::{Rng, Zipf};
+
+/// Corpus flavours, mirroring the paper's calibration-source distinction
+/// (OPT models calibrate on C4; LLaMa on RedPajama).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flavor {
+    C4Analog,
+    RedPajamaAnalog,
+}
+
+impl Flavor {
+    fn seed_tag(&self) -> u64 {
+        match self {
+            Flavor::C4Analog => 0xC4,
+            Flavor::RedPajamaAnalog => 0x9D,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TestSplit {
+    InDomain,
+    Shifted,
+    FarShifted,
+}
+
+impl TestSplit {
+    pub fn noise(&self) -> f64 {
+        match self {
+            TestSplit::InDomain => 0.0,
+            TestSplit::Shifted => 0.08,
+            TestSplit::FarShifted => 0.15,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TestSplit::InDomain => "C4*",
+            TestSplit::Shifted => "WikiText2*",
+            TestSplit::FarShifted => "PTB*",
+        }
+    }
+}
+
+/// The Markov grammar + samplers.
+pub struct Corpus {
+    pub vocab: usize,
+    /// successors[t] = list of (next_token, cumulative_prob).
+    successors: Vec<Vec<(usize, f64)>>,
+    start: Zipf,
+}
+
+pub const SUCCESSORS_PER_TOKEN: usize = 8;
+
+impl Corpus {
+    pub fn new(vocab: usize, flavor: Flavor, seed: u64) -> Corpus {
+        let mut rng = Rng::new(seed ^ flavor.seed_tag().wrapping_mul(0x517C_C1B7_2722_0A95));
+        let zipf_w: Vec<f64> = (1..=SUCCESSORS_PER_TOKEN)
+            .map(|k| 1.0 / (k as f64).powf(1.2))
+            .collect();
+        let total: f64 = zipf_w.iter().sum();
+        let mut successors = Vec::with_capacity(vocab);
+        for _ in 0..vocab {
+            let succ = rng.sample_indices(vocab, SUCCESSORS_PER_TOKEN);
+            let mut acc = 0.0;
+            let entry: Vec<(usize, f64)> = succ
+                .iter()
+                .zip(&zipf_w)
+                .map(|(&s, &w)| {
+                    acc += w / total;
+                    (s, acc)
+                })
+                .collect();
+            successors.push(entry);
+        }
+        Corpus { vocab, successors, start: Zipf::new(vocab, 1.05) }
+    }
+
+    fn next_token(&self, prev: usize, rng: &mut Rng, noise: f64) -> usize {
+        if noise > 0.0 && rng.uniform() < noise {
+            return rng.below(self.vocab);
+        }
+        let u = rng.uniform();
+        for &(tok, cum) in &self.successors[prev] {
+            if u <= cum {
+                return tok;
+            }
+        }
+        self.successors[prev].last().unwrap().0
+    }
+
+    /// Sample one sequence of `len` tokens (random walk).
+    pub fn sample_seq(&self, rng: &mut Rng, len: usize, noise: f64) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        let mut cur = self.start.sample(rng);
+        out.push(cur as i32);
+        for _ in 1..len {
+            cur = self.next_token(cur, rng, noise);
+            out.push(cur as i32);
+        }
+        out
+    }
+
+    /// Transition table row (used by the task builder in `eval`).
+    pub fn successors_of(&self, tok: usize) -> &[(usize, f64)] {
+        &self.successors[tok]
+    }
+
+    /// Continue a walk from `from` for `len` tokens.
+    pub fn continue_walk(&self, from: usize, len: usize, rng: &mut Rng) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        let mut cur = from;
+        for _ in 0..len {
+            cur = self.next_token(cur, rng, 0.0);
+            out.push(cur as i32);
+        }
+        out
+    }
+
+    /// The most likely continuation of length `len` from `prev` (greedy walk)
+    /// — used as the correct answer in the reasoning-task analog.
+    pub fn greedy_continuation(&self, prev: usize, len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        let mut cur = prev;
+        for _ in 0..len {
+            cur = self.successors[cur][0].0;
+            out.push(cur as i32);
+        }
+        out
+    }
+
+    /// True (teacher) probability of `next` given `prev` under the grammar.
+    pub fn transition_prob(&self, prev: usize, next: usize) -> f64 {
+        let mut last = 0.0;
+        for &(tok, cum) in &self.successors[prev] {
+            let p = cum - last;
+            if tok == next {
+                return p;
+            }
+            last = cum;
+        }
+        0.0
+    }
+
+    /// Entropy rate estimate of the grammar (lower bound for model ppl).
+    pub fn entropy_rate(&self) -> f64 {
+        let mut h = 0.0;
+        for succ in &self.successors {
+            let mut last = 0.0;
+            for &(_, cum) in succ {
+                let p = cum - last;
+                if p > 0.0 {
+                    h -= p * p.ln();
+                }
+                last = cum;
+            }
+        }
+        h / self.vocab as f64
+    }
+}
+
+/// Deterministic dataset splits: disjoint RNG streams per purpose.
+pub struct Splits {
+    pub corpus: Corpus,
+    seed: u64,
+}
+
+impl Splits {
+    pub fn new(vocab: usize, flavor: Flavor, seed: u64) -> Splits {
+        Splits { corpus: Corpus::new(vocab, flavor, seed), seed }
+    }
+
+    fn stream(&self, tag: u64) -> Rng {
+        Rng::new(self.seed ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Training batches: an endless stream keyed by step.
+    pub fn train_batch(&self, step: usize, batch: usize, seq: usize) -> Vec<Vec<i32>> {
+        let mut rng = self.stream(0x7121).split(step as u64);
+        (0..batch).map(|_| self.corpus.sample_seq(&mut rng, seq, 0.0)).collect()
+    }
+
+    /// Calibration set: N held-out sequences (paper: 128 × 2048; scaled).
+    pub fn calibration(&self, n: usize, seq: usize) -> Vec<Vec<i32>> {
+        let mut rng = self.stream(0xCA11);
+        (0..n).map(|_| self.corpus.sample_seq(&mut rng, seq, 0.0)).collect()
+    }
+
+    /// Validation set (α tuning).
+    pub fn validation(&self, n: usize, seq: usize) -> Vec<Vec<i32>> {
+        let mut rng = self.stream(0x7A11);
+        (0..n).map(|_| self.corpus.sample_seq(&mut rng, seq, 0.0)).collect()
+    }
+
+    /// Test set for a given distribution shift.
+    pub fn test(&self, split: TestSplit, n: usize, seq: usize) -> Vec<Vec<i32>> {
+        let mut rng = self.stream(0x7E57 ^ (split.noise() * 1e4) as u64);
+        (0..n).map(|_| self.corpus.sample_seq(&mut rng, seq, split.noise())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_flavor_dependent() {
+        let a1 = Splits::new(256, Flavor::C4Analog, 0).calibration(2, 32);
+        let a2 = Splits::new(256, Flavor::C4Analog, 0).calibration(2, 32);
+        let b = Splits::new(256, Flavor::RedPajamaAnalog, 0).calibration(2, 32);
+        assert_eq!(a1, a2);
+        assert_ne!(a1, b);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let s = Splits::new(128, Flavor::C4Analog, 1);
+        for seq in s.test(TestSplit::FarShifted, 8, 64) {
+            for t in seq {
+                assert!((0..128).contains(&t));
+            }
+        }
+    }
+
+    #[test]
+    fn grammar_is_learnable_structure() {
+        // Entropy rate must be far below log(vocab): the LM has signal.
+        let c = Corpus::new(512, Flavor::C4Analog, 0);
+        let h = c.entropy_rate();
+        assert!(h < 0.7 * (512f64).ln(), "entropy rate {h}");
+        assert!(h > 0.5, "degenerate grammar {h}");
+    }
+
+    #[test]
+    fn transitions_follow_grammar() {
+        let c = Corpus::new(64, Flavor::C4Analog, 3);
+        let mut rng = Rng::new(5);
+        let seq = c.sample_seq(&mut rng, 500, 0.0);
+        for w in seq.windows(2) {
+            assert!(c.transition_prob(w[0] as usize, w[1] as usize) > 0.0);
+        }
+    }
+
+    #[test]
+    fn noise_breaks_transitions() {
+        let c = Corpus::new(64, Flavor::C4Analog, 3);
+        let mut rng = Rng::new(6);
+        let seq = c.sample_seq(&mut rng, 2000, 0.5);
+        let broken = seq
+            .windows(2)
+            .filter(|w| c.transition_prob(w[0] as usize, w[1] as usize) == 0.0)
+            .count();
+        assert!(broken > 200, "only {broken} broken transitions");
+    }
+
+    #[test]
+    fn splits_disjoint_streams() {
+        let s = Splits::new(256, Flavor::C4Analog, 0);
+        assert_ne!(s.calibration(1, 32), s.validation(1, 32));
+        assert_ne!(s.test(TestSplit::InDomain, 1, 32), s.calibration(1, 32));
+    }
+
+    #[test]
+    fn train_batches_differ_by_step() {
+        let s = Splits::new(256, Flavor::C4Analog, 0);
+        assert_ne!(s.train_batch(0, 2, 16), s.train_batch(1, 2, 16));
+        assert_eq!(s.train_batch(5, 2, 16), s.train_batch(5, 2, 16));
+    }
+
+    #[test]
+    fn greedy_continuation_is_most_probable() {
+        let c = Corpus::new(64, Flavor::C4Analog, 9);
+        let cont = c.greedy_continuation(3, 4);
+        let p_first = c.transition_prob(3, cont[0] as usize);
+        for &(tok, _) in &c.successors[3] {
+            assert!(p_first >= c.transition_prob(3, tok) - 1e-12);
+        }
+    }
+}

@@ -1,0 +1,310 @@
+//! Evaluation: perplexity on the synthetic test splits (C4*/WikiText2*/PTB*
+//! analogs) and the multiple-choice reasoning-task analog of the paper's
+//! LMEH column (length-normalized log-prob argmax — the same scoring LMEH
+//! uses for WinoGrande/PiQA/HellaSwag/ARC).
+
+use anyhow::{Context, Result};
+
+use crate::data::{Corpus, Splits, TestSplit};
+use crate::model::{ModelMeta, WeightStore};
+use crate::runtime::{literal_to_mat, Runtime};
+use crate::util::rng::Rng;
+
+/// Device-resident weights for repeated evaluation calls.
+pub struct DeviceWeights {
+    pub bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl DeviceWeights {
+    pub fn upload(rt: &Runtime, ws: &WeightStore) -> Result<DeviceWeights> {
+        let bufs = ws
+            .entries
+            .iter()
+            .map(|e| rt.upload_f32(&e.data, &e.shape))
+            .collect::<Result<_>>()?;
+        Ok(DeviceWeights { bufs })
+    }
+
+    pub fn args<'a>(&'a self, extra: &'a xla::PjRtBuffer) -> Vec<&'a xla::PjRtBuffer> {
+        let mut v: Vec<&xla::PjRtBuffer> = self.bufs.iter().collect();
+        v.push(extra);
+        v
+    }
+}
+
+/// Sum CE over one sequence via the `model_loss` artifact.
+pub fn seq_loss(
+    rt: &Runtime,
+    meta: &ModelMeta,
+    dw: &DeviceWeights,
+    tokens: &[i32],
+) -> Result<f64> {
+    let exe = rt.load(meta.artifact_path("model_loss")?)?;
+    let tok = rt.upload_i32(tokens, &[meta.seq])?;
+    let outs = rt.run_b(&exe, &dw.args(&tok))?;
+    let loss: f32 = outs[0].get_first_element()?;
+    Ok(loss as f64)
+}
+
+/// Perplexity over a set of sequences: exp(Σ nll / Σ tokens).
+pub fn perplexity(
+    rt: &Runtime,
+    meta: &ModelMeta,
+    dw: &DeviceWeights,
+    seqs: &[Vec<i32>],
+) -> Result<f64> {
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for s in seqs {
+        total += seq_loss(rt, meta, dw, s)?;
+        count += s.len() - 1;
+    }
+    Ok((total / count as f64).exp())
+}
+
+/// Log-probability of `cont` following `prefix` (teacher-forced scoring via
+/// the `model_fwd` logits artifact). The combined sequence is right-padded
+/// to the artifact's fixed seq length; padded positions don't contribute.
+pub fn continuation_logprob(
+    rt: &Runtime,
+    meta: &ModelMeta,
+    dw: &DeviceWeights,
+    prefix: &[i32],
+    cont: &[i32],
+) -> Result<f64> {
+    let exe = rt.load(meta.artifact_path("model_fwd")?)?;
+    let mut toks: Vec<i32> = prefix.to_vec();
+    toks.extend_from_slice(cont);
+    anyhow::ensure!(toks.len() <= meta.seq, "sequence too long");
+    let used = toks.len();
+    toks.resize(meta.seq, 0);
+    let tok = rt.upload_i32(&toks, &[meta.seq])?;
+    let outs = rt.run_b(&exe, &dw.args(&tok))?;
+    let logits = literal_to_mat(&outs[0]).context("logits")?;
+
+    // Score positions prefix.len()-1 .. used-1 (predicting cont tokens).
+    let mut lp = 0.0f64;
+    for pos in (prefix.len() - 1)..(used - 1) {
+        let row = logits.row(pos);
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let lse: f64 = row.iter().map(|&v| ((v as f64) - maxv).exp()).sum::<f64>().ln() + maxv;
+        let tgt = toks[pos + 1] as usize;
+        lp += row[tgt] as f64 - lse;
+    }
+    Ok(lp)
+}
+
+/// One multiple-choice task instance.
+pub struct TaskInstance {
+    pub prefix: Vec<i32>,
+    /// Candidates; index 0 is the correct one (shuffled at scoring time is
+    /// unnecessary — argmax is order-independent).
+    pub candidates: Vec<Vec<i32>>,
+}
+
+/// Task flavours — the per-task columns of paper Tables 10-12.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Distractors are uniform random token strings (easy; PiQA* analog).
+    RandomDistractors,
+    /// Distractors are grammatical walks from other start states
+    /// (medium; HellaSwag*/ARC-e* analog).
+    WrongContext,
+    /// Distractors are the true continuation with two tokens swapped
+    /// (hard; WinoGrande*/ARC-c* analog).
+    NearMiss,
+}
+
+impl TaskKind {
+    pub fn all() -> [TaskKind; 3] {
+        [TaskKind::RandomDistractors, TaskKind::WrongContext, TaskKind::NearMiss]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TaskKind::RandomDistractors => "RandDistract*",
+            TaskKind::WrongContext => "WrongContext*",
+            TaskKind::NearMiss => "NearMiss*",
+        }
+    }
+}
+
+/// Build `n` instances of a task kind from the grammar.
+pub fn build_task(
+    corpus: &Corpus,
+    kind: TaskKind,
+    n: usize,
+    prefix_len: usize,
+    cont_len: usize,
+    seed: u64,
+) -> Vec<TaskInstance> {
+    let mut rng = Rng::new(seed ^ 0x7A5C);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let prefix = corpus.sample_seq(&mut rng, prefix_len, 0.0);
+        let last = *prefix.last().unwrap() as usize;
+        // Correct answer: a plausible (grammatical) continuation of the walk.
+        let mut cont_rng = rng.split(1);
+        let correct = corpus.continue_walk(last, cont_len, &mut cont_rng);
+        let mut candidates = vec![correct.clone()];
+        for d in 0..3 {
+            let mut drng = rng.split(10 + d);
+            let distractor = match kind {
+                TaskKind::RandomDistractors => {
+                    (0..cont_len).map(|_| drng.below(corpus.vocab) as i32).collect()
+                }
+                TaskKind::WrongContext => corpus.sample_seq(&mut drng, cont_len, 0.0),
+                TaskKind::NearMiss => {
+                    let mut c = correct.clone();
+                    let i = drng.below(cont_len);
+                    let j = (i + 1 + drng.below(cont_len - 1)) % cont_len;
+                    c.swap(i, j);
+                    if c == correct {
+                        c[i] = drng.below(corpus.vocab) as i32;
+                    }
+                    c
+                }
+            };
+            candidates.push(distractor);
+        }
+        out.push(TaskInstance { prefix, candidates });
+    }
+    out
+}
+
+/// Accuracy of the model on a task set (length-normalized logprob argmax).
+pub fn task_accuracy(
+    rt: &Runtime,
+    meta: &ModelMeta,
+    dw: &DeviceWeights,
+    tasks: &[TaskInstance],
+) -> Result<f64> {
+    let mut correct = 0usize;
+    for t in tasks {
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for (i, cand) in t.candidates.iter().enumerate() {
+            let lp = continuation_logprob(rt, meta, dw, &t.prefix, cand)?
+                / cand.len() as f64;
+            if lp > best.0 {
+                best = (lp, i);
+            }
+        }
+        if best.1 == 0 {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / tasks.len() as f64)
+}
+
+/// Full evaluation bundle: the columns of paper Tables 1/2/10-13.
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub ppl_in_domain: f64,
+    pub ppl_shifted: f64,
+    pub ppl_far: Option<f64>,
+    /// (task label, accuracy)
+    pub tasks: Vec<(&'static str, f64)>,
+}
+
+impl EvalReport {
+    pub fn task_avg(&self) -> f64 {
+        if self.tasks.is_empty() {
+            return 0.0;
+        }
+        100.0 * self.tasks.iter().map(|(_, a)| a).sum::<f64>() / self.tasks.len() as f64
+    }
+}
+
+/// Evaluation workload sizes (kept small: everything runs on one CPU core).
+#[derive(Debug, Clone)]
+pub struct EvalConfig {
+    pub ppl_seqs: usize,
+    pub task_instances: usize,
+    pub with_far_split: bool,
+    pub seed: u64,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        Self { ppl_seqs: 24, task_instances: 24, with_far_split: false, seed: 0 }
+    }
+}
+
+pub fn evaluate(
+    rt: &Runtime,
+    meta: &ModelMeta,
+    ws: &WeightStore,
+    splits: &Splits,
+    cfg: &EvalConfig,
+) -> Result<EvalReport> {
+    let dw = DeviceWeights::upload(rt, ws)?;
+    let ppl_in = perplexity(rt, meta, &dw, &splits.test(TestSplit::InDomain, cfg.ppl_seqs, meta.seq))?;
+    let ppl_sh = perplexity(rt, meta, &dw, &splits.test(TestSplit::Shifted, cfg.ppl_seqs, meta.seq))?;
+    let ppl_far = if cfg.with_far_split {
+        Some(perplexity(rt, meta, &dw, &splits.test(TestSplit::FarShifted, cfg.ppl_seqs, meta.seq))?)
+    } else {
+        None
+    };
+    // Short prefix + long continuation makes the tasks hard enough that a
+    // trained-but-quantized model shows measurable degradation.
+    let prefix_len = meta.seq / 4;
+    let cont_len = (meta.seq / 4).max(8);
+    let mut tasks = Vec::new();
+    for kind in TaskKind::all() {
+        let set = build_task(&splits.corpus, kind, cfg.task_instances, prefix_len, cont_len, cfg.seed);
+        tasks.push((kind.label(), task_accuracy(rt, meta, &dw, &set)?));
+    }
+    Ok(EvalReport { ppl_in_domain: ppl_in, ppl_shifted: ppl_sh, ppl_far, tasks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Flavor;
+    use std::path::PathBuf;
+
+    fn artifacts_root() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("meta.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn random_model_ppl_near_vocab_and_chance_accuracy() {
+        let Some(root) = artifacts_root() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let rt = Runtime::new().unwrap();
+        let meta = ModelMeta::load(&root, "tiny").unwrap();
+        let splits = Splits::new(meta.vocab, Flavor::C4Analog, 0);
+        let ws = WeightStore::init_random(&meta, 0);
+        let cfg = EvalConfig { ppl_seqs: 4, task_instances: 8, with_far_split: true, seed: 0 };
+        let rep = evaluate(&rt, &meta, &ws, &splits, &cfg).unwrap();
+        // Untrained model: ppl within a factor ~2 of uniform (vocab=256).
+        assert!(rep.ppl_in_domain > 100.0 && rep.ppl_in_domain < 600.0, "{}", rep.ppl_in_domain);
+        // Accuracy near chance (25%) for random-distractor tasks at best.
+        assert!(rep.task_avg() < 70.0);
+        assert!(rep.ppl_far.is_some());
+    }
+
+    #[test]
+    fn task_sets_deterministic() {
+        let c = Corpus::new(128, Flavor::C4Analog, 0);
+        let a = build_task(&c, TaskKind::NearMiss, 4, 8, 4, 1);
+        let b = build_task(&c, TaskKind::NearMiss, 4, 8, 4, 1);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prefix, y.prefix);
+            assert_eq!(x.candidates, y.candidates);
+        }
+    }
+
+    #[test]
+    fn near_miss_distractors_differ_from_correct() {
+        let c = Corpus::new(128, Flavor::C4Analog, 2);
+        for t in build_task(&c, TaskKind::NearMiss, 8, 8, 6, 3) {
+            for d in &t.candidates[1..] {
+                assert_ne!(*d, t.candidates[0]);
+            }
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Shared experiment harness for the CLI, examples and `benches/table*.rs`:
+//! train-or-load a checkpoint, run a quantization method, evaluate, and emit
+//! paper-style table rows. Checkpoints are cached under `checkpoints/` so
+//! every bench reuses the same trained model.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::calib::Method;
+use crate::coordinator::{run_pipeline, GradPrecision, PipelineConfig, QuantReport};
+use crate::data::{Flavor, Splits};
+use crate::eval::{evaluate, EvalConfig, EvalReport};
+use crate::model::{ModelMeta, WeightStore};
+use crate::report::{fmt_bits, fmt_pct, fmt_ppl};
+use crate::runtime::Runtime;
+use crate::train::{ensure_checkpoint, TrainConfig};
+
+/// Workload sizes, overridable from the environment so `cargo bench` can be
+/// dialed up/down: OAC_TRAIN_STEPS, OAC_CALIB_N, OAC_EVAL_SEQS, OAC_TASK_N.
+#[derive(Debug, Clone)]
+pub struct WorkbenchConfig {
+    pub config: String,
+    pub flavor: Flavor,
+    pub seed: u64,
+    pub train_steps: usize,
+    pub n_calib: usize,
+    pub eval: EvalConfig,
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+impl WorkbenchConfig {
+    pub fn new(config: &str) -> WorkbenchConfig {
+        let train_steps = env_usize(
+            "OAC_TRAIN_STEPS",
+            match config {
+                "tiny" => 800,
+                "small" => 400,
+                _ => 500,
+            },
+        );
+        WorkbenchConfig {
+            config: config.to_string(),
+            flavor: Flavor::C4Analog,
+            seed: 0,
+            train_steps,
+            n_calib: env_usize("OAC_CALIB_N", 16),
+            eval: EvalConfig {
+                ppl_seqs: env_usize("OAC_EVAL_SEQS", 16),
+                task_instances: env_usize("OAC_TASK_N", 16),
+                with_far_split: false,
+                seed: 0,
+            },
+        }
+    }
+}
+
+/// A trained model + everything needed to quantize and evaluate it.
+pub struct Workbench {
+    pub rt: Runtime,
+    pub meta: ModelMeta,
+    pub splits: Splits,
+    pub weights: WeightStore,
+    pub cfg: WorkbenchConfig,
+}
+
+pub fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn checkpoints_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("checkpoints")
+}
+
+impl Workbench {
+    pub fn new(cfg: WorkbenchConfig) -> Result<Workbench> {
+        crate::util::logging::init();
+        let rt = Runtime::new()?;
+        let meta = ModelMeta::load(artifacts_root(), &cfg.config)?;
+        let splits = Splits::new(meta.vocab, cfg.flavor, cfg.seed);
+        let ckpt = checkpoints_root().join(format!(
+            "{}_{:?}_s{}_t{}.bin",
+            cfg.config, cfg.flavor, cfg.seed, cfg.train_steps
+        ));
+        let weights = ensure_checkpoint(
+            &rt,
+            &meta,
+            &splits,
+            &TrainConfig { steps: cfg.train_steps, lr: 1e-3, log_every: 50 },
+            cfg.seed,
+            &ckpt,
+        )?;
+        Ok(Workbench { rt, meta, splits, weights, cfg })
+    }
+
+    /// FP16-baseline row (the unquantized model).
+    pub fn eval_baseline(&self) -> Result<EvalReport> {
+        evaluate(&self.rt, &self.meta, &self.weights, &self.splits, &self.cfg.eval)
+    }
+
+    /// Quantize a *copy* of the trained weights with `pipeline` and evaluate.
+    pub fn run(&self, pipeline: &PipelineConfig) -> Result<(QuantReport, EvalReport)> {
+        let mut ws = self.weights.clone();
+        let calib = self.splits.calibration(pipeline.n_calib, self.meta.seq);
+        let qr = run_pipeline(&self.rt, &self.meta, &mut ws, &calib, pipeline)?;
+        let er = evaluate(&self.rt, &self.meta, &ws, &self.splits, &self.cfg.eval)?;
+        Ok((qr, er))
+    }
+
+    /// Standard pipeline config for a method at a bit width, with the
+    /// workbench's calibration-set size.
+    pub fn pipeline(&self, method: Method, bits: usize) -> PipelineConfig {
+        let mut p = PipelineConfig::new(method, bits);
+        p.n_calib = self.cfg.n_calib;
+        p
+    }
+
+    /// The paper's protocol (Appendix C.2): grid-search the Hessian
+    /// regularization α on *validation* perplexity, then report test
+    /// metrics at the winning α. Grid overridable via OAC_ALPHA_GRID
+    /// (comma-separated).
+    pub fn run_tuned(
+        &self,
+        method: Method,
+        bits: usize,
+    ) -> Result<(QuantReport, EvalReport, f32)> {
+        let grid: Vec<f32> = std::env::var("OAC_ALPHA_GRID")
+            .unwrap_or_else(|_| "0.01,0.1,1".to_string())
+            .split(',')
+            .filter_map(|s| s.parse().ok())
+            .collect();
+        if !method.backend.uses_hessian() {
+            let (qr, er) = self.run(&self.pipeline(method, bits))?;
+            return Ok((qr, er, f32::NAN));
+        }
+        let calib = self.splits.calibration(self.cfg.n_calib, self.meta.seq);
+        let val = self.splits.validation(8, self.meta.seq);
+        let mut best: Option<(f64, f32, WeightStore, QuantReport)> = None;
+        for &alpha in &grid {
+            let mut p = self.pipeline(method, bits);
+            p.calib.alpha = alpha;
+            let mut ws = self.weights.clone();
+            let qr = run_pipeline(&self.rt, &self.meta, &mut ws, &calib, &p)?;
+            let dw = crate::eval::DeviceWeights::upload(&self.rt, &ws)?;
+            let vppl = crate::eval::perplexity(&self.rt, &self.meta, &dw, &val)?;
+            log::debug!("{} α={alpha}: val ppl {vppl:.3}", method.name());
+            if best.as_ref().map_or(true, |(b, ..)| vppl < *b) {
+                best = Some((vppl, alpha, ws, qr));
+            }
+        }
+        let (_, alpha, ws, qr) = best.unwrap();
+        let er = evaluate(&self.rt, &self.meta, &ws, &self.splits, &self.cfg.eval)?;
+        Ok((qr, er, alpha))
+    }
+
+    /// Quantize + evaluate with fp16 gradient emulation (Table 3).
+    pub fn run_f16(
+        &self,
+        method: Method,
+        bits: usize,
+        loss_scale: f32,
+    ) -> Result<(QuantReport, EvalReport)> {
+        let mut p = self.pipeline(method, bits);
+        p.grad_precision = GradPrecision::F16 { loss_scale };
+        self.run(&p)
+    }
+}
+
+/// A standard table row: Method | Avg Bits | C4* | WikiText2* | LMEH*.
+pub fn method_row(name: &str, avg_bits: f64, er: &EvalReport) -> Vec<String> {
+    vec![
+        name.to_string(),
+        fmt_bits(avg_bits),
+        fmt_ppl(er.ppl_in_domain),
+        fmt_ppl(er.ppl_shifted),
+        fmt_pct(er.task_avg()),
+    ]
+}
+
+pub const ROW_HEADERS: [&str; 5] = ["Method", "Avg Bits", "C4*", "WikiText2*", "LMEH*"];
+
+/// Baseline (FP32) row.
+pub fn baseline_row(er: &EvalReport) -> Vec<String> {
+    method_row("Baseline", 32.0, er)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_override_respected() {
+        std::env::set_var("OAC_TEST_ENV_USIZE", "7");
+        assert_eq!(env_usize("OAC_TEST_ENV_USIZE", 3), 7);
+        assert_eq!(env_usize("OAC_TEST_ENV_MISSING", 3), 3);
+    }
+
+    #[test]
+    fn row_shape() {
+        let er = EvalReport {
+            ppl_in_domain: 10.0,
+            ppl_shifted: 12.0,
+            ppl_far: None,
+            tasks: vec![("a", 0.5), ("b", 0.7)],
+        };
+        let row = method_row("OAC", 2.09, &er);
+        assert_eq!(row.len(), ROW_HEADERS.len());
+        assert_eq!(row[1], "2.09");
+        assert_eq!(row[4], "60.00");
+    }
+}

@@ -1,0 +1,230 @@
+//! Hessian estimation for calibration (paper §3-4).
+//!
+//! Two flavours, one container:
+//! * **Output-agnostic** (OPTQ/SpQR/QuIP/BiLLM): `H̄ = E[x xᵀ]` over the
+//!   layer's inputs (eq. 1) — accumulated from the `layer_inputs` artifact.
+//! * **Output-adaptive** (OAC): `Ĥ_OAC = Σᵢ G[i]ᵀ G[i]` over per-sample
+//!   gradient matrices of the output CE loss (eqs. 13-14), the Fisher
+//!   identity approximation — accumulated from the `model_grads` artifact,
+//!   through the L1 `hessian_accum` Pallas kernel when a matching artifact
+//!   is loaded, with [`Mat::gram`] as CPU fallback.
+//!
+//! Both use the same regularization (eq. 21) and reduction (eq. 14 mean vs
+//! eq. 22 sum) machinery, which is exactly what lets OAC slot into any
+//! Hessian-based calibration backend (paper Appendix I).
+
+use crate::tensor::linalg::{self, LinalgError};
+use crate::tensor::Mat;
+
+/// Which Hessian a calibration run uses (the paper's central comparison).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HessianKind {
+    /// ℓ2 layer-wise Hessian Σ x xᵀ (output-agnostic baselines).
+    Agnostic,
+    /// Output-adaptive Σ Gᵀ G (OAC).
+    OutputAdaptive,
+}
+
+/// How per-sample contributions are reduced (Appendix C.3, Table 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reduction {
+    /// eq. 14: divide by N.
+    Mean,
+    /// eq. 22: skip the division (paper default for numerical stability).
+    Sum,
+}
+
+/// Symmetric PSD accumulator for one linear layer's Hessian.
+#[derive(Debug, Clone)]
+pub struct Hessian {
+    pub mat: Mat,
+    pub samples: usize,
+    pub kind: HessianKind,
+}
+
+impl Hessian {
+    pub fn zeros(dim: usize, kind: HessianKind) -> Hessian {
+        Hessian { mat: Mat::zeros(dim, dim), samples: 0, kind }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mat.rows
+    }
+
+    /// Accumulate one contribution matrix (gradient G[i] for OAC, activation
+    /// X for agnostic): H += M^T M. CPU path; the coordinator uses the L1
+    /// kernel artifact when available and calls [`Hessian::add_gram`].
+    pub fn accumulate(&mut self, m: &Mat) {
+        assert_eq!(m.cols, self.dim(), "contribution width mismatch");
+        self.mat.add_assign(&m.gram());
+        self.samples += 1;
+    }
+
+    /// Add an already-contracted M^T M (from the Pallas kernel artifact).
+    pub fn add_gram(&mut self, gram: &Mat) {
+        assert_eq!(gram.rows, self.dim());
+        self.mat.add_assign(gram);
+        self.samples += 1;
+    }
+
+    /// Apply the reduction (eq. 14 vs eq. 22).
+    pub fn reduced(&self, reduction: Reduction) -> Mat {
+        let mut m = self.mat.clone();
+        if reduction == Reduction::Mean && self.samples > 0 {
+            m.scale(1.0 / self.samples as f32);
+        }
+        m
+    }
+
+    /// Regularize per eq. 21: H += diag(α · mean(diag(H))), then return the
+    /// damped matrix. α is the paper's tuned hyper-parameter (Table 4).
+    pub fn regularized(&self, alpha: f32, reduction: Reduction) -> Mat {
+        let mut m = self.reduced(reduction);
+        regularize_in_place(&mut m, alpha);
+        m
+    }
+}
+
+/// eq. 21 damping on an arbitrary symmetric matrix.
+pub fn regularize_in_place(h: &mut Mat, alpha: f32) {
+    let n = h.rows;
+    let mean_diag = (0..n).map(|i| h.at(i, i) as f64).sum::<f64>() / n as f64;
+    // Guard: an all-zero Hessian (dead layer) still needs to be invertible.
+    let damp = (alpha as f64 * mean_diag).max(1e-8) as f32;
+    for i in 0..n {
+        *h.at_mut(i, i) += damp;
+    }
+}
+
+/// Everything the calibration backends need precomputed from a Hessian.
+pub struct PreparedHessian {
+    /// Damped H.
+    pub h: Mat,
+    /// H^{-1} (for saliency eq. 4 and the OPTQ update eq. 3).
+    pub hinv: Mat,
+    /// Upper Cholesky factor U of H^{-1} (OPTQ consumes rows of U).
+    pub hinv_chol: Mat,
+}
+
+pub fn prepare(h: Mat) -> Result<PreparedHessian, LinalgError> {
+    // H^{-1} once; its upper Cholesky factor is cholesky(H^{-1})^T
+    // (inverse_upper_cholesky re-derived here to avoid inverting twice —
+    // prepare dominates Phase-2 wall clock, see EXPERIMENTS.md §Perf).
+    let hinv = linalg::spd_inverse(&h)?;
+    let hinv_chol = linalg::cholesky(&hinv)?.transpose();
+    Ok(PreparedHessian { h, hinv, hinv_chol })
+}
+
+/// Saliency of one weight (paper eq. 4): s = (w - q(w))² / [H^{-1}]_{kk}.
+#[inline]
+pub fn saliency(w: f32, qw: f32, hinv_kk: f32) -> f32 {
+    let d = w - qw;
+    d * d / hinv_kk.max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_contrib(rng: &mut Rng, m: usize, n: usize) -> Mat {
+        let mut g = Mat::zeros(m, n);
+        rng.fill_normal(&mut g.data, 1.0);
+        g
+    }
+
+    #[test]
+    fn accumulate_matches_manual_sum() {
+        let mut rng = Rng::new(0);
+        let mut h = Hessian::zeros(8, HessianKind::OutputAdaptive);
+        let g1 = rand_contrib(&mut rng, 5, 8);
+        let g2 = rand_contrib(&mut rng, 5, 8);
+        h.accumulate(&g1);
+        h.accumulate(&g2);
+        let mut want = g1.gram();
+        want.add_assign(&g2.gram());
+        assert!(h.mat.max_abs_diff(&want) < 1e-4);
+        assert_eq!(h.samples, 2);
+    }
+
+    #[test]
+    fn mean_vs_sum_scale() {
+        let mut rng = Rng::new(1);
+        let mut h = Hessian::zeros(6, HessianKind::Agnostic);
+        for _ in 0..4 {
+            h.accumulate(&rand_contrib(&mut rng, 3, 6));
+        }
+        let sum = h.reduced(Reduction::Sum);
+        let mut mean = h.reduced(Reduction::Mean);
+        mean.scale(4.0);
+        assert!(sum.max_abs_diff(&mean) < 1e-4);
+    }
+
+    #[test]
+    fn regularization_shifts_diagonal_only() {
+        let mut rng = Rng::new(2);
+        let mut h = Hessian::zeros(5, HessianKind::Agnostic);
+        h.accumulate(&rand_contrib(&mut rng, 10, 5));
+        let plain = h.reduced(Reduction::Sum);
+        let reg = h.regularized(0.1, Reduction::Sum);
+        let mean_diag: f32 = (0..5).map(|i| plain.at(i, i)).sum::<f32>() / 5.0;
+        for i in 0..5 {
+            for j in 0..5 {
+                if i == j {
+                    assert!((reg.at(i, i) - plain.at(i, i) - 0.1 * mean_diag).abs() < 1e-3);
+                } else {
+                    assert_eq!(reg.at(i, j), plain.at(i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_hessian_still_invertible_after_damping() {
+        let h = Hessian::zeros(4, HessianKind::OutputAdaptive);
+        let reg = h.regularized(0.1, Reduction::Sum);
+        assert!(prepare(reg).is_ok());
+    }
+
+    #[test]
+    fn prepare_produces_consistent_factors() {
+        let mut rng = Rng::new(3);
+        let mut h = Hessian::zeros(10, HessianKind::OutputAdaptive);
+        for _ in 0..5 {
+            h.accumulate(&rand_contrib(&mut rng, 8, 10));
+        }
+        let p = prepare(h.regularized(0.01, Reduction::Sum)).unwrap();
+        // hinv is the inverse.
+        let eye = p.h.matmul(&p.hinv);
+        assert!(eye.max_abs_diff(&Mat::eye(10)) < 1e-2);
+        // U^T U = H^{-1}.
+        let rec = p.hinv_chol.transpose().matmul(&p.hinv_chol);
+        assert!(rec.max_abs_diff(&p.hinv) < 1e-3);
+    }
+
+    #[test]
+    fn saliency_scales_with_error_and_sensitivity() {
+        assert!(saliency(1.0, 0.0, 0.1) > saliency(1.0, 0.5, 0.1));
+        assert!(saliency(1.0, 0.0, 0.1) > saliency(1.0, 0.0, 1.0));
+    }
+
+    #[test]
+    fn prop_accumulated_hessian_psd_after_damping() {
+        crate::util::prop::quick(
+            "damped hessian is SPD",
+            |rng| {
+                let n = 2 + rng.below(12);
+                let mut h = Hessian::zeros(n, HessianKind::OutputAdaptive);
+                for _ in 0..1 + rng.below(4) {
+                    h.accumulate(&{
+                        let mut g = Mat::zeros(1 + rng.below(6), n);
+                        rng.fill_normal(&mut g.data, 1.0);
+                        g
+                    });
+                }
+                h.regularized(0.01, Reduction::Sum)
+            },
+            |m| prepare(m.clone()).map(|_| ()).map_err(|e| e.to_string()),
+        );
+    }
+}

@@ -1,0 +1,28 @@
+//! # OAC — Output-adaptive Calibration for Post-training Quantization
+//!
+//! Rust + JAX + Pallas reproduction of *OAC: Output-adaptive Calibration for
+//! Accurate Post-training Quantization* (Edalati et al., AAAI 2025).
+//!
+//! Three layers (see DESIGN.md):
+//! - **L3** (this crate): the PTQ coordinator — Algorithm 1's block pipeline,
+//!   Hessian management, calibration backends (RTN/OPTQ/SpQR/QuIP-lite/
+//!   BiLLM/OmniQuant-lite and OAC variants of each), training driver,
+//!   evaluation, CLI, benches.
+//! - **L2** (`python/compile/model.py`, build time): the transformer
+//!   fwd/bwd, lowered to HLO text artifacts consumed by [`runtime`].
+//! - **L1** (`python/compile/kernels/`, build time): Pallas kernels for the
+//!   Hessian contraction and fused quantize–dequantize.
+
+pub mod calib;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod hessian;
+pub mod model;
+pub mod report;
+pub mod train;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,269 @@
+//! `oac` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   info      — model configs, artifacts, kernel inventory
+//!   train     — train a checkpoint via the AOT train_step artifact
+//!   quantize  — run a PTQ method (Algorithm 1) on a checkpoint
+//!   eval      — perplexity + task accuracy of a checkpoint
+//!   sweep     — α regularization sweep (paper Table 4 style)
+
+use anyhow::{Context, Result};
+
+use oac::calib::Method;
+use oac::coordinator::{run_pipeline, GradPrecision, PipelineConfig};
+use oac::data::{Flavor, Splits, TestSplit};
+use oac::eval::{evaluate, EvalConfig};
+use oac::experiments::{artifacts_root, baseline_row, method_row, ROW_HEADERS};
+use oac::model::{ModelMeta, WeightStore};
+use oac::report::Table;
+use oac::runtime::Runtime;
+use oac::train::{train, TrainConfig};
+use oac::util::cli::Args;
+
+const USAGE: &str = "\
+oac — Output-adaptive Calibration for post-training quantization (AAAI'25 repro)
+
+USAGE:
+  oac info     [--config tiny]
+  oac train    --config small --steps 300 --out checkpoints/small.bin [--lr 1e-3] [--seed 0]
+  oac quantize --config small --ckpt IN.bin --method oac --bits 2 [--out OUT.bin]
+               [--n-calib 16] [--alpha 0.1] [--group 16] [--fp16-grads SCALE]
+               [--reduction sum|mean] [--no-kernel] [--eval]
+  oac eval     --config small --ckpt IN.bin [--ppl-seqs 16] [--tasks 16] [--far]
+  oac sweep    --config tiny  --ckpt IN.bin --method oac --bits 2 [--alphas 0.001,0.01,0.1,1]
+
+Methods: rtn optq omniquant quip spqr billm squeeze oac oac_optq oac_quip oac_billm
+";
+
+fn main() {
+    oac::util::logging::init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn splits_for(meta: &ModelMeta, args: &Args) -> Splits {
+    let flavor = match args.str_or("flavor", "c4").as_str() {
+        "rp" | "redpajama" => Flavor::RedPajamaAnalog,
+        _ => Flavor::C4Analog,
+    };
+    Splits::new(meta.vocab, flavor, args.u64_or("seed", 0))
+}
+
+fn pipeline_from_args(args: &Args) -> Result<PipelineConfig> {
+    let method = Method::parse(&args.str_or("method", "oac"))
+        .context("unknown --method (see `oac` usage)")?;
+    let bits = args.usize_or("bits", 2);
+    let mut p = PipelineConfig::new(method, bits);
+    p.n_calib = args.usize_or("n-calib", 16);
+    p.calib.alpha = args.f32_or("alpha", p.calib.alpha);
+    p.calib.group_size = args.usize_or("group", p.calib.group_size);
+    p.calib.seed = args.u64_or("seed", 0);
+    if args.str_or("reduction", "sum") == "mean" {
+        p.calib.reduction = oac::hessian::Reduction::Mean;
+    }
+    if let Some(scale) = args.get("fp16-grads") {
+        p.grad_precision = GradPrecision::F16 { loss_scale: scale.parse()? };
+    }
+    if args.flag("no-kernel") {
+        p.use_kernel = false;
+    }
+    Ok(p)
+}
+
+fn eval_cfg_from_args(args: &Args) -> EvalConfig {
+    EvalConfig {
+        ppl_seqs: args.usize_or("ppl-seqs", 16),
+        task_instances: args.usize_or("tasks", 16),
+        with_far_split: args.flag("far"),
+        seed: args.u64_or("seed", 0),
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&["eval", "far", "no-kernel", "help"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => info(&args),
+        "train" => cmd_train(&args),
+        "quantize" => cmd_quantize(&args),
+        "eval" => cmd_eval(&args),
+        "sweep" => cmd_sweep(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    let root = artifacts_root();
+    let configs = ModelMeta::available(&root)
+        .context("no artifacts found — run `make artifacts`")?;
+    println!("artifacts root: {}", root.display());
+    println!("configs: {configs:?}");
+    let name = args.str_or("config", &configs[0]);
+    let meta = ModelMeta::load(&root, &name)?;
+    println!(
+        "\n[{name}] d_model={} layers={} heads={} d_ff={} vocab={} seq={}",
+        meta.d_model, meta.n_layers, meta.n_heads, meta.d_ff, meta.vocab, meta.seq
+    );
+    println!(
+        "params: total={} quantizable={} ({} linear layers)",
+        meta.total_params(),
+        meta.quantizable_params(),
+        meta.linear_layers.len()
+    );
+    for (k, v) in &meta.artifacts {
+        println!("  artifact {k:<14} {v}");
+    }
+    let kernels = ModelMeta::load_kernels(&root)?;
+    println!(
+        "kernels: {} hessian_accum shapes, {} qdq variants",
+        kernels.hessian_accum.len(),
+        kernels.qdq.len()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "tiny");
+    let meta = ModelMeta::load(artifacts_root(), &config)?;
+    let rt = Runtime::new()?;
+    let splits = splits_for(&meta, args);
+    let seed = args.u64_or("seed", 0);
+    let cfg = TrainConfig {
+        steps: args.usize_or("steps", 300),
+        lr: args.f32_or("lr", 1e-3),
+        log_every: args.usize_or("log-every", 20),
+    };
+    let init = WeightStore::init_random(&meta, seed);
+    let res = train(&rt, &meta, &init, &splits, &cfg)?;
+    let out = args.str_or("out", &format!("checkpoints/{config}.bin"));
+    res.weights.save(&out)?;
+    println!("saved checkpoint to {out}");
+    println!("loss curve:");
+    for (s, l) in &res.losses {
+        println!("  step {s:>5}  loss {l:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "tiny");
+    let meta = ModelMeta::load(artifacts_root(), &config)?;
+    let rt = Runtime::new()?;
+    let splits = splits_for(&meta, args);
+    let ckpt = args.get("ckpt").context("--ckpt required")?;
+    let mut ws = WeightStore::load(ckpt)?;
+    let p = pipeline_from_args(args)?;
+
+    let calib = splits.calibration(p.n_calib, meta.seq);
+    let t = std::time::Instant::now();
+    let report = run_pipeline(&rt, &meta, &mut ws, &calib, &p)?;
+    println!(
+        "method={} avg_bits={:.2} outliers={} phase1={:.1}s phase2={:.1}s peak_mem={:.1}MB total={:.1}s",
+        report.method,
+        report.avg_bits,
+        report.total_outliers,
+        report.phase1_secs,
+        report.phase2_secs,
+        report.peak_mem_bytes as f64 / 1e6,
+        t.elapsed().as_secs_f64()
+    );
+    for l in &report.layers {
+        log::debug!(
+            "  {:<16} err={:.3e} bits={:.2} outliers={}",
+            l.name,
+            l.calib_error,
+            l.avg_bits,
+            l.outliers
+        );
+    }
+    if let Some(out) = args.get("out") {
+        ws.save(out)?;
+        println!("saved quantized checkpoint to {out}");
+    }
+    if args.flag("eval") {
+        let er = evaluate(&rt, &meta, &ws, &splits, &eval_cfg_from_args(args))?;
+        let mut t = Table::new(format!("{config} / {}", report.method), &ROW_HEADERS);
+        t.row(method_row(&report.method, report.avg_bits, &er));
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "tiny");
+    let meta = ModelMeta::load(artifacts_root(), &config)?;
+    let rt = Runtime::new()?;
+    let splits = splits_for(&meta, args);
+    let ckpt = args.get("ckpt").context("--ckpt required")?;
+    let ws = WeightStore::load(ckpt)?;
+    let er = evaluate(&rt, &meta, &ws, &splits, &eval_cfg_from_args(args))?;
+    let mut t = Table::new(format!("eval {ckpt}"), &ROW_HEADERS);
+    t.row(baseline_row(&er));
+    t.print();
+    for (name, acc) in &er.tasks {
+        println!("  {name:<16} {:.2}%", 100.0 * acc);
+    }
+    if let Some(far) = er.ppl_far {
+        println!("  {} ppl: {far:.2}", TestSplit::FarShifted.label());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "tiny");
+    let meta = ModelMeta::load(artifacts_root(), &config)?;
+    let rt = Runtime::new()?;
+    let splits = splits_for(&meta, args);
+    let ckpt = args.get("ckpt").context("--ckpt required")?;
+    let base = WeightStore::load(ckpt)?;
+    let alphas: Vec<f32> = args
+        .str_or("alphas", "0.001,0.01,0.1,1")
+        .split(',')
+        .map(|s| s.parse().map_err(|_| anyhow::anyhow!("bad alpha {s}")))
+        .collect::<Result<_>>()?;
+    let mut p = pipeline_from_args(args)?;
+    let calib = splits.calibration(p.n_calib, meta.seq);
+    let ecfg = eval_cfg_from_args(args);
+
+    let mut table = Table::new(
+        format!("α sweep — {} {}-bit on {config} (Table 4 analog)", p.method.name(), p.calib.bits),
+        &["alpha", "C4*", "WikiText2*"],
+    );
+    for alpha in alphas {
+        p.calib.alpha = alpha;
+        let mut ws = base.clone();
+        run_pipeline(&rt, &meta, &mut ws, &calib, &p)?;
+        let er = evaluate(&rt, &meta, &ws, &splits, &ecfg)?;
+        table.row(vec![
+            format!("{alpha}"),
+            oac::report::fmt_ppl(er.ppl_in_domain),
+            oac::report::fmt_ppl(er.ppl_shifted),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn usage_mentions_all_commands() {
+        for cmd in ["info", "train", "quantize", "eval", "sweep"] {
+            assert!(super::USAGE.contains(cmd), "{cmd} missing from usage");
+        }
+    }
+
+    #[test]
+    fn unknown_method_is_error() {
+        let args = super::Args::parse(
+            &["quantize".into(), "--method".into(), "bogus".into()],
+            &[],
+        );
+        assert!(super::pipeline_from_args(&args).is_err());
+    }
+}

@@ -1,0 +1,413 @@
+//! Model metadata (the python↔rust ABI from `artifacts/meta.json`) and the
+//! named weight store with binary checkpointing.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Mat;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One named weight array (shape as in the artifact input signature).
+#[derive(Debug, Clone)]
+pub struct WeightSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One quantizable linear layer (paper notation: W ∈ R^{rows × cols},
+/// y = W x, Hessian over cols).
+#[derive(Debug, Clone)]
+pub struct LinearSpec {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    /// Which `layer_inputs` capture feeds this layer (agnostic Hessian).
+    pub input: String,
+    pub block: usize,
+}
+
+/// Parsed per-config section of meta.json plus artifact paths.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub train_batch: usize,
+    /// Chunk size of the batched Phase-1 Hessian artifacts.
+    pub calib_batch: usize,
+    pub weights: Vec<WeightSpec>,
+    pub linear_layers: Vec<LinearSpec>,
+    pub layer_inputs: Vec<WeightSpec>,
+    pub artifacts: BTreeMap<String, String>,
+    /// Root of the artifacts directory (meta.json's home).
+    pub root: PathBuf,
+}
+
+/// Kernel artifact index (hessian_accum shapes, qdq variants).
+#[derive(Debug, Clone, Default)]
+pub struct KernelIndex {
+    /// (m, n) -> relative path of hessian_accum_{m}x{n}.
+    pub hessian_accum: BTreeMap<(usize, usize), String>,
+    /// (rows, cols, group, bits) -> relative path.
+    pub qdq: BTreeMap<(usize, usize, usize, usize), String>,
+}
+
+fn parse_shape(j: &Json) -> Vec<usize> {
+    j.as_arr().unwrap().iter().map(|d| d.as_usize().unwrap()).collect()
+}
+
+impl ModelMeta {
+    /// Load one named config from `<root>/meta.json`.
+    pub fn load(root: impl AsRef<Path>, config: &str) -> Result<ModelMeta> {
+        let root = root.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(root.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json — run `make artifacts`", root.display()))?;
+        let j = Json::parse(&text).context("parsing meta.json")?;
+        let cfg = j
+            .req("configs")
+            .get(config)
+            .with_context(|| format!("config {config:?} not in meta.json (rebuild with CONFIGS=\"... {config}\")"))?;
+
+        let weights = cfg
+            .req("weights")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|w| WeightSpec {
+                name: w.req("name").as_str().unwrap().to_string(),
+                shape: parse_shape(w.req("shape")),
+            })
+            .collect();
+        let linear_layers = cfg
+            .req("linear_layers")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|l| {
+                let shape = parse_shape(l.req("shape"));
+                LinearSpec {
+                    name: l.req("name").as_str().unwrap().to_string(),
+                    rows: shape[0],
+                    cols: shape[1],
+                    input: l.req("input").as_str().unwrap().to_string(),
+                    block: l.req("block").as_usize().unwrap(),
+                }
+            })
+            .collect();
+        let layer_inputs = cfg
+            .req("layer_inputs_order")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|w| WeightSpec {
+                name: w.req("name").as_str().unwrap().to_string(),
+                shape: parse_shape(w.req("shape")),
+            })
+            .collect();
+        let artifacts = cfg
+            .req("artifacts")
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_str().unwrap().to_string()))
+            .collect();
+
+        Ok(ModelMeta {
+            name: config.to_string(),
+            d_model: cfg.req("d_model").as_usize().unwrap(),
+            n_layers: cfg.req("n_layers").as_usize().unwrap(),
+            n_heads: cfg.req("n_heads").as_usize().unwrap(),
+            d_ff: cfg.req("d_ff").as_usize().unwrap(),
+            vocab: cfg.req("vocab").as_usize().unwrap(),
+            seq: cfg.req("seq").as_usize().unwrap(),
+            train_batch: cfg.req("train_batch").as_usize().unwrap(),
+            calib_batch: cfg.get("calib_batch").and_then(|v| v.as_usize()).unwrap_or(1),
+            weights,
+            linear_layers,
+            layer_inputs,
+            artifacts,
+            root,
+        })
+    }
+
+    /// Available config names in meta.json.
+    pub fn available(root: impl AsRef<Path>) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(root.as_ref().join("meta.json"))?;
+        let j = Json::parse(&text)?;
+        Ok(j.req("configs").as_obj().unwrap().keys().cloned().collect())
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let rel = self
+            .artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in meta.json"))?;
+        Ok(self.root.join(rel))
+    }
+
+    /// Linear layers belonging to one transformer block.
+    pub fn block_layers(&self, block: usize) -> Vec<&LinearSpec> {
+        self.linear_layers.iter().filter(|l| l.block == block).collect()
+    }
+
+    /// Total quantizable parameters.
+    pub fn quantizable_params(&self) -> usize {
+        self.linear_layers.iter().map(|l| l.rows * l.cols).sum()
+    }
+
+    /// Total parameters (all weights).
+    pub fn total_params(&self) -> usize {
+        self.weights.iter().map(|w| w.shape.iter().product::<usize>()).sum()
+    }
+
+    pub fn load_kernels(root: impl AsRef<Path>) -> Result<KernelIndex> {
+        let text = std::fs::read_to_string(root.as_ref().join("meta.json"))?;
+        let j = Json::parse(&text)?;
+        let mut idx = KernelIndex::default();
+        let k = j.req("kernels");
+        for e in k.req("hessian_accum").as_arr().unwrap() {
+            idx.hessian_accum.insert(
+                (e.req("m").as_usize().unwrap(), e.req("n").as_usize().unwrap()),
+                e.req("path").as_str().unwrap().to_string(),
+            );
+        }
+        for e in k.req("qdq").as_arr().unwrap() {
+            idx.qdq.insert(
+                (
+                    e.req("rows").as_usize().unwrap(),
+                    e.req("cols").as_usize().unwrap(),
+                    e.req("group").as_usize().unwrap(),
+                    e.req("bits").as_usize().unwrap(),
+                ),
+                e.req("path").as_str().unwrap().to_string(),
+            );
+        }
+        Ok(idx)
+    }
+}
+
+// --------------------------------------------------------------- WeightStore
+
+/// Named weight arrays, kept in artifact-input order.
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    pub entries: Vec<WeightEntry>,
+    index: BTreeMap<String, usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl WeightStore {
+    /// Scaled-normal init (mirrors python `init_weights`): norms = 1,
+    /// matrices ~ N(0, 1/sqrt(fan_in)), embeddings ~ N(0, 0.02).
+    pub fn init_random(meta: &ModelMeta, seed: u64) -> WeightStore {
+        let mut rng = Rng::new(seed);
+        let mut entries = Vec::with_capacity(meta.weights.len());
+        for spec in &meta.weights {
+            let n: usize = spec.shape.iter().product();
+            let mut data = vec![0.0f32; n];
+            if spec.name.ends_with("norm") {
+                data.fill(1.0);
+            } else if spec.shape.len() == 2 {
+                let std = 1.0 / (spec.shape[1] as f32).sqrt();
+                rng.fill_normal(&mut data, std);
+            } else {
+                rng.fill_normal(&mut data, 0.02);
+            }
+            entries.push(WeightEntry { name: spec.name.clone(), shape: spec.shape.clone(), data });
+        }
+        Self::from_entries(entries)
+    }
+
+    pub fn from_entries(entries: Vec<WeightEntry>) -> WeightStore {
+        let index = entries.iter().enumerate().map(|(i, e)| (e.name.clone(), i)).collect();
+        WeightStore { entries, index }
+    }
+
+    pub fn get(&self, name: &str) -> &WeightEntry {
+        &self.entries[*self.index.get(name).unwrap_or_else(|| panic!("no weight {name}"))]
+    }
+
+    pub fn get_mat(&self, name: &str) -> Mat {
+        let e = self.get(name);
+        assert_eq!(e.shape.len(), 2, "{name} is not a matrix");
+        Mat::from_vec(e.shape[0], e.shape[1], e.data.clone())
+    }
+
+    pub fn set_mat(&mut self, name: &str, m: &Mat) {
+        let i = *self.index.get(name).unwrap_or_else(|| panic!("no weight {name}"));
+        let e = &mut self.entries[i];
+        assert_eq!(e.shape, vec![m.rows, m.cols], "{name} shape mismatch");
+        e.data.copy_from_slice(&m.data);
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.entries.iter().map(|e| e.data.len()).sum()
+    }
+
+    // ------------------------------------------------------- checkpointing
+
+    const MAGIC: &'static [u8; 8] = b"OACCKPT1";
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(Self::MAGIC)?;
+        f.write_all(&(self.entries.len() as u32).to_le_bytes())?;
+        for e in &self.entries {
+            let nb = e.name.as_bytes();
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&(e.shape.len() as u32).to_le_bytes())?;
+            for &d in &e.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &v in &e.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<WeightStore> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(&path)
+                .with_context(|| format!("opening checkpoint {}", path.as_ref().display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let mut u32b = [0u8; 4];
+        let mut u64b = [0u8; 8];
+        f.read_exact(&mut u32b)?;
+        let count = u32::from_le_bytes(u32b) as usize;
+        let mut entries = Vec::with_capacity(count);
+        for _ in 0..count {
+            f.read_exact(&mut u32b)?;
+            let nlen = u32::from_le_bytes(u32b) as usize;
+            let mut nbuf = vec![0u8; nlen];
+            f.read_exact(&mut nbuf)?;
+            let name = String::from_utf8(nbuf)?;
+            f.read_exact(&mut u32b)?;
+            let ndim = u32::from_le_bytes(u32b) as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                f.read_exact(&mut u64b)?;
+                shape.push(u64::from_le_bytes(u64b) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut data = vec![0.0f32; n];
+            for v in data.iter_mut() {
+                f.read_exact(&mut u32b)?;
+                *v = f32::from_le_bytes(u32b);
+            }
+            entries.push(WeightEntry { name, shape, data });
+        }
+        Ok(Self::from_entries(entries))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("meta.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn meta_parses_and_is_consistent() {
+        let Some(root) = artifacts_root() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let meta = ModelMeta::load(&root, "tiny").unwrap();
+        assert_eq!(meta.d_model, 128);
+        assert_eq!(meta.linear_layers.len(), meta.n_layers * 6);
+        assert_eq!(meta.layer_inputs.len(), meta.n_layers * 4);
+        assert_eq!(meta.weights.len(), 2 + 8 * meta.n_layers + 2);
+        // Every linear layer's input capture exists.
+        for l in &meta.linear_layers {
+            assert!(
+                meta.layer_inputs.iter().any(|c| c.name == l.input),
+                "{} -> {}",
+                l.name,
+                l.input
+            );
+            assert!(meta.artifact_path("model_fwd").unwrap().exists());
+        }
+        assert_eq!(meta.block_layers(0).len(), 6);
+    }
+
+    #[test]
+    fn kernel_index_covers_linear_shapes() {
+        let Some(root) = artifacts_root() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let idx = ModelMeta::load_kernels(&root).unwrap();
+        let meta = ModelMeta::load(&root, "tiny").unwrap();
+        for l in &meta.linear_layers {
+            assert!(
+                idx.hessian_accum.contains_key(&(l.rows, l.cols)),
+                "missing hessian_accum {}x{}",
+                l.rows,
+                l.cols
+            );
+        }
+    }
+
+    #[test]
+    fn weight_store_roundtrip() {
+        let Some(root) = artifacts_root() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let meta = ModelMeta::load(&root, "tiny").unwrap();
+        let ws = WeightStore::init_random(&meta, 7);
+        assert_eq!(ws.num_params(), meta.total_params());
+        let tmp = std::env::temp_dir().join("oac_test_ckpt.bin");
+        ws.save(&tmp).unwrap();
+        let loaded = WeightStore::load(&tmp).unwrap();
+        assert_eq!(ws.entries.len(), loaded.entries.len());
+        for (a, b) in ws.entries.iter().zip(&loaded.entries) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.data, b.data);
+        }
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn set_get_mat() {
+        let Some(root) = artifacts_root() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let meta = ModelMeta::load(&root, "tiny").unwrap();
+        let mut ws = WeightStore::init_random(&meta, 1);
+        let name = &meta.linear_layers[0].name;
+        let mut m = ws.get_mat(name);
+        m.scale(0.0);
+        ws.set_mat(name, &m);
+        assert!(ws.get_mat(name).data.iter().all(|&v| v == 0.0));
+    }
+}

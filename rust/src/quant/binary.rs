@@ -1,0 +1,158 @@
+//! Binarization primitives for BiLLM-style 1-bit PTQ.
+//!
+//! BiLLM (Huang et al., ICML 2024) splits each weight row into:
+//!   * **salient** columns (structurally selected by Hessian-weighted
+//!     saliency) -> *residual binarization*: w ≈ α₁ sign(w) + α₂ sign(r)
+//!     with r the residual after the first pass (2 effective passes);
+//!   * **non-salient** weights -> *bell-split*: the concentrated bell of
+//!     near-zero weights and the two tails are binarized as separate groups
+//!     (each with its own optimal α = mean |w| over the group), because a
+//!     single α fits a bimodal magnitude distribution poorly.
+
+use crate::tensor::Mat;
+
+/// Optimal 1-bit approximation of a set of values under l2:
+/// b = sign(w), α = mean(|w|). Returns (alpha, approximation).
+pub fn binarize(vals: &[f32]) -> (f32, Vec<f32>) {
+    if vals.is_empty() {
+        return (0.0, vec![]);
+    }
+    let alpha = vals.iter().map(|v| v.abs()).sum::<f32>() / vals.len() as f32;
+    let approx = vals.iter().map(|v| alpha * v.signum()).collect();
+    (alpha, approx)
+}
+
+/// Residual binarization (two passes): w ≈ α₁ b₁ + α₂ b₂.
+pub fn residual_binarize(vals: &[f32]) -> (f32, f32, Vec<f32>) {
+    let (a1, first) = binarize(vals);
+    let residual: Vec<f32> = vals.iter().zip(&first).map(|(v, f)| v - f).collect();
+    let (a2, second) = binarize(&residual);
+    let approx = first.iter().zip(&second).map(|(f, s)| f + s).collect();
+    (a1, a2, approx)
+}
+
+/// Split a magnitude distribution at `thresh`: indices with |w| < thresh
+/// form the "bell", the rest the "tails". Each group is binarized with its
+/// own α. Returns the combined approximation.
+pub fn bell_split_binarize(vals: &[f32], thresh: f32) -> Vec<f32> {
+    let mut bell = Vec::new();
+    let mut tail = Vec::new();
+    for (i, &v) in vals.iter().enumerate() {
+        if v.abs() < thresh {
+            bell.push((i, v));
+        } else {
+            tail.push((i, v));
+        }
+    }
+    let (ab, _) = binarize(&bell.iter().map(|x| x.1).collect::<Vec<_>>());
+    let (at, _) = binarize(&tail.iter().map(|x| x.1).collect::<Vec<_>>());
+    let mut out = vec![0.0f32; vals.len()];
+    for (i, v) in bell {
+        out[i] = ab * v.signum();
+    }
+    for (i, v) in tail {
+        out[i] = at * v.signum();
+    }
+    out
+}
+
+/// Search the bell-split threshold minimizing l2 error (BiLLM's "splitting
+/// search"), over percentiles of |w|.
+pub fn optimal_bell_split(vals: &[f32]) -> (f32, Vec<f32>) {
+    let mut mags: Vec<f32> = vals.iter().map(|v| v.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut best = (f32::INFINITY, 0.0f32, Vec::new());
+    for pct in [10, 20, 30, 40, 50, 60, 70, 80, 90] {
+        let idx = (mags.len() * pct / 100).min(mags.len() - 1);
+        let thresh = mags[idx];
+        let approx = bell_split_binarize(vals, thresh);
+        let err: f32 = vals.iter().zip(&approx).map(|(v, a)| (v - a).powi(2)).sum();
+        if err < best.0 {
+            best = (err, thresh, approx);
+        }
+    }
+    (best.1, best.2)
+}
+
+/// Binarize an entire matrix row-wise with the bell split (non-salient path).
+pub fn bell_binarize_mat(w: &Mat) -> Mat {
+    let mut out = w.clone();
+    for r in 0..w.rows {
+        let (_, approx) = optimal_bell_split(w.row(r));
+        out.row_mut(r).copy_from_slice(&approx);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn binarize_alpha_optimal() {
+        // For fixed signs b, l2 error is minimized at alpha = mean|w|:
+        // check small perturbations only increase error.
+        let mut rng = Rng::new(0);
+        let vals: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+        let (alpha, _) = binarize(&vals);
+        let err = |a: f32| -> f32 {
+            vals.iter().map(|v| (v - a * v.signum()).powi(2)).sum()
+        };
+        assert!(err(alpha) <= err(alpha + 0.01) + 1e-6);
+        assert!(err(alpha) <= err(alpha - 0.01) + 1e-6);
+    }
+
+    #[test]
+    fn residual_reduces_error() {
+        let mut rng = Rng::new(1);
+        let vals: Vec<f32> = (0..128).map(|_| rng.normal_f32()).collect();
+        let (_, one) = binarize(&vals);
+        let (_, _, two) = residual_binarize(&vals);
+        let e1: f32 = vals.iter().zip(&one).map(|(v, a)| (v - a).powi(2)).sum();
+        let e2: f32 = vals.iter().zip(&two).map(|(v, a)| (v - a).powi(2)).sum();
+        assert!(e2 < e1, "{e2} vs {e1}");
+    }
+
+    #[test]
+    fn bell_split_beats_single_alpha_on_bimodal() {
+        // Mixture: 80% tiny bell + 20% large tails — BiLLM's motivating shape.
+        let mut rng = Rng::new(2);
+        let mut vals = Vec::new();
+        for i in 0..200 {
+            if i % 5 == 0 {
+                vals.push(rng.normal_f32() * 2.0 + 3.0 * if rng.uniform() < 0.5 { -1.0 } else { 1.0 });
+            } else {
+                vals.push(rng.normal_f32() * 0.05);
+            }
+        }
+        let (_, single) = binarize(&vals);
+        let (_, split) = optimal_bell_split(&vals);
+        let e1: f32 = vals.iter().zip(&single).map(|(v, a)| (v - a).powi(2)).sum();
+        let e2: f32 = vals.iter().zip(&split).map(|(v, a)| (v - a).powi(2)).sum();
+        assert!(e2 < e1, "{e2} vs {e1}");
+    }
+
+    #[test]
+    fn binarize_empty_and_constant() {
+        assert_eq!(binarize(&[]).0, 0.0);
+        let (a, approx) = binarize(&[0.5, 0.5]);
+        assert!((a - 0.5).abs() < 1e-7);
+        assert_eq!(approx, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn mat_binarization_two_levels_per_row_group() {
+        let mut rng = Rng::new(3);
+        let mut w = Mat::zeros(4, 64);
+        rng.fill_normal(&mut w.data, 1.0);
+        let b = bell_binarize_mat(&w);
+        // Each row uses at most 4 distinct magnitudes (±α_bell, ±α_tail).
+        for r in 0..4 {
+            let mut mags: Vec<f32> = b.row(r).iter().map(|v| v.abs()).collect();
+            mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            mags.dedup_by(|a, b| (*a - *b).abs() < 1e-6);
+            assert!(mags.len() <= 2, "row {r} has {} magnitudes", mags.len());
+        }
+    }
+}

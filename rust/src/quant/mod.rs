@@ -1,0 +1,103 @@
+//! Quantizers: group-wise uniform (RTN core), bit packing, second-round
+//! scale/zero quantization (SpQR), binarization with residual approximation
+//! (BiLLM), sensitivity-weighted non-uniform k-means (SqueezeLLM-lite), and
+//! average-bit accounting.
+
+pub mod binary;
+pub mod nonuniform;
+pub mod packing;
+pub mod scale_quant;
+pub mod uniform;
+
+use crate::tensor::Mat;
+
+/// Bit-budget accounting for one quantized weight matrix, mirroring SpQR's
+/// "average bits" metric (paper Tables 1-2 column "Avg Bits"):
+/// weight bits + amortized group parameters + FP32 outliers with sparse
+/// 16-bit column indices.
+#[derive(Debug, Clone, Default)]
+pub struct BitBudget {
+    pub weight_elems: usize,
+    pub weight_bits: usize,
+    /// Total bits spent on scales/zeros (after any second-round quant).
+    pub param_bits: usize,
+    /// Number of FP32 outliers kept aside.
+    pub outliers: usize,
+}
+
+impl BitBudget {
+    /// Average bits per original weight element.
+    pub fn avg_bits(&self) -> f64 {
+        if self.weight_elems == 0 {
+            return 0.0;
+        }
+        let outlier_bits = self.outliers * (32 + 16); // value + column index
+        let dense_bits = self.weight_elems * self.weight_bits;
+        (dense_bits + self.param_bits + outlier_bits) as f64 / self.weight_elems as f64
+    }
+
+    pub fn merge(&mut self, other: &BitBudget) {
+        self.weight_elems += other.weight_elems;
+        // Weighted by elements; keep the max nominal width for reporting.
+        self.weight_bits = self.weight_bits.max(other.weight_bits);
+        self.param_bits += other.param_bits;
+        self.outliers += other.outliers;
+    }
+
+    /// Merge that tracks the true average across layers of different widths.
+    pub fn merged_avg(budgets: &[BitBudget]) -> f64 {
+        let total_elems: usize = budgets.iter().map(|b| b.weight_elems).sum();
+        if total_elems == 0 {
+            return 0.0;
+        }
+        let total_bits: f64 = budgets
+            .iter()
+            .map(|b| b.avg_bits() * b.weight_elems as f64)
+            .sum();
+        total_bits / total_elems as f64
+    }
+}
+
+/// Output of quantizing one linear layer: the dequantized weights the model
+/// will run with, plus accounting + error stats.
+#[derive(Debug, Clone)]
+pub struct QuantizedLayer {
+    pub name: String,
+    pub dq: Mat,
+    pub budget: BitBudget,
+    /// tr(dW H dW^T) proxy error the calibration minimized (diagnostics).
+    pub calib_error: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn avg_bits_plain_2bit_grouped() {
+        // 128x128 weights, group 16, fp16 scale+zero per group, no outliers.
+        let elems = 128 * 128;
+        let groups = elems / 16;
+        let b = BitBudget {
+            weight_elems: elems,
+            weight_bits: 2,
+            param_bits: groups * 32,
+            outliers: 0,
+        };
+        assert!((b.avg_bits() - 4.0).abs() < 1e-9); // 2 + 32/16
+    }
+
+    #[test]
+    fn outliers_cost_48_bits() {
+        let b = BitBudget { weight_elems: 100, weight_bits: 2, param_bits: 0, outliers: 1 };
+        assert!((b.avg_bits() - (2.0 + 48.0 / 100.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merged_avg_weighted() {
+        let a = BitBudget { weight_elems: 100, weight_bits: 2, param_bits: 0, outliers: 0 };
+        let c = BitBudget { weight_elems: 300, weight_bits: 4, param_bits: 0, outliers: 0 };
+        let avg = BitBudget::merged_avg(&[a, c]);
+        assert!((avg - 3.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,140 @@
+//! Sensitivity-weighted non-uniform quantization (SqueezeLLM-lite).
+//!
+//! SqueezeLLM (Kim et al., ICML 2024) clusters each row's weights with
+//! k-means weighted by the diagonal Fisher sensitivity — no calibration
+//! updates, non-uniform codebook of 2^bits centroids per row. The paper
+//! includes it as a 3-bit baseline (Table 13); this is the same algorithm
+//! at our scale (weighted 1-D k-means via Lloyd iterations).
+
+use crate::tensor::Mat;
+
+/// Weighted 1-D k-means: returns centroids and assignment-dequantized values.
+pub fn weighted_kmeans_1d(
+    vals: &[f32],
+    weights: &[f32],
+    k: usize,
+    iters: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(vals.len(), weights.len());
+    if vals.is_empty() {
+        return (vec![], vec![]);
+    }
+    // Init: quantiles of the sorted values.
+    let mut sorted: Vec<f32> = vals.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut centroids: Vec<f32> = (0..k)
+        .map(|i| sorted[((i * 2 + 1) * sorted.len() / (2 * k)).min(sorted.len() - 1)])
+        .collect();
+    centroids.dedup();
+    while centroids.len() < k {
+        centroids.push(*centroids.last().unwrap() + 1e-3);
+    }
+
+    let mut assign = vec![0usize; vals.len()];
+    for _ in 0..iters {
+        // Assign (centroids stay sorted, binary search would work; linear k
+        // is fine for k <= 16).
+        for (i, &v) in vals.iter().enumerate() {
+            let mut best = 0;
+            let mut bd = f32::INFINITY;
+            for (c, &ct) in centroids.iter().enumerate() {
+                let d = (v - ct).abs();
+                if d < bd {
+                    bd = d;
+                    best = c;
+                }
+            }
+            assign[i] = best;
+        }
+        // Update (sensitivity-weighted mean).
+        let mut num = vec![0.0f64; k];
+        let mut den = vec![0.0f64; k];
+        for (i, &a) in assign.iter().enumerate() {
+            let w = weights[i].max(1e-12) as f64;
+            num[a] += w * vals[i] as f64;
+            den[a] += w;
+        }
+        for c in 0..k {
+            if den[c] > 0.0 {
+                centroids[c] = (num[c] / den[c]) as f32;
+            }
+        }
+        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
+    let dq = assign.iter().map(|&a| centroids[a]).collect();
+    (centroids, dq)
+}
+
+/// SqueezeLLM-lite on a weight matrix: per-row weighted k-means with the
+/// Hessian diagonal as the sensitivity (diag of X^T X or of Σ G^T G).
+pub fn squeeze_quantize(w: &Mat, hessian_diag: &[f32], bits: usize) -> Mat {
+    assert_eq!(hessian_diag.len(), w.cols);
+    let k = 1usize << bits;
+    let mut out = w.clone();
+    for r in 0..w.rows {
+        let (_, dq) = weighted_kmeans_1d(w.row(r), hessian_diag, k, 12);
+        out.row_mut(r).copy_from_slice(&dq);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kmeans_recovers_clusters() {
+        let mut rng = Rng::new(0);
+        let mut vals = Vec::new();
+        for _ in 0..50 {
+            vals.push(-1.0 + rng.normal_f32() * 0.01);
+        }
+        for _ in 0..50 {
+            vals.push(2.0 + rng.normal_f32() * 0.01);
+        }
+        let w = vec![1.0f32; 100];
+        let (centroids, dq) = weighted_kmeans_1d(&vals, &w, 2, 10);
+        assert!((centroids[0] - -1.0).abs() < 0.05, "{centroids:?}");
+        assert!((centroids[1] - 2.0).abs() < 0.05, "{centroids:?}");
+        let err: f32 = vals.iter().zip(&dq).map(|(v, d)| (v - d).powi(2)).sum();
+        assert!(err / 100.0 < 1e-3);
+    }
+
+    #[test]
+    fn sensitivity_pulls_centroids() {
+        // Two values, one with huge sensitivity: the 1-centroid solution
+        // lands (almost) on the sensitive one.
+        let vals = [0.0f32, 1.0];
+        let (c, _) = weighted_kmeans_1d(&vals, &[1.0, 1000.0], 1, 20);
+        assert!(c[0] > 0.95, "{c:?}");
+    }
+
+    #[test]
+    fn nonuniform_beats_uniform_on_skewed() {
+        // Log-normal-ish magnitudes: non-uniform codebooks win.
+        let mut rng = Rng::new(1);
+        let mut w = Mat::zeros(4, 256);
+        for v in w.data.iter_mut() {
+            *v = (rng.normal_f32() * 1.5).exp() * if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+        }
+        let diag = vec![1.0f32; 256];
+        let nu = squeeze_quantize(&w, &diag, 3);
+        let un = crate::quant::uniform::qdq_mat(&w, 256, 3);
+        assert!(nu.mse(&w) < un.mse(&w));
+    }
+
+    #[test]
+    fn codebook_size_respected() {
+        let mut rng = Rng::new(2);
+        let mut w = Mat::zeros(2, 128);
+        rng.fill_normal(&mut w.data, 1.0);
+        let dq = squeeze_quantize(&w, &vec![1.0; 128], 2);
+        for r in 0..2 {
+            let mut vals: Vec<f32> = dq.row(r).to_vec();
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.dedup_by(|a, b| (*a - *b).abs() < 1e-7);
+            assert!(vals.len() <= 4);
+        }
+    }
+}

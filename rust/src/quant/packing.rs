@@ -1,0 +1,101 @@
+//! Bit packing for 1-8 bit integer weight codes: little-endian bit stream,
+//! the storage format the budget accounting assumes. Round-trip tested.
+
+/// Pack integer codes (each < 2^bits) into a little-endian bit stream.
+pub fn pack(codes: &[u8], bits: usize) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    let total_bits = codes.len() * bits;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!((c as usize) < (1 << bits), "code {c} out of range for {bits} bits");
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        out[byte] |= c << off;
+        if off + bits > 8 {
+            out[byte + 1] |= c >> (8 - off);
+        }
+        bitpos += bits;
+    }
+    out
+}
+
+/// Unpack `n` codes of width `bits` from a little-endian bit stream.
+pub fn unpack(packed: &[u8], bits: usize, n: usize) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    let mask = ((1u16 << bits) - 1) as u16;
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let lo = packed[byte] as u16 >> off;
+        let hi = if off + bits > 8 { (packed[byte + 1] as u16) << (8 - off) } else { 0 };
+        out.push(((lo | hi) & mask) as u8);
+        bitpos += bits;
+    }
+    out
+}
+
+/// Exact storage size in bytes for n codes at the given width.
+pub fn packed_size(n: usize, bits: usize) -> usize {
+    (n * bits).div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut rng = Rng::new(0);
+        for bits in 1..=8usize {
+            let n = 97; // deliberately not a multiple of 8
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+            let packed = pack(&codes, bits);
+            assert_eq!(packed.len(), packed_size(n, bits));
+            assert_eq!(unpack(&packed, bits, n), codes);
+        }
+    }
+
+    #[test]
+    fn density_exact() {
+        // 2-bit codes: exactly 4 per byte.
+        let codes = vec![3u8; 256];
+        assert_eq!(pack(&codes, 2).len(), 64);
+        // 3-bit: 96 codes -> 36 bytes.
+        let codes = vec![5u8; 96];
+        assert_eq!(pack(&codes, 3).len(), 36);
+    }
+
+    #[test]
+    fn crossing_byte_boundaries() {
+        // 3-bit values crossing every byte boundary pattern.
+        let codes: Vec<u8> = (0..16).map(|i| (i % 8) as u8).collect();
+        let packed = pack(&codes, 3);
+        assert_eq!(unpack(&packed, 3, 16), codes);
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        crate::util::prop::quick(
+            "pack/unpack roundtrip",
+            |rng| {
+                let bits = 1 + rng.below(8);
+                let n = 1 + rng.below(200);
+                let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+                (bits, codes)
+            },
+            |(bits, codes)| {
+                let packed = pack(codes, *bits);
+                let got = unpack(&packed, *bits, codes.len());
+                if got == *codes {
+                    Ok(())
+                } else {
+                    Err("mismatch".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,112 @@
+//! Second-round quantization of the first-round scales and zeros
+//! (SpQR's "double quantization", paper Fig. 3 step 7).
+//!
+//! First-round group params (one scale+zero per group of 16 weights) would
+//! cost 2×16 bits/group in fp16 = 2 extra bits/weight. SpQR instead
+//! quantizes the per-group scales and zeros themselves to `stat_bits` (3 in
+//! the paper) with one fp32 scale pair per *super-group* of `supergroup`
+//! consecutive groups, making tiny groups affordable. This module performs
+//! that second round and reports the exact bit cost.
+
+use super::uniform::{group_params, qdq, GroupParams};
+
+#[derive(Debug, Clone)]
+pub struct ScaleQuantResult {
+    /// Quantize-dequantized group params (what the decoder will see).
+    pub params: Vec<GroupParams>,
+    /// Total parameter storage in bits (quantized stats + supergroup fp32).
+    pub param_bits: usize,
+}
+
+/// Quantize the group scales/zeros to `stat_bits` within super-groups of
+/// `supergroup` groups. Returns decoder-visible params + exact bit cost.
+pub fn quantize_group_params(
+    params: &[GroupParams],
+    stat_bits: usize,
+    supergroup: usize,
+) -> ScaleQuantResult {
+    let mut out = Vec::with_capacity(params.len());
+    let mut param_bits = 0usize;
+    for chunk in params.chunks(supergroup) {
+        let scales: Vec<f32> = chunk.iter().map(|p| p.scale).collect();
+        let zeros: Vec<f32> = chunk.iter().map(|p| p.zero).collect();
+        let ps = group_params(&scales, stat_bits);
+        let pz = group_params(&zeros, stat_bits);
+        // Cost: stat_bits per scale + per zero, plus two fp32 pairs per
+        // super-group for the second-level params.
+        param_bits += chunk.len() * stat_bits * 2 + 2 * 2 * 32;
+        for p in chunk {
+            out.push(GroupParams {
+                scale: qdq(p.scale, ps, stat_bits).max(0.0),
+                zero: qdq(p.zero, pz, stat_bits).round(),
+            });
+        }
+    }
+    ScaleQuantResult { params: out, param_bits }
+}
+
+/// Bit cost of storing params directly in fp16 (the no-second-round option,
+/// for the accounting ablation).
+pub fn fp16_param_bits(n_groups: usize) -> usize {
+    n_groups * 2 * 16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_params(n: usize, seed: u64) -> Vec<GroupParams> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| GroupParams {
+                scale: 0.01 + rng.uniform_f32() * 0.1,
+                zero: rng.below(4) as f32,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cheaper_than_fp16() {
+        let params = random_params(256, 0);
+        let r = quantize_group_params(&params, 3, 16);
+        assert!(r.param_bits < fp16_param_bits(256), "{} vs {}", r.param_bits, fp16_param_bits(256));
+    }
+
+    #[test]
+    fn params_stay_close() {
+        let params = random_params(64, 1);
+        let r = quantize_group_params(&params, 3, 16);
+        for (orig, got) in params.iter().zip(&r.params) {
+            // 3-bit grid over the supergroup's scale range: within a step.
+            let step = 0.1 / 7.0;
+            assert!((orig.scale - got.scale).abs() <= step + 1e-6);
+        }
+    }
+
+    #[test]
+    fn zeros_remain_integral() {
+        let params = random_params(64, 2);
+        let r = quantize_group_params(&params, 3, 8);
+        for p in &r.params {
+            assert_eq!(p.zero, p.zero.round());
+        }
+    }
+
+    #[test]
+    fn scales_stay_nonnegative() {
+        let params = random_params(32, 3);
+        let r = quantize_group_params(&params, 2, 8);
+        for p in &r.params {
+            assert!(p.scale >= 0.0);
+        }
+    }
+
+    #[test]
+    fn exact_bit_accounting() {
+        let params = random_params(32, 4);
+        let r = quantize_group_params(&params, 3, 16);
+        // 2 supergroups: 32 * 3 * 2 + 2 * 128 = 192 + 256
+        assert_eq!(r.param_bits, 32 * 3 * 2 + 2 * 2 * 2 * 32);
+    }
+}

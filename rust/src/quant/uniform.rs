@@ -1,0 +1,234 @@
+//! Group-wise asymmetric uniform quantization — the core primitive shared by
+//! RTN, OPTQ, SpQR and the OAC variants. Mirrors `kernels/qdq.py` (the L1
+//! Pallas kernel) exactly; `runtime::tests::qdq_artifact_matches_cpu_reference`
+//! pins the two implementations together.
+
+use crate::tensor::Mat;
+
+/// Per-(row, group) affine quantization parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupParams {
+    pub scale: f32,
+    pub zero: f32,
+}
+
+/// Compute scale/zero for one group of values (asymmetric min-max).
+pub fn group_params(vals: &[f32], bits: usize) -> GroupParams {
+    let levels = ((1usize << bits) - 1) as f32;
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in vals {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !lo.is_finite() || !hi.is_finite() || hi <= lo {
+        return GroupParams { scale: 0.0, zero: 0.0 }; // degenerate: passthrough
+    }
+    let scale = (hi - lo) / levels;
+    let zero = (-lo / scale).round();
+    GroupParams { scale, zero }
+}
+
+/// Compute scale/zero with a clipping ratio in (0, 1] (OmniQuant-lite's
+/// learnable clipping: shrink the range before fitting the grid).
+pub fn group_params_clipped(vals: &[f32], bits: usize, clip: f32) -> GroupParams {
+    let levels = ((1usize << bits) - 1) as f32;
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in vals {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if hi <= lo {
+        return GroupParams { scale: 0.0, zero: 0.0 };
+    }
+    let mid = 0.5 * (hi + lo);
+    let lo = mid + (lo - mid) * clip;
+    let hi = mid + (hi - mid) * clip;
+    let scale = (hi - lo) / levels;
+    if scale <= 0.0 {
+        return GroupParams { scale: 0.0, zero: 0.0 };
+    }
+    let zero = (-lo / scale).round();
+    GroupParams { scale, zero }
+}
+
+/// Quantize a single value to its integer level.
+#[inline]
+pub fn quantize(v: f32, p: GroupParams, bits: usize) -> f32 {
+    if p.scale <= 0.0 {
+        return 0.0;
+    }
+    let levels = ((1usize << bits) - 1) as f32;
+    ((v / p.scale).round() + p.zero).clamp(0.0, levels)
+}
+
+/// Dequantize an integer level.
+#[inline]
+pub fn dequantize(q: f32, p: GroupParams) -> f32 {
+    (q - p.zero) * p.scale
+}
+
+/// Quantize–dequantize a single value (degenerate params pass through).
+#[inline]
+pub fn qdq(v: f32, p: GroupParams, bits: usize) -> f32 {
+    if p.scale <= 0.0 {
+        return v;
+    }
+    dequantize(quantize(v, p, bits), p)
+}
+
+/// Whole-matrix group-wise quantize-dequantize (RTN). Groups along columns.
+/// CPU twin of the L1 `qdq` Pallas kernel.
+pub fn qdq_mat(w: &Mat, group_size: usize, bits: usize) -> Mat {
+    assert_eq!(w.cols % group_size, 0, "cols {} % group {}", w.cols, group_size);
+    let mut out = w.clone();
+    for r in 0..w.rows {
+        for g0 in (0..w.cols).step_by(group_size) {
+            let row = &w.row(r)[g0..g0 + group_size];
+            let p = group_params(row, bits);
+            let dst = &mut out.row_mut(r)[g0..g0 + group_size];
+            for (d, &v) in dst.iter_mut().zip(row.iter()) {
+                *d = qdq(v, p, bits);
+            }
+        }
+    }
+    out
+}
+
+/// All group params of a matrix (row-major group order), for accounting and
+/// the second-round scale/zero quantization.
+pub fn all_group_params(w: &Mat, group_size: usize, bits: usize) -> Vec<GroupParams> {
+    let mut out = Vec::with_capacity(w.rows * w.cols / group_size);
+    for r in 0..w.rows {
+        for g0 in (0..w.cols).step_by(group_size) {
+            out.push(group_params(&w.row(r)[g0..g0 + group_size], bits));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qdq_error_bounded_by_half_step() {
+        let mut rng = Rng::new(0);
+        for bits in [2usize, 3, 4, 8] {
+            let vals: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+            let p = group_params(&vals, bits);
+            for &v in &vals {
+                let err = (qdq(v, p, bits) - v).abs();
+                assert!(err <= p.scale * 0.5 + 1e-6, "bits={bits} err={err} scale={}", p.scale);
+            }
+        }
+    }
+
+    #[test]
+    fn endpoints_representable() {
+        let vals = [-1.0f32, -0.5, 0.3, 2.0];
+        let p = group_params(&vals, 2);
+        // Min and max of the group should round-trip near-exactly.
+        assert!((qdq(-1.0, p, 2) - -1.0).abs() < 1e-6);
+        assert!((qdq(2.0, p, 2) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_group_passthrough() {
+        let vals = [0.7f32; 16];
+        let p = group_params(&vals, 2);
+        assert_eq!(p.scale, 0.0);
+        assert_eq!(qdq(0.7, p, 2), 0.7);
+    }
+
+    #[test]
+    fn qdq_mat_matches_elementwise() {
+        let mut rng = Rng::new(1);
+        let mut w = Mat::zeros(8, 32);
+        rng.fill_normal(&mut w.data, 0.5);
+        let out = qdq_mat(&w, 16, 3);
+        for r in 0..8 {
+            for g0 in (0..32).step_by(16) {
+                let p = group_params(&w.row(r)[g0..g0 + 16], 3);
+                for c in g0..g0 + 16 {
+                    assert_eq!(out.at(r, c), qdq(w.at(r, c), p, 3));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Rng::new(2);
+        let mut w = Mat::zeros(16, 64);
+        rng.fill_normal(&mut w.data, 1.0);
+        let e2 = qdq_mat(&w, 16, 2).mse(&w);
+        let e3 = qdq_mat(&w, 16, 3).mse(&w);
+        let e4 = qdq_mat(&w, 16, 4).mse(&w);
+        assert!(e2 > e3 && e3 > e4, "{e2} {e3} {e4}");
+    }
+
+    #[test]
+    fn smaller_groups_less_error() {
+        let mut rng = Rng::new(3);
+        let mut w = Mat::zeros(16, 64);
+        rng.fill_normal(&mut w.data, 1.0);
+        let e_small = qdq_mat(&w, 8, 2).mse(&w);
+        let e_large = qdq_mat(&w, 64, 2).mse(&w);
+        assert!(e_small < e_large, "{e_small} vs {e_large}");
+    }
+
+    #[test]
+    fn clip_grid_search_never_loses() {
+        // The OmniQuant-lite invariant: searching clip ∈ grid (incl. 1.0)
+        // is at least as good as plain min-max, and strictly better on
+        // heavy-tailed groups for some seeds.
+        let mut rng = Rng::new(4);
+        let mut strictly_better = 0;
+        for trial in 0..20 {
+            let vals: Vec<f32> = (0..32)
+                .map(|_| {
+                    let z = rng.normal_f32();
+                    z * z * z * 0.3 // heavy-tailed
+                })
+                .collect();
+            let err = |p: GroupParams| -> f32 {
+                vals.iter().map(|&v| (qdq(v, p, 2) - v).powi(2)).sum()
+            };
+            let e_full = err(group_params(&vals, 2));
+            let e_best = [1.0f32, 0.9, 0.8, 0.7, 0.6, 0.5]
+                .iter()
+                .map(|&c| err(group_params_clipped(&vals, 2, c)))
+                .fold(f32::INFINITY, f32::min);
+            assert!(e_best <= e_full + 1e-6, "trial {trial}");
+            if e_best < e_full * 0.99 {
+                strictly_better += 1;
+            }
+        }
+        assert!(strictly_better > 0, "clipping never helped on heavy tails");
+    }
+
+    #[test]
+    fn prop_qdq_idempotent() {
+        crate::util::prop::quick(
+            "qdq is idempotent",
+            |rng| {
+                let vals: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+                vals
+            },
+            |vals| {
+                let p = group_params(vals, 3);
+                for &v in vals {
+                    let once = qdq(v, p, 3);
+                    let twice = qdq(once, p, 3);
+                    if (once - twice).abs() > 1e-5 {
+                        return Err(format!("{v}: {once} -> {twice}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

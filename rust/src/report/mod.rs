@@ -1,0 +1,108 @@
+//! Paper-style table rendering for the bench harness and CLI.
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned table with a markdown-ish renderer.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n## {}", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(s, " {c:<w$} |");
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        let _ = writeln!(out, "({} rows x {} cols)", self.rows.len(), ncols);
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format a perplexity the way the paper does (big values in e-notation).
+pub fn fmt_ppl(p: f64) -> String {
+    if !p.is_finite() {
+        "NaN".to_string()
+    } else if p >= 1e4 {
+        format!("{:.1}e{}", p / 10f64.powi(p.log10().floor() as i32), p.log10().floor() as i32)
+    } else {
+        format!("{p:.2}")
+    }
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn fmt_bits(b: f64) -> String {
+    format!("{b:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Test", &["Method", "C4*"]);
+        t.row(vec!["OAC".into(), "11.90".into()]);
+        t.row(vec!["SpQR".into(), "13.22".into()]);
+        let r = t.render();
+        assert!(r.contains("| Method |"));
+        assert!(r.contains("| OAC    |"));
+        assert!(r.contains("2 rows x 2 cols"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn ppl_formatting() {
+        assert_eq!(fmt_ppl(11.904), "11.90");
+        assert_eq!(fmt_ppl(27564.0), "2.8e4");
+        assert_eq!(fmt_ppl(f64::NAN), "NaN");
+    }
+}

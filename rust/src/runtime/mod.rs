@@ -1,0 +1,294 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client. This is the only boundary between the Rust coordinator and the
+//! JAX/Pallas build-time layers — python never runs at request time.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): HLO *text* -> `HloModuleProto::
+//! from_text_file` -> `XlaComputation::from_proto` -> `client.compile` ->
+//! `execute`. Artifacts are lowered with `return_tuple=True`, so every
+//! executable returns a single tuple literal that we decompose host-side.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Mat;
+
+/// A compiled artifact, cached by path inside [`Runtime`].
+pub struct Executable {
+    pub path: PathBuf,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT CPU client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<Executable>>>,
+    /// Cumulative host<->device transfer + execute counters (perf metrics).
+    pub stats: RefCell<RuntimeStats>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub uploads: u64,
+    pub upload_bytes: u64,
+    pub fetch_bytes: u64,
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::debug!(
+            "pjrt client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime {
+            client,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Load (or fetch from cache) a compiled executable for an HLO-text file.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Rc<Executable>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(exe) = self.cache.borrow().get(&path) {
+            return Ok(exe.clone());
+        }
+        let t = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        self.stats.borrow_mut().compile_secs += t.elapsed().as_secs_f64();
+        let exe = Rc::new(Executable { path: path.clone(), exe });
+        self.cache.borrow_mut().insert(path, exe.clone());
+        Ok(exe)
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    // ------------------------------------------------------------- uploads
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        let mut s = self.stats.borrow_mut();
+        s.uploads += 1;
+        s.upload_bytes += (data.len() * 4) as u64;
+        drop(s);
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn upload_mat(&self, m: &Mat) -> Result<xla::PjRtBuffer> {
+        self.upload_f32(&m.data, &[m.rows, m.cols])
+    }
+
+    pub fn upload_vec(&self, v: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.upload_f32(v, &[v.len()])
+    }
+
+    pub fn upload_scalar(&self, v: f32) -> Result<xla::PjRtBuffer> {
+        self.upload_f32(&[v], &[])
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        let mut s = self.stats.borrow_mut();
+        s.uploads += 1;
+        s.upload_bytes += (data.len() * 4) as u64;
+        drop(s);
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    // ------------------------------------------------------------ execution
+
+    /// Execute with device-resident inputs; returns the decomposed output
+    /// tuple as host literals.
+    pub fn run_b(&self, exe: &Executable, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let t = std::time::Instant::now();
+        let outs = exe
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("executing {}", exe.path.display()))?;
+        let res = self.collect_outputs(outs)?;
+        self.bump_exec(t, &res);
+        Ok(res)
+    }
+
+    /// Execute with host literals (convenience for small calls).
+    pub fn run(&self, exe: &Executable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let t = std::time::Instant::now();
+        let outs = exe
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", exe.path.display()))?;
+        let res = self.collect_outputs(outs)?;
+        self.bump_exec(t, &res);
+        Ok(res)
+    }
+
+    /// Execute with device-resident inputs and return the raw output
+    /// buffers — NO host transfer. Only valid for artifacts lowered with
+    /// `return_tuple=False` (the kernels); the returned buffers feed
+    /// directly back into later calls (on-device accumulation chains).
+    pub fn run_b_raw(
+        &self,
+        exe: &Executable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let t = std::time::Instant::now();
+        let outs = exe
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("executing {}", exe.path.display()))?;
+        let replica = outs.into_iter().next().context("no replicas")?;
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.execute_secs += t.elapsed().as_secs_f64();
+        Ok(replica)
+    }
+
+    /// Upload a host literal as a device buffer (no data copy into rust).
+    pub fn upload_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        let mut s = self.stats.borrow_mut();
+        s.uploads += 1;
+        s.upload_bytes += lit.size_bytes() as u64;
+        drop(s);
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    /// Download a device buffer to a host Mat.
+    pub fn download_mat(&self, buf: &xla::PjRtBuffer) -> Result<Mat> {
+        let lit = buf.to_literal_sync()?;
+        self.stats.borrow_mut().fetch_bytes += lit.size_bytes() as u64;
+        literal_to_mat(&lit)
+    }
+
+    fn bump_exec(&self, t: std::time::Instant, res: &[xla::Literal]) {
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.execute_secs += t.elapsed().as_secs_f64();
+        s.fetch_bytes += res.iter().map(|l| l.size_bytes() as u64).sum::<u64>();
+    }
+
+    fn collect_outputs(&self, outs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
+        let replica = outs
+            .into_iter()
+            .next()
+            .context("executable produced no replicas")?;
+        if replica.len() == 1 {
+            // return_tuple=True: a single tuple buffer; decompose host-side.
+            let mut lit = replica[0].to_literal_sync()?;
+            match lit.shape()? {
+                xla::Shape::Tuple(_) => Ok(lit.decompose_tuple()?),
+                _ => Ok(vec![lit]),
+            }
+        } else {
+            replica
+                .into_iter()
+                .map(|b| Ok(b.to_literal_sync()?))
+                .collect()
+        }
+    }
+}
+
+// ----------------------------------------------------------- literal helpers
+
+/// Literal -> Mat (f32, rank-2 or rank-1-as-row).
+pub fn literal_to_mat(lit: &xla::Literal) -> Result<Mat> {
+    let shape = lit.array_shape()?;
+    let dims = shape.dims();
+    let data: Vec<f32> = lit.to_vec()?;
+    match dims.len() {
+        2 => Ok(Mat::from_vec(dims[0] as usize, dims[1] as usize, data)),
+        1 => Ok(Mat::from_vec(1, dims[0] as usize, data)),
+        0 => Ok(Mat::from_vec(1, 1, data)),
+        n => anyhow::bail!("literal_to_mat: unsupported rank {n}"),
+    }
+}
+
+pub fn literal_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec()?)
+}
+
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("meta.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn kernel_artifact_roundtrip() {
+        // hessian_accum_64x128: (G [64,128], H [128,128]) -> H + G^T G.
+        let Some(root) = artifacts_root() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = Runtime::new().unwrap();
+        let exe = rt.load(root.join("kernels/hessian_accum_64x128.hlo.txt")).unwrap();
+
+        let mut rng = crate::util::rng::Rng::new(0);
+        let mut g = Mat::zeros(64, 128);
+        rng.fill_normal(&mut g.data, 1.0);
+        let h = Mat::zeros(128, 128);
+
+        let gb = rt.upload_mat(&g).unwrap();
+        let hb = rt.upload_mat(&h).unwrap();
+        let outs = rt.run_b(&exe, &[&gb, &hb]).unwrap();
+        assert_eq!(outs.len(), 1);
+        let got = literal_to_mat(&outs[0]).unwrap();
+        let want = g.gram();
+        let err = got.max_abs_diff(&want);
+        assert!(err < 1e-3, "kernel vs CPU gram mismatch: {err}");
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(root) = artifacts_root() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = Runtime::new().unwrap();
+        let p = root.join("kernels/hessian_accum_64x128.hlo.txt");
+        let a = rt.load(&p).unwrap();
+        let b = rt.load(&p).unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+        assert_eq!(rt.cached_executables(), 1);
+    }
+
+    #[test]
+    fn qdq_artifact_matches_cpu_reference() {
+        let Some(root) = artifacts_root() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = Runtime::new().unwrap();
+        let exe = rt.load(root.join("kernels/qdq_128x128_g16b2.hlo.txt")).unwrap();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let mut w = Mat::zeros(128, 128);
+        rng.fill_normal(&mut w.data, 0.5);
+        let wb = rt.upload_mat(&w).unwrap();
+        let outs = rt.run_b(&exe, &[&wb]).unwrap();
+        let got = literal_to_mat(&outs[0]).unwrap();
+        // CPU reference from the quant module.
+        let want = crate::quant::uniform::qdq_mat(&w, 16, 2);
+        let err = got.max_abs_diff(&want);
+        assert!(err < 1e-5, "qdq kernel vs CPU mismatch: {err}");
+    }
+}

@@ -1,0 +1,194 @@
+//! IEEE f16 / bfloat16 round-trip emulation (the `half` crate is
+//! unavailable offline).
+//!
+//! Used by the Table-3 study: the paper computes gradients in FP16 with loss
+//! scaling; we emulate that numerically by round-tripping f32 gradients
+//! through the half format (value -> f16 bits -> value), which reproduces
+//! the precision loss and the overflow/underflow behaviour that loss scaling
+//! is designed around.
+
+/// f32 -> IEEE binary16 bits (round-to-nearest-even, with overflow to inf
+/// and gradual underflow to subnormals).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let frac = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        let nan = if frac != 0 { 0x0200 } else { 0 };
+        return sign | 0x7C00 | nan | ((frac >> 13) as u16 & 0x03FF);
+    }
+    // Re-bias: f32 exp-127 + 15
+    let new_exp = exp - 127 + 15;
+    if new_exp >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if new_exp <= 0 {
+        // Subnormal or zero.
+        if new_exp < -10 {
+            return sign; // underflow to zero
+        }
+        let mant = frac | 0x80_0000; // implicit bit
+        let shift = (14 - new_exp) as u32;
+        let half_mant = mant >> shift;
+        // Round to nearest even.
+        let rem = mant & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = if rem > halfway || (rem == halfway && (half_mant & 1) == 1) {
+            half_mant + 1
+        } else {
+            half_mant
+        };
+        return sign | rounded as u16;
+    }
+    // Normal: round mantissa from 23 to 10 bits, nearest-even.
+    let mant = frac >> 13;
+    let rem = frac & 0x1FFF;
+    let mut out = sign as u32 | ((new_exp as u32) << 10) | mant;
+    if rem > 0x1000 || (rem == 0x1000 && (mant & 1) == 1) {
+        out += 1; // may carry into exponent — that is correct rounding
+    }
+    out as u16
+}
+
+/// IEEE binary16 bits -> f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let frac = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign
+        } else {
+            // Subnormal: value = frac * 2^-24. Normalize frac to 1.m form;
+            // after s left-shifts the f32 exponent field is 113 - s.
+            let mut e: u32 = 113;
+            let mut f = frac;
+            while f & 0x0400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            f &= 0x03FF;
+            sign | (e << 23) | (f << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (frac << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip through f16 precision.
+pub fn to_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Round-trip through bfloat16 precision (truncate + round-nearest-even of
+/// the low 16 mantissa bits).
+pub fn to_bf16(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    f32::from_bits(((bits + round) >> 16) << 16)
+}
+
+/// Round-trip a whole slice through f16 with loss scaling: y = f16(s*x)/s.
+/// This is exactly the numeric path the paper's FP16 gradient mode takes
+/// (Appendix C.1).
+pub fn f16_roundtrip_scaled(xs: &mut [f32], loss_scale: f32) {
+    for x in xs.iter_mut() {
+        *x = to_f16(*x * loss_scale) / loss_scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_values() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 1024.0] {
+            assert_eq!(to_f16(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn precision_loss() {
+        // 1 + 2^-11 is not representable in f16 (10 mantissa bits).
+        let v = 1.0 + 2f32.powi(-11);
+        assert_ne!(to_f16(v), v);
+        assert!((to_f16(v) - v).abs() <= 2f32.powi(-11));
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert!(to_f16(70000.0).is_infinite());
+        assert!(to_f16(-70000.0).is_infinite());
+        assert_eq!(to_f16(65504.0), 65504.0); // f16 max normal
+    }
+
+    #[test]
+    fn underflow_and_subnormals() {
+        assert_eq!(to_f16(1e-10), 0.0);
+        let sub = 2f32.powi(-24); // smallest f16 subnormal
+        assert_eq!(to_f16(sub), sub);
+        assert_eq!(to_f16(2f32.powi(-25)), 0.0);
+    }
+
+    #[test]
+    fn nan_preserved() {
+        assert!(to_f16(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn bf16_truncation() {
+        assert_eq!(to_bf16(1.0), 1.0);
+        let v = 1.0 + 2f32.powi(-9);
+        assert_ne!(to_bf16(v), v); // bf16 has 7 mantissa bits
+        assert!(to_bf16(1e38).is_finite()); // bf16 keeps f32 range
+    }
+
+    #[test]
+    fn roundtrip_monotone_on_grid() {
+        let mut prev = f32::NEG_INFINITY;
+        for i in -100..100 {
+            let x = i as f32 * 0.37;
+            let y = to_f16(x);
+            assert!(y >= prev);
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn loss_scaling_rescues_small_grads() {
+        // A gradient below half the smallest f16 subnormal (2^-25 ≈ 2.98e-8)
+        // flushes to zero unscaled, but survives with loss scaling.
+        let g = 2e-8f32;
+        assert_eq!(to_f16(g), 0.0);
+        let mut xs = [g];
+        f16_roundtrip_scaled(&mut xs, 1024.0);
+        assert!((xs[0] - g).abs() / g < 0.05, "{}", xs[0]);
+    }
+
+    #[test]
+    fn prop_f16_error_bound() {
+        crate::util::prop::quick(
+            "f16 relative error < 2^-10 in normal range",
+            |rng| rng.range_f32(-1000.0, 1000.0),
+            |&x| {
+                if x.abs() < 1e-2 {
+                    return Ok(());
+                }
+                let y = to_f16(x);
+                let rel = ((y - x) / x).abs();
+                if rel <= 2f32.powi(-10) {
+                    Ok(())
+                } else {
+                    Err(format!("x={x} y={y} rel={rel}"))
+                }
+            },
+        );
+    }
+}

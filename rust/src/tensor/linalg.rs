@@ -1,0 +1,276 @@
+//! Dense linear algebra for the calibration math: Cholesky factorization,
+//! triangular solves, SPD inversion, and the upper-Cholesky-of-inverse
+//! factor that OPTQ-style column loops consume.
+//!
+//! All algorithms accumulate in f64 internally — the Hessians of small
+//! calibration sets are ill-conditioned (that is what the paper's α
+//! regularization, eq. 21, is for) and f32 accumulation visibly degrades
+//! 2-bit results.
+
+use super::Mat;
+
+#[derive(Debug, thiserror::Error)]
+pub enum LinalgError {
+    #[error("matrix not positive definite at pivot {0} (value {1})")]
+    NotPositiveDefinite(usize, f64),
+    #[error("dimension mismatch: {0}")]
+    Dim(String),
+}
+
+/// Lower Cholesky factor L with A = L L^T. A must be symmetric.
+pub fn cholesky(a: &Mat) -> Result<Mat, LinalgError> {
+    if a.rows != a.cols {
+        return Err(LinalgError::Dim(format!("{}x{}", a.rows, a.cols)));
+    }
+    let n = a.rows;
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(LinalgError::NotPositiveDefinite(i, sum));
+                }
+                l[i * n + j] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Ok(Mat::from_vec(n, n, l.into_iter().map(|x| x as f32).collect()))
+}
+
+/// Solve L y = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for k in 0..i {
+            sum -= l.at(i, k) as f64 * y[k];
+        }
+        y[i] = sum / l.at(i, i) as f64;
+    }
+    y.into_iter().map(|x| x as f32).collect()
+}
+
+/// Solve L^T x = y (back substitution), L lower-triangular.
+pub fn solve_lower_t(l: &Mat, y: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i] as f64;
+        for k in (i + 1)..n {
+            sum -= l.at(k, i) as f64 * x[k];
+        }
+        x[i] = sum / l.at(i, i) as f64;
+    }
+    x.into_iter().map(|x| x as f32).collect()
+}
+
+/// M = L^{-1} for lower-triangular L (row-wise forward substitution over
+/// all columns at once — contiguous row slices, ~n³/6 MACs).
+pub fn lower_inverse(l: &Mat) -> Mat {
+    let n = l.rows;
+    let mut m = Mat::zeros(n, n);
+    for i in 0..n {
+        let (head, tail) = m.data.split_at_mut(i * n);
+        let mi = &mut tail[..n];
+        for k in 0..i {
+            let lik = l.at(i, k);
+            if lik == 0.0 {
+                continue;
+            }
+            // Row k of M has nonzeros only in columns 0..=k.
+            let mk = &head[k * n..k * n + k + 1];
+            for (j, &v) in mk.iter().enumerate() {
+                mi[j] -= lik * v;
+            }
+        }
+        let inv = 1.0 / l.at(i, i);
+        for v in mi[..i].iter_mut() {
+            *v *= inv;
+        }
+        mi[i] = inv;
+    }
+    m
+}
+
+/// M^T M for lower-triangular M, exploiting the triangular sparsity
+/// (~n³/6 MACs; row p contributes only to the leading (p+1)² block).
+fn gram_lower(m: &Mat) -> Mat {
+    let n = m.rows;
+    let mut out = Mat::zeros(n, n);
+    for p in 0..n {
+        let row = &m.data[p * n..p * n + p + 1];
+        for i in 0..=p {
+            let a = row[i];
+            if a == 0.0 {
+                continue;
+            }
+            let dst = &mut out.data[i * n..(i + 1) * n];
+            for j in i..=p {
+                dst[j] += a * row[j];
+            }
+        }
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            out.data[j * n + i] = out.data[i * n + j];
+        }
+    }
+    out
+}
+
+/// A^{-1} for SPD A via Cholesky: A^{-1} = L^{-T} L^{-1} = (L^{-1})^T L^{-1},
+/// computed as gram_lower(lower_inverse(L)) — no per-column solves.
+pub fn spd_inverse(a: &Mat) -> Result<Mat, LinalgError> {
+    let l = cholesky(a)?;
+    Ok(gram_lower(&lower_inverse(&l)))
+}
+
+/// Upper Cholesky factor U of A^{-1}: A^{-1} = U^T U with U upper-triangular,
+/// computed as OPTQ/GPTQ does — Cholesky of the inverse, transposed. The
+/// column loop consumes rows of U: `U[q, q..]` plays the role of
+/// `[H^{-1}]_{q,:} / sqrt([H^{-1}]_{q,q})` in paper eq. 3.
+pub fn inverse_upper_cholesky(a: &Mat) -> Result<Mat, LinalgError> {
+    let inv = spd_inverse(a)?;
+    // inv = L L^T  =>  U = L^T is upper with inv = U^T U.
+    let l = cholesky(&inv)?;
+    Ok(l.transpose())
+}
+
+/// Smallest/largest eigenvalue estimates via a few power iterations on A and
+/// (shifted) inverse — used only for diagnostics/tests.
+pub fn eig_range_estimate(a: &Mat, iters: usize) -> (f64, f64) {
+    let n = a.rows;
+    let mut v = vec![1.0f32; n];
+    let mut lam_max = 0.0f64;
+    for _ in 0..iters {
+        let w = a.matvec(&v);
+        let norm = w.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        lam_max = norm;
+        if norm == 0.0 {
+            break;
+        }
+        for (vi, wi) in v.iter_mut().zip(&w) {
+            *vi = (*wi as f64 / norm) as f32;
+        }
+    }
+    // Shifted power iteration for the smallest eigenvalue.
+    let mut v2 = vec![1.0f32; n];
+    let mut mu = 0.0f64;
+    for _ in 0..iters {
+        let w: Vec<f32> = {
+            let av = a.matvec(&v2);
+            v2.iter().zip(&av).map(|(x, ax)| (lam_max as f32) * x - ax).collect()
+        };
+        let norm = w.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        mu = norm;
+        if norm == 0.0 {
+            break;
+        }
+        for (vi, wi) in v2.iter_mut().zip(&w) {
+            *vi = (*wi as f64 / norm) as f32;
+        }
+    }
+    (lam_max - mu, lam_max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn spd(rng: &mut Rng, n: usize) -> Mat {
+        let mut g = Mat::zeros(2 * n, n);
+        rng.fill_normal(&mut g.data, 1.0);
+        let mut h = g.gram();
+        for i in 0..n {
+            *h.at_mut(i, i) += 0.5;
+        }
+        h
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(0);
+        let a = spd(&mut rng, 12);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-3, "{}", rec.max_abs_diff(&a));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigs 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn solves_match() {
+        let mut rng = Rng::new(1);
+        let a = spd(&mut rng, 9);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f32> = (0..9).map(|i| (i as f32).sin()).collect();
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_t(&l, &y);
+        // A x == b
+        let ax = a.matvec(&x);
+        for (ai, bi) in ax.iter().zip(&b) {
+            assert!((ai - bi).abs() < 1e-3, "{ai} vs {bi}");
+        }
+    }
+
+    #[test]
+    fn spd_inverse_correct() {
+        let mut rng = Rng::new(2);
+        let a = spd(&mut rng, 10);
+        let inv = spd_inverse(&a).unwrap();
+        let eye = a.matmul(&inv);
+        assert!(eye.max_abs_diff(&Mat::eye(10)) < 1e-3);
+    }
+
+    #[test]
+    fn inverse_upper_cholesky_property() {
+        let mut rng = Rng::new(3);
+        let a = spd(&mut rng, 8);
+        let u = inverse_upper_cholesky(&a).unwrap();
+        // U^T U == A^{-1}
+        let inv = spd_inverse(&a).unwrap();
+        let rec = u.transpose().matmul(&u);
+        assert!(rec.max_abs_diff(&inv) < 1e-3);
+        // Upper-triangular.
+        for i in 0..8 {
+            for j in 0..i {
+                assert_eq!(u.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_inverse_roundtrip_many_sizes() {
+        crate::util::prop::quick(
+            "spd inverse roundtrip",
+            |rng| {
+                let n = 2 + rng.below(20);
+                spd(rng, n)
+            },
+            |a| {
+                let inv = spd_inverse(a).map_err(|e| e.to_string())?;
+                let eye = a.matmul(&inv);
+                let err = eye.max_abs_diff(&Mat::eye(a.rows));
+                if err < 5e-2 {
+                    Ok(())
+                } else {
+                    Err(format!("inverse error {err}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,286 @@
+//! Dense f32 tensor substrate for the CPU-side calibration math.
+//!
+//! Row-major, owned storage. Deliberately small: the heavy lifting
+//! (model fwd/bwd) runs through PJRT artifacts; this module carries the
+//! calibration algebra — Hessians (≤ d_ff × d_ff), weight matrices, and the
+//! OPTQ/SpQR column loops. `linalg` adds Cholesky/LDL, `hadamard` the FWHT
+//! used by QuIP-lite, and `half` the f16/bf16 round-trip emulation used by
+//! the Table-3 precision study.
+
+pub mod half;
+pub mod hadamard;
+pub mod linalg;
+
+/// 2-D row-major matrix of f32 (the only rank we need CPU-side; rank-1 uses
+/// rows == 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        Mat::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn set_col(&mut self, c: usize, vals: &[f32]) {
+        assert_eq!(vals.len(), self.rows);
+        for (r, v) in vals.iter().enumerate() {
+            *self.at_mut(r, c) = *v;
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |r, c| self.at(c, r))
+    }
+
+    /// C = A @ B (naive ikj loop — cache-friendly inner axis; adequate for
+    /// calibration sizes; profiled in perf benches, see EXPERIMENTS.md §Perf).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                for (o, b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// self^T @ self — the Hessian contraction, exploiting symmetry
+    /// (upper triangle computed, mirrored). CPU fallback for the L1 kernel.
+    pub fn gram(&self) -> Mat {
+        let (m, n) = (self.rows, self.cols);
+        let mut out = Mat::zeros(n, n);
+        for p in 0..m {
+            let row = &self.data[p * n..(p + 1) * n];
+            for i in 0..n {
+                let a = row[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let dst = &mut out.data[i * n..(i + 1) * n];
+                for j in i..n {
+                    dst[j] += a * row[j];
+                }
+            }
+        }
+        // Mirror the upper triangle.
+        for i in 0..n {
+            for j in (i + 1)..n {
+                out.data[j * n + i] = out.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    /// y = self @ x for a vector x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|r| self.row(r).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += *b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Mean squared difference to another matrix.
+    pub fn mse(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / self.data.len() as f64
+    }
+
+    /// Maximum absolute element difference.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Extract columns [c0, c1) as a new matrix.
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Mat {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        Mat::from_fn(self.rows, c1 - c0, |r, c| self.at(r, c0 + c))
+    }
+
+    /// True if any element is NaN/inf.
+    pub fn has_non_finite(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randmat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        rng.fill_normal(&mut m.data, 1.0);
+        m
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = randmat(&mut rng, 5, 7);
+        let i = Mat::eye(7);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn gram_matches_explicit() {
+        let mut rng = Rng::new(1);
+        let g = randmat(&mut rng, 13, 9);
+        let want = g.transpose().matmul(&g);
+        assert!(g.gram().max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn gram_symmetric_psd_diag() {
+        let mut rng = Rng::new(2);
+        let g = randmat(&mut rng, 8, 6);
+        let h = g.gram();
+        for i in 0..6 {
+            assert!(h.at(i, i) >= 0.0);
+            for j in 0..6 {
+                assert!((h.at(i, j) - h.at(j, i)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(3);
+        let a = randmat(&mut rng, 4, 11);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(4);
+        let a = randmat(&mut rng, 6, 5);
+        let x: Vec<f32> = (0..5).map(|i| i as f32).collect();
+        let xm = Mat::from_vec(5, 1, x.clone());
+        let want = a.matmul(&xm);
+        let got = a.matvec(&x);
+        for i in 0..6 {
+            assert!((got[i] - want.at(i, 0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn slice_cols_roundtrip() {
+        let a = Mat::from_fn(3, 6, |r, c| (r * 6 + c) as f32);
+        let s = a.slice_cols(2, 5);
+        assert_eq!(s.cols, 3);
+        assert_eq!(s.at(1, 0), a.at(1, 2));
+    }
+
+    #[test]
+    fn col_set_col() {
+        let mut a = Mat::zeros(3, 3);
+        a.set_col(1, &[1.0, 2.0, 3.0]);
+        assert_eq!(a.col(1), vec![1.0, 2.0, 3.0]);
+        assert_eq!(a.col(0), vec![0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Training driver: loops the AOT `train_step` artifact (Adam fwd+bwd fused
+//! at build time) from Rust — used to produce the trained checkpoints the
+//! PTQ experiments quantize, and by the e2e example.
+//!
+//! The optimizer state lives as host literals between steps; each step is a
+//! single PJRT execution taking (weights, m, v, step, lr, tokens) and
+//! returning (weights', m', v', loss).
+
+use anyhow::{Context, Result};
+
+use crate::data::Splits;
+use crate::model::{ModelMeta, WeightEntry, WeightStore};
+use crate::runtime::Runtime;
+
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { steps: 300, lr: 1e-3, log_every: 20 }
+    }
+}
+
+pub struct TrainResult {
+    pub weights: WeightStore,
+    /// (step, loss) samples.
+    pub losses: Vec<(usize, f32)>,
+}
+
+fn entry_literal(e: &WeightEntry) -> Result<xla::Literal> {
+    let dims: Vec<i64> = e.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&e.data).reshape(&dims)?)
+}
+
+fn zeros_like(e: &WeightEntry) -> Result<xla::Literal> {
+    let dims: Vec<i64> = e.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&vec![0f32; e.data.len()]).reshape(&dims)?)
+}
+
+/// Train from the given initial weights; returns updated weights + loss log.
+pub fn train(
+    rt: &Runtime,
+    meta: &ModelMeta,
+    init: &WeightStore,
+    splits: &Splits,
+    cfg: &TrainConfig,
+) -> Result<TrainResult> {
+    let exe = rt.load(meta.artifact_path("train_step")?)?;
+    let nw = meta.weights.len();
+
+    let mut w: Vec<xla::Literal> =
+        init.entries.iter().map(entry_literal).collect::<Result<_>>()?;
+    let mut m: Vec<xla::Literal> =
+        init.entries.iter().map(zeros_like).collect::<Result<_>>()?;
+    let mut v: Vec<xla::Literal> =
+        init.entries.iter().map(zeros_like).collect::<Result<_>>()?;
+
+    let mut losses = Vec::new();
+    for step in 0..cfg.steps {
+        let batch = splits.train_batch(step, meta.train_batch, meta.seq);
+        let flat: Vec<i32> = batch.iter().flatten().copied().collect();
+        let tokens = xla::Literal::vec1(&flat)
+            .reshape(&[meta.train_batch as i64, meta.seq as i64])?;
+
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(3 * nw + 3);
+        args.extend(w.drain(..));
+        args.extend(m.drain(..));
+        args.extend(v.drain(..));
+        args.push(xla::Literal::scalar(step as f32));
+        args.push(xla::Literal::scalar(cfg.lr));
+        args.push(tokens);
+
+        let mut outs = rt.run(&exe, &args).context("train_step execution")?;
+        anyhow::ensure!(outs.len() == 3 * nw + 1, "train_step output arity {}", outs.len());
+        let loss: f32 = outs.pop().unwrap().get_first_element()?;
+        v = outs.split_off(2 * nw);
+        m = outs.split_off(nw);
+        w = outs;
+
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            log::info!("train step {step:>5}  loss {loss:.4}");
+            losses.push((step, loss));
+        }
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");
+    }
+
+    // Literals -> WeightStore.
+    let mut entries = Vec::with_capacity(nw);
+    for (lit, spec) in w.iter().zip(&meta.weights) {
+        entries.push(WeightEntry {
+            name: spec.name.clone(),
+            shape: spec.shape.clone(),
+            data: lit.to_vec()?,
+        });
+    }
+    Ok(TrainResult { weights: WeightStore::from_entries(entries), losses })
+}
+
+/// Train-or-load helper: reuses `path` if present (keyed by config + steps).
+pub fn ensure_checkpoint(
+    rt: &Runtime,
+    meta: &ModelMeta,
+    splits: &Splits,
+    cfg: &TrainConfig,
+    seed: u64,
+    path: &std::path::Path,
+) -> Result<WeightStore> {
+    if path.exists() {
+        log::info!("loading checkpoint {}", path.display());
+        return WeightStore::load(path);
+    }
+    log::info!(
+        "training {} ({} params) for {} steps ...",
+        meta.name,
+        meta.total_params(),
+        cfg.steps
+    );
+    let init = WeightStore::init_random(meta, seed);
+    let res = train(rt, meta, &init, splits, cfg)?;
+    res.weights.save(path)?;
+    Ok(res.weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Flavor;
+    use std::path::PathBuf;
+
+    fn artifacts_root() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("meta.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn a_few_steps_reduce_loss() {
+        let Some(root) = artifacts_root() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let rt = Runtime::new().unwrap();
+        let meta = ModelMeta::load(&root, "tiny").unwrap();
+        let splits = Splits::new(meta.vocab, Flavor::C4Analog, 0);
+        let init = WeightStore::init_random(&meta, 0);
+        let cfg = TrainConfig { steps: 30, lr: 2e-3, log_every: 10 };
+        let res = train(&rt, &meta, &init, &splits, &cfg).unwrap();
+        let first = res.losses.first().unwrap().1;
+        let last = res.losses.last().unwrap().1;
+        assert!(
+            last < first - 0.3,
+            "loss did not fall: {first} -> {last}"
+        );
+    }
+}

@@ -1,0 +1,141 @@
+//! Mini-criterion bench substrate (criterion is unavailable offline).
+//!
+//! Used by `benches/perf_*.rs` (registered with `harness = false`): warmup,
+//! timed iterations, and a one-line report with mean ± σ, p50 and p95.
+//! Table benches (`benches/table*.rs`) print paper-style rows instead and use
+//! this only for the timing columns.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop once this much measurement time has accumulated.
+    pub target_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            target_time: Duration::from_secs(2),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    /// Throughput in ops/sec for `work` units performed per iteration.
+    pub fn throughput(&self, work: f64) -> f64 {
+        work / self.mean_secs()
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` under the default config and print a criterion-style line.
+pub fn bench(name: &str, mut f: impl FnMut()) -> BenchResult {
+    bench_cfg(name, BenchConfig::default(), &mut f)
+}
+
+pub fn bench_cfg(name: &str, cfg: BenchConfig, f: &mut dyn FnMut()) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < cfg.min_iters
+        || (start.elapsed() < cfg.target_time && samples.len() < cfg.max_iters)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: stats::mean(&samples),
+        std_ns: stats::stddev(&samples),
+        p50_ns: stats::percentile(&samples, 50.0),
+        p95_ns: stats::percentile(&samples, 95.0),
+    };
+    println!(
+        "{:<48} {:>10} ± {:>9}  p50 {:>10}  p95 {:>10}  ({} iters)",
+        res.name,
+        fmt_ns(res.mean_ns),
+        fmt_ns(res.std_ns),
+        fmt_ns(res.p50_ns),
+        fmt_ns(res.p95_ns),
+        res.iters
+    );
+    res
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 5,
+            target_time: Duration::from_millis(1),
+        };
+        let mut acc = 0u64;
+        let r = bench_cfg("noop", cfg, &mut || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9,
+            std_ns: 0.0,
+            p50_ns: 1e9,
+            p95_ns: 1e9,
+        };
+        assert!((r.throughput(100.0) - 100.0).abs() < 1e-9);
+    }
+}

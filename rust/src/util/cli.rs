@@ -1,0 +1,120 @@
+//! Tiny CLI-argument substrate (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional arguments,
+//! with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `flag_names` lists options that take no value.
+    pub fn parse(argv: &[String], flag_names: &[&'static str]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    a.flags.push(body.to_string());
+                } else if i + 1 < argv.len() {
+                    a.options.insert(body.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn from_env(flag_names: &[&'static str]) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> f32 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a float, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a float, got {v:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&argv("quantize --config small --bits 2 --verbose x.bin"), &["verbose"]);
+        assert_eq!(a.positional, vec!["quantize", "x.bin"]);
+        assert_eq!(a.get("config"), Some("small"));
+        assert_eq!(a.usize_or("bits", 4), 2);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&argv("--alpha=0.01 --seed=7"), &[]);
+        assert_eq!(a.f64_or("alpha", 1.0), 0.01);
+        assert_eq!(a.u64_or("seed", 0), 7);
+    }
+
+    #[test]
+    fn trailing_option_without_value_is_flag() {
+        let a = Args::parse(&argv("--dry-run"), &[]);
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&[], &[]);
+        assert_eq!(a.str_or("config", "tiny"), "tiny");
+        assert_eq!(a.usize_or("steps", 100), 100);
+    }
+}

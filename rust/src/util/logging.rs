@@ -1,0 +1,86 @@
+//! Minimal `log`-facade backend + wall-clock timer helpers.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger;
+
+static LOGGER: StderrLogger = StderrLogger;
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= Level::Info || std::env::var("OAC_DEBUG").is_ok()
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{:<5}] {}", record.level(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the stderr logger (idempotent).
+pub fn init() {
+    if !INSTALLED.swap(true, Ordering::SeqCst) {
+        let _ = log::set_logger(&LOGGER);
+        let max = if std::env::var("OAC_DEBUG").is_ok() {
+            LevelFilter::Debug
+        } else {
+            LevelFilter::Info
+        };
+        log::set_max_level(max);
+    }
+}
+
+/// Scope timer: logs elapsed time on drop (or read it via `secs`).
+pub struct Timer {
+    label: String,
+    start: Instant,
+    pub silent: bool,
+}
+
+impl Timer {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), start: Instant::now(), silent: false }
+    }
+
+    pub fn silent(label: impl Into<String>) -> Self {
+        Self { label: label.into(), start: Instant::now(), silent: true }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        if !self.silent {
+            log::debug!("{}: {:.3}s", self.label, self.secs());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_idempotent() {
+        init();
+        init();
+        log::info!("logging test line");
+    }
+
+    #[test]
+    fn timer_measures() {
+        let t = Timer::silent("t");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.secs() >= 0.004);
+    }
+}

@@ -1,0 +1,12 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! PRNG (`rng`), JSON (`json`), CLI parsing (`cli`), summary statistics
+//! (`stats`), a mini-criterion bench harness (`bench`), a mini-proptest
+//! property harness (`prop`), and logging/timers (`logging`).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,104 @@
+//! Mini property-testing substrate (proptest is unavailable offline).
+//!
+//! `check` runs a property over N generated cases and, on failure, reports
+//! the failing case index and seed so it can be replayed deterministically.
+//! Generators are plain closures over `Rng`, composed in test code. Used for
+//! coordinator/quant invariants (routing, packing round-trips, calibration
+//! constraint preservation).
+
+use super::rng::Rng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0x0AC0_0AC0 }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panics with a replayable seed on
+/// the first failure. `gen` receives a per-case RNG.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cfg: PropConfig,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = root.split(case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}):\n  {msg}\n  input: {input:?}",
+                seed = cfg.seed,
+            );
+        }
+    }
+}
+
+/// Shorthand with the default config.
+pub fn quick<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check(name, PropConfig::default(), gen, prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        quick(
+            "reverse twice is identity",
+            |rng| (0..rng.below(20)).map(|_| rng.below(100) as i32).collect::<Vec<_>>(),
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v {
+                    Ok(())
+                } else {
+                    Err("mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_case() {
+        quick("always fails", |rng| rng.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let mut a = Vec::new();
+        check(
+            "collect A",
+            PropConfig { cases: 8, seed: 42 },
+            |rng| rng.next_u64(),
+            |x| {
+                a.push(*x);
+                Ok(())
+            },
+        );
+        let mut b = Vec::new();
+        check(
+            "collect B",
+            PropConfig { cases: 8, seed: 42 },
+            |rng| rng.next_u64(),
+            |x| {
+                b.push(*x);
+                Ok(())
+            },
+        );
+        assert_eq!(a, b);
+    }
+}

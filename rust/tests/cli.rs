@@ -1,0 +1,128 @@
+//! Integration tests: the `oac` binary end-to-end (train -> quantize ->
+//! eval through the real CLI), plus cross-module pipeline invariants that
+//! exercise runtime + coordinator + calib together.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn artifacts_ready() -> bool {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/meta.json").exists()
+}
+
+fn oac_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_oac"))
+}
+
+#[test]
+fn cli_help_and_info() {
+    let out = oac_bin().output().expect("run oac");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("USAGE"), "{text}");
+
+    if !artifacts_ready() {
+        eprintln!("skipping info: run `make artifacts`");
+        return;
+    }
+    let out = oac_bin().args(["info", "--config", "tiny"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("quantizable"), "{text}");
+    assert!(text.contains("hessian_accum"), "{text}");
+}
+
+#[test]
+fn cli_train_quantize_eval_roundtrip() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let dir = std::env::temp_dir().join("oac_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("tiny.bin");
+    let qckpt = dir.join("tiny_q.bin");
+
+    // Short train.
+    let out = oac_bin()
+        .args([
+            "train", "--config", "tiny", "--steps", "12", "--out",
+            ckpt.to_str().unwrap(), "--log-every", "4",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(ckpt.exists());
+
+    // Quantize with OAC and save.
+    let out = oac_bin()
+        .args([
+            "quantize", "--config", "tiny", "--ckpt", ckpt.to_str().unwrap(),
+            "--method", "oac", "--bits", "2", "--n-calib", "2", "--out",
+            qckpt.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("method=OAC"), "{text}");
+    assert!(qckpt.exists());
+
+    // Evaluate the quantized checkpoint.
+    let out = oac_bin()
+        .args([
+            "eval", "--config", "tiny", "--ckpt", qckpt.to_str().unwrap(),
+            "--ppl-seqs", "2", "--tasks", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Baseline"), "{text}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn quantized_model_ppl_ordering() {
+    // Cross-module invariant: for a (partially) trained model, 2-bit RTN
+    // hurts more than 4-bit RTN, and both produce finite perplexity.
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    use oac::calib::{Backend, Method};
+    use oac::coordinator::{run_pipeline, PipelineConfig};
+    use oac::data::{Flavor, Splits};
+    use oac::eval::{evaluate, EvalConfig};
+    use oac::model::{ModelMeta, WeightStore};
+    use oac::runtime::Runtime;
+    use oac::train::{train, TrainConfig};
+
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::new().unwrap();
+    let meta = ModelMeta::load(&root, "tiny").unwrap();
+    let splits = Splits::new(meta.vocab, Flavor::C4Analog, 0);
+    let init = WeightStore::init_random(&meta, 0);
+    let trained = train(
+        &rt, &meta, &init, &splits,
+        &TrainConfig { steps: 40, lr: 2e-3, log_every: 100 },
+    )
+    .unwrap()
+    .weights;
+
+    let calib = splits.calibration(2, meta.seq);
+    let ecfg = EvalConfig { ppl_seqs: 4, task_instances: 2, with_far_split: false, seed: 0 };
+    let base = evaluate(&rt, &meta, &trained, &splits, &ecfg).unwrap();
+
+    let mut ppl_at = |bits: usize| -> f64 {
+        let mut ws = trained.clone();
+        let p = PipelineConfig::new(Method::baseline(Backend::Rtn), bits);
+        run_pipeline(&rt, &meta, &mut ws, &calib, &p).unwrap();
+        evaluate(&rt, &meta, &ws, &splits, &ecfg).unwrap().ppl_in_domain
+    };
+    let p2 = ppl_at(2);
+    let p4 = ppl_at(4);
+    assert!(p2.is_finite() && p4.is_finite());
+    assert!(p4 <= p2 * 1.05, "4-bit ({p4}) should be <= 2-bit ({p2})");
+    assert!(base.ppl_in_domain <= p4 * 1.10, "baseline should be best");
+}
