@@ -1,45 +1,73 @@
-//! Perf: the Hessian contraction hot path (Phase 1). Compares the L1 Pallas
-//! kernel artifact (via PJRT, including transfer cost) against the CPU
-//! `Mat::gram` fallback across the layer shapes of every config.
+//! Perf: the Hessian contraction hot path (Phase 1) under the sharded
+//! worker pool — `gram` at 1/2/4/8 threads and the batch-sharded
+//! `Hessian::accumulate_batch`, on synthetic layer shapes. Every variant is
+//! bit-identical (fixed shard merge order); the pool buys wall clock only.
 //!
 //! Run: cargo bench --bench perf_hessian
+//! Expected: ≥ 2x at 4 threads on the default sizes (hardware permitting).
 
-use oac::experiments::artifacts_root;
-use oac::model::ModelMeta;
-use oac::runtime::{literal_to_mat, Runtime};
+use std::time::Duration;
+
+use oac::hessian::{Hessian, HessianKind};
 use oac::tensor::Mat;
-use oac::util::bench::{bench, black_box};
+use oac::util::bench::{bench_cfg, black_box, BenchConfig};
+use oac::util::pool::Pool;
 use oac::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new()?;
-    let kernels = ModelMeta::load_kernels(artifacts_root())?;
-    let mut rng = Rng::new(0);
+const THREADS: [usize; 4] = [1, 2, 4, 8];
 
-    println!("\n== Hessian contraction: H += G^T G (GFLOP/s, higher better) ==");
-    for (&(m, n), rel) in &kernels.hessian_accum {
+fn main() {
+    let mut rng = Rng::new(0);
+    let cfg = BenchConfig {
+        warmup_iters: 2,
+        min_iters: 5,
+        max_iters: 60,
+        target_time: Duration::from_secs(1),
+    };
+
+    println!("\n== gram: H = G^T G, fixed-shard parallel (GFLOP/s, higher better) ==");
+    for (m, n) in [(256usize, 256usize), (512, 256), (512, 512), (1024, 512)] {
         let mut g = Mat::zeros(m, n);
         rng.fill_normal(&mut g.data, 1.0);
-        let h = Mat::zeros(n, n);
-        let flops = 2.0 * m as f64 * n as f64 * n as f64;
-
-        let r_cpu = bench(&format!("cpu_gram_{m}x{n}"), || {
-            black_box(g.gram());
-        });
-
-        let exe = rt.load(artifacts_root().join(rel))?;
-        let r_kernel = bench(&format!("pallas_kernel_{m}x{n}"), || {
-            let gb = rt.upload_mat(&g).unwrap();
-            let hb = rt.upload_mat(&h).unwrap();
-            let outs = rt.run_b(&exe, &[&gb, &hb]).unwrap();
-            black_box(literal_to_mat(&outs[0]).unwrap());
-        });
-        println!(
-            "  -> {m}x{n}: cpu {:.2} GFLOP/s, kernel(+transfer) {:.2} GFLOP/s, speedup {:.2}x\n",
-            flops / r_cpu.mean_ns,
-            flops / r_kernel.mean_ns,
-            r_cpu.mean_ns / r_kernel.mean_ns
-        );
+        // Upper triangle only: ~m*n*n MAC-pairs / 2, 2 flops each.
+        let flops = m as f64 * n as f64 * n as f64;
+        let mut serial_ns = 0.0;
+        for threads in THREADS {
+            let pool = Pool::new(threads);
+            let r = bench_cfg(&format!("gram_{m}x{n}_t{threads}"), cfg, &mut || {
+                black_box(g.gram_with(&pool));
+            });
+            if threads == 1 {
+                serial_ns = r.mean_ns;
+            }
+            println!(
+                "  -> {m}x{n} t{threads}: {:.2} GFLOP/s, speedup {:.2}x",
+                flops / r.mean_ns,
+                serial_ns / r.mean_ns
+            );
+        }
+        println!();
     }
-    Ok(())
+
+    println!("== accumulate_batch: 16 contributions of 64x256 per layer ==");
+    let contribs: Vec<Mat> = (0..16)
+        .map(|_| {
+            let mut c = Mat::zeros(64, 256);
+            rng.fill_normal(&mut c.data, 1.0);
+            c
+        })
+        .collect();
+    let mut serial_ns = 0.0;
+    for threads in THREADS {
+        let pool = Pool::new(threads);
+        let r = bench_cfg(&format!("accumulate_batch_16x64x256_t{threads}"), cfg, &mut || {
+            let mut h = Hessian::zeros(256, HessianKind::OutputAdaptive);
+            h.accumulate_batch(&pool, &contribs);
+            black_box(&h.mat);
+        });
+        if threads == 1 {
+            serial_ns = r.mean_ns;
+        }
+        println!("  -> t{threads}: speedup {:.2}x", serial_ns / r.mean_ns);
+    }
 }

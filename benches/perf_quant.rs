@@ -1,42 +1,71 @@
-//! Perf: quantization primitives — CPU fused qdq vs the L1 Pallas qdq
-//! artifact (incl. transfer), bit packing, binarization.
+//! Perf: quantization primitives and the Phase-2 fan-out — concurrent
+//! per-layer calibration at 1/2/4/8 threads (bit-identical across all of
+//! them), fused qdq, bit packing, binarization.
 //!
 //! Run: cargo bench --bench perf_quant
+//! Expected: ≥ 2x at 4 threads for the 8-layer calibration fan-out.
 
-use oac::experiments::artifacts_root;
-use oac::model::ModelMeta;
+use std::time::Duration;
+
+use oac::calib::{self, Backend, CalibConfig, Method};
+use oac::hessian::{prepare, Hessian, HessianKind, PreparedHessian, Reduction};
 use oac::quant::{binary, packing, uniform};
-use oac::runtime::{literal_to_mat, Runtime};
 use oac::tensor::Mat;
-use oac::util::bench::{bench, black_box};
+use oac::util::bench::{bench, bench_cfg, black_box, BenchConfig};
+use oac::util::pool::Pool;
 use oac::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
     let mut rng = Rng::new(0);
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 5,
+        max_iters: 40,
+        target_time: Duration::from_secs(1),
+    };
 
-    println!("\n== qdq: CPU vs Pallas artifact (GB/s of weights processed) ==");
-    let rt = Runtime::new()?;
-    let kernels = ModelMeta::load_kernels(artifacts_root())?;
-    for (&(rows, cols, group, bits), rel) in &kernels.qdq {
-        let mut w = Mat::zeros(rows, cols);
-        rng.fill_normal(&mut w.data, 0.5);
-        let bytes = (rows * cols * 4) as f64;
-
-        let r_cpu = bench(&format!("cpu_qdq_{rows}x{cols}_g{group}b{bits}"), || {
-            black_box(uniform::qdq_mat(&w, group, bits));
+    println!("\n== concurrent per-layer calibration: 8 x [128x128] SpQR 2-bit ==");
+    let layers: Vec<(Mat, PreparedHessian)> = (0..8)
+        .map(|_| {
+            let mut w = Mat::zeros(128, 128);
+            rng.fill_normal(&mut w.data, 0.5);
+            let mut h = Hessian::zeros(128, HessianKind::OutputAdaptive);
+            for _ in 0..2 {
+                let mut g = Mat::zeros(128, 128);
+                rng.fill_normal(&mut g.data, 1.0);
+                h.accumulate(&g);
+            }
+            let prep = prepare(h.regularized(0.1, Reduction::Sum)).unwrap();
+            (w, prep)
+        })
+        .collect();
+    let ccfg = CalibConfig::for_bits(2);
+    let method = Method::oac(Backend::SpQR);
+    let mut serial_ns = 0.0;
+    for threads in THREADS {
+        let pool = Pool::new(threads);
+        let r = bench_cfg(&format!("calibrate_8_layers_t{threads}"), cfg, &mut || {
+            let out = pool.map(&layers, |i, (w, prep)| {
+                calib::run(&format!("l{i}"), w, prep, method, &ccfg)
+            });
+            black_box(out.len());
         });
-        let exe = rt.load(artifacts_root().join(rel))?;
-        let r_k = bench(&format!("pallas_qdq_{rows}x{cols}_g{group}b{bits}"), || {
-            let wb = rt.upload_mat(&w).unwrap();
-            let outs = rt.run_b(&exe, &[&wb]).unwrap();
-            black_box(literal_to_mat(&outs[0]).unwrap());
-        });
-        println!(
-            "  -> cpu {:.2} GB/s, kernel {:.2} GB/s\n",
-            bytes / r_cpu.mean_ns,
-            bytes / r_k.mean_ns
-        );
+        if threads == 1 {
+            serial_ns = r.mean_ns;
+        }
+        println!("  -> t{threads}: speedup {:.2}x", serial_ns / r.mean_ns);
     }
+
+    println!("\n== fused qdq (CPU reference of the L1 kernel) ==");
+    let mut w = Mat::zeros(512, 512);
+    rng.fill_normal(&mut w.data, 0.5);
+    let bytes = (512 * 512 * 4) as f64;
+    let r = bench("cpu_qdq_512x512_g32b2", || {
+        black_box(uniform::qdq_mat(&w, 32, 2));
+    });
+    println!("  -> {:.2} GB/s\n", bytes / r.mean_ns);
 
     println!("== packing ==");
     let codes: Vec<u8> = (0..1 << 20).map(|_| rng.below(4) as u8).collect();
@@ -50,14 +79,13 @@ fn main() -> anyhow::Result<()> {
     });
 
     println!("\n== binarization ==");
-    let mut w = Mat::zeros(256, 1024);
-    rng.fill_normal(&mut w.data, 1.0);
+    let mut wb = Mat::zeros(256, 1024);
+    rng.fill_normal(&mut wb.data, 1.0);
     bench("bell_binarize_256x1024", || {
-        black_box(binary::bell_binarize_mat(&w));
+        black_box(binary::bell_binarize_mat(&wb));
     });
-    let row: Vec<f32> = w.row(0).to_vec();
+    let row: Vec<f32> = wb.row(0).to_vec();
     bench("residual_binarize_row_1024", || {
         black_box(binary::residual_binarize(&row));
     });
-    Ok(())
 }

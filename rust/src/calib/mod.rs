@@ -136,6 +136,10 @@ pub struct CalibConfig {
     pub seed: u64,
     /// Fraction of columns selected as salient by BiLLM.
     pub salient_frac: f32,
+    /// Worker threads for the coordinator's per-layer Phase-2 fan-out and
+    /// the sharded tensor reductions (`--threads`). Any value produces
+    /// bit-identical results (deterministic shard merge); 1 = serial.
+    pub threads: usize,
 }
 
 impl CalibConfig {
@@ -156,12 +160,16 @@ impl CalibConfig {
             clip_grid: vec![1.0, 0.95, 0.9, 0.85, 0.8, 0.7, 0.6],
             seed: 0,
             salient_frac: 0.1,
+            threads: 1,
         }
     }
 }
 
-/// Dispatch a calibration method on one layer.
-pub fn calibrate(
+/// Dispatch a calibration method on one layer — the single entry point
+/// every backend (RTN/OPTQ/SpQR/QuIP/BiLLM/OmniQuant/Squeeze) is invoked
+/// through, which is what lets the coordinator fan layers out across
+/// worker threads uniformly. Pure CPU, deterministic given its inputs.
+pub fn run(
     name: &str,
     w: &Mat,
     hessian: &PreparedHessian,
@@ -177,6 +185,17 @@ pub fn calibrate(
         Backend::Quip => quip::quip(name, w, hessian, cfg),
         Backend::BiLLM => billm::billm(name, w, hessian, cfg),
     }
+}
+
+/// Back-compat alias for [`run`].
+pub fn calibrate(
+    name: &str,
+    w: &Mat,
+    hessian: &PreparedHessian,
+    method: Method,
+    cfg: &CalibConfig,
+) -> QuantizedLayer {
+    run(name, w, hessian, method, cfg)
 }
 
 /// tr(dW H dW^T): the quadratic objective every method is minimizing

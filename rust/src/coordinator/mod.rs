@@ -14,9 +14,14 @@
 //!   entering each layer; `H̄ += XᵀX` (eq. 1) through the same kernel.
 //!
 //! **Phase 2 — Calibration.** Each linear layer in the block is quantized
-//! by the configured backend (RTN/OPTQ/SpQR/QuIP/BiLLM/... — see `calib`)
-//! using its Hessian; the dequantized weights replace the originals in the
-//! weight store (and therefore in every later block's Phase 1).
+//! by the configured backend (RTN/OPTQ/SpQR/QuIP/BiLLM/... — all dispatched
+//! through `calib::run`) using its Hessian; the dequantized weights replace
+//! the originals in the weight store (and therefore in every later block's
+//! Phase 1). Within a block the layers are independent given their prepared
+//! Hessians, so Phase 2 fans them out across the `--threads` worker pool
+//! ([`calibrate_block`]) and merges results in layer order — bit-identical
+//! to the serial loop for any thread count. Hessian factorizations are
+//! shared through a [`PreparedCache`].
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
@@ -26,11 +31,13 @@ use anyhow::{Context, Result};
 
 use crate::calib::{self, CalibConfig, Method};
 use crate::eval::DeviceWeights;
-use crate::hessian::{Hessian, HessianKind};
-use crate::model::{KernelIndex, LinearSpec, ModelMeta, WeightStore};
+use crate::hessian::{Hessian, HessianKind, PreparedCache};
+use crate::model::{KernelIndex, LinearSpec, ModelMeta, WeightEntry, WeightStore};
 use crate::quant::{BitBudget, QuantizedLayer};
 use crate::runtime::{literal_to_mat, Runtime};
 use crate::tensor::Mat;
+use crate::util::pool::Pool;
+use crate::util::rng::Rng;
 
 /// Gradient numeric mode (paper Appendix C.1 / Table 3). The artifact
 /// computes in f32; `F16` round-trips every gradient matrix through IEEE
@@ -89,17 +96,20 @@ pub struct LayerReport {
     pub outliers: usize,
 }
 
-/// The coordinator owns per-run state (kernel executables, metrics).
+/// The coordinator owns per-run state (kernel executables, the shared
+/// prepared-Hessian cache, metrics).
 pub struct Coordinator<'a> {
     pub rt: &'a Runtime,
     pub meta: &'a ModelMeta,
     kernels: KernelIndex,
+    /// Factorizations shared across backends and Phase-2 worker threads.
+    pub prepared: PreparedCache,
 }
 
 impl<'a> Coordinator<'a> {
     pub fn new(rt: &'a Runtime, meta: &'a ModelMeta) -> Result<Coordinator<'a>> {
         let kernels = ModelMeta::load_kernels(&meta.root).unwrap_or_default();
-        Ok(Coordinator { rt, meta, kernels })
+        Ok(Coordinator { rt, meta, kernels, prepared: PreparedCache::new() })
     }
 
     /// Phase 1 for one block: Hessians for each of its linear layers.
@@ -315,7 +325,7 @@ impl<'a> Coordinator<'a> {
         Ok(hes)
     }
 
-    /// Phase 2 for one layer.
+    /// Phase 2 for one layer (through the shared prepared-Hessian cache).
     pub fn calibrate_layer(
         &self,
         ws: &WeightStore,
@@ -323,11 +333,7 @@ impl<'a> Coordinator<'a> {
         hessian: &Hessian,
         cfg: &PipelineConfig,
     ) -> Result<QuantizedLayer> {
-        let w = ws.get_mat(&layer.name);
-        let damped = hessian.regularized(cfg.calib.alpha, cfg.calib.reduction);
-        let prepared = crate::hessian::prepare(damped)
-            .with_context(|| format!("preparing Hessian for {}", layer.name))?;
-        Ok(calib::calibrate(&layer.name, &w, &prepared, cfg.method, &cfg.calib))
+        calibrate_one(&self.prepared, ws, layer, hessian, cfg)
     }
 
     /// The full Algorithm-1 pipeline. Mutates `ws` in place (quantized
@@ -362,9 +368,8 @@ impl<'a> Coordinator<'a> {
             peak_mem = peak_mem.max(hess_bytes + grad_bytes);
 
             let t2 = Instant::now();
-            for l in self.meta.block_layers(block) {
-                let q = self.calibrate_layer(ws, l, &hes[&l.name], cfg)?;
-                ws.set_mat(&l.name, &q.dq);
+            let block_layers = self.meta.block_layers(block);
+            for q in calibrate_block(&self.prepared, ws, &block_layers, &hes, cfg)? {
                 layers.push(LayerReport {
                     name: q.name.clone(),
                     calib_error: q.calib_error,
@@ -374,6 +379,10 @@ impl<'a> Coordinator<'a> {
                 budgets.push(q.budget);
             }
             phase2 += t2.elapsed().as_secs_f64();
+            // Later blocks re-accumulate their Hessians (new fingerprints),
+            // so these factorizations can never hit again — drop them
+            // rather than holding 3 n×n matrices per layer for the run.
+            self.prepared.clear();
             log::info!(
                 "block {block}: phase1 {phase1:.1}s cum, phase2 {phase2:.1}s cum"
             );
@@ -400,6 +409,191 @@ pub fn run_pipeline(
     cfg: &PipelineConfig,
 ) -> Result<QuantReport> {
     Coordinator::new(rt, meta)?.quantize_model(ws, calib_tokens, cfg)
+}
+
+/// Phase 2 for one layer: fetch (or compute) the prepared Hessian from the
+/// shared cache and dispatch the configured backend. Free function so the
+/// parallel fan-out does not have to capture the (non-`Sync`) runtime.
+fn calibrate_one(
+    cache: &PreparedCache,
+    ws: &WeightStore,
+    layer: &LinearSpec,
+    hessian: &Hessian,
+    cfg: &PipelineConfig,
+) -> Result<QuantizedLayer> {
+    let w = ws.get_mat(&layer.name);
+    let prepared = cache
+        .get_or_prepare(&layer.name, hessian, cfg.calib.alpha, cfg.calib.reduction)
+        .with_context(|| format!("preparing Hessian for {}", layer.name))?;
+    Ok(calib::run(&layer.name, &w, &prepared, cfg.method, &cfg.calib))
+}
+
+/// Phase 2 for one block: calibrate every linear layer concurrently on a
+/// `cfg.calib.threads`-wide pool, then write the dequantized weights back
+/// in layer order.
+///
+/// Each layer's calibration is a pure function of `(its weights, its
+/// Hessian, cfg)` — layers of one block never read each other's weights —
+/// and results merge by layer index, so the output is bit-identical to the
+/// serial loop for any thread count (enforced by `rust/tests/parallel.rs`).
+pub fn calibrate_block(
+    cache: &PreparedCache,
+    ws: &mut WeightStore,
+    layers: &[&LinearSpec],
+    hes: &BTreeMap<String, Hessian>,
+    cfg: &PipelineConfig,
+) -> Result<Vec<QuantizedLayer>> {
+    let pool = Pool::new(cfg.calib.threads);
+    let ws_shared: &WeightStore = ws;
+    let results = pool.map(layers, |_, l| calibrate_one(cache, ws_shared, l, &hes[&l.name], cfg));
+    let mut out = Vec::with_capacity(layers.len());
+    for (l, r) in layers.iter().zip(results) {
+        let q = r?;
+        ws.set_mat(&l.name, &q.dq);
+        out.push(q);
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------ synthetic pipeline
+
+/// Shape of the artifact-free synthetic model ([`run_synthetic`]): the same
+/// six linear layers per block as the real `tiny` config, with weights and
+/// Hessian contributions drawn from seeded PRNG streams instead of PJRT
+/// executions. Exists so the parallel engine (and the CLI) can be exercised
+/// end-to-end — and its `--threads` determinism contract tested — on
+/// machines without the XLA toolchain or prebuilt artifacts.
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    pub blocks: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    /// Synthetic Hessian contributions accumulated per layer (the `n_calib`
+    /// analog).
+    pub n_contrib: usize,
+    /// Rows of each contribution matrix (gradient/activation rows).
+    pub contrib_rows: usize,
+    pub seed: u64,
+}
+
+impl Default for SyntheticSpec {
+    fn default() -> SyntheticSpec {
+        SyntheticSpec { blocks: 2, d_model: 64, d_ff: 128, n_contrib: 8, contrib_rows: 32, seed: 0 }
+    }
+}
+
+/// The six linear layers of every synthetic block (q/k/v/o/up/down, same
+/// naming as the real artifact metadata).
+pub fn synthetic_layers(spec: &SyntheticSpec) -> Vec<LinearSpec> {
+    let mut out = Vec::with_capacity(spec.blocks * 6);
+    for b in 0..spec.blocks {
+        let mut push = |name: &str, rows: usize, cols: usize, input: &str| {
+            out.push(LinearSpec {
+                name: format!("blocks.{b}.{name}"),
+                rows,
+                cols,
+                input: format!("blocks.{b}.{input}"),
+                block: b,
+            });
+        };
+        push("q", spec.d_model, spec.d_model, "ln1");
+        push("k", spec.d_model, spec.d_model, "ln1");
+        push("v", spec.d_model, spec.d_model, "ln1");
+        push("o", spec.d_model, spec.d_model, "attn");
+        push("up", spec.d_ff, spec.d_model, "ln2");
+        push("down", spec.d_model, spec.d_ff, "act");
+    }
+    out
+}
+
+/// Run the full two-phase pipeline on a synthetic model: Phase 1
+/// accumulates each layer's Hessian from seeded random contribution
+/// matrices via the batch-sharded [`Hessian::accumulate_batch`]; Phase 2 is
+/// the same concurrent [`calibrate_block`] the artifact pipeline uses.
+/// Returns the quantized weights and the usual report. Deterministic: the
+/// output depends only on `(spec, cfg)` — never on `cfg.calib.threads`.
+pub fn run_synthetic(spec: &SyntheticSpec, cfg: &PipelineConfig) -> Result<(WeightStore, QuantReport)> {
+    let layers = synthetic_layers(spec);
+    let pool = Pool::new(cfg.calib.threads);
+
+    // Weights: one split PRNG stream per layer, consumed in layer order.
+    let mut root = Rng::new(spec.seed);
+    let entries: Vec<WeightEntry> = layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let mut rng = root.split(i as u64);
+            let mut data = vec![0.0f32; l.rows * l.cols];
+            rng.fill_normal(&mut data, 1.0 / (l.cols as f32).sqrt());
+            WeightEntry { name: l.name.clone(), shape: vec![l.rows, l.cols], data }
+        })
+        .collect();
+    let mut ws = WeightStore::from_entries(entries);
+
+    let cache = PreparedCache::new();
+    let mut reports = Vec::new();
+    let mut budgets: Vec<BitBudget> = Vec::new();
+    let mut phase1 = 0.0f64;
+    let mut phase2 = 0.0f64;
+    let mut peak_mem = 0usize;
+
+    for block in 0..spec.blocks {
+        let block_layers: Vec<&LinearSpec> = layers.iter().filter(|l| l.block == block).collect();
+
+        let t1 = Instant::now();
+        let mut hes: BTreeMap<String, Hessian> = BTreeMap::new();
+        for (i, l) in block_layers.iter().enumerate() {
+            // OAC methods see per-layer "gradient" streams; agnostic ones
+            // per-input "activation" streams — either way a seeded stream
+            // keyed by (block, layer index) keeps runs reproducible.
+            let mut rng = Rng::new(
+                spec.seed ^ 0xC0DE_F00D ^ ((block as u64) << 32) ^ (i as u64 + 1),
+            );
+            let contribs: Vec<Mat> = (0..spec.n_contrib)
+                .map(|_| {
+                    let mut g = Mat::zeros(spec.contrib_rows, l.cols);
+                    rng.fill_normal(&mut g.data, 1.0);
+                    g
+                })
+                .collect();
+            let mut h = Hessian::zeros(l.cols, cfg.method.hessian);
+            h.accumulate_batch(&pool, &contribs);
+            hes.insert(l.name.clone(), h);
+        }
+        phase1 += t1.elapsed().as_secs_f64();
+
+        let hess_bytes: usize = hes.values().map(|h| h.mat.data.len() * 4).sum();
+        let grad_bytes = block_layers
+            .iter()
+            .map(|l| spec.contrib_rows * l.cols * 4)
+            .max()
+            .unwrap_or(0);
+        peak_mem = peak_mem.max(hess_bytes + grad_bytes);
+
+        let t2 = Instant::now();
+        for q in calibrate_block(&cache, &mut ws, &block_layers, &hes, cfg)? {
+            reports.push(LayerReport {
+                name: q.name.clone(),
+                calib_error: q.calib_error,
+                avg_bits: q.budget.avg_bits(),
+                outliers: q.budget.outliers,
+            });
+            budgets.push(q.budget);
+        }
+        cache.clear();
+        phase2 += t2.elapsed().as_secs_f64();
+    }
+
+    let report = QuantReport {
+        method: cfg.method.name(),
+        avg_bits: BitBudget::merged_avg(&budgets),
+        total_outliers: budgets.iter().map(|b| b.outliers).sum(),
+        layers: reports,
+        phase1_secs: phase1,
+        phase2_secs: phase2,
+        peak_mem_bytes: peak_mem,
+    };
+    Ok((ws, report))
 }
 
 // Keep Rc import used when compiling without tests.

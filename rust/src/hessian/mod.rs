@@ -13,8 +13,14 @@
 //! eq. 22 sum) machinery, which is exactly what lets OAC slot into any
 //! Hessian-based calibration backend (paper Appendix I).
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
 use crate::tensor::linalg::{self, LinalgError};
 use crate::tensor::Mat;
+use crate::util::digest;
+use crate::util::pool::Pool;
 
 /// Which Hessian a calibration run uses (the paper's central comparison).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -26,7 +32,7 @@ pub enum HessianKind {
 }
 
 /// How per-sample contributions are reduced (Appendix C.3, Table 5).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Reduction {
     /// eq. 14: divide by N.
     Mean,
@@ -56,8 +62,26 @@ impl Hessian {
     /// kernel artifact when available and calls [`Hessian::add_gram`].
     pub fn accumulate(&mut self, m: &Mat) {
         assert_eq!(m.cols, self.dim(), "contribution width mismatch");
-        self.mat.add_assign(&m.gram());
+        m.gram_into(&Pool::global(), &mut self.mat);
         self.samples += 1;
+    }
+
+    /// Accumulate a whole batch of contribution matrices, sharded across
+    /// `pool`: the Gram of every contribution is computed concurrently
+    /// (each one internally deterministic — see [`Mat::gram_with`]) and the
+    /// results are added in batch order. Bit-identical to calling
+    /// [`Hessian::accumulate`] per contribution, for any thread count.
+    pub fn accumulate_batch(&mut self, pool: &Pool, contribs: &[Mat]) {
+        for c in contribs {
+            assert_eq!(c.cols, self.dim(), "contribution width mismatch");
+        }
+        // Serial inner pools: the batch is the parallel axis, and
+        // gram_with's output does not depend on its pool anyway.
+        let grams = pool.map(contribs, |_, c| c.gram_with(&Pool::serial()));
+        for g in &grams {
+            self.mat.add_assign(g);
+        }
+        self.samples += contribs.len();
     }
 
     /// Add an already-contracted M^T M (from the Pallas kernel artifact).
@@ -113,6 +137,106 @@ pub fn prepare(h: Mat) -> Result<PreparedHessian, LinalgError> {
     let hinv = linalg::spd_inverse(&h)?;
     let hinv_chol = linalg::cholesky(&hinv)?.transpose();
     Ok(PreparedHessian { h, hinv, hinv_chol })
+}
+
+// ------------------------------------------------------- prepared-Hessian cache
+
+/// Cache key for a prepared (damped + factorized) Hessian. Deliberately
+/// excludes the calibration *backend*: OPTQ/SpQR/QuIP/BiLLM consuming the
+/// same `(layer, kind, reduction, damping)` Hessian share one Cholesky.
+/// `samples` and the bitwise `fingerprint` of the accumulator invalidate
+/// the entry whenever the underlying Hessian content changes.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PreparedKey {
+    pub layer: String,
+    pub kind: HessianKind,
+    pub reduction: Reduction,
+    /// `alpha.to_bits()` — damping is part of the key, so a changed α is a
+    /// cache miss, never a stale hit.
+    pub alpha_bits: u32,
+    pub samples: usize,
+    pub fingerprint: u64,
+}
+
+impl PreparedKey {
+    pub fn new(layer: &str, h: &Hessian, alpha: f32, reduction: Reduction) -> PreparedKey {
+        PreparedKey {
+            layer: layer.to_string(),
+            kind: h.kind,
+            reduction,
+            alpha_bits: alpha.to_bits(),
+            samples: h.samples,
+            fingerprint: digest::fnv1a_f32(digest::FNV_OFFSET, &h.mat.data),
+        }
+    }
+}
+
+/// Thread-safe cache of [`PreparedHessian`] factorizations.
+///
+/// `prepare` (SPD inverse + Cholesky, O(n³)) dominates Phase-2 wall clock;
+/// before this cache it ran once per *calibration call*, so comparing
+/// backends on the same Hessian (ablation benches, α re-use across layers
+/// of a sweep) repaid the factorization every time. Shared freely across
+/// the Phase-2 worker threads.
+#[derive(Default)]
+pub struct PreparedCache {
+    map: Mutex<HashMap<PreparedKey, Arc<PreparedHessian>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl PreparedCache {
+    pub fn new() -> PreparedCache {
+        PreparedCache::default()
+    }
+
+    /// Fetch the prepared factorization for `(layer, h, alpha, reduction)`,
+    /// computing and inserting it on a miss.
+    pub fn get_or_prepare(
+        &self,
+        layer: &str,
+        h: &Hessian,
+        alpha: f32,
+        reduction: Reduction,
+    ) -> Result<Arc<PreparedHessian>, LinalgError> {
+        let key = PreparedKey::new(layer, h, alpha, reduction);
+        if let Some(p) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(p.clone());
+        }
+        // Compute outside the lock; a racing duplicate insert is harmless
+        // (both threads derive the identical factorization).
+        let prepared = Arc::new(prepare(h.regularized(alpha, reduction))?);
+        self.map.lock().unwrap().insert(key, prepared.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok(prepared)
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached factorization (hit/miss counters are kept).
+    ///
+    /// Entries are three dense n×n matrices each and are never evicted
+    /// otherwise, so long-running pipelines clear the cache at block
+    /// boundaries — later blocks see re-accumulated Hessians (new
+    /// fingerprints) and can never hit the old entries anyway.
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
 }
 
 /// Saliency of one weight (paper eq. 4): s = (w - q(w))² / [H^{-1}]_{kk}.
@@ -206,6 +330,65 @@ mod tests {
     fn saliency_scales_with_error_and_sensitivity() {
         assert!(saliency(1.0, 0.0, 0.1) > saliency(1.0, 0.5, 0.1));
         assert!(saliency(1.0, 0.0, 0.1) > saliency(1.0, 0.0, 1.0));
+    }
+
+    #[test]
+    fn accumulate_batch_bit_identical_to_serial() {
+        let mut rng = Rng::new(4);
+        let contribs: Vec<Mat> = (0..5).map(|_| rand_contrib(&mut rng, 70, 9)).collect();
+        let mut serial = Hessian::zeros(9, HessianKind::OutputAdaptive);
+        for c in &contribs {
+            serial.accumulate(c);
+        }
+        for t in [1usize, 2, 4, 8] {
+            let mut batched = Hessian::zeros(9, HessianKind::OutputAdaptive);
+            batched.accumulate_batch(&Pool::new(t), &contribs);
+            assert_eq!(batched.samples, serial.samples);
+            let a: Vec<u32> = batched.mat.data.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = serial.mat.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn prepared_cache_hit_shared_across_backends() {
+        // The same (layer, kind, reduction, α) Hessian is prepared once no
+        // matter how many backends consume it — key excludes the backend.
+        let mut rng = Rng::new(5);
+        let mut h = Hessian::zeros(6, HessianKind::OutputAdaptive);
+        h.accumulate(&rand_contrib(&mut rng, 12, 6));
+        let cache = PreparedCache::new();
+        let a = cache.get_or_prepare("blocks.0.q", &h, 0.1, Reduction::Sum).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        let b = cache.get_or_prepare("blocks.0.q", &h, 0.1, Reduction::Sum).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn prepared_cache_invalidation() {
+        let mut rng = Rng::new(6);
+        let mut h = Hessian::zeros(5, HessianKind::Agnostic);
+        h.accumulate(&rand_contrib(&mut rng, 10, 5));
+        let cache = PreparedCache::new();
+        cache.get_or_prepare("l", &h, 0.1, Reduction::Sum).unwrap();
+        // Different damping: miss.
+        cache.get_or_prepare("l", &h, 0.2, Reduction::Sum).unwrap();
+        assert_eq!(cache.misses(), 2);
+        // Different reduction: miss.
+        cache.get_or_prepare("l", &h, 0.1, Reduction::Mean).unwrap();
+        assert_eq!(cache.misses(), 3);
+        // Different layer name: miss.
+        cache.get_or_prepare("other", &h, 0.1, Reduction::Sum).unwrap();
+        assert_eq!(cache.misses(), 4);
+        // Hessian content changed: the fingerprint invalidates the entry.
+        h.accumulate(&rand_contrib(&mut rng, 10, 5));
+        cache.get_or_prepare("l", &h, 0.1, Reduction::Sum).unwrap();
+        assert_eq!(cache.misses(), 5);
+        assert_eq!(cache.hits(), 0);
+        // And the original key still hits.
+        assert_eq!(cache.len(), 5);
     }
 
     #[test]

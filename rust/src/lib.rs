@@ -12,6 +12,23 @@
 //!   fwd/bwd, lowered to HLO text artifacts consumed by [`runtime`].
 //! - **L1** (`python/compile/kernels/`, build time): Pallas kernels for the
 //!   Hessian contraction and fused quantize–dequantize.
+//!
+//! ## Threading layer and the determinism contract
+//!
+//! All CPU-side hot paths run on the scoped worker pool in [`util::pool`]
+//! (`--threads N` on the CLI): [`tensor::Mat::gram_with`] /
+//! [`tensor::Mat::matmul_with`] shard rows, [`hessian::Hessian::
+//! accumulate_batch`] shards the calibration batch, and the coordinator's
+//! Phase 2 ([`coordinator::calibrate_block`]) calibrates every linear layer
+//! of a block concurrently, sharing Cholesky factorizations through
+//! [`hessian::PreparedCache`].
+//!
+//! The contract — enforced by `rust/tests/parallel.rs` and the
+//! `tests/synthetic_cli.rs` binary tests — is that **every thread count
+//! produces bit-identical output**: shard geometry is a function of the
+//! problem size only, partial results merge in fixed shard/layer order, and
+//! each unit of work is a pure function of its index. `--threads` is a
+//! wall-clock knob, never a numerics knob.
 
 pub mod calib;
 pub mod coordinator;

@@ -10,7 +10,7 @@
 use anyhow::{Context, Result};
 
 use oac::calib::Method;
-use oac::coordinator::{run_pipeline, GradPrecision, PipelineConfig};
+use oac::coordinator::{run_pipeline, run_synthetic, GradPrecision, PipelineConfig, SyntheticSpec};
 use oac::data::{Flavor, Splits, TestSplit};
 use oac::eval::{evaluate, EvalConfig};
 use oac::experiments::{artifacts_root, baseline_row, method_row, ROW_HEADERS};
@@ -28,7 +28,12 @@ USAGE:
   oac train    --config small --steps 300 --out checkpoints/small.bin [--lr 1e-3] [--seed 0]
   oac quantize --config small --ckpt IN.bin --method oac --bits 2 [--out OUT.bin]
                [--n-calib 16] [--alpha 0.1] [--group 16] [--fp16-grads SCALE]
-               [--reduction sum|mean] [--no-kernel] [--eval]
+               [--reduction sum|mean] [--threads 1] [--no-kernel] [--eval]
+  oac quantize --synthetic [--method oac] [--bits 2] [--threads 4] [--blocks 2]
+               [--d-model 64] [--d-ff 128] [--n-calib 8] [--contrib-rows 32]
+               [--seed 0] [--out OUT.bin]
+               (artifact-free synthetic model; prints a bitwise checksum —
+                bit-identical for every --threads value)
   oac eval     --config small --ckpt IN.bin [--ppl-seqs 16] [--tasks 16] [--far]
   oac sweep    --config tiny  --ckpt IN.bin --method oac --bits 2 [--alphas 0.001,0.01,0.1,1]
 
@@ -69,6 +74,10 @@ fn pipeline_from_args(args: &Args) -> Result<PipelineConfig> {
     if args.flag("no-kernel") {
         p.use_kernel = false;
     }
+    // --threads N: Phase-2 fan-out width + the global pool for the sharded
+    // tensor reductions. Bit-identical output for every N (see util::pool).
+    p.calib.threads = args.threads();
+    oac::util::pool::set_threads(p.calib.threads);
     Ok(p)
 }
 
@@ -82,7 +91,7 @@ fn eval_cfg_from_args(args: &Args) -> EvalConfig {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["eval", "far", "no-kernel", "help"]);
+    let args = Args::from_env(&["eval", "far", "no-kernel", "help", "synthetic"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "info" => info(&args),
@@ -150,7 +159,51 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `oac quantize --synthetic`: the artifact-free pipeline — seeded random
+/// weights + Hessian contributions through the same parallel Phase-2 engine.
+/// Prints a bitwise checksum of the quantized weights so callers (and the
+/// integration tests) can verify `--threads N` ≡ `--threads 1`.
+fn cmd_quantize_synthetic(args: &Args) -> Result<()> {
+    let p = pipeline_from_args(args)?;
+    let spec = SyntheticSpec {
+        blocks: args.usize_or("blocks", 2),
+        d_model: args.usize_or("d-model", 64),
+        d_ff: args.usize_or("d-ff", 128),
+        n_contrib: args.usize_or("n-calib", 8),
+        contrib_rows: args.usize_or("contrib-rows", 32),
+        seed: args.u64_or("seed", 0),
+    };
+    let t = std::time::Instant::now();
+    let (ws, report) = run_synthetic(&spec, &p)?;
+    println!(
+        "method={} avg_bits={:.2} outliers={} threads={} checksum={:016x} total={:.2}s",
+        report.method,
+        report.avg_bits,
+        report.total_outliers,
+        p.calib.threads,
+        ws.fingerprint(),
+        t.elapsed().as_secs_f64()
+    );
+    for l in &report.layers {
+        log::debug!(
+            "  {:<16} err={:.3e} bits={:.2} outliers={}",
+            l.name,
+            l.calib_error,
+            l.avg_bits,
+            l.outliers
+        );
+    }
+    if let Some(out) = args.get("out") {
+        ws.save(out)?;
+        println!("saved quantized checkpoint to {out}");
+    }
+    Ok(())
+}
+
 fn cmd_quantize(args: &Args) -> Result<()> {
+    if args.flag("synthetic") {
+        return cmd_quantize_synthetic(args);
+    }
     let config = args.str_or("config", "tiny");
     let meta = ModelMeta::load(artifacts_root(), &config)?;
     let rt = Runtime::new()?;

@@ -258,6 +258,21 @@ impl WeightStore {
         self.entries.iter().map(|e| e.data.len()).sum()
     }
 
+    /// Order-sensitive FNV-1a digest over entry names, shapes and raw f32
+    /// bit patterns: two stores fingerprint equal iff they are bit-identical.
+    /// The determinism harness compares this across `--threads` settings.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::digest::FNV_OFFSET;
+        for e in &self.entries {
+            h = crate::util::digest::fnv1a_with(h, e.name.as_bytes());
+            for &d in &e.shape {
+                h = crate::util::digest::fnv1a_with(h, &(d as u64).to_le_bytes());
+            }
+            h = crate::util::digest::fnv1a_f32(h, &e.data);
+        }
+        h
+    }
+
     // ------------------------------------------------------- checkpointing
 
     const MAGIC: &'static [u8; 8] = b"OACCKPT1";

@@ -9,13 +9,24 @@
 
 use super::Mat;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LinalgError {
-    #[error("matrix not positive definite at pivot {0} (value {1})")]
     NotPositiveDefinite(usize, f64),
-    #[error("dimension mismatch: {0}")]
     Dim(String),
 }
+
+impl std::fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LinalgError::NotPositiveDefinite(pivot, value) => {
+                write!(f, "matrix not positive definite at pivot {pivot} (value {value})")
+            }
+            LinalgError::Dim(msg) => write!(f, "dimension mismatch: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LinalgError {}
 
 /// Lower Cholesky factor L with A = L L^T. A must be symmetric.
 pub fn cholesky(a: &Mat) -> Result<Mat, LinalgError> {

@@ -11,6 +11,14 @@ pub mod half;
 pub mod hadamard;
 pub mod linalg;
 
+use crate::util::pool::{self, Pool};
+
+/// Fixed row-shard size of the parallel Gram reduction. Part of the
+/// determinism contract: shard boundaries depend only on the matrix shape
+/// (never the worker count), and partial Gram matrices are merged in shard
+/// order, so `gram` is bit-identical for every thread count.
+pub const GRAM_SHARD_ROWS: usize = 64;
+
 /// 2-D row-major matrix of f32 (the only rank we need CPU-side; rank-1 uses
 /// rows == 1).
 #[derive(Clone, Debug, PartialEq)]
@@ -81,34 +89,63 @@ impl Mat {
         Mat::from_fn(self.cols, self.rows, |r, c| self.at(c, r))
     }
 
-    /// C = A @ B (naive ikj loop — cache-friendly inner axis; adequate for
-    /// calibration sizes; profiled in perf benches, see EXPERIMENTS.md §Perf).
-    pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        for i in 0..m {
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for p in 0..k {
-                let a = self.data[i * k + p];
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[p * n..(p + 1) * n];
-                for (o, b) in orow.iter_mut().zip(brow.iter()) {
-                    *o += a * b;
-                }
+    /// One output row of A @ B (ikj loop — cache-friendly inner axis).
+    /// Shared by the serial and row-chunked parallel matmul paths so both
+    /// produce identical bits.
+    #[inline]
+    fn matmul_row_into(&self, other: &Mat, i: usize, orow: &mut [f32]) {
+        let (k, n) = (self.cols, other.cols);
+        for p in 0..k {
+            let a = self.data[i * k + p];
+            if a == 0.0 {
+                continue;
             }
+            let brow = &other.data[p * n..(p + 1) * n];
+            for (o, b) in orow.iter_mut().zip(brow.iter()) {
+                *o += a * b;
+            }
+        }
+    }
+
+    /// C = A @ B with the global worker pool (see [`Mat::matmul_with`]).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        self.matmul_with(&Pool::global(), other)
+    }
+
+    /// C = A @ B, row-chunked across `pool`. Every output row is an
+    /// independent reduction, so the result is bit-identical to the serial
+    /// loop for any thread count and any chunking.
+    pub fn matmul_with(&self, pool: &Pool, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, n) = (self.rows, other.cols);
+        let mut out = Mat::zeros(m, n);
+        if pool.threads <= 1 || m <= 1 {
+            for i in 0..m {
+                self.matmul_row_into(other, i, &mut out.data[i * n..(i + 1) * n]);
+            }
+            return out;
+        }
+        let rows_per = m.div_ceil(pool.threads * 4).max(1);
+        let shards = pool::chunk_ranges(m, rows_per);
+        let blocks = pool.map(&shards, |_, r| {
+            let mut block = vec![0.0f32; (r.end - r.start) * n];
+            for (bi, i) in (r.start..r.end).enumerate() {
+                self.matmul_row_into(other, i, &mut block[bi * n..(bi + 1) * n]);
+            }
+            block
+        });
+        for (r, block) in shards.iter().zip(&blocks) {
+            out.data[r.start * n..r.end * n].copy_from_slice(block);
         }
         out
     }
 
-    /// self^T @ self — the Hessian contraction, exploiting symmetry
-    /// (upper triangle computed, mirrored). CPU fallback for the L1 kernel.
-    pub fn gram(&self) -> Mat {
-        let (m, n) = (self.rows, self.cols);
-        let mut out = Mat::zeros(n, n);
-        for p in 0..m {
+    /// Upper-triangle Gram contribution of rows `r0..r1`: out[i][j] +=
+    /// Σ_p row_p[i]·row_p[j] for j ≥ i. The single inner loop all Gram
+    /// paths share — bit-identical accumulation everywhere.
+    fn gram_rows_upper(&self, r0: usize, r1: usize, out: &mut Mat) {
+        let n = self.cols;
+        for p in r0..r1 {
             let row = &self.data[p * n..(p + 1) * n];
             for i in 0..n {
                 let a = row[i];
@@ -121,6 +158,39 @@ impl Mat {
                 }
             }
         }
+    }
+
+    /// self^T @ self — the Hessian contraction, exploiting symmetry
+    /// (upper triangle computed, mirrored). CPU fallback for the L1 kernel;
+    /// runs on the global worker pool (see [`Mat::gram_with`]).
+    pub fn gram(&self) -> Mat {
+        self.gram_with(&Pool::global())
+    }
+
+    /// self^T @ self, sharded across `pool`.
+    ///
+    /// Rows are split into fixed [`GRAM_SHARD_ROWS`]-row shards (a function
+    /// of the shape only — never the worker count); each shard's partial
+    /// Gram is computed independently and the partials are summed in shard
+    /// order. f32 summation order is therefore reproducible: the result is
+    /// bit-identical for every `pool.threads`, including 1.
+    pub fn gram_with(&self, pool: &Pool) -> Mat {
+        let (m, n) = (self.rows, self.cols);
+        let mut out = Mat::zeros(n, n);
+        let shards = pool::chunk_ranges(m, GRAM_SHARD_ROWS);
+        if shards.len() <= 1 {
+            self.gram_rows_upper(0, m, &mut out);
+        } else {
+            let partials = pool.map(&shards, |_, r| {
+                let mut p = Mat::zeros(n, n);
+                self.gram_rows_upper(r.start, r.end, &mut p);
+                p
+            });
+            // Fixed shard-order merge — the determinism-critical step.
+            for p in &partials {
+                out.add_assign(p);
+            }
+        }
         // Mirror the upper triangle.
         for i in 0..n {
             for j in (i + 1)..n {
@@ -128,6 +198,17 @@ impl Mat {
             }
         }
         out
+    }
+
+    /// Accumulate self^T @ self into `out` (out += gram), sharded across
+    /// `pool` with the same fixed-shard merge order as [`Mat::gram_with`].
+    pub fn gram_into(&self, pool: &Pool, out: &mut Mat) {
+        assert_eq!(
+            (out.rows, out.cols),
+            (self.cols, self.cols),
+            "gram_into accumulator shape mismatch"
+        );
+        out.add_assign(&self.gram_with(pool));
     }
 
     /// y = self @ x for a vector x.
@@ -274,6 +355,44 @@ mod tests {
         let s = a.slice_cols(2, 5);
         assert_eq!(s.cols, 3);
         assert_eq!(s.at(1, 0), a.at(1, 2));
+    }
+
+    #[test]
+    fn gram_bit_identical_across_thread_counts() {
+        // More rows than one shard so the parallel merge path is exercised.
+        let mut rng = Rng::new(5);
+        let g = randmat(&mut rng, 3 * GRAM_SHARD_ROWS + 7, 10);
+        let want: Vec<u32> = g.gram_with(&Pool::serial()).data.iter().map(|v| v.to_bits()).collect();
+        for t in [2usize, 4, 8] {
+            let got: Vec<u32> =
+                g.gram_with(&Pool::new(t)).data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got, want, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn matmul_bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(6);
+        let a = randmat(&mut rng, 37, 19);
+        let b = randmat(&mut rng, 19, 23);
+        let want: Vec<u32> =
+            a.matmul_with(&Pool::serial(), &b).data.iter().map(|v| v.to_bits()).collect();
+        for t in [2usize, 4, 8] {
+            let got: Vec<u32> =
+                a.matmul_with(&Pool::new(t), &b).data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got, want, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn gram_into_accumulates() {
+        let mut rng = Rng::new(7);
+        let g = randmat(&mut rng, 12, 6);
+        let mut acc = Mat::eye(6);
+        g.gram_into(&Pool::new(4), &mut acc);
+        let mut want = Mat::eye(6);
+        want.add_assign(&g.gram_with(&Pool::serial()));
+        assert_eq!(acc.data, want.data);
     }
 
     #[test]

@@ -78,6 +78,13 @@ impl Args {
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a float, got {v:?}")))
             .unwrap_or(default)
     }
+
+    /// `--threads N` (≥ 1; default 1 = serial). The shared spelling every
+    /// subcommand uses for the worker-pool width — results are bit-identical
+    /// for any value, so this is purely a wall-clock knob.
+    pub fn threads(&self) -> usize {
+        self.usize_or("threads", 1).max(1)
+    }
 }
 
 #[cfg(test)]
@@ -116,5 +123,13 @@ mod tests {
         let a = Args::parse(&[], &[]);
         assert_eq!(a.str_or("config", "tiny"), "tiny");
         assert_eq!(a.usize_or("steps", 100), 100);
+    }
+
+    #[test]
+    fn threads_parsing() {
+        assert_eq!(Args::parse(&[], &[]).threads(), 1);
+        assert_eq!(Args::parse(&argv("--threads 4"), &[]).threads(), 4);
+        // Clamped to at least one worker.
+        assert_eq!(Args::parse(&argv("--threads 0"), &[]).threads(), 1);
     }
 }

@@ -1,0 +1,62 @@
+//! FNV-1a digests over raw value bits — used for [`crate::hessian::
+//! PreparedCache`] keys and for the bitwise-equality fingerprints the
+//! determinism harness compares (`--threads N` must reproduce `--threads 1`
+//! exactly, so fingerprints hash f32 *bits*, not values: `-0.0 != +0.0` and
+//! NaN payloads all count).
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold `bytes` into a running FNV-1a state.
+pub fn fnv1a_with(mut state: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        state ^= b as u64;
+        state = state.wrapping_mul(FNV_PRIME);
+    }
+    state
+}
+
+/// FNV-1a over a byte slice from the standard offset basis.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_with(FNV_OFFSET, bytes)
+}
+
+/// Fold the IEEE-754 bit patterns of `vals` into a running state.
+pub fn fnv1a_f32(mut state: u64, vals: &[f32]) -> u64 {
+    for v in vals {
+        state = fnv1a_with(state, &v.to_bits().to_le_bytes());
+    }
+    state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vector() {
+        // FNV-1a("a") = 0xaf63dc4c8601ec8c
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b""), FNV_OFFSET);
+    }
+
+    #[test]
+    fn bitwise_sensitivity() {
+        let a = fnv1a_f32(FNV_OFFSET, &[0.0f32]);
+        let b = fnv1a_f32(FNV_OFFSET, &[-0.0f32]);
+        assert_ne!(a, b, "sign of zero must be observable");
+        assert_eq!(
+            fnv1a_f32(FNV_OFFSET, &[1.5, -2.25]),
+            fnv1a_f32(FNV_OFFSET, &[1.5, -2.25])
+        );
+    }
+
+    #[test]
+    fn order_sensitive() {
+        assert_ne!(
+            fnv1a_f32(FNV_OFFSET, &[1.0, 2.0]),
+            fnv1a_f32(FNV_OFFSET, &[2.0, 1.0])
+        );
+    }
+}

@@ -1,12 +1,15 @@
 //! Substrate utilities built from scratch for the offline environment:
 //! PRNG (`rng`), JSON (`json`), CLI parsing (`cli`), summary statistics
 //! (`stats`), a mini-criterion bench harness (`bench`), a mini-proptest
-//! property harness (`prop`), and logging/timers (`logging`).
+//! property harness (`prop`), logging/timers (`logging`), the deterministic
+//! scoped thread pool (`pool`), and FNV fingerprints (`digest`).
 
 pub mod bench;
 pub mod cli;
+pub mod digest;
 pub mod json;
 pub mod logging;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,187 @@
+//! Scoped worker pool with a deterministic merge order (std-only; rayon is
+//! unavailable offline).
+//!
+//! The determinism contract every user of this module relies on:
+//!
+//! 1. **Work is indexed.** [`Pool::map`] runs `f(i, &items[i])` for every
+//!    item; `f` must be a pure function of `(i, items[i])`.
+//! 2. **Results merge by index**, never by completion order: the output
+//!    `Vec` is `[f(0, ..), f(1, ..), ...]` regardless of which worker
+//!    computed what or when.
+//! 3. **Shard geometry never depends on the worker count.** Callers that
+//!    split a reduction into partial results (e.g. [`crate::tensor::Mat::
+//!    gram_with`]) must derive shard boundaries from the *problem size*
+//!    only ([`chunk_ranges`] with a fixed chunk) and fold partials in shard
+//!    order, so f32 summation order — and therefore every output bit — is
+//!    identical for any thread count, including 1.
+//!
+//! Together these make `--threads N` bit-identical to `--threads 1` for the
+//! whole calibration pipeline (enforced by `rust/tests/parallel.rs`).
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide default worker count, set once from the CLI `--threads`
+/// flag. Defaults to 1 (serial) so library users opt in explicitly.
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the global worker count used by [`Pool::global`].
+pub fn set_threads(n: usize) {
+    GLOBAL_THREADS.store(n.max(1), Ordering::SeqCst);
+}
+
+/// The current global worker count.
+pub fn threads() -> usize {
+    GLOBAL_THREADS.load(Ordering::SeqCst).max(1)
+}
+
+/// Deterministic partition of `0..n` into consecutive chunks of `chunk`
+/// elements (last chunk may be short). Depends only on `(n, chunk)` — never
+/// on the worker count — so shard-merge order is reproducible.
+pub fn chunk_ranges(n: usize, chunk: usize) -> Vec<Range<usize>> {
+    assert!(chunk > 0, "chunk size must be positive");
+    (0..n).step_by(chunk).map(|s| s..(s + chunk).min(n)).collect()
+}
+
+/// A fixed-width scoped worker pool. Cheap to construct; threads are
+/// spawned per [`Pool::map`] call and joined before it returns.
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    pub threads: usize,
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Pool {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// A single-worker pool (always serial).
+    pub fn serial() -> Pool {
+        Pool { threads: 1 }
+    }
+
+    /// A pool sized by the process-wide `--threads` setting.
+    pub fn global() -> Pool {
+        Pool::new(threads())
+    }
+
+    /// Apply `f` to every item and return the results **in item order**.
+    ///
+    /// Work is distributed dynamically (atomic index), results are scattered
+    /// back by index, so scheduling cannot affect the output. A panic in any
+    /// worker is propagated to the caller with its original payload.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        if self.threads <= 1 || n <= 1 {
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let workers = self.threads.min(n);
+        let next = AtomicUsize::new(0);
+        let mut buckets: Vec<Vec<(usize, R)>> = Vec::with_capacity(workers);
+        std::thread::scope(|s| {
+            let f = &f;
+            let next = &next;
+            let mut handles = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                handles.push(s.spawn(move || {
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i, &items[i])));
+                    }
+                    local
+                }));
+            }
+            for h in handles {
+                match h.join() {
+                    Ok(local) => buckets.push(local),
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
+            }
+        });
+        let mut slots: Vec<Option<R>> = std::iter::repeat_with(|| None).take(n).collect();
+        for (i, r) in buckets.into_iter().flatten() {
+            debug_assert!(slots[i].is_none(), "duplicate result for index {i}");
+            slots[i] = Some(r);
+        }
+        slots
+            .into_iter()
+            .map(|r| r.expect("pool worker dropped an item"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order_and_values() {
+        let items: Vec<usize> = (0..117).collect();
+        let want: Vec<usize> = items.iter().map(|x| x * 3 + 1).collect();
+        for t in [1, 2, 4, 8, 32] {
+            let got = Pool::new(t).map(&items, |i, &x| {
+                assert_eq!(i, x);
+                x * 3 + 1
+            });
+            assert_eq!(got, want, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn map_handles_fewer_items_than_workers() {
+        let items = [10usize, 20];
+        assert_eq!(Pool::new(8).map(&items, |_, &x| x + 1), vec![11, 21]);
+        assert_eq!(Pool::new(8).map(&[] as &[usize], |_, &x| x), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for (n, c) in [(0usize, 3usize), (1, 3), (3, 3), (10, 3), (64, 64), (65, 64)] {
+            let ranges = chunk_ranges(n, c);
+            let mut covered = 0;
+            for (k, r) in ranges.iter().enumerate() {
+                assert_eq!(r.start, covered, "gap at chunk {k}");
+                assert!(r.end - r.start <= c);
+                covered = r.end;
+            }
+            assert_eq!(covered, n);
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_ignore_thread_count() {
+        // The shard geometry is a function of the problem size alone.
+        assert_eq!(chunk_ranges(130, 64), vec![0..64, 64..128, 128..130]);
+    }
+
+    #[test]
+    fn global_threads_roundtrip() {
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        assert_eq!(Pool::global().threads, 3);
+        set_threads(0); // clamped
+        assert_eq!(threads(), 1);
+        set_threads(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom at 7")]
+    fn worker_panic_propagates() {
+        let items: Vec<usize> = (0..32).collect();
+        Pool::new(4).map(&items, |i, _| {
+            if i == 7 {
+                panic!("boom at 7");
+            }
+            i
+        });
+    }
+}

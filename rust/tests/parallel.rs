@@ -1,0 +1,162 @@
+//! The determinism harness for the parallel calibration engine: every
+//! parallel path must be **bit-identical** to the serial path (`--threads 1`)
+//! for thread counts 1/2/4/8. Floating-point summation order is part of the
+//! contract (fixed shard geometry + fixed merge order — see `util::pool`),
+//! so the comparisons below are on raw f32 bit patterns, not tolerances.
+
+use oac::calib::{Backend, Method};
+use oac::coordinator::{run_synthetic, PipelineConfig, SyntheticSpec};
+use oac::hessian::{Hessian, HessianKind, PreparedCache, Reduction};
+use oac::tensor::Mat;
+use oac::util::pool::Pool;
+use oac::util::prop::{check, PropConfig};
+use oac::util::rng::Rng;
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+fn randmat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    let mut m = Mat::zeros(rows, cols);
+    rng.fill_normal(&mut m.data, 1.0);
+    m
+}
+
+#[test]
+fn prop_gram_bit_identical_across_thread_counts() {
+    check(
+        "gram: threads {1,2,4,8} agree bitwise",
+        PropConfig { cases: 24, seed: 0x6A17 },
+        |rng| {
+            // Rows span several GRAM_SHARD_ROWS shards in many cases.
+            let rows = 1 + rng.below(260);
+            let cols = 1 + rng.below(40);
+            randmat(rng, rows, cols)
+        },
+        |g| {
+            let want = bits(&g.gram_with(&Pool::new(1)));
+            for t in THREAD_COUNTS {
+                let got = bits(&g.gram_with(&Pool::new(t)));
+                if got != want {
+                    return Err(format!("gram diverged at {t} threads ({}x{})", g.rows, g.cols));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_matmul_bit_identical_across_thread_counts() {
+    check(
+        "matmul: threads {1,2,4,8} agree bitwise",
+        PropConfig { cases: 24, seed: 0x3A7 },
+        |rng| {
+            let m = 1 + rng.below(60);
+            let k = 1 + rng.below(30);
+            let n = 1 + rng.below(30);
+            (randmat(rng, m, k), randmat(rng, k, n))
+        },
+        |(a, b)| {
+            let want = bits(&a.matmul_with(&Pool::new(1), b));
+            for t in THREAD_COUNTS {
+                let got = bits(&a.matmul_with(&Pool::new(t), b));
+                if got != want {
+                    return Err(format!("matmul diverged at {t} threads"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_accumulate_batch_bit_identical_to_serial_accumulate() {
+    check(
+        "accumulate_batch == serial accumulate, bitwise, any thread count",
+        PropConfig { cases: 16, seed: 0xACC },
+        |rng| {
+            let dim = 2 + rng.below(24);
+            let n_contrib = 1 + rng.below(6);
+            let contribs: Vec<Mat> = (0..n_contrib)
+                .map(|_| {
+                    let rows = 1 + rng.below(130);
+                    randmat(rng, rows, dim)
+                })
+                .collect();
+            (dim, contribs)
+        },
+        |(dim, contribs)| {
+            let mut serial = Hessian::zeros(*dim, HessianKind::OutputAdaptive);
+            for c in contribs {
+                serial.accumulate(c);
+            }
+            for t in THREAD_COUNTS {
+                let mut batched = Hessian::zeros(*dim, HessianKind::OutputAdaptive);
+                batched.accumulate_batch(&Pool::new(t), contribs);
+                if batched.samples != serial.samples {
+                    return Err(format!("sample count diverged at {t} threads"));
+                }
+                if bits(&batched.mat) != bits(&serial.mat) {
+                    return Err(format!("hessian diverged at {t} threads"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Full coordinator block calibration (the synthetic pipeline drives the
+/// same `calibrate_block` fan-out the artifact pipeline uses): quantized
+/// weights and report metrics must be bit-identical across thread counts,
+/// for both a Hessian-free and a Hessian-based backend and for the OAC and
+/// agnostic Hessian kinds.
+#[test]
+fn synthetic_pipeline_bit_identical_across_thread_counts() {
+    let spec = SyntheticSpec::default();
+    for method in [
+        Method::oac(Backend::SpQR),
+        Method::baseline(Backend::Optq),
+        Method::baseline(Backend::Rtn),
+    ] {
+        let mut reference: Option<(u64, f64, usize, Vec<u64>)> = None;
+        for t in THREAD_COUNTS {
+            let mut cfg = PipelineConfig::new(method, 2);
+            cfg.calib.threads = t;
+            let (ws, report) = run_synthetic(&spec, &cfg).unwrap();
+            let errs: Vec<u64> = report.layers.iter().map(|l| l.calib_error.to_bits()).collect();
+            let state = (ws.fingerprint(), report.avg_bits, report.total_outliers, errs);
+            match &reference {
+                None => reference = Some(state),
+                Some(want) => assert_eq!(
+                    want, &state,
+                    "{method:?} diverged at {t} threads"
+                ),
+            }
+        }
+    }
+}
+
+/// Per-layer calibration error must be invariant to whether the prepared
+/// Hessian came from the cache or was computed fresh.
+#[test]
+fn cache_does_not_change_results() {
+    let mut rng = Rng::new(9);
+    let w = randmat(&mut rng, 16, 32);
+    let mut h = Hessian::zeros(32, HessianKind::OutputAdaptive);
+    h.accumulate(&randmat(&mut rng, 64, 32));
+
+    let cfg = oac::calib::CalibConfig::for_bits(2);
+    let cache = PreparedCache::new();
+    let fresh = cache.get_or_prepare("l", &h, cfg.alpha, Reduction::Sum).unwrap();
+    let cached = cache.get_or_prepare("l", &h, cfg.alpha, Reduction::Sum).unwrap();
+    assert_eq!(cache.hits(), 1);
+
+    let method = Method::oac(Backend::SpQR);
+    let a = oac::calib::run("l", &w, &fresh, method, &cfg);
+    let b = oac::calib::run("l", &w, &cached, method, &cfg);
+    assert_eq!(bits(&a.dq), bits(&b.dq));
+    assert_eq!(a.calib_error.to_bits(), b.calib_error.to_bits());
+}

@@ -1,0 +1,117 @@
+//! Property tests for the quantization round-trip invariants (via the
+//! `util::prop` substrate): bit packing is lossless for binary and 2/3/4-bit
+//! codes, and uniform quantize–dequantize stays within one quantization step
+//! of the clamp range.
+
+use oac::quant::packing::{pack, packed_size, unpack};
+use oac::quant::uniform::{dequantize, group_params, qdq, quantize};
+use oac::util::prop::{check, PropConfig};
+
+#[test]
+fn prop_pack_unpack_lossless_for_shipped_widths() {
+    // The widths the calibration backends actually emit: 1 (binary codes),
+    // 2/3/4 (uniform grids).
+    check(
+        "pack/unpack lossless at 1/2/3/4 bits",
+        PropConfig { cases: 96, seed: 0x9AC4 },
+        |rng| {
+            let bits = [1usize, 2, 3, 4][rng.below(4)];
+            let n = 1 + rng.below(300);
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+            (bits, codes)
+        },
+        |(bits, codes)| {
+            let packed = pack(codes, *bits);
+            if packed.len() != packed_size(codes.len(), *bits) {
+                return Err(format!("size {} != {}", packed.len(), packed_size(codes.len(), *bits)));
+            }
+            let got = unpack(&packed, *bits, codes.len());
+            if got == *codes {
+                Ok(())
+            } else {
+                Err("codes corrupted by round-trip".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_qdq_error_within_one_step_in_range() {
+    // For values inside the fitted [lo, hi] range the quantize–dequantize
+    // error is bounded by one quantization step (half a step from grid
+    // rounding + half from the zero-point rounding).
+    check(
+        "qdq error ≤ one step for in-range values",
+        PropConfig { cases: 96, seed: 0x57E9 },
+        |rng| {
+            let bits = 2 + rng.below(3); // 2..4
+            let n = 2 + rng.below(64);
+            let scale = 0.05 + 2.0 * rng.uniform_f32();
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal_f32() * scale).collect();
+            (bits, vals)
+        },
+        |(bits, vals)| {
+            let p = group_params(vals, *bits);
+            if p.scale <= 0.0 {
+                // Degenerate (constant) group: qdq is exact passthrough.
+                for &v in vals {
+                    if qdq(v, p, *bits) != v {
+                        return Err("degenerate group not passthrough".into());
+                    }
+                }
+                return Ok(());
+            }
+            for &v in vals {
+                let err = (qdq(v, p, *bits) - v).abs();
+                if err > p.scale + 1e-5 {
+                    return Err(format!("err {err} > step {} at {v}", p.scale));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dequantized_values_stay_inside_clamp_range() {
+    // For ARBITRARY inputs (including far outside the fitted range) the
+    // dequantized value lands inside the representable grid span
+    // [dequantize(0), dequantize(levels)] — the clamp range — exactly.
+    check(
+        "dequantized values clamped to the grid span",
+        PropConfig { cases: 96, seed: 0xC1A9 },
+        |rng| {
+            let bits = 2 + rng.below(3);
+            let n = 2 + rng.below(48);
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            // Probe values well outside the fitted range too.
+            let probes: Vec<f32> = (0..16).map(|_| rng.normal_f32() * 10.0).collect();
+            (bits, vals, probes)
+        },
+        |(bits, vals, probes)| {
+            let p = group_params(vals, *bits);
+            if p.scale <= 0.0 {
+                return Ok(());
+            }
+            let levels = ((1usize << *bits) - 1) as f32;
+            let lo = dequantize(0.0, p);
+            let hi = dequantize(levels, p);
+            for &v in vals.iter().chain(probes) {
+                let q = quantize(v, p, *bits);
+                if !(0.0..=levels).contains(&q) {
+                    return Err(format!("code {q} outside [0, {levels}]"));
+                }
+                let dq = dequantize(q, p);
+                if dq < lo.min(hi) - 1e-6 || dq > lo.max(hi) + 1e-6 {
+                    return Err(format!("dq {dq} outside clamp range [{lo}, {hi}]"));
+                }
+                // And within one step of the clamped input.
+                let clamped = v.clamp(lo.min(hi), lo.max(hi));
+                if (dq - clamped).abs() > p.scale + 1e-5 {
+                    return Err(format!("dq {dq} more than one step from clamp({v})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

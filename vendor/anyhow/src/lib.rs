@@ -1,0 +1,192 @@
+//! Offline stand-in for the `anyhow` crate (crates.io is unavailable in the
+//! build environment). Implements the API subset this workspace uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait, and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Error values carry a flat context
+//! chain (outermost first); `{:#}` formatting prints the full chain.
+
+use std::fmt;
+
+/// A dynamically-typed error with a chain of context messages.
+///
+/// Unlike the real `anyhow::Error` this stores messages eagerly as strings —
+/// downcasting is not supported, which none of this workspace needs.
+pub struct Error {
+    /// Context chain, outermost message first.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    fn push_context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Wrap with an additional layer of context (outermost).
+    pub fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Error {
+        self.push_context(context)
+    }
+
+    /// Iterate the context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Any std error converts into `Error`, capturing its source chain. `Error`
+// itself deliberately does NOT implement `std::error::Error` so this blanket
+// impl cannot overlap the reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().push_context(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into().push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                "condition failed: {}",
+                ::std::stringify!($cond)
+            ));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn context_chain_and_alternate_display() {
+        let e: Error = Err::<(), _>(io_err()).context("opening config").unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let e = None::<u8>.with_context(|| format!("slot {}", 3)).unwrap_err();
+        assert_eq!(format!("{e}"), "slot 3");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(ok: bool) -> Result<u8> {
+            ensure!(ok, "flag was {ok}");
+            if !ok {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(format!("{}", f(false).unwrap_err()), "flag was false");
+        let e = anyhow!("code {}", 7);
+        assert_eq!(format!("{e}"), "code 7");
+    }
+}

@@ -1,0 +1,313 @@
+//! Offline stub of the `xla` PJRT bindings used by the runtime layer.
+//!
+//! The real crate links libxla/PJRT and executes AOT HLO artifacts; that
+//! toolchain is not present in this build environment, so this stub keeps
+//! the *host-side* surface functional (Literal construction, reshape,
+//! typed extraction) while every device-facing entry point
+//! ([`PjRtClient::cpu`], compilation, buffer upload, execution) returns a
+//! clean error. The coordinator, tests and benches all gate on
+//! `Runtime::new()` / artifact presence, so the rest of the crate works —
+//! including the artifact-free synthetic pipeline — without XLA installed.
+
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    fn unavailable() -> Error {
+        Error::new("xla runtime unavailable: built with the offline stub (vendor/xla)")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+// ------------------------------------------------------------------ literals
+
+/// Typed storage behind a [`Literal`].
+#[derive(Clone, Debug)]
+enum Store {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types a [`Literal`] can hold in this stub.
+pub trait NativeType: Copy {
+    fn store(vals: &[Self]) -> Store;
+    fn read(store: &Store) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn store(vals: &[Self]) -> Store {
+        Store::F32(vals.to_vec())
+    }
+    fn read(store: &Store) -> Result<Vec<Self>> {
+        match store {
+            Store::F32(v) => Ok(v.clone()),
+            _ => Err(Error::new("literal element type mismatch: expected f32")),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn store(vals: &[Self]) -> Store {
+        Store::I32(vals.to_vec())
+    }
+    fn read(store: &Store) -> Result<Vec<Self>> {
+        match store {
+            Store::I32(v) => Ok(v.clone()),
+            _ => Err(Error::new("literal element type mismatch: expected i32")),
+        }
+    }
+}
+
+/// Array shape: dimension sizes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Shape of a literal: a dense array or a tuple.
+#[derive(Clone, Debug)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// A host-resident typed array (fully functional in the stub).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    store: Store,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(vals: &[T]) -> Literal {
+        Literal { store: T::store(vals), dims: vec![vals.len() as i64] }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(val: T) -> Literal {
+        Literal { store: T::store(&[val]), dims: vec![] }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.store {
+            Store::F32(v) => v.len(),
+            Store::I32(v) => v.len(),
+            Store::Tuple(_) => 0,
+        }
+    }
+
+    /// Same data, new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if matches!(self.store, Store::Tuple(_)) {
+            return Err(Error::new("cannot reshape a tuple literal"));
+        }
+        if n as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape element count mismatch: {} vs {:?}",
+                self.element_count(),
+                dims
+            )));
+        }
+        Ok(Literal { store: self.store.clone(), dims: dims.to_vec() })
+    }
+
+    /// Extract all elements as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::read(&self.store)
+    }
+
+    /// The first element (scalar extraction).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error::new("empty literal"))
+    }
+
+    /// Storage footprint in bytes (elements are 4 bytes wide here).
+    pub fn size_bytes(&self) -> usize {
+        match &self.store {
+            Store::F32(v) => v.len() * 4,
+            Store::I32(v) => v.len() * 4,
+            Store::Tuple(ls) => ls.iter().map(|l| l.size_bytes()).sum(),
+        }
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        match &self.store {
+            Store::Tuple(ls) => Ok(Shape::Tuple(
+                ls.iter().map(|l| l.shape()).collect::<Result<_>>()?,
+            )),
+            _ => Ok(Shape::Array(ArrayShape { dims: self.dims.clone() })),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match &self.store {
+            Store::Tuple(_) => Err(Error::new("array_shape on a tuple literal")),
+            _ => Ok(ArrayShape { dims: self.dims.clone() }),
+        }
+    }
+
+    /// Split a tuple literal into its elements.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match std::mem::replace(&mut self.store, Store::F32(Vec::new())) {
+            Store::Tuple(ls) => Ok(ls),
+            other => {
+                self.store = other;
+                Err(Error::new("decompose_tuple on a non-tuple literal"))
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- device stubs
+
+/// Stub device buffer: can never be constructed (all upload paths fail), so
+/// every method is statically unreachable but must typecheck.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Stub compiled executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Stub PJRT client: construction fails so callers degrade gracefully.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable())
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Stub HLO module proto: text parsing requires the real toolchain.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::new(
+            "xla stub cannot parse HLO artifacts (offline build without PJRT)",
+        ))
+    }
+}
+
+/// Stub computation wrapper.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert_eq!(Literal::scalar(7i32).get_first_element::<i32>().unwrap(), 7);
+    }
+
+    #[test]
+    fn typed_mismatch_rejected() {
+        let l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.size_bytes(), 8);
+    }
+
+    #[test]
+    fn device_paths_fail_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nope.hlo.txt").is_err());
+    }
+}
