@@ -1,0 +1,92 @@
+//! Perf: packed vs dense forward throughput and weight residency at
+//! 2/3/4/8 bits on 1/2/4/8 threads (the serving subsystem's two axes).
+//! Ends with a machine-readable JSON summary suitable for redirecting into
+//! `BENCH_serve.json`.
+//!
+//! Run: cargo bench --bench perf_serve
+//! Expected: packed forward within ~1.2x of dense wall-clock (the unpack is
+//! amortized over the batch) at 4-32x lower weight bytes, and ≥ 2x speedup
+//! from 1 -> 4 threads on both paths.
+
+use std::time::Duration;
+
+use oac::serve::{self, PackedLinear};
+use oac::tensor::Mat;
+use oac::util::bench::{bench_cfg, black_box, BenchConfig};
+use oac::util::json::Json;
+use oac::util::pool::Pool;
+use oac::util::rng::Rng;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+const BITS: [usize; 4] = [2, 3, 4, 8];
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let (rows, cols, batch) = (512usize, 512usize, 32usize);
+    let mut w = Mat::zeros(rows, cols);
+    rng.fill_normal(&mut w.data, 0.5);
+    let mut x = Mat::zeros(cols, batch);
+    rng.fill_normal(&mut x.data, 1.0);
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: 25,
+        target_time: Duration::from_millis(600),
+    };
+    let flops = (2 * rows * cols * batch) as f64;
+
+    let mut records: Vec<Json> = Vec::new();
+    for bits in BITS {
+        let pl: PackedLinear = serve::encode_uniform("w", &w, 32, bits);
+        let dense = pl.dequantize();
+        println!(
+            "\n== packed {bits}-bit {rows}x{cols} @ batch {batch}: {} packed vs {} dense bytes ==",
+            pl.packed_bytes(),
+            pl.dense_bytes()
+        );
+        let mut packed_serial_ns = 0.0f64;
+        for threads in THREADS {
+            let pool = Pool::new(threads);
+            let rp = bench_cfg(&format!("packed_fwd_b{bits}_t{threads}"), cfg, &mut || {
+                black_box(pl.forward_with(&pool, &x).data.len());
+            });
+            let rd = bench_cfg(&format!("dense_fwd_b{bits}_t{threads}"), cfg, &mut || {
+                black_box(dense.matmul_with(&pool, &x).data.len());
+            });
+            if threads == 1 {
+                packed_serial_ns = rp.mean_ns;
+            }
+            println!(
+                "  -> t{threads}: packed {:.2} GFLOP/s (speedup {:.2}x), dense {:.2} GFLOP/s, packed/dense {:.2}x",
+                flops / rp.mean_ns,
+                packed_serial_ns / rp.mean_ns,
+                flops / rd.mean_ns,
+                rp.mean_ns / rd.mean_ns
+            );
+            records.push(Json::obj(vec![
+                ("bits", Json::num(bits as f64)),
+                ("threads", Json::num(threads as f64)),
+                ("packed_mean_ns", Json::num(rp.mean_ns)),
+                ("dense_mean_ns", Json::num(rd.mean_ns)),
+                ("packed_gflops", Json::num(flops / rp.mean_ns)),
+                ("dense_gflops", Json::num(flops / rd.mean_ns)),
+                ("packed_bytes", Json::num(pl.packed_bytes() as f64)),
+                ("dense_bytes", Json::num(pl.dense_bytes() as f64)),
+            ]));
+        }
+    }
+
+    let summary = Json::obj(vec![
+        ("bench", Json::str("serve")),
+        (
+            "shape",
+            Json::obj(vec![
+                ("rows", Json::num(rows as f64)),
+                ("cols", Json::num(cols as f64)),
+                ("batch", Json::num(batch as f64)),
+            ]),
+        ),
+        ("records", Json::arr(records)),
+    ]);
+    println!("\nBENCH_serve.json = {summary}");
+}

@@ -398,6 +398,31 @@ impl<'a> Coordinator<'a> {
             peak_mem_bytes: peak_mem,
         })
     }
+
+    /// Algorithm 1 + packed export: snapshot the original weights, quantize
+    /// in place, then export every linear layer into a
+    /// [`crate::serve::PackedModel`] — packed bit-stream codes + group
+    /// params instead of the dequantized dense f32 the eval path keeps. The
+    /// export reproduces the calibrated weights bit-for-bit (codes recovered
+    /// against the original weights' group grids, FP32 residues kept as
+    /// sparse outliers).
+    pub fn quantize_model_packed(
+        &self,
+        ws: &mut WeightStore,
+        calib_tokens: &[Vec<i32>],
+        cfg: &PipelineConfig,
+    ) -> Result<(crate::serve::PackedModel, QuantReport)> {
+        let original = ws.clone();
+        let report = self.quantize_model(ws, calib_tokens, cfg)?;
+        let model = crate::serve::PackedModel::from_quantized(
+            &self.meta.linear_layers,
+            &original,
+            ws,
+            cfg.method,
+            &cfg.calib,
+        )?;
+        Ok((model, report))
+    }
 }
 
 /// Convenience: one-call quantization returning the report.
@@ -506,17 +531,13 @@ pub fn synthetic_layers(spec: &SyntheticSpec) -> Vec<LinearSpec> {
     out
 }
 
-/// Run the full two-phase pipeline on a synthetic model: Phase 1
-/// accumulates each layer's Hessian from seeded random contribution
-/// matrices via the batch-sharded [`Hessian::accumulate_batch`]; Phase 2 is
-/// the same concurrent [`calibrate_block`] the artifact pipeline uses.
-/// Returns the quantized weights and the usual report. Deterministic: the
-/// output depends only on `(spec, cfg)` — never on `cfg.calib.threads`.
-pub fn run_synthetic(spec: &SyntheticSpec, cfg: &PipelineConfig) -> Result<(WeightStore, QuantReport)> {
+/// The synthetic model's initial (pre-quantization) weights: one split PRNG
+/// stream per layer, consumed in layer order. Pure function of `spec`, so
+/// the serve exporter can regenerate the originals a [`run_synthetic`] call
+/// started from (their group grids are what the packed store's codes are
+/// recovered against).
+pub fn synthetic_weights(spec: &SyntheticSpec) -> WeightStore {
     let layers = synthetic_layers(spec);
-    let pool = Pool::new(cfg.calib.threads);
-
-    // Weights: one split PRNG stream per layer, consumed in layer order.
     let mut root = Rng::new(spec.seed);
     let entries: Vec<WeightEntry> = layers
         .iter()
@@ -528,7 +549,19 @@ pub fn run_synthetic(spec: &SyntheticSpec, cfg: &PipelineConfig) -> Result<(Weig
             WeightEntry { name: l.name.clone(), shape: vec![l.rows, l.cols], data }
         })
         .collect();
-    let mut ws = WeightStore::from_entries(entries);
+    WeightStore::from_entries(entries)
+}
+
+/// Run the full two-phase pipeline on a synthetic model: Phase 1
+/// accumulates each layer's Hessian from seeded random contribution
+/// matrices via the batch-sharded [`Hessian::accumulate_batch`]; Phase 2 is
+/// the same concurrent [`calibrate_block`] the artifact pipeline uses.
+/// Returns the quantized weights and the usual report. Deterministic: the
+/// output depends only on `(spec, cfg)` — never on `cfg.calib.threads`.
+pub fn run_synthetic(spec: &SyntheticSpec, cfg: &PipelineConfig) -> Result<(WeightStore, QuantReport)> {
+    let layers = synthetic_layers(spec);
+    let pool = Pool::new(cfg.calib.threads);
+    let mut ws = synthetic_weights(spec);
 
     let cache = PreparedCache::new();
     let mut reports = Vec::new();

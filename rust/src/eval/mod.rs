@@ -230,6 +230,25 @@ impl Default for EvalConfig {
     }
 }
 
+/// Perplexity + task evaluation of a packed model: the packed layers are
+/// decoded onto a copy of `base` (embeddings/norms and any layer the packed
+/// store does not carry come from `base`) and evaluated through the usual
+/// artifact path. The PJRT executables take dense f32 uploads, so this is
+/// the one place the serve subsystem materializes dense weights — decoding
+/// is bit-exact, so the scores are exactly those of the calibrated model.
+pub fn evaluate_packed(
+    rt: &Runtime,
+    meta: &ModelMeta,
+    base: &WeightStore,
+    packed: &crate::serve::PackedModel,
+    splits: &Splits,
+    cfg: &EvalConfig,
+) -> Result<EvalReport> {
+    let mut ws = base.clone();
+    packed.apply_to(&mut ws);
+    evaluate(rt, meta, &ws, splits, cfg)
+}
+
 pub fn evaluate(
     rt: &Runtime,
     meta: &ModelMeta,

@@ -134,8 +134,16 @@ pub fn prepare(h: Mat) -> Result<PreparedHessian, LinalgError> {
     // H^{-1} once; its upper Cholesky factor is cholesky(H^{-1})^T
     // (inverse_upper_cholesky re-derived here to avoid inverting twice —
     // prepare dominates Phase-2 wall clock, see EXPERIMENTS.md §Perf).
-    let hinv = linalg::spd_inverse(&h)?;
-    let hinv_chol = linalg::cholesky(&hinv)?.transpose();
+    //
+    // Deliberately serial linalg: prepare() runs inside the Phase-2
+    // per-layer workers (`calibrate_block` is already `--threads` wide), so
+    // nesting the global pool here would spawn ~threads² scoped workers and
+    // oversubscribe the cores. Callers that want panel-parallel
+    // factorizations outside a worker context use `spd_inverse_with` /
+    // `cholesky_with` directly.
+    let pool = Pool::serial();
+    let hinv = linalg::spd_inverse_with(&pool, &h)?;
+    let hinv_chol = linalg::cholesky_with(&pool, &hinv)?.transpose();
     Ok(PreparedHessian { h, hinv, hinv_chol })
 }
 

@@ -28,7 +28,27 @@
 //! produces bit-identical output**: shard geometry is a function of the
 //! problem size only, partial results merge in fixed shard/layer order, and
 //! each unit of work is a pure function of its index. `--threads` is a
-//! wall-clock knob, never a numerics knob.
+//! wall-clock knob, never a numerics knob. The same recipe covers the dense
+//! linear algebra ([`tensor::linalg`]: blocked Cholesky / triangular
+//! inversion over fixed column panels) and the serving path below.
+//!
+//! ## The serving subsystem and the packed-weight format
+//!
+//! [`serve`] is the consumer the quantizer produces for: instead of
+//! dequantizing back to dense f32, a calibrated run exports its layers into
+//! a [`serve::PackedModel`] — per layer a little-endian packed bit stream
+//! of integer codes ([`quant::packing`], 1–8 bits per weight) plus one of
+//! three decode schemes ([`serve::PackScheme`]): group-wise affine
+//! scales/zeros (uniform), per-row residual-binarization alphas (binary),
+//! or per-row codebooks (non-uniform), with sparse FP32 outlier overrides.
+//! The export is **bit-exact** — decoding reproduces the calibrated weights
+//! — and forward passes run fused (`unpack panel → scratch tile → the
+//! shared [`tensor::gemm_row_into`] kernel`) so dense weight matrices are
+//! never materialized on the serving path. `oac serve --synthetic` drives a
+//! batched request engine ([`serve::engine`]) over this store and reports
+//! latency/throughput/weight-bytes against the dense baseline; its output
+//! checksum is part of the `--threads` determinism contract
+//! (`rust/tests/serve_props.rs`, CI's serving smoke job).
 
 pub mod calib;
 pub mod coordinator;
@@ -38,6 +58,7 @@ pub mod experiments;
 pub mod hessian;
 pub mod model;
 pub mod report;
+pub mod serve;
 pub mod train;
 pub mod quant;
 pub mod runtime;

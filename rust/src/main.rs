@@ -4,19 +4,23 @@
 //!   info      — model configs, artifacts, kernel inventory
 //!   train     — train a checkpoint via the AOT train_step artifact
 //!   quantize  — run a PTQ method (Algorithm 1) on a checkpoint
+//!   serve     — batched inference on packed quantized weights
 //!   eval      — perplexity + task accuracy of a checkpoint
 //!   sweep     — α regularization sweep (paper Table 4 style)
 
 use anyhow::{Context, Result};
 
 use oac::calib::Method;
-use oac::coordinator::{run_pipeline, run_synthetic, GradPrecision, PipelineConfig, SyntheticSpec};
+use oac::coordinator::{
+    run_pipeline, run_synthetic, Coordinator, GradPrecision, PipelineConfig, SyntheticSpec,
+};
 use oac::data::{Flavor, Splits, TestSplit};
-use oac::eval::{evaluate, EvalConfig};
+use oac::eval::{evaluate, evaluate_packed, EvalConfig};
 use oac::experiments::{artifacts_root, baseline_row, method_row, ROW_HEADERS};
 use oac::model::{ModelMeta, WeightStore};
 use oac::report::Table;
 use oac::runtime::Runtime;
+use oac::serve::{engine::ServeConfig, PackedModel};
 use oac::train::{train, TrainConfig};
 use oac::util::cli::Args;
 
@@ -29,12 +33,21 @@ USAGE:
   oac quantize --config small --ckpt IN.bin --method oac --bits 2 [--out OUT.bin]
                [--n-calib 16] [--alpha 0.1] [--group 16] [--fp16-grads SCALE]
                [--reduction sum|mean] [--threads 1] [--no-kernel] [--eval]
+               [--pack-out MODEL.pack]
   oac quantize --synthetic [--method oac] [--bits 2] [--threads 4] [--blocks 2]
                [--d-model 64] [--d-ff 128] [--n-calib 8] [--contrib-rows 32]
-               [--seed 0] [--out OUT.bin]
+               [--seed 0] [--out OUT.bin] [--pack-out MODEL.pack]
                (artifact-free synthetic model; prints a bitwise checksum —
                 bit-identical for every --threads value)
+  oac serve    --synthetic [--batch 4] [--requests 16] [--threads 4] [--method oac]
+               [--bits 2] [--blocks 2] [--d-model 64] [--d-ff 128] [--seed 0]
+               (quantize the synthetic model, export packed codes, and run the
+                batched packed-forward engine; the printed output checksum is
+                bit-identical for every --threads value)
+  oac serve    --packed MODEL.pack [--batch 4] [--requests 16] [--threads 4]
+               [--no-baseline]  (skip the dense reference pass + bitwise check)
   oac eval     --config small --ckpt IN.bin [--ppl-seqs 16] [--tasks 16] [--far]
+               [--packed MODEL.pack]
   oac sweep    --config tiny  --ckpt IN.bin --method oac --bits 2 [--alphas 0.001,0.01,0.1,1]
 
 Methods: rtn optq omniquant quip spqr billm squeeze oac oac_optq oac_quip oac_billm
@@ -91,18 +104,32 @@ fn eval_cfg_from_args(args: &Args) -> EvalConfig {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["eval", "far", "no-kernel", "help", "synthetic"]);
+    let args = Args::from_env(&["eval", "far", "no-kernel", "help", "synthetic", "no-baseline"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "info" => info(&args),
         "train" => cmd_train(&args),
         "quantize" => cmd_quantize(&args),
+        "serve" => cmd_serve(&args),
         "eval" => cmd_eval(&args),
         "sweep" => cmd_sweep(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
         }
+    }
+}
+
+/// The synthetic model spec shared by `quantize --synthetic` and
+/// `serve --synthetic`.
+fn synthetic_spec_from_args(args: &Args) -> SyntheticSpec {
+    SyntheticSpec {
+        blocks: args.usize_or("blocks", 2),
+        d_model: args.usize_or("d-model", 64),
+        d_ff: args.usize_or("d-ff", 128),
+        n_contrib: args.usize_or("n-calib", 8),
+        contrib_rows: args.usize_or("contrib-rows", 32),
+        seed: args.u64_or("seed", 0),
     }
 }
 
@@ -165,16 +192,21 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// integration tests) can verify `--threads N` ≡ `--threads 1`.
 fn cmd_quantize_synthetic(args: &Args) -> Result<()> {
     let p = pipeline_from_args(args)?;
-    let spec = SyntheticSpec {
-        blocks: args.usize_or("blocks", 2),
-        d_model: args.usize_or("d-model", 64),
-        d_ff: args.usize_or("d-ff", 128),
-        n_contrib: args.usize_or("n-calib", 8),
-        contrib_rows: args.usize_or("contrib-rows", 32),
-        seed: args.u64_or("seed", 0),
-    };
+    let spec = synthetic_spec_from_args(args);
     let t = std::time::Instant::now();
     let (ws, report) = run_synthetic(&spec, &p)?;
+    if let Some(pack_path) = args.get("pack-out") {
+        let original = oac::coordinator::synthetic_weights(&spec);
+        let layers = oac::coordinator::synthetic_layers(&spec);
+        let packed =
+            PackedModel::from_quantized(&layers, &original, &ws, p.method, &p.calib)?;
+        packed.save(pack_path)?;
+        println!(
+            "saved packed model to {pack_path} ({} packed vs {} dense bytes)",
+            packed.packed_bytes(),
+            packed.dense_bytes()
+        );
+    }
     println!(
         "method={} avg_bits={:.2} outliers={} threads={} checksum={:016x} total={:.2}s",
         report.method,
@@ -214,7 +246,19 @@ fn cmd_quantize(args: &Args) -> Result<()> {
 
     let calib = splits.calibration(p.n_calib, meta.seq);
     let t = std::time::Instant::now();
-    let report = run_pipeline(&rt, &meta, &mut ws, &calib, &p)?;
+    let coord = Coordinator::new(&rt, &meta)?;
+    let report = if let Some(pack_path) = args.get("pack-out") {
+        let (packed, report) = coord.quantize_model_packed(&mut ws, &calib, &p)?;
+        packed.save(pack_path)?;
+        println!(
+            "saved packed model to {pack_path} ({} packed vs {} dense bytes)",
+            packed.packed_bytes(),
+            packed.dense_bytes()
+        );
+        report
+    } else {
+        coord.quantize_model(&mut ws, &calib, &p)?
+    };
     println!(
         "method={} avg_bits={:.2} outliers={} phase1={:.1}s phase2={:.1}s peak_mem={:.1}MB total={:.1}s",
         report.method,
@@ -247,6 +291,63 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `oac serve`: build (or load) a packed model and run the batched
+/// request engine on it. Prints a one-line report whose `checksum=` token
+/// is bit-identical for every `--threads` value (the CI smoke compares two
+/// runs); latency/throughput numbers are wall-clock and vary.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let p = pipeline_from_args(args)?;
+    let model = if let Some(path) = args.get("packed") {
+        PackedModel::load(path)?
+    } else if args.flag("synthetic") {
+        let spec = synthetic_spec_from_args(args);
+        let t = std::time::Instant::now();
+        let (model, report) = oac::serve::build_synthetic(&spec, &p)?;
+        println!(
+            "quantize: method={} avg_bits={:.2} outliers={} total={:.2}s",
+            report.method,
+            report.avg_bits,
+            report.total_outliers,
+            t.elapsed().as_secs_f64()
+        );
+        model
+    } else {
+        anyhow::bail!("serve needs --synthetic or --packed MODEL.pack (see `oac` usage)");
+    };
+    let scfg = ServeConfig {
+        batch: args.usize_or("batch", 4),
+        requests: args.usize_or("requests", 16),
+        threads: p.calib.threads,
+        seed: args.u64_or("seed", 0),
+        baseline: !args.flag("no-baseline"),
+    };
+    let rep = oac::serve::engine::run(&model, &scfg)?;
+    let dense_rps = match rep.dense_throughput_rps() {
+        Some(rps) => format!("{rps:.1}"),
+        None => "skipped".to_string(),
+    };
+    println!(
+        "serve: method={} layers={} blocks={} d_model={} requests={} batch={} threads={} \
+         packed_bytes={} dense_bytes={} ratio={:.3} p50_ms={:.3} p95_ms={:.3} \
+         throughput_rps={:.1} dense_rps={dense_rps} checksum={:016x}",
+        model.method,
+        model.layers.len(),
+        rep.blocks,
+        rep.d_model,
+        rep.requests,
+        rep.batch,
+        rep.threads,
+        rep.packed_bytes,
+        rep.dense_bytes,
+        rep.bytes_ratio(),
+        rep.p50_ms(),
+        rep.p95_ms(),
+        rep.throughput_rps(),
+        rep.checksum
+    );
+    Ok(())
+}
+
 fn cmd_eval(args: &Args) -> Result<()> {
     let config = args.str_or("config", "tiny");
     let meta = ModelMeta::load(artifacts_root(), &config)?;
@@ -254,7 +355,15 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let splits = splits_for(&meta, args);
     let ckpt = args.get("ckpt").context("--ckpt required")?;
     let ws = WeightStore::load(ckpt)?;
-    let er = evaluate(&rt, &meta, &ws, &splits, &eval_cfg_from_args(args))?;
+    let ecfg = eval_cfg_from_args(args);
+    let er = if let Some(pack_path) = args.get("packed") {
+        // Packed eval: decode the packed layers onto the checkpoint's
+        // non-linear weights and score the result.
+        let packed = PackedModel::load(pack_path)?;
+        evaluate_packed(&rt, &meta, &ws, &packed, &splits, &ecfg)?
+    } else {
+        evaluate(&rt, &meta, &ws, &splits, &ecfg)?
+    };
     let mut t = Table::new(format!("eval {ckpt}"), &ROW_HEADERS);
     t.row(baseline_row(&er));
     t.print();
@@ -306,7 +415,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 mod tests {
     #[test]
     fn usage_mentions_all_commands() {
-        for cmd in ["info", "train", "quantize", "eval", "sweep"] {
+        for cmd in ["info", "train", "quantize", "serve", "eval", "sweep"] {
             assert!(super::USAGE.contains(cmd), "{cmd} missing from usage");
         }
     }

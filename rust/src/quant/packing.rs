@@ -20,20 +20,28 @@ pub fn pack(codes: &[u8], bits: usize) -> Vec<u8> {
     out
 }
 
-/// Unpack `n` codes of width `bits` from a little-endian bit stream.
-pub fn unpack(packed: &[u8], bits: usize, n: usize) -> Vec<u8> {
+/// Unpack `out.len()` codes of width `bits` starting at code index
+/// `code_offset`, into a caller-provided buffer. The allocation-free core
+/// the packed serving path uses to fill row-panel scratch tiles without
+/// materializing whole matrices.
+pub fn unpack_into(packed: &[u8], bits: usize, code_offset: usize, out: &mut [u8]) {
     assert!((1..=8).contains(&bits));
     let mask = ((1u16 << bits) - 1) as u16;
-    let mut out = Vec::with_capacity(n);
-    let mut bitpos = 0usize;
-    for _ in 0..n {
+    let mut bitpos = code_offset * bits;
+    for slot in out.iter_mut() {
         let byte = bitpos / 8;
         let off = bitpos % 8;
         let lo = packed[byte] as u16 >> off;
         let hi = if off + bits > 8 { (packed[byte + 1] as u16) << (8 - off) } else { 0 };
-        out.push(((lo | hi) & mask) as u8);
+        *slot = ((lo | hi) & mask) as u8;
         bitpos += bits;
     }
+}
+
+/// Unpack `n` codes of width `bits` from a little-endian bit stream.
+pub fn unpack(packed: &[u8], bits: usize, n: usize) -> Vec<u8> {
+    let mut out = vec![0u8; n];
+    unpack_into(packed, bits, 0, &mut out);
     out
 }
 
@@ -75,6 +83,33 @@ mod tests {
         let codes: Vec<u8> = (0..16).map(|i| (i % 8) as u8).collect();
         let packed = pack(&codes, 3);
         assert_eq!(unpack(&packed, 3, 16), codes);
+    }
+
+    #[test]
+    fn prop_unpack_into_offsets() {
+        // Unpacking any sub-range at any code offset matches the slice of
+        // the full unpack — the invariant the row-panel serving tiles rely on.
+        crate::util::prop::quick(
+            "unpack_into at arbitrary offsets",
+            |rng| {
+                let bits = 1 + rng.below(8);
+                let n = 2 + rng.below(300);
+                let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+                let off = rng.below(n);
+                let len = 1 + rng.below(n - off);
+                (bits, codes, off, len)
+            },
+            |(bits, codes, off, len)| {
+                let packed = pack(codes, *bits);
+                let mut got = vec![0u8; *len];
+                unpack_into(&packed, *bits, *off, &mut got);
+                if got == codes[*off..*off + *len] {
+                    Ok(())
+                } else {
+                    Err(format!("mismatch at offset {off} len {len}"))
+                }
+            },
+        );
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! The batched request engine behind `oac serve`: queues synthetic eval
+//! requests, batches them through the packed forward path, and reports
+//! per-request latency, throughput and weight bytes next to the dense
+//! dequantized baseline.
+//!
+//! Determinism: requests are seeded per id, the request→batch assignment is
+//! a fixed [`chunk_ranges`] partition of the id space, and every layer
+//! application goes through the packed forward (bit-identical to the dense
+//! reference for any thread count — the engine *asserts* that agreement on
+//! every batch). The request-order output checksum printed by the CLI is
+//! therefore identical across `--threads 1/2/4/8` (CI's serving smoke job
+//! compares two runs).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::tensor::Mat;
+use crate::util::digest;
+use crate::util::pool::{chunk_ranges, Pool};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::PackedModel;
+
+/// Engine knobs (`oac serve --batch N --requests M --threads T --seed S`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Requests per forward batch (columns of the batched activation).
+    pub batch: usize,
+    /// Total queued requests.
+    pub requests: usize,
+    /// Worker-pool width for the panel forward (wall-clock only).
+    pub threads: usize,
+    pub seed: u64,
+    /// Also run the dense dequantized baseline and assert bitwise agreement
+    /// (doubles the work and materializes dense weights — disable with
+    /// `--no-baseline` for pure packed serving).
+    pub baseline: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig { batch: 4, requests: 16, threads: 1, seed: 0, baseline: true }
+    }
+}
+
+/// One serving run's measurements.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub batch: usize,
+    pub threads: usize,
+    pub blocks: usize,
+    pub d_model: usize,
+    /// Packed weight residency (codes + params + outliers).
+    pub packed_bytes: usize,
+    /// Dense f32 residency of the same weights (the baseline's footprint).
+    pub dense_bytes: usize,
+    /// Per-request latency in ms (a request completes with its batch).
+    pub latencies_ms: Vec<f64>,
+    /// Wall-clock of the packed pass over all batches.
+    pub packed_secs: f64,
+    /// Wall-clock of the dense-baseline pass, when it ran (excludes the
+    /// one-off dequantization setup).
+    pub dense_secs: Option<f64>,
+    /// FNV-1a over every request's output vector bits, in request order.
+    pub checksum: u64,
+}
+
+impl ServeReport {
+    pub fn throughput_rps(&self) -> f64 {
+        self.requests as f64 / self.packed_secs.max(1e-12)
+    }
+
+    pub fn dense_throughput_rps(&self) -> Option<f64> {
+        self.dense_secs.map(|s| self.requests as f64 / s.max(1e-12))
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        stats::percentile(&self.latencies_ms, 50.0)
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        stats::percentile(&self.latencies_ms, 95.0)
+    }
+
+    /// Packed-vs-dense weight residency ratio (< 1 is the win).
+    pub fn bytes_ratio(&self) -> f64 {
+        self.packed_bytes as f64 / self.dense_bytes.max(1) as f64
+    }
+}
+
+/// Column-wise RMS normalization (one column = one request) — keeps the
+/// synthetic residual stream bounded across blocks. f64 accumulation,
+/// identical for packed and dense paths.
+fn rms_normalize(h: &mut Mat) {
+    for c in 0..h.cols {
+        let mut ss = 0.0f64;
+        for r in 0..h.rows {
+            let v = h.at(r, c) as f64;
+            ss += v * v;
+        }
+        let scale = (1.0 / (ss / h.rows as f64).sqrt().max(1e-6)) as f32;
+        for r in 0..h.rows {
+            *h.at_mut(r, c) *= scale;
+        }
+    }
+}
+
+/// One synthetic transformer-ish block pass over a batch (columns =
+/// requests), parameterized by the layer application so the packed and
+/// dense paths share every non-GEMM op bit-for-bit:
+///   s = q ⊙ tanh(k) + v;  h += O s;  rms;  h += Down relu(Up h);  rms.
+fn forward_batch<F: Fn(&str, &Mat) -> Mat>(apply: &F, blocks: usize, x: &Mat) -> Mat {
+    let mut h = x.clone();
+    for b in 0..blocks {
+        let q = apply(&format!("blocks.{b}.q"), &h);
+        let k = apply(&format!("blocks.{b}.k"), &h);
+        let v = apply(&format!("blocks.{b}.v"), &h);
+        let mut s = q;
+        for i in 0..s.data.len() {
+            s.data[i] = s.data[i] * k.data[i].tanh() + v.data[i];
+        }
+        let attn = apply(&format!("blocks.{b}.o"), &s);
+        h.add_assign(&attn);
+        rms_normalize(&mut h);
+        let mut u = apply(&format!("blocks.{b}.up"), &h);
+        for uv in u.data.iter_mut() {
+            if *uv < 0.0 {
+                *uv = 0.0;
+            }
+        }
+        let d = apply(&format!("blocks.{b}.down"), &u);
+        h.add_assign(&d);
+        rms_normalize(&mut h);
+    }
+    h
+}
+
+/// Stack request vectors into a batch activation: column j = request j.
+fn batch_mat(reqs: &[Vec<f32>], d_model: usize) -> Mat {
+    let b = reqs.len();
+    let mut x = Mat::zeros(d_model, b);
+    for (j, r) in reqs.iter().enumerate() {
+        for (i, &v) in r.iter().enumerate() {
+            *x.at_mut(i, j) = v;
+        }
+    }
+    x
+}
+
+/// Run the batched engine over a packed model: packed pass (timed per
+/// batch), dense-baseline pass, bitwise agreement check, request-order
+/// checksum.
+pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
+    ensure!(cfg.requests > 0, "--requests must be positive");
+    let blocks = model.block_count();
+    ensure!(blocks > 0, "packed model has no blocks.*.q layers");
+    // Validate the full block structure up front so a truncated or
+    // foreign-format pack file is a clean error, not a mid-forward panic.
+    for b in 0..blocks {
+        for l in ["q", "k", "v", "o", "up", "down"] {
+            let name = format!("blocks.{b}.{l}");
+            ensure!(model.contains(&name), "packed model missing layer {name}");
+        }
+    }
+    let d_model = model.get("blocks.0.q").cols;
+    let pool = Pool::new(cfg.threads);
+
+    // Deterministic request queue: request i is a seeded unit-normal vector.
+    let reqs: Vec<Vec<f32>> = (0..cfg.requests)
+        .map(|i| {
+            let mut rng = Rng::new(cfg.seed).split(0x5E57E ^ i as u64);
+            let mut x = vec![0.0f32; d_model];
+            rng.fill_normal(&mut x, 1.0);
+            x
+        })
+        .collect();
+    let batches = chunk_ranges(cfg.requests, cfg.batch.max(1));
+
+    // Packed pass: the fused unpack-GEMM forward, no dense weights anywhere.
+    let apply_packed = |name: &str, x: &Mat| model.get(name).forward_with(&pool, x);
+    let mut latencies = vec![0.0f64; cfg.requests];
+    let mut outputs: Vec<Mat> = Vec::with_capacity(batches.len());
+    let t_packed = Instant::now();
+    for br in &batches {
+        let t = Instant::now();
+        let x = batch_mat(&reqs[br.start..br.end], d_model);
+        let y = forward_batch(&apply_packed, blocks, &x);
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        for l in &mut latencies[br.start..br.end] {
+            *l = ms;
+        }
+        outputs.push(y);
+    }
+    let packed_secs = t_packed.elapsed().as_secs_f64();
+
+    // Dense baseline (optional): materialize every layer once (setup,
+    // untimed), run the same batches through plain `matmul_with`, and
+    // assert the packed path agrees bit-for-bit — packing is a storage
+    // change, never a numerics change.
+    let dense_secs = if cfg.baseline {
+        let dense: BTreeMap<String, Mat> =
+            model.layers.iter().map(|l| (l.name.clone(), l.dequantize())).collect();
+        let apply_dense = |name: &str, x: &Mat| dense[name].matmul_with(&pool, x);
+        let mut dense_outputs: Vec<Mat> = Vec::with_capacity(batches.len());
+        let t_dense = Instant::now();
+        for br in &batches {
+            let x = batch_mat(&reqs[br.start..br.end], d_model);
+            dense_outputs.push(forward_batch(&apply_dense, blocks, &x));
+        }
+        let secs = t_dense.elapsed().as_secs_f64();
+        for (bi, (a, b)) in outputs.iter().zip(&dense_outputs).enumerate() {
+            ensure!(
+                a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "packed forward diverged from the dense reference in batch {bi}"
+            );
+        }
+        Some(secs)
+    } else {
+        None
+    };
+
+    // Request-order output checksum (column j of a batch = one request).
+    let mut h = digest::FNV_OFFSET;
+    for (br, y) in batches.iter().zip(&outputs) {
+        for j in 0..(br.end - br.start) {
+            let col = y.col(j);
+            h = digest::fnv1a_f32(h, &col);
+        }
+    }
+
+    Ok(ServeReport {
+        requests: cfg.requests,
+        batch: cfg.batch.max(1),
+        threads: cfg.threads,
+        blocks,
+        d_model,
+        packed_bytes: model.packed_bytes(),
+        dense_bytes: model.dense_bytes(),
+        latencies_ms: latencies,
+        packed_secs,
+        dense_secs,
+        checksum: h,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::{Backend, Method};
+    use crate::coordinator::{PipelineConfig, SyntheticSpec};
+
+    fn small_model() -> PackedModel {
+        let spec = SyntheticSpec { blocks: 1, d_model: 32, d_ff: 64, ..SyntheticSpec::default() };
+        let cfg = PipelineConfig::new(Method::baseline(Backend::Rtn), 2);
+        super::super::build_synthetic(&spec, &cfg).unwrap().0
+    }
+
+    #[test]
+    fn engine_runs_and_checksums_are_thread_invariant() {
+        let model = small_model();
+        let mut reference: Option<u64> = None;
+        for threads in [1usize, 2, 4, 8] {
+            let cfg = ServeConfig { batch: 3, requests: 7, threads, seed: 0, baseline: true };
+            let rep = run(&model, &cfg).unwrap();
+            assert_eq!(rep.latencies_ms.len(), 7);
+            assert!(rep.packed_bytes < rep.dense_bytes);
+            assert!(rep.throughput_rps() > 0.0);
+            match reference {
+                None => reference = Some(rep.checksum),
+                Some(want) => assert_eq!(want, rep.checksum, "threads={threads}"),
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_different_outputs() {
+        let model = small_model();
+        let a = run(&model, &ServeConfig { seed: 0, ..ServeConfig::default() }).unwrap();
+        let b = run(&model, &ServeConfig { seed: 9, ..ServeConfig::default() }).unwrap();
+        assert_ne!(a.checksum, b.checksum);
+    }
+
+    #[test]
+    fn batch_partition_does_not_change_outputs() {
+        // Batching is a scheduling choice: request outputs (and therefore
+        // the request-order checksum) are independent of the batch size.
+        // (One run skips the baseline, covering the packed-only path.)
+        let model = small_model();
+        let a = run(
+            &model,
+            &ServeConfig { batch: 1, requests: 6, threads: 2, seed: 1, baseline: false },
+        )
+        .unwrap();
+        assert!(a.dense_secs.is_none() && a.dense_throughput_rps().is_none());
+        let b = run(
+            &model,
+            &ServeConfig { batch: 6, requests: 6, threads: 2, seed: 1, baseline: true },
+        )
+        .unwrap();
+        assert_eq!(a.checksum, b.checksum);
+    }
+}

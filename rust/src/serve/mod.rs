@@ -1,0 +1,814 @@
+//! The quantized serving subsystem: a packed-weight store and fused
+//! unpack–dequant–GEMM forward path, so inference runs directly on the
+//! bit-stream codes the quantizer produced instead of dense f32 weights.
+//!
+//! Three pieces:
+//!
+//! * [`PackedLinear`] — one quantized layer as a little-endian packed code
+//!   stream ([`crate::quant::packing`]) plus scheme parameters
+//!   ([`PackScheme`]): group-wise affine scales/zeros (uniform), per-row
+//!   residual-binarization alphas (binary), or per-row codebooks
+//!   (non-uniform), with sparse FP32 outlier overrides (SpQR eq. 4).
+//! * [`PackedModel`] — the named collection of packed layers, buildable
+//!   from the synthetic pipeline ([`build_synthetic`]), exportable from a
+//!   calibrated run ([`PackedModel::from_quantized`] — bit-exact: decoding
+//!   reproduces the calibrated weights), and serializable
+//!   ([`PackedModel::save`]/[`PackedModel::load`]).
+//! * [`engine`] — the batched request engine behind `oac serve`.
+//!
+//! ## The fused forward and its determinism contract
+//!
+//! [`PackedLinear::forward_with`] computes `Y = Ŵ @ X` without ever
+//! materializing `Ŵ`: output rows are processed in fixed
+//! [`SERVE_PANEL_ROWS`]-row panels (geometry a function of the shape only,
+//! never the worker count), each panel's codes are unpacked+dequantized into
+//! a small reusable scratch tile, and every row goes through the same
+//! [`crate::tensor::gemm_row_into`] kernel `Mat::matmul_with` uses. Panels
+//! merge in panel order. Consequences, both enforced by
+//! `rust/tests/serve_props.rs`:
+//!
+//! 1. the packed forward is **bit-identical** to
+//!    `dequantize().matmul_with(..)` — packing is a storage change, never a
+//!    numerics change; and
+//! 2. the result is **bit-identical for every thread count**, extending the
+//!    calibration engine's `--threads` contract to serving.
+
+pub mod engine;
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::calib::{Backend, CalibConfig, Method};
+use crate::coordinator::{self, PipelineConfig, QuantReport, SyntheticSpec};
+use crate::model::{LinearSpec, WeightStore};
+use crate::quant::packing;
+use crate::quant::uniform::{self, GroupParams};
+use crate::tensor::{gemm_row_into, Mat};
+use crate::util::digest;
+use crate::util::pool::{chunk_ranges, Pool};
+
+/// Fixed row-panel height of the fused unpack-GEMM forward. Part of the
+/// determinism contract: panel boundaries depend only on the layer shape.
+pub const SERVE_PANEL_ROWS: usize = 16;
+
+/// How a [`PackedLinear`]'s code stream decodes to f32 weights.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PackScheme {
+    /// Group-wise affine codes (RTN/OPTQ/SpQR-style): per-(row, group)
+    /// scale/zero, groups along columns. Degenerate groups (`scale <= 0`)
+    /// decode to `zero` (which holds the group constant).
+    Uniform { bits: usize, group_size: usize, params: Vec<GroupParams> },
+    /// Two-pass residual binarization (BiLLM-style): w ≈ α₁b₁ + α₂b₂ with
+    /// per-row `(α₁, α₂)`; the code stream holds two 1-bit sign planes per
+    /// row (plane 1 then plane 2, `cols` bits each).
+    Binary { alphas: Vec<(f32, f32)> },
+    /// Per-row codebook of `2^bits` f32 levels (SqueezeLLM-style, and the
+    /// universal exact-capture fallback for backends whose affine grid is
+    /// not recoverable after calibration).
+    Codebook { bits: usize, levels: Vec<f32> },
+}
+
+impl PackScheme {
+    /// Bytes of scheme parameters (scales/zeros, alphas, codebooks).
+    fn param_bytes(&self) -> usize {
+        match self {
+            PackScheme::Uniform { params, .. } => params.len() * 8,
+            PackScheme::Binary { alphas } => alphas.len() * 8,
+            PackScheme::Codebook { levels, .. } => levels.len() * 4,
+        }
+    }
+}
+
+/// One quantized linear layer in packed form: bit-stream codes + decode
+/// parameters + sparse FP32 outlier overrides (sorted by (row, col)).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedLinear {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub scheme: PackScheme,
+    /// Little-endian packed bit stream; row `r` starts at code index
+    /// `r * codes_per_row()`.
+    pub codes: Vec<u8>,
+    /// Sparse FP32 overrides applied after decoding (SpQR outliers and
+    /// non-representable residues), sorted by (row, col).
+    pub outliers: Vec<(u32, u32, f32)>,
+}
+
+impl PackedLinear {
+    /// Codes stored per weight row (binary uses two sign planes).
+    pub fn codes_per_row(&self) -> usize {
+        match &self.scheme {
+            PackScheme::Binary { .. } => 2 * self.cols,
+            _ => self.cols,
+        }
+    }
+
+    /// Actual packed storage: codes + scheme params + outliers.
+    pub fn packed_bytes(&self) -> usize {
+        self.codes.len() + self.scheme.param_bytes() + self.outliers.len() * 12
+    }
+
+    /// Storage of the dense f32 equivalent.
+    pub fn dense_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+
+    /// Decode rows `[r0, r1)` into `tile` (row-major, `(r1-r0) × cols`),
+    /// unpacking through `codebuf` (caller-provided, ≥ `codes_per_row()`
+    /// long) — the panel unpack the fused forward reuses per panel.
+    pub fn dequantize_rows_into(&self, r0: usize, r1: usize, codebuf: &mut [u8], tile: &mut [f32]) {
+        let cols = self.cols;
+        debug_assert!(r0 <= r1 && r1 <= self.rows);
+        assert_eq!(tile.len(), (r1 - r0) * cols, "tile shape mismatch");
+        let cpr = self.codes_per_row();
+        let buf = &mut codebuf[..cpr];
+        match &self.scheme {
+            PackScheme::Uniform { bits, group_size, params } => {
+                let gpr = cols / group_size;
+                for (tr, r) in (r0..r1).enumerate() {
+                    packing::unpack_into(&self.codes, *bits, r * cpr, buf);
+                    let dst = &mut tile[tr * cols..(tr + 1) * cols];
+                    for g in 0..gpr {
+                        let p = params[r * gpr + g];
+                        let lo = g * group_size;
+                        for c in lo..lo + group_size {
+                            dst[c] = if p.scale <= 0.0 {
+                                p.zero
+                            } else {
+                                uniform::dequantize(buf[c] as f32, p)
+                            };
+                        }
+                    }
+                }
+            }
+            PackScheme::Binary { alphas } => {
+                for (tr, r) in (r0..r1).enumerate() {
+                    packing::unpack_into(&self.codes, 1, r * cpr, buf);
+                    let (a1, a2) = alphas[r];
+                    let dst = &mut tile[tr * cols..(tr + 1) * cols];
+                    for c in 0..cols {
+                        let s1 = if buf[c] == 1 { 1.0f32 } else { -1.0 };
+                        let s2 = if buf[cols + c] == 1 { 1.0f32 } else { -1.0 };
+                        dst[c] = a1 * s1 + a2 * s2;
+                    }
+                }
+            }
+            PackScheme::Codebook { bits, levels } => {
+                let k = 1usize << bits;
+                for (tr, r) in (r0..r1).enumerate() {
+                    packing::unpack_into(&self.codes, *bits, r * cpr, buf);
+                    let row_levels = &levels[r * k..(r + 1) * k];
+                    let dst = &mut tile[tr * cols..(tr + 1) * cols];
+                    for c in 0..cols {
+                        dst[c] = row_levels[buf[c] as usize];
+                    }
+                }
+            }
+        }
+        if !self.outliers.is_empty() {
+            let lo = self.outliers.partition_point(|&(r, _, _)| (r as usize) < r0);
+            for &(r, c, v) in &self.outliers[lo..] {
+                let r = r as usize;
+                if r >= r1 {
+                    break;
+                }
+                tile[(r - r0) * cols + c as usize] = v;
+            }
+        }
+    }
+
+    /// Materialize the dense dequantized matrix (tests, PJRT eval uploads,
+    /// and the dense serving baseline — the fused forward never calls this).
+    pub fn dequantize(&self) -> Mat {
+        let mut codebuf = vec![0u8; self.codes_per_row()];
+        let mut data = vec![0.0f32; self.rows * self.cols];
+        self.dequantize_rows_into(0, self.rows, &mut codebuf, &mut data);
+        Mat::from_vec(self.rows, self.cols, data)
+    }
+
+    /// `Y = Ŵ @ X` on the global worker pool (see [`Self::forward_with`]).
+    pub fn forward(&self, x: &Mat) -> Mat {
+        self.forward_with(&Pool::global(), x)
+    }
+
+    /// `Y = Ŵ @ X` without materializing `Ŵ`: fixed [`SERVE_PANEL_ROWS`]-row
+    /// panels are unpacked into a scratch tile and pushed through the same
+    /// [`gemm_row_into`] kernel `Mat::matmul_with` uses, merging output rows
+    /// in panel order. Bit-identical to
+    /// `self.dequantize().matmul_with(pool, x)` for every thread count.
+    pub fn forward_with(&self, pool: &Pool, x: &Mat) -> Mat {
+        assert_eq!(self.cols, x.rows, "packed forward shape mismatch");
+        let n = x.cols;
+        let panels = chunk_ranges(self.rows, SERVE_PANEL_ROWS);
+        let mut out = Mat::zeros(self.rows, n);
+        let blocks = pool.map(&panels, |_, r| {
+            let nr = r.end - r.start;
+            let mut codebuf = vec![0u8; self.codes_per_row()];
+            let mut tile = vec![0.0f32; nr * self.cols];
+            self.dequantize_rows_into(r.start, r.end, &mut codebuf, &mut tile);
+            let mut block = vec![0.0f32; nr * n];
+            for bi in 0..nr {
+                gemm_row_into(
+                    &tile[bi * self.cols..(bi + 1) * self.cols],
+                    x,
+                    &mut block[bi * n..(bi + 1) * n],
+                );
+            }
+            block
+        });
+        for (r, b) in panels.iter().zip(&blocks) {
+            out.data[r.start * n..r.end * n].copy_from_slice(b);
+        }
+        out
+    }
+}
+
+// ------------------------------------------------------------------ encoders
+
+/// Encode a raw matrix with group-wise uniform quantization. Decoding is
+/// bit-identical to [`uniform::qdq_mat`]`(w, group_size, bits)` (constant
+/// groups are carried in the `zero` field).
+pub fn encode_uniform(name: &str, w: &Mat, group_size: usize, bits: usize) -> PackedLinear {
+    assert!((1..=8).contains(&bits), "bits {bits} out of range");
+    assert!(
+        group_size > 0 && w.cols % group_size == 0,
+        "cols {} % group {}",
+        w.cols,
+        group_size
+    );
+    let gpr = w.cols / group_size;
+    let mut params = Vec::with_capacity(w.rows * gpr);
+    let mut codes = Vec::with_capacity(w.rows * w.cols);
+    for r in 0..w.rows {
+        for g in 0..gpr {
+            let lo = g * group_size;
+            let vals = &w.row(r)[lo..lo + group_size];
+            let p = uniform::group_params(vals, bits);
+            if p.scale <= 0.0 {
+                // Constant group: decoder rule `scale <= 0 -> zero`.
+                params.push(GroupParams { scale: 0.0, zero: vals[0] });
+                codes.extend(std::iter::repeat(0u8).take(group_size));
+            } else {
+                for &v in vals {
+                    codes.push(uniform::quantize(v, p, bits) as u8);
+                }
+                params.push(p);
+            }
+        }
+    }
+    PackedLinear {
+        name: name.to_string(),
+        rows: w.rows,
+        cols: w.cols,
+        scheme: PackScheme::Uniform { bits, group_size, params },
+        codes: packing::pack(&codes, bits),
+        outliers: Vec::new(),
+    }
+}
+
+/// Re-encode a *calibrated* (already dequantized) matrix against known
+/// group params — the RTN/SpQR export path, where the grid is a pure
+/// function of the original weights. Each code is recovered by rounding,
+/// the round-trip is verified at the bit level, and everything
+/// non-representable (FP32 outliers kept by SpQR, degenerate-group
+/// passthroughs) becomes a sparse override — so decoding reproduces `dq`
+/// exactly.
+pub fn encode_with_params(
+    name: &str,
+    dq: &Mat,
+    params: Vec<GroupParams>,
+    group_size: usize,
+    bits: usize,
+) -> PackedLinear {
+    assert!((1..=8).contains(&bits), "bits {bits} out of range");
+    assert!(group_size > 0 && dq.cols % group_size == 0);
+    let gpr = dq.cols / group_size;
+    assert_eq!(params.len(), dq.rows * gpr, "params shape mismatch");
+    let levels = ((1usize << bits) - 1) as f32;
+    let mut codes = Vec::with_capacity(dq.rows * dq.cols);
+    let mut outliers = Vec::new();
+    for r in 0..dq.rows {
+        for c in 0..dq.cols {
+            let v = dq.at(r, c);
+            let p = params[r * gpr + c / group_size];
+            let (code, recon) = if p.scale > 0.0 {
+                let q = (v / p.scale + p.zero).round().clamp(0.0, levels);
+                (q as u8, uniform::dequantize(q, p))
+            } else {
+                (0u8, p.zero)
+            };
+            if recon.to_bits() == v.to_bits() {
+                codes.push(code);
+            } else {
+                codes.push(0);
+                outliers.push((r as u32, c as u32, v));
+            }
+        }
+    }
+    PackedLinear {
+        name: name.to_string(),
+        rows: dq.rows,
+        cols: dq.cols,
+        scheme: PackScheme::Uniform { bits, group_size, params },
+        codes: packing::pack(&codes, bits),
+        outliers,
+    }
+}
+
+/// Encode a raw matrix with two-pass residual binarization. Decoding is
+/// bit-identical to [`crate::quant::binary::residual_binarize`] applied per
+/// row.
+pub fn encode_binary(name: &str, w: &Mat) -> PackedLinear {
+    let mut planes = Vec::with_capacity(2 * w.rows * w.cols);
+    let mut alphas = Vec::with_capacity(w.rows);
+    for r in 0..w.rows {
+        let (a1, a2, _) = crate::quant::binary::residual_binarize(w.row(r));
+        // Plane 1: sign of w; plane 2: sign of the pass-1 residual. Rust's
+        // `f32::signum` maps ±0.0 to ±1.0 (never 0), so one bit per plane
+        // captures `residual_binarize`'s α·signum(·) terms exactly — zeros
+        // included.
+        for &v in w.row(r) {
+            planes.push(if v.signum() == 1.0 { 1u8 } else { 0 });
+        }
+        for &v in w.row(r) {
+            let resid = v - a1 * v.signum();
+            planes.push(if resid.signum() == 1.0 { 1u8 } else { 0 });
+        }
+        alphas.push((a1, a2));
+    }
+    PackedLinear {
+        name: name.to_string(),
+        rows: w.rows,
+        cols: w.cols,
+        scheme: PackScheme::Binary { alphas },
+        codes: packing::pack(&planes, 1),
+        outliers: Vec::new(),
+    }
+}
+
+/// Exact per-row codebook capture: encodes *any* matrix with at most 256
+/// distinct values per row, bit-for-bit (distinctness by f32 bit pattern).
+/// The Squeeze/BiLLM export path, and the universal fallback for backends
+/// whose affine grid is not recoverable after calibration (OPTQ's dynamic
+/// groups, QuIP's rotated space).
+pub fn encode_codebook(name: &str, m: &Mat) -> Result<PackedLinear> {
+    assert!(m.rows > 0 && m.cols > 0, "empty matrix");
+    let mut row_levels: Vec<Vec<f32>> = Vec::with_capacity(m.rows);
+    let mut max_k = 1usize;
+    for r in 0..m.rows {
+        let mut lv: Vec<f32> = m.row(r).to_vec();
+        lv.sort_by(f32::total_cmp);
+        lv.dedup_by_key(|v| v.to_bits());
+        if lv.len() > 256 {
+            bail!("row {r} has {} distinct values (max 256 for a codebook)", lv.len());
+        }
+        max_k = max_k.max(lv.len());
+        row_levels.push(lv);
+    }
+    let bits = ((usize::BITS - (max_k - 1).leading_zeros()) as usize).max(1);
+    let k = 1usize << bits;
+    let mut levels = Vec::with_capacity(m.rows * k);
+    let mut codes = Vec::with_capacity(m.rows * m.cols);
+    for (r, lv) in row_levels.iter().enumerate() {
+        for &v in m.row(r) {
+            let idx = lv
+                .binary_search_by(|probe| probe.total_cmp(&v))
+                .expect("codebook level missing its own value");
+            codes.push(idx as u8);
+        }
+        levels.extend_from_slice(lv);
+        levels.extend(std::iter::repeat(*lv.last().unwrap()).take(k - lv.len()));
+    }
+    Ok(PackedLinear {
+        name: name.to_string(),
+        rows: m.rows,
+        cols: m.cols,
+        scheme: PackScheme::Codebook { bits, levels },
+        codes: packing::pack(&codes, bits),
+        outliers: Vec::new(),
+    })
+}
+
+// --------------------------------------------------------------- PackedModel
+
+/// A named collection of packed layers — the serving-side twin of
+/// [`WeightStore`], holding codes instead of dense f32.
+#[derive(Debug, Clone)]
+pub struct PackedModel {
+    pub layers: Vec<PackedLinear>,
+    index: BTreeMap<String, usize>,
+    /// Calibration method the codes came from (reporting only).
+    pub method: String,
+    /// Nominal weight bit width (reporting only; codebook layers may pack
+    /// wider).
+    pub bits: usize,
+}
+
+impl PackedModel {
+    pub fn from_layers(layers: Vec<PackedLinear>, method: String, bits: usize) -> PackedModel {
+        let index = layers.iter().enumerate().map(|(i, l)| (l.name.clone(), i)).collect();
+        PackedModel { layers, index, method, bits }
+    }
+
+    pub fn get(&self, name: &str) -> &PackedLinear {
+        &self.layers[*self.index.get(name).unwrap_or_else(|| panic!("no packed layer {name}"))]
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    /// Total packed storage across layers (the serve report's weight bytes).
+    pub fn packed_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.packed_bytes()).sum()
+    }
+
+    /// Total dense f32 storage the packed form replaces.
+    pub fn dense_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.dense_bytes()).sum()
+    }
+
+    /// Transformer blocks present (`blocks.{b}.*` naming).
+    pub fn block_count(&self) -> usize {
+        let mut b = 0usize;
+        while self.contains(&format!("blocks.{b}.q")) {
+            b += 1;
+        }
+        b
+    }
+
+    /// Order-sensitive FNV-1a digest over names, shapes, code bytes, scheme
+    /// params and outliers — two models fingerprint equal iff bit-identical.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = digest::FNV_OFFSET;
+        for l in &self.layers {
+            h = digest::fnv1a_with(h, l.name.as_bytes());
+            h = digest::fnv1a_with(h, &(l.rows as u64).to_le_bytes());
+            h = digest::fnv1a_with(h, &(l.cols as u64).to_le_bytes());
+            h = digest::fnv1a_with(h, &l.codes);
+            match &l.scheme {
+                PackScheme::Uniform { bits, group_size, params } => {
+                    h = digest::fnv1a_with(h, &[0u8, *bits as u8]);
+                    h = digest::fnv1a_with(h, &(*group_size as u64).to_le_bytes());
+                    for p in params {
+                        h = digest::fnv1a_f32(h, &[p.scale, p.zero]);
+                    }
+                }
+                PackScheme::Binary { alphas } => {
+                    h = digest::fnv1a_with(h, &[1u8]);
+                    for &(a1, a2) in alphas {
+                        h = digest::fnv1a_f32(h, &[a1, a2]);
+                    }
+                }
+                PackScheme::Codebook { bits, levels } => {
+                    h = digest::fnv1a_with(h, &[2u8, *bits as u8]);
+                    h = digest::fnv1a_f32(h, levels);
+                }
+            }
+            for &(r, c, v) in &l.outliers {
+                h = digest::fnv1a_with(h, &r.to_le_bytes());
+                h = digest::fnv1a_with(h, &c.to_le_bytes());
+                h = digest::fnv1a_f32(h, &[v]);
+            }
+        }
+        h
+    }
+
+    /// Write the dequantized layers back into a dense weight store (the
+    /// PJRT eval path needs dense uploads; see `eval::evaluate_packed`).
+    pub fn apply_to(&self, ws: &mut WeightStore) {
+        for l in &self.layers {
+            ws.set_mat(&l.name, &l.dequantize());
+        }
+    }
+
+    /// Export the linear layers of a calibrated run. `original` holds the
+    /// pre-quantization weights (RTN/SpQR group grids are pure functions of
+    /// them); `quantized` the calibrated output. The export is **exact**:
+    /// every layer's decode reproduces the calibrated weights bit-for-bit —
+    /// via recovered affine codes + FP32 outliers where the grid is known,
+    /// via per-row codebook capture otherwise.
+    ///
+    /// Scale caveat: the codebook fallback (every backend except RTN/SpQR)
+    /// needs ≤ 256 distinct values per row, which holds at synthetic/toy
+    /// widths but fails cleanly (with a per-layer error) once
+    /// `cols / group_size × 2^bits` grows past it — widening the code word
+    /// or going per-group is a ROADMAP lever.
+    pub fn from_quantized(
+        layers: &[LinearSpec],
+        original: &WeightStore,
+        quantized: &WeightStore,
+        method: Method,
+        cfg: &CalibConfig,
+    ) -> Result<PackedModel> {
+        let mut packed = Vec::with_capacity(layers.len());
+        for l in layers {
+            let dq = quantized.get_mat(&l.name);
+            let pl = match method.backend {
+                Backend::Rtn => {
+                    let w = original.get_mat(&l.name);
+                    let params = uniform::all_group_params(&w, cfg.group_size, cfg.bits);
+                    encode_with_params(&l.name, &dq, params, cfg.group_size, cfg.bits)
+                }
+                Backend::SpQR => {
+                    let w = original.get_mat(&l.name);
+                    let (params, _) = crate::calib::optq::static_params(&w, cfg);
+                    encode_with_params(&l.name, &dq, params, cfg.group_size, cfg.bits)
+                }
+                _ => encode_codebook(&l.name, &dq)
+                    .with_context(|| format!("exporting {} ({:?})", l.name, method.backend))?,
+            };
+            packed.push(pl);
+        }
+        Ok(PackedModel::from_layers(packed, method.name(), cfg.bits))
+    }
+
+    // ------------------------------------------------------- serialization
+
+    const MAGIC: &'static [u8; 8] = b"OACPACK1";
+
+    /// Binary export (the `--pack-out` coordinator artifact).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(Self::MAGIC)?;
+        write_str(&mut f, &self.method)?;
+        f.write_all(&(self.bits as u32).to_le_bytes())?;
+        f.write_all(&(self.layers.len() as u32).to_le_bytes())?;
+        for l in &self.layers {
+            write_str(&mut f, &l.name)?;
+            f.write_all(&(l.rows as u64).to_le_bytes())?;
+            f.write_all(&(l.cols as u64).to_le_bytes())?;
+            match &l.scheme {
+                PackScheme::Uniform { bits, group_size, params } => {
+                    f.write_all(&[0u8])?;
+                    f.write_all(&(*bits as u32).to_le_bytes())?;
+                    f.write_all(&(*group_size as u32).to_le_bytes())?;
+                    f.write_all(&(params.len() as u32).to_le_bytes())?;
+                    for p in params {
+                        f.write_all(&p.scale.to_le_bytes())?;
+                        f.write_all(&p.zero.to_le_bytes())?;
+                    }
+                }
+                PackScheme::Binary { alphas } => {
+                    f.write_all(&[1u8])?;
+                    f.write_all(&(alphas.len() as u32).to_le_bytes())?;
+                    for &(a1, a2) in alphas {
+                        f.write_all(&a1.to_le_bytes())?;
+                        f.write_all(&a2.to_le_bytes())?;
+                    }
+                }
+                PackScheme::Codebook { bits, levels } => {
+                    f.write_all(&[2u8])?;
+                    f.write_all(&(*bits as u32).to_le_bytes())?;
+                    f.write_all(&(levels.len() as u32).to_le_bytes())?;
+                    for v in levels {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+            }
+            f.write_all(&(l.codes.len() as u32).to_le_bytes())?;
+            f.write_all(&l.codes)?;
+            f.write_all(&(l.outliers.len() as u32).to_le_bytes())?;
+            for &(r, c, v) in &l.outliers {
+                f.write_all(&r.to_le_bytes())?;
+                f.write_all(&c.to_le_bytes())?;
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<PackedModel> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(&path)
+                .with_context(|| format!("opening packed model {}", path.as_ref().display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("bad packed-model magic");
+        }
+        let method = read_str(&mut f)?;
+        let bits = read_u32(&mut f)? as usize;
+        let count = read_u32(&mut f)? as usize;
+        let mut layers = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name = read_str(&mut f)?;
+            let rows = read_u64(&mut f)? as usize;
+            let cols = read_u64(&mut f)? as usize;
+            let mut tag = [0u8; 1];
+            f.read_exact(&mut tag)?;
+            let scheme = match tag[0] {
+                0 => {
+                    let sbits = read_u32(&mut f)? as usize;
+                    let group_size = read_u32(&mut f)? as usize;
+                    let np = read_u32(&mut f)? as usize;
+                    let mut params = Vec::with_capacity(np);
+                    for _ in 0..np {
+                        let scale = read_f32(&mut f)?;
+                        let zero = read_f32(&mut f)?;
+                        params.push(GroupParams { scale, zero });
+                    }
+                    PackScheme::Uniform { bits: sbits, group_size, params }
+                }
+                1 => {
+                    let na = read_u32(&mut f)? as usize;
+                    let mut alphas = Vec::with_capacity(na);
+                    for _ in 0..na {
+                        let a1 = read_f32(&mut f)?;
+                        let a2 = read_f32(&mut f)?;
+                        alphas.push((a1, a2));
+                    }
+                    PackScheme::Binary { alphas }
+                }
+                2 => {
+                    let sbits = read_u32(&mut f)? as usize;
+                    let nl = read_u32(&mut f)? as usize;
+                    let mut levels = Vec::with_capacity(nl);
+                    for _ in 0..nl {
+                        levels.push(read_f32(&mut f)?);
+                    }
+                    PackScheme::Codebook { bits: sbits, levels }
+                }
+                t => bail!("unknown packed scheme tag {t}"),
+            };
+            let nc = read_u32(&mut f)? as usize;
+            let mut codes = vec![0u8; nc];
+            f.read_exact(&mut codes)?;
+            let no = read_u32(&mut f)? as usize;
+            let mut outliers = Vec::with_capacity(no);
+            for _ in 0..no {
+                let r = read_u32(&mut f)?;
+                let c = read_u32(&mut f)?;
+                let v = read_f32(&mut f)?;
+                outliers.push((r, c, v));
+            }
+            layers.push(PackedLinear { name, rows, cols, scheme, codes, outliers });
+        }
+        Ok(PackedModel::from_layers(layers, method, bits))
+    }
+}
+
+fn write_str(f: &mut impl Write, s: &str) -> Result<()> {
+    f.write_all(&(s.len() as u32).to_le_bytes())?;
+    f.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str(f: &mut impl Read) -> Result<String> {
+    let n = read_u32(f)? as usize;
+    let mut buf = vec![0u8; n];
+    f.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32(f: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+// ------------------------------------------------------------ synthetic path
+
+/// Quantize the synthetic model and export it as a [`PackedModel`] — the
+/// artifact-free `oac serve --synthetic` entry. Deterministic in
+/// `(spec, cfg)`; `cfg.calib.threads` is wall-clock only.
+pub fn build_synthetic(
+    spec: &SyntheticSpec,
+    cfg: &PipelineConfig,
+) -> Result<(PackedModel, QuantReport)> {
+    let original = coordinator::synthetic_weights(spec);
+    let (quantized, report) = coordinator::run_synthetic(spec, cfg)?;
+    let layers = coordinator::synthetic_layers(spec);
+    let model = PackedModel::from_quantized(&layers, &original, &quantized, cfg.method, &cfg.calib)?;
+    Ok((model, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randmat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, 0.5);
+        m
+    }
+
+    fn bits_of(m: &Mat) -> Vec<u32> {
+        m.data.iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn uniform_decode_matches_qdq_mat() {
+        let mut rng = Rng::new(0);
+        for bits in [1usize, 2, 3, 4, 8] {
+            let w = randmat(&mut rng, 7, 64);
+            let pl = encode_uniform("l", &w, 16, bits);
+            let want = uniform::qdq_mat(&w, 16, bits);
+            assert_eq!(bits_of(&pl.dequantize()), bits_of(&want), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn uniform_constant_group_passthrough() {
+        let mut w = Mat::zeros(2, 32);
+        w.data.fill(0.7);
+        let pl = encode_uniform("l", &w, 16, 2);
+        assert_eq!(bits_of(&pl.dequantize()), bits_of(&w));
+    }
+
+    #[test]
+    fn binary_decode_matches_residual_binarize() {
+        let mut rng = Rng::new(1);
+        let w = randmat(&mut rng, 5, 48);
+        let pl = encode_binary("l", &w);
+        let mut want = w.clone();
+        for r in 0..w.rows {
+            let (_, _, approx) = crate::quant::binary::residual_binarize(w.row(r));
+            want.row_mut(r).copy_from_slice(&approx);
+        }
+        assert_eq!(bits_of(&pl.dequantize()), bits_of(&want));
+    }
+
+    #[test]
+    fn codebook_capture_is_exact() {
+        // A matrix with few distinct values per row round-trips bit-for-bit.
+        let mut rng = Rng::new(2);
+        let levels: Vec<f32> = (0..5).map(|_| rng.normal_f32()).collect();
+        let m = Mat::from_fn(6, 40, |r, c| levels[(r * 7 + c * 3) % 5]);
+        let pl = encode_codebook("l", &m).unwrap();
+        assert_eq!(bits_of(&pl.dequantize()), bits_of(&m));
+        assert!(pl.packed_bytes() < pl.dense_bytes());
+    }
+
+    #[test]
+    fn codebook_rejects_too_many_levels() {
+        let mut rng = Rng::new(3);
+        let m = randmat(&mut rng, 1, 400); // ~400 distinct values in one row
+        assert!(encode_codebook("l", &m).is_err());
+    }
+
+    #[test]
+    fn encode_with_params_recovers_grid_and_outliers() {
+        let mut rng = Rng::new(4);
+        let w = randmat(&mut rng, 6, 32);
+        let params = uniform::all_group_params(&w, 16, 3);
+        let mut dq = uniform::qdq_mat(&w, 16, 3);
+        // Simulate two FP32 outliers kept by the calibration.
+        *dq.at_mut(1, 5) = 9.75;
+        *dq.at_mut(4, 20) = -8.5;
+        let pl = encode_with_params("l", &dq, params, 16, 3);
+        assert_eq!(pl.outliers.len(), 2);
+        assert_eq!(bits_of(&pl.dequantize()), bits_of(&dq));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Rng::new(5);
+        let layers = vec![
+            encode_uniform("a", &randmat(&mut rng, 8, 32), 16, 2),
+            encode_binary("b", &randmat(&mut rng, 4, 32)),
+            encode_codebook("c", &uniform::qdq_mat(&randmat(&mut rng, 4, 32), 32, 2)).unwrap(),
+        ];
+        let model = PackedModel::from_layers(layers, "TEST".into(), 2);
+        let tmp = std::env::temp_dir().join("oac_test_packed.bin");
+        model.save(&tmp).unwrap();
+        let loaded = PackedModel::load(&tmp).unwrap();
+        assert_eq!(model.fingerprint(), loaded.fingerprint());
+        assert_eq!(model.layers, loaded.layers);
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn forward_matches_dense_reference() {
+        let mut rng = Rng::new(6);
+        let w = randmat(&mut rng, 40, 64);
+        let x = randmat(&mut rng, 64, 5);
+        let pl = encode_uniform("l", &w, 16, 2);
+        let want = bits_of(&pl.dequantize().matmul_with(&Pool::serial(), &x));
+        for t in [1usize, 2, 4, 8] {
+            let got = bits_of(&pl.forward_with(&Pool::new(t), &x));
+            assert_eq!(got, want, "threads={t}");
+        }
+    }
+}

@@ -6,8 +6,22 @@
 //! calibration sets are ill-conditioned (that is what the paper's α
 //! regularization, eq. 21, is for) and f32 accumulation visibly degrades
 //! 2-bit results.
+//!
+//! The heavy O(n³) paths (blocked Cholesky trailing updates, the
+//! triangular-inverse column solves, the triangular Gram) run on the
+//! `util::pool` worker pool with **fixed panel geometry**: panel boundaries
+//! are [`chunk_ranges`]`(n, `[`LINALG_PANEL`]`)` — a function of the matrix
+//! size only, never the worker count — and per-panel results merge in panel
+//! order, so every factorization is bit-identical for any `--threads` value
+//! (enforced by `rust/tests/parallel.rs`).
 
 use super::Mat;
+use crate::util::pool::{chunk_ranges, Pool};
+
+/// Fixed column/row-panel width of the parallel factorization paths. Part of
+/// the determinism contract (see module docs): geometry depends only on the
+/// matrix size.
+pub const LINALG_PANEL: usize = 32;
 
 #[derive(Debug)]
 pub enum LinalgError {
@@ -28,30 +42,121 @@ impl std::fmt::Display for LinalgError {
 
 impl std::error::Error for LinalgError {}
 
-/// Lower Cholesky factor L with A = L L^T. A must be symmetric.
+/// Lower Cholesky factor L with A = L L^T (global worker pool — see
+/// [`cholesky_with`]). A must be symmetric.
 pub fn cholesky(a: &Mat) -> Result<Mat, LinalgError> {
+    cholesky_with(&Pool::global(), a)
+}
+
+/// Blocked right-looking Cholesky, column panels of [`LINALG_PANEL`].
+///
+/// Per panel: (1) the diagonal block is factored serially (left-looking
+/// inside the panel; trailing updates from earlier panels were already
+/// applied), (2) the rows below it are solved against the panel — each row
+/// independently, fanned out over fixed row chunks — and (3) the trailing
+/// submatrix receives the rank-`LINALG_PANEL` update, again row-chunked.
+/// Every chunk's work is a pure function of the (deterministic) state left
+/// by the previous panel and writes disjoint rows, so the factor is
+/// bit-identical for every `pool.threads`, including 1. Accumulates in f64
+/// like the rest of this module.
+pub fn cholesky_with(pool: &Pool, a: &Mat) -> Result<Mat, LinalgError> {
     if a.rows != a.cols {
         return Err(LinalgError::Dim(format!("{}x{}", a.rows, a.cols)));
     }
     let n = a.rows;
-    let mut l = vec![0.0f64; n * n];
-    for i in 0..n {
-        for j in 0..=i {
-            let mut sum = a.at(i, j) as f64;
-            for k in 0..j {
-                sum -= l[i * n + k] * l[j * n + k];
-            }
-            if i == j {
-                if sum <= 0.0 {
-                    return Err(LinalgError::NotPositiveDefinite(i, sum));
+    // Working copy in f64; the lower triangle is progressively overwritten
+    // by L, the strict upper triangle is ignored.
+    let mut l: Vec<f64> = a.data.iter().map(|&v| v as f64).collect();
+    for panel in chunk_ranges(n, LINALG_PANEL) {
+        let (p0, p1) = (panel.start, panel.end);
+        // 1. Diagonal block, serial.
+        for i in p0..p1 {
+            for j in p0..=i {
+                let mut sum = l[i * n + j];
+                for k in p0..j {
+                    sum -= l[i * n + k] * l[j * n + k];
                 }
-                l[i * n + j] = sum.sqrt();
-            } else {
-                l[i * n + j] = sum / l[j * n + j];
+                if i == j {
+                    if sum <= 0.0 {
+                        return Err(LinalgError::NotPositiveDefinite(i, sum));
+                    }
+                    l[i * n + j] = sum.sqrt();
+                } else {
+                    l[i * n + j] = sum / l[j * n + j];
+                }
+            }
+        }
+        if p1 >= n {
+            break;
+        }
+        // Fixed row chunks of the sub-diagonal rows (geometry from the
+        // problem size only).
+        let row_chunks: Vec<std::ops::Range<usize>> = chunk_ranges(n - p1, LINALG_PANEL)
+            .into_iter()
+            .map(|r| (r.start + p1)..(r.end + p1))
+            .collect();
+        // 2. Panel solve: L[i, p0..p1] for every row i >= p1.
+        let solved = {
+            let lref = &l;
+            pool.map(&row_chunks, |_, rows| {
+                let mut out = Vec::with_capacity((rows.end - rows.start) * (p1 - p0));
+                for i in rows.clone() {
+                    let mut rowvals: Vec<f64> = (p0..p1).map(|j| lref[i * n + j]).collect();
+                    for j in p0..p1 {
+                        let mut sum = rowvals[j - p0];
+                        for k in p0..j {
+                            sum -= rowvals[k - p0] * lref[j * n + k];
+                        }
+                        rowvals[j - p0] = sum / lref[j * n + j];
+                    }
+                    out.extend_from_slice(&rowvals);
+                }
+                out
+            })
+        };
+        for (rows, vals) in row_chunks.iter().zip(&solved) {
+            let mut vi = 0usize;
+            for i in rows.clone() {
+                for j in p0..p1 {
+                    l[i * n + j] = vals[vi];
+                    vi += 1;
+                }
+            }
+        }
+        // 3. Trailing update: A[i][j] -= Σ_{k in panel} L[i][k]·L[j][k].
+        let updates = {
+            let lref = &l;
+            pool.map(&row_chunks, |_, rows| {
+                let mut out = Vec::new();
+                for i in rows.clone() {
+                    for j in p1..=i {
+                        let mut sum = lref[i * n + j];
+                        for k in p0..p1 {
+                            sum -= lref[i * n + k] * lref[j * n + k];
+                        }
+                        out.push(sum);
+                    }
+                }
+                out
+            })
+        };
+        for (rows, vals) in row_chunks.iter().zip(&updates) {
+            let mut vi = 0usize;
+            for i in rows.clone() {
+                for j in p1..=i {
+                    l[i * n + j] = vals[vi];
+                    vi += 1;
+                }
             }
         }
     }
-    Ok(Mat::from_vec(n, n, l.into_iter().map(|x| x as f32).collect()))
+    let mut out = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            out.data[i * n + j] = l[i * n + j] as f32;
+        }
+    }
+    Ok(out)
 }
 
 /// Solve L y = b (forward substitution), L lower-triangular.
@@ -84,40 +189,54 @@ pub fn solve_lower_t(l: &Mat, y: &[f32]) -> Vec<f32> {
     x.into_iter().map(|x| x as f32).collect()
 }
 
-/// M = L^{-1} for lower-triangular L (row-wise forward substitution over
-/// all columns at once — contiguous row slices, ~n³/6 MACs).
+/// M = L^{-1} for lower-triangular L (global worker pool — see
+/// [`lower_inverse_with`]).
 pub fn lower_inverse(l: &Mat) -> Mat {
+    lower_inverse_with(&Pool::global(), l)
+}
+
+/// M = L^{-1} for lower-triangular L, column panels of [`LINALG_PANEL`] on
+/// `pool`: each column c is an independent forward substitution L x = e_c,
+/// so panels fan out across workers and the assembled inverse is
+/// bit-identical for every thread count (fixed panel geometry + per-column
+/// purity).
+pub fn lower_inverse_with(pool: &Pool, l: &Mat) -> Mat {
     let n = l.rows;
+    let panels = chunk_ranges(n, LINALG_PANEL);
+    let blocks = pool.map(&panels, |_, cols| {
+        // Column block of M, column-major within the block.
+        let mut block = vec![0.0f32; (cols.end - cols.start) * n];
+        for (bc, c) in cols.clone().enumerate() {
+            let x = &mut block[bc * n..(bc + 1) * n];
+            x[c] = 1.0 / l.at(c, c);
+            for i in (c + 1)..n {
+                let lrow = l.row(i);
+                let mut sum = 0.0f32;
+                for k in c..i {
+                    sum += lrow[k] * x[k];
+                }
+                x[i] = -sum / lrow[i];
+            }
+        }
+        block
+    });
     let mut m = Mat::zeros(n, n);
-    for i in 0..n {
-        let (head, tail) = m.data.split_at_mut(i * n);
-        let mi = &mut tail[..n];
-        for k in 0..i {
-            let lik = l.at(i, k);
-            if lik == 0.0 {
-                continue;
-            }
-            // Row k of M has nonzeros only in columns 0..=k.
-            let mk = &head[k * n..k * n + k + 1];
-            for (j, &v) in mk.iter().enumerate() {
-                mi[j] -= lik * v;
+    for (cols, block) in panels.iter().zip(&blocks) {
+        for (bc, c) in cols.clone().enumerate() {
+            for i in c..n {
+                m.data[i * n + c] = block[bc * n + i];
             }
         }
-        let inv = 1.0 / l.at(i, i);
-        for v in mi[..i].iter_mut() {
-            *v *= inv;
-        }
-        mi[i] = inv;
     }
     m
 }
 
-/// M^T M for lower-triangular M, exploiting the triangular sparsity
-/// (~n³/6 MACs; row p contributes only to the leading (p+1)² block).
-fn gram_lower(m: &Mat) -> Mat {
+/// Upper-triangle contribution of rows [r0, r1) of M^T M for
+/// lower-triangular M (row p touches only the leading (p+1)² block). The
+/// single inner loop the serial and sharded triangular-Gram paths share.
+fn gram_lower_rows(m: &Mat, r0: usize, r1: usize, out: &mut Mat) {
     let n = m.rows;
-    let mut out = Mat::zeros(n, n);
-    for p in 0..n {
+    for p in r0..r1 {
         let row = &m.data[p * n..p * n + p + 1];
         for i in 0..=p {
             let a = row[i];
@@ -130,6 +249,27 @@ fn gram_lower(m: &Mat) -> Mat {
             }
         }
     }
+}
+
+/// M^T M for lower-triangular M (~n³/6 MACs), sharded over fixed
+/// [`LINALG_PANEL`]-row chunks with shard-order merge (the same recipe as
+/// `Mat::gram_with` — bit-identical for every thread count).
+fn gram_lower_with(pool: &Pool, m: &Mat) -> Mat {
+    let n = m.rows;
+    let mut out = Mat::zeros(n, n);
+    let shards = chunk_ranges(n, LINALG_PANEL);
+    if shards.len() <= 1 {
+        gram_lower_rows(m, 0, n, &mut out);
+    } else {
+        let partials = pool.map(&shards, |_, r| {
+            let mut p = Mat::zeros(n, n);
+            gram_lower_rows(m, r.start, r.end, &mut p);
+            p
+        });
+        for p in &partials {
+            out.add_assign(p);
+        }
+    }
     for i in 0..n {
         for j in (i + 1)..n {
             out.data[j * n + i] = out.data[i * n + j];
@@ -138,11 +278,19 @@ fn gram_lower(m: &Mat) -> Mat {
     out
 }
 
-/// A^{-1} for SPD A via Cholesky: A^{-1} = L^{-T} L^{-1} = (L^{-1})^T L^{-1},
-/// computed as gram_lower(lower_inverse(L)) — no per-column solves.
+/// A^{-1} for SPD A via Cholesky (global worker pool — see
+/// [`spd_inverse_with`]).
 pub fn spd_inverse(a: &Mat) -> Result<Mat, LinalgError> {
-    let l = cholesky(a)?;
-    Ok(gram_lower(&lower_inverse(&l)))
+    spd_inverse_with(&Pool::global(), a)
+}
+
+/// A^{-1} for SPD A via Cholesky: A^{-1} = L^{-T} L^{-1} = (L^{-1})^T L^{-1},
+/// computed as gram_lower(lower_inverse(L)) — no per-column solves. All
+/// three stages run panel-parallel on `pool` with fixed geometry, so the
+/// inverse is bit-identical for every thread count.
+pub fn spd_inverse_with(pool: &Pool, a: &Mat) -> Result<Mat, LinalgError> {
+    let l = cholesky_with(pool, a)?;
+    Ok(gram_lower_with(pool, &lower_inverse_with(pool, &l)))
 }
 
 /// Upper Cholesky factor U of A^{-1}: A^{-1} = U^T U with U upper-triangular,
@@ -262,6 +410,59 @@ mod tests {
                 assert_eq!(u.at(i, j), 0.0);
             }
         }
+    }
+
+    #[test]
+    fn blocked_cholesky_reconstructs_across_panel_boundaries() {
+        // n spans multiple LINALG_PANEL panels so the panel-solve and
+        // trailing-update paths are exercised.
+        let mut rng = Rng::new(11);
+        let n = 2 * LINALG_PANEL + 7;
+        let a = spd(&mut rng, n);
+        for threads in [1usize, 4] {
+            let l = cholesky_with(&crate::util::pool::Pool::new(threads), &a).unwrap();
+            let rec = l.matmul(&l.transpose());
+            let rel = rec.sub(&a).fro_norm() / a.fro_norm().max(1e-12);
+            assert!(rel < 1e-4, "threads={threads}: rel {rel}");
+            // Strict upper triangle is zero.
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    assert_eq!(l.at(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_linalg_bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(12);
+        let n = 3 * LINALG_PANEL + 5;
+        let a = spd(&mut rng, n);
+        let pool1 = crate::util::pool::Pool::serial();
+        let want_l: Vec<u32> =
+            cholesky_with(&pool1, &a).unwrap().data.iter().map(|v| v.to_bits()).collect();
+        let want_inv: Vec<u32> =
+            spd_inverse_with(&pool1, &a).unwrap().data.iter().map(|v| v.to_bits()).collect();
+        for t in [2usize, 4, 8] {
+            let pool = crate::util::pool::Pool::new(t);
+            let got_l: Vec<u32> =
+                cholesky_with(&pool, &a).unwrap().data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got_l, want_l, "cholesky diverged at {t} threads");
+            let got_inv: Vec<u32> =
+                spd_inverse_with(&pool, &a).unwrap().data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got_inv, want_inv, "spd_inverse diverged at {t} threads");
+        }
+    }
+
+    #[test]
+    fn lower_inverse_panel_parallel_correct() {
+        let mut rng = Rng::new(13);
+        let n = LINALG_PANEL + 9;
+        let a = spd(&mut rng, n);
+        let l = cholesky(&a).unwrap();
+        let m = lower_inverse_with(&crate::util::pool::Pool::new(4), &l);
+        let eye = l.matmul(&m);
+        assert!(eye.max_abs_diff(&Mat::eye(n)) < 1e-2);
     }
 
     #[test]

@@ -19,6 +19,30 @@ use crate::util::pool::{self, Pool};
 /// order, so `gram` is bit-identical for every thread count.
 pub const GRAM_SHARD_ROWS: usize = 64;
 
+/// One output row of C = A @ B given a row slice of A: `orow += arow @ B`
+/// (ikj loop — cache-friendly inner axis, zero-skip).
+///
+/// This is the single inner GEMM kernel shared by every dense *and* packed
+/// matmul path ([`Mat::matmul_with`], the serve subsystem's
+/// `PackedLinear::forward_with` panel loop). Routing all of them through the
+/// same accumulation loop is what makes the packed forward bit-identical to
+/// dequantize-then-`matmul` for every thread count.
+#[inline]
+pub fn gemm_row_into(arow: &[f32], b: &Mat, orow: &mut [f32]) {
+    let n = b.cols;
+    debug_assert_eq!(arow.len(), b.rows, "gemm_row_into inner dim");
+    debug_assert_eq!(orow.len(), n, "gemm_row_into output dim");
+    for (p, &a) in arow.iter().enumerate() {
+        if a == 0.0 {
+            continue;
+        }
+        let brow = &b.data[p * n..(p + 1) * n];
+        for (o, bv) in orow.iter_mut().zip(brow.iter()) {
+            *o += a * bv;
+        }
+    }
+}
+
 /// 2-D row-major matrix of f32 (the only rank we need CPU-side; rank-1 uses
 /// rows == 1).
 #[derive(Clone, Debug, PartialEq)]
@@ -89,22 +113,13 @@ impl Mat {
         Mat::from_fn(self.cols, self.rows, |r, c| self.at(c, r))
     }
 
-    /// One output row of A @ B (ikj loop — cache-friendly inner axis).
-    /// Shared by the serial and row-chunked parallel matmul paths so both
-    /// produce identical bits.
+    /// One output row of A @ B — delegates to the shared [`gemm_row_into`]
+    /// kernel so the serial and row-chunked parallel matmul paths (and the
+    /// packed serve path) all produce identical bits.
     #[inline]
     fn matmul_row_into(&self, other: &Mat, i: usize, orow: &mut [f32]) {
-        let (k, n) = (self.cols, other.cols);
-        for p in 0..k {
-            let a = self.data[i * k + p];
-            if a == 0.0 {
-                continue;
-            }
-            let brow = &other.data[p * n..(p + 1) * n];
-            for (o, b) in orow.iter_mut().zip(brow.iter()) {
-                *o += a * b;
-            }
-        }
+        let k = self.cols;
+        gemm_row_into(&self.data[i * k..(i + 1) * k], other, orow);
     }
 
     /// C = A @ B with the global worker pool (see [`Mat::matmul_with`]).
@@ -393,6 +408,21 @@ mod tests {
         let mut want = Mat::eye(6);
         want.add_assign(&g.gram_with(&Pool::serial()));
         assert_eq!(acc.data, want.data);
+    }
+
+    #[test]
+    fn gemm_row_into_matches_matmul_rows() {
+        let mut rng = Rng::new(8);
+        let a = randmat(&mut rng, 9, 14);
+        let b = randmat(&mut rng, 14, 11);
+        let want = a.matmul_with(&Pool::serial(), &b);
+        for i in 0..a.rows {
+            let mut orow = vec![0.0f32; b.cols];
+            gemm_row_into(a.row(i), &b, &mut orow);
+            let wrow: Vec<u32> = want.row(i).iter().map(|v| v.to_bits()).collect();
+            let grow: Vec<u32> = orow.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(grow, wrow, "row {i}");
+        }
     }
 
     #[test]

@@ -1,6 +1,11 @@
 //! Integration tests: the `oac` binary end-to-end (train -> quantize ->
 //! eval through the real CLI), plus cross-module pipeline invariants that
 //! exercise runtime + coordinator + calib together.
+//!
+//! Every test has an artifact-free fallback: when `make artifacts` output
+//! is absent the same contract is exercised through the synthetic pipeline
+//! (`--synthetic` quantize/serve and the library-level synthetic runs)
+//! instead of silently skipping.
 
 use std::path::PathBuf;
 use std::process::Command;
@@ -21,7 +26,15 @@ fn cli_help_and_info() {
     assert!(text.contains("USAGE"), "{text}");
 
     if !artifacts_ready() {
-        eprintln!("skipping info: run `make artifacts`");
+        // Synthetic fallback: without artifacts `info` has nothing to list,
+        // but the artifact-free pipeline must still run through the binary.
+        let out = oac_bin()
+            .args(["quantize", "--synthetic", "--blocks", "1"])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("checksum="), "{text}");
         return;
     }
     let out = oac_bin().args(["info", "--config", "tiny"]).output().unwrap();
@@ -33,12 +46,43 @@ fn cli_help_and_info() {
 
 #[test]
 fn cli_train_quantize_eval_roundtrip() {
-    if !artifacts_ready() {
-        eprintln!("skipping: run `make artifacts`");
-        return;
-    }
     let dir = std::env::temp_dir().join("oac_cli_test");
     std::fs::create_dir_all(&dir).unwrap();
+
+    if !artifacts_ready() {
+        // Synthetic fallback roundtrip: quantize --synthetic writes a
+        // checkpoint and a packed export; `serve --packed` consumes the
+        // export and reports the packed-vs-dense serving metrics.
+        let ckpt = dir.join("synth.bin");
+        let pack = dir.join("synth.pack");
+        let out = oac_bin()
+            .args([
+                "quantize", "--synthetic", "--method", "oac", "--bits", "2",
+                "--threads", "2", "--out", ckpt.to_str().unwrap(),
+                "--pack-out", pack.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        assert!(ckpt.exists() && pack.exists());
+
+        let out = oac_bin()
+            .args([
+                "serve", "--packed", pack.to_str().unwrap(), "--batch", "2",
+                "--requests", "6", "--threads", "2",
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("method=OAC"), "{text}");
+        assert!(text.contains("throughput_rps="), "{text}");
+        assert!(text.contains("checksum="), "{text}");
+
+        std::fs::remove_dir_all(&dir).ok();
+        return;
+    }
+
     let ckpt = dir.join("tiny.bin");
     let qckpt = dir.join("tiny_q.bin");
 
@@ -84,14 +128,34 @@ fn cli_train_quantize_eval_roundtrip() {
 
 #[test]
 fn quantized_model_ppl_ordering() {
-    // Cross-module invariant: for a (partially) trained model, 2-bit RTN
-    // hurts more than 4-bit RTN, and both produce finite perplexity.
+    // Cross-module invariant: 2-bit RTN hurts more than 4-bit RTN. With
+    // artifacts this is measured as perplexity; without, as weight-space
+    // MSE of the calibrated synthetic model against its originals (the
+    // quantity perplexity degradation is monotone in for RTN).
+    use oac::calib::{Backend, Method};
+    use oac::coordinator::{run_pipeline, run_synthetic, PipelineConfig};
+
     if !artifacts_ready() {
-        eprintln!("skipping: run `make artifacts`");
+        use oac::coordinator::{synthetic_layers, synthetic_weights, SyntheticSpec};
+        let spec = SyntheticSpec::default();
+        let original = synthetic_weights(&spec);
+        let layers = synthetic_layers(&spec);
+        let mse_at = |bits: usize| -> f64 {
+            let cfg = PipelineConfig::new(Method::baseline(Backend::Rtn), bits);
+            let (ws, report) = run_synthetic(&spec, &cfg).unwrap();
+            assert!(report.avg_bits >= bits as f64, "{}", report.avg_bits);
+            layers
+                .iter()
+                .map(|l| ws.get_mat(&l.name).mse(&original.get_mat(&l.name)))
+                .sum()
+        };
+        let e2 = mse_at(2);
+        let e4 = mse_at(4);
+        assert!(e2.is_finite() && e4.is_finite());
+        assert!(e4 < e2, "4-bit mse ({e4}) should be < 2-bit mse ({e2})");
         return;
     }
-    use oac::calib::{Backend, Method};
-    use oac::coordinator::{run_pipeline, PipelineConfig};
+
     use oac::data::{Flavor, Splits};
     use oac::eval::{evaluate, EvalConfig};
     use oac::model::{ModelMeta, WeightStore};

@@ -7,7 +7,7 @@
 use oac::calib::{Backend, Method};
 use oac::coordinator::{run_synthetic, PipelineConfig, SyntheticSpec};
 use oac::hessian::{Hessian, HessianKind, PreparedCache, Reduction};
-use oac::tensor::Mat;
+use oac::tensor::{linalg, Mat};
 use oac::util::pool::Pool;
 use oac::util::prop::{check, PropConfig};
 use oac::util::rng::Rng;
@@ -101,6 +101,46 @@ fn prop_accumulate_batch_bit_identical_to_serial_accumulate() {
                 }
                 if bits(&batched.mat) != bits(&serial.mat) {
                     return Err(format!("hessian diverged at {t} threads"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_linalg_bit_identical_across_thread_counts() {
+    // The blocked Cholesky (column panels + parallel trailing updates) and
+    // the panel-parallel SPD inversion must honor the same contract as the
+    // tensor reductions: geometry from the problem size only, so every
+    // thread count reproduces the serial bits.
+    check(
+        "cholesky/spd_inverse: threads {1,2,4,8} agree bitwise",
+        PropConfig { cases: 10, seed: 0x11A6 },
+        |rng| {
+            // Sizes straddle LINALG_PANEL boundaries.
+            let n = 2 + rng.below(2 * linalg::LINALG_PANEL + 20);
+            let g = randmat(rng, n + 8, n);
+            let mut h = g.gram_with(&Pool::serial());
+            for i in 0..n {
+                *h.at_mut(i, i) += 0.5;
+            }
+            h
+        },
+        |h| {
+            let want_l = bits(&linalg::cholesky_with(&Pool::new(1), h).map_err(|e| e.to_string())?);
+            let want_inv =
+                bits(&linalg::spd_inverse_with(&Pool::new(1), h).map_err(|e| e.to_string())?);
+            for t in THREAD_COUNTS {
+                let got_l =
+                    bits(&linalg::cholesky_with(&Pool::new(t), h).map_err(|e| e.to_string())?);
+                if got_l != want_l {
+                    return Err(format!("cholesky diverged at {t} threads (n={})", h.rows));
+                }
+                let got_inv =
+                    bits(&linalg::spd_inverse_with(&Pool::new(t), h).map_err(|e| e.to_string())?);
+                if got_inv != want_inv {
+                    return Err(format!("spd_inverse diverged at {t} threads (n={})", h.rows));
                 }
             }
             Ok(())

@@ -1,0 +1,227 @@
+//! Property coverage for the packed serving store (`oac::serve`).
+//!
+//! Two contracts, both at the raw-bit level:
+//!
+//! 1. **Fused == dense.** `PackedLinear::forward_with` must equal
+//!    `dequantize()` followed by `Mat::matmul_with` bit-for-bit, for every
+//!    scheme (uniform / binary / codebook), every bit width 1–8, and every
+//!    thread count in {1, 2, 4, 8} — packing is a storage change, never a
+//!    numerics change.
+//! 2. **Export == calibration.** A `PackedModel` exported from a calibrated
+//!    synthetic run must decode to exactly the weights the calibration
+//!    produced, for every servable backend.
+
+use oac::calib::{Backend, Method};
+use oac::coordinator::{
+    run_synthetic, synthetic_layers, synthetic_weights, PipelineConfig, SyntheticSpec,
+};
+use oac::quant::uniform;
+use oac::serve::{self, engine, PackedModel};
+use oac::tensor::Mat;
+use oac::util::pool::Pool;
+use oac::util::prop::{check, PropConfig};
+use oac::util::rng::Rng;
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn bits_of(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+fn randmat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    let mut m = Mat::zeros(rows, cols);
+    rng.fill_normal(&mut m.data, 0.5);
+    m
+}
+
+/// Check the fused forward of one packed layer against the dense reference
+/// across all thread counts, bitwise.
+fn assert_fused_matches_dense(pl: &serve::PackedLinear, x: &Mat) -> Result<(), String> {
+    let want = bits_of(&pl.dequantize().matmul_with(&Pool::serial(), x));
+    for t in THREAD_COUNTS {
+        let got = bits_of(&pl.forward_with(&Pool::new(t), x));
+        if got != want {
+            return Err(format!("{}: forward diverged at {t} threads", pl.name));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_uniform_forward_bit_identical_bits_1_to_8() {
+    check(
+        "packed uniform forward == dequantize-then-matmul, bits 1-8, threads 1/2/4/8",
+        PropConfig { cases: 16, seed: 0x5E41 },
+        |rng| {
+            let bits = 1 + rng.below(8);
+            let rows = 1 + rng.below(50);
+            let cols = 16 * (1 + rng.below(4));
+            let batch = 1 + rng.below(6);
+            (bits, randmat(rng, rows, cols), randmat(rng, cols, batch))
+        },
+        |(bits, w, x)| {
+            let pl = serve::encode_uniform("u", w, 16, *bits);
+            // The decode itself must be the RTN grid exactly.
+            if bits_of(&pl.dequantize()) != bits_of(&uniform::qdq_mat(w, 16, *bits)) {
+                return Err(format!("bits={bits}: decode != qdq_mat"));
+            }
+            assert_fused_matches_dense(&pl, x).map_err(|e| format!("bits={bits}: {e}"))
+        },
+    );
+}
+
+#[test]
+fn prop_binary_forward_bit_identical() {
+    check(
+        "packed binary forward == dequantize-then-matmul, threads 1/2/4/8",
+        PropConfig { cases: 16, seed: 0xB1A4 },
+        |rng| {
+            let rows = 1 + rng.below(40);
+            let cols = 4 + rng.below(60);
+            let batch = 1 + rng.below(6);
+            (randmat(rng, rows, cols), randmat(rng, cols, batch))
+        },
+        |(w, x)| {
+            let pl = serve::encode_binary("b", w);
+            // The decode must be exactly per-row residual binarization.
+            let mut want = w.clone();
+            for r in 0..w.rows {
+                let (_, _, approx) = oac::quant::binary::residual_binarize(w.row(r));
+                want.row_mut(r).copy_from_slice(&approx);
+            }
+            if bits_of(&pl.dequantize()) != bits_of(&want) {
+                return Err("decode != residual_binarize".into());
+            }
+            assert_fused_matches_dense(&pl, x)
+        },
+    );
+}
+
+#[test]
+fn prop_codebook_forward_bit_identical() {
+    check(
+        "packed codebook forward == dequantize-then-matmul, threads 1/2/4/8",
+        PropConfig { cases: 16, seed: 0xC0DE },
+        |rng| {
+            // Rows drawn from small per-row level sets (1..=8 bits' worth).
+            let rows = 1 + rng.below(30);
+            let cols = 4 + rng.below(60);
+            let k = 1 + rng.below(200);
+            let levels: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+            let mut m = Mat::zeros(rows, cols);
+            for v in m.data.iter_mut() {
+                *v = levels[rng.below(k)];
+            }
+            let batch = 1 + rng.below(6);
+            let x = randmat(rng, cols, batch);
+            (m, x)
+        },
+        |(m, x)| {
+            let pl = serve::encode_codebook("c", m).map_err(|e| e.to_string())?;
+            if bits_of(&pl.dequantize()) != bits_of(m) {
+                return Err("codebook capture not exact".into());
+            }
+            assert_fused_matches_dense(&pl, x)
+        },
+    );
+}
+
+#[test]
+fn export_reproduces_calibrated_weights_bit_for_bit() {
+    // Every servable backend: the packed export of a calibrated synthetic
+    // run decodes to exactly the weights calibration wrote back.
+    for (method, bits) in [
+        (Method::baseline(Backend::Rtn), 2usize),
+        (Method::baseline(Backend::SpQR), 2),
+        (Method::oac(Backend::SpQR), 2),
+        (Method::oac(Backend::Optq), 2),
+        (Method::baseline(Backend::OmniQuant), 2),
+        (Method::baseline(Backend::Squeeze), 3),
+        (Method::oac(Backend::BiLLM), 1),
+        (Method::baseline(Backend::Quip), 2),
+    ] {
+        let spec = SyntheticSpec { blocks: 1, ..SyntheticSpec::default() };
+        let cfg = PipelineConfig::new(method, bits);
+        let original = synthetic_weights(&spec);
+        let (quantized, _) = run_synthetic(&spec, &cfg).unwrap();
+        let layers = synthetic_layers(&spec);
+        let model =
+            PackedModel::from_quantized(&layers, &original, &quantized, method, &cfg.calib)
+                .unwrap_or_else(|e| panic!("{method:?}: export failed: {e:#}"));
+        for l in &layers {
+            let dq = quantized.get_mat(&l.name);
+            let dec = model.get(&l.name).dequantize();
+            assert_eq!(
+                bits_of(&dec),
+                bits_of(&dq),
+                "{method:?}: {} decode != calibrated weights",
+                l.name
+            );
+        }
+    }
+}
+
+#[test]
+fn export_outlier_rate_stays_sparse_for_spqr() {
+    // The SpQR export stores FP32 outliers sparsely; if code recovery were
+    // broken it would degenerate into "everything is an outlier".
+    let spec = SyntheticSpec { blocks: 1, ..SyntheticSpec::default() };
+    let cfg = PipelineConfig::new(Method::oac(Backend::SpQR), 2);
+    let original = synthetic_weights(&spec);
+    let (quantized, _) = run_synthetic(&spec, &cfg).unwrap();
+    let layers = synthetic_layers(&spec);
+    let model =
+        PackedModel::from_quantized(&layers, &original, &quantized, cfg.method, &cfg.calib)
+            .unwrap();
+    for pl in &model.layers {
+        let frac = pl.outliers.len() as f64 / (pl.rows * pl.cols) as f64;
+        assert!(frac < 0.10, "{}: outlier fraction {frac}", pl.name);
+    }
+    // And packing must actually compress: 2-bit codes + params + outliers
+    // come in far under dense f32.
+    assert!(
+        model.packed_bytes() * 2 < model.dense_bytes(),
+        "{} vs {}",
+        model.packed_bytes(),
+        model.dense_bytes()
+    );
+}
+
+#[test]
+fn packed_model_save_load_serve_roundtrip() {
+    let spec = SyntheticSpec { blocks: 1, d_model: 32, d_ff: 64, ..SyntheticSpec::default() };
+    let cfg = PipelineConfig::new(Method::oac(Backend::SpQR), 2);
+    let (model, _) = serve::build_synthetic(&spec, &cfg).unwrap();
+    let tmp = std::env::temp_dir().join("oac_serve_props_pack.bin");
+    model.save(&tmp).unwrap();
+    let loaded = PackedModel::load(&tmp).unwrap();
+    assert_eq!(model.fingerprint(), loaded.fingerprint());
+    let scfg = engine::ServeConfig { batch: 2, requests: 5, threads: 2, seed: 3, baseline: true };
+    let a = engine::run(&model, &scfg).unwrap();
+    let b = engine::run(&loaded, &scfg).unwrap();
+    assert_eq!(a.checksum, b.checksum);
+    std::fs::remove_file(tmp).ok();
+}
+
+#[test]
+fn serve_engine_checksum_thread_invariant_across_methods() {
+    for (method, bits) in
+        [(Method::oac(Backend::SpQR), 2usize), (Method::oac(Backend::BiLLM), 1)]
+    {
+        let spec = SyntheticSpec { blocks: 1, d_model: 32, d_ff: 64, ..SyntheticSpec::default() };
+        let cfg = PipelineConfig::new(method, bits);
+        let (model, _) = serve::build_synthetic(&spec, &cfg).unwrap();
+        let mut reference: Option<u64> = None;
+        for threads in THREAD_COUNTS {
+            let scfg =
+                engine::ServeConfig { batch: 4, requests: 9, threads, seed: 0, baseline: true };
+            let rep = engine::run(&model, &scfg).unwrap();
+            match reference {
+                None => reference = Some(rep.checksum),
+                Some(want) => {
+                    assert_eq!(want, rep.checksum, "{method:?} diverged at {threads} threads")
+                }
+            }
+        }
+    }
+}

@@ -103,6 +103,32 @@ fn synthetic_quantize_runs_every_backend() {
 }
 
 #[test]
+fn synthetic_serve_bit_identical_across_threads() {
+    // The acceptance contract of the serving engine: the request-order
+    // output checksum printed by `oac serve --synthetic` is identical for
+    // every --threads value (latency/throughput tokens are wall-clock and
+    // may differ).
+    let mut checksums = Vec::new();
+    for threads in ["1", "2", "4", "8"] {
+        let out = oac_bin()
+            .args([
+                "serve", "--synthetic", "--batch", "4", "--requests", "16",
+                "--threads", threads, "--blocks", "1",
+            ])
+            .output()
+            .expect("run oac serve");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout).to_string();
+        assert!(text.contains("packed_bytes="), "{text}");
+        assert!(text.contains("throughput_rps="), "{text}");
+        checksums.push(token(&text, "checksum=").to_string());
+    }
+    for i in 1..checksums.len() {
+        assert_eq!(checksums[0], checksums[i], "serve checksum diverged at run {i}");
+    }
+}
+
+#[test]
 fn synthetic_quantize_seed_changes_output() {
     let run = |seed: &str| -> String {
         let out = oac_bin()
