@@ -7,7 +7,7 @@
 
 use std::time::Duration;
 
-use oac::calib::{self, Backend, CalibConfig, Method};
+use oac::calib::{Backend, CalibConfig, LayerCtx, Method};
 use oac::hessian::{prepare, Hessian, HessianKind, PreparedHessian, Reduction};
 use oac::quant::{binary, packing, uniform};
 use oac::tensor::Mat;
@@ -42,13 +42,18 @@ fn main() {
         })
         .collect();
     let ccfg = CalibConfig::for_bits(2);
-    let method = Method::oac(Backend::SpQR);
+    let method = Method::oac(Backend::SPQR);
     let mut serial_ns = 0.0;
     for threads in THREADS {
         let pool = Pool::new(threads);
         let r = bench_cfg(&format!("calibrate_8_layers_t{threads}"), cfg, &mut || {
             let out = pool.map(&layers, |i, (w, prep)| {
-                calib::run(&format!("l{i}"), w, prep, method, &ccfg)
+                method.backend.quantize(&LayerCtx {
+                    name: &format!("l{i}"),
+                    w,
+                    hessian: prep,
+                    cfg: &ccfg,
+                })
             });
             black_box(out.len());
         });

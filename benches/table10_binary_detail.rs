@@ -44,12 +44,12 @@ fn main() -> anyhow::Result<()> {
     // SpQR at 1 bit: the paper's Table 10 keeps it "for completeness" and it
     // collapses — uniform grids cannot binarize.
     for (method, bits) in [
-        (Method::baseline(Backend::SpQR), 1),
-        (Method::baseline(Backend::BiLLM), 1),
-        (Method::oac(Backend::BiLLM), 1),
+        (Method::baseline(Backend::SPQR), 1),
+        (Method::baseline(Backend::BILLM), 1),
+        (Method::oac(Backend::BILLM), 1),
     ] {
         let (qr, er, _) = wb.run_tuned(method, bits)?;
-        let label = if method.backend == Backend::SpQR { "SpQR(1b)" } else { &qr.method };
+        let label = if method.backend == Backend::SPQR { "SpQR(1b)" } else { &qr.method };
         table.row(detail_row(label, qr.avg_bits, &er));
     }
     table.print();

@@ -43,11 +43,11 @@ fn main() -> anyhow::Result<()> {
 
     table.row(detail_row("Baseline", 32.0, &wb.eval_baseline()?));
     for method in [
-        Method::baseline(Backend::Rtn),
-        Method::baseline(Backend::Optq),
-        Method::baseline(Backend::Quip),
-        Method::baseline(Backend::SpQR),
-        Method::oac(Backend::SpQR),
+        Method::baseline(Backend::RTN),
+        Method::baseline(Backend::OPTQ),
+        Method::baseline(Backend::QUIP),
+        Method::baseline(Backend::SPQR),
+        Method::oac(Backend::SPQR),
     ] {
         let (qr, er, _) = wb.run_tuned(method, 2)?;
         table.row(detail_row(&qr.method, qr.avg_bits, &er));

@@ -19,13 +19,13 @@ fn main() -> anyhow::Result<()> {
         );
         table.row(baseline_row(&wb.eval_baseline()?));
         for method in [
-            Method::baseline(Backend::Rtn),
-            Method::baseline(Backend::Optq),
-            Method::baseline(Backend::OmniQuant),
-            Method::baseline(Backend::Quip),
-            Method::baseline(Backend::Squeeze),
-            Method::baseline(Backend::SpQR),
-            Method::oac(Backend::SpQR),
+            Method::baseline(Backend::RTN),
+            Method::baseline(Backend::OPTQ),
+            Method::baseline(Backend::OMNIQUANT),
+            Method::baseline(Backend::QUIP),
+            Method::baseline(Backend::SQUEEZE),
+            Method::baseline(Backend::SPQR),
+            Method::oac(Backend::SPQR),
         ] {
             let (qr, er, _) = wb.run_tuned(method, 3)?;
             table.row(method_row(&qr.method, qr.avg_bits, &er));

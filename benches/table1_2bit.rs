@@ -21,12 +21,12 @@ fn main() -> anyhow::Result<()> {
         );
         table.row(baseline_row(&wb.eval_baseline()?));
         for method in [
-            Method::baseline(Backend::Rtn),
-            Method::baseline(Backend::Optq),
-            Method::baseline(Backend::OmniQuant),
-            Method::baseline(Backend::Quip),
-            Method::baseline(Backend::SpQR),
-            Method::oac(Backend::SpQR),
+            Method::baseline(Backend::RTN),
+            Method::baseline(Backend::OPTQ),
+            Method::baseline(Backend::OMNIQUANT),
+            Method::baseline(Backend::QUIP),
+            Method::baseline(Backend::SPQR),
+            Method::oac(Backend::SPQR),
         ] {
             let t = std::time::Instant::now();
             let (qr, er, alpha) = wb.run_tuned(method, 2)?;

@@ -16,7 +16,7 @@ fn main() -> anyhow::Result<()> {
             &ROW_HEADERS,
         );
         table.row(baseline_row(&wb.eval_baseline()?));
-        for method in [Method::baseline(Backend::BiLLM), Method::oac(Backend::BiLLM)] {
+        for method in [Method::baseline(Backend::BILLM), Method::oac(Backend::BILLM)] {
             let (qr, er, alpha) = wb.run_tuned(method, 1)?;
             eprintln!("  {:<10} α={alpha}", qr.method);
             table.row(method_row(&qr.method, qr.avg_bits, &er));

@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
         .unwrap()
         .to_string();
     let wb = Workbench::new(WorkbenchConfig::new(&config))?;
-    let method = Method::oac(Backend::SpQR);
+    let method = Method::oac(Backend::SPQR);
 
     let mut table = Table::new(
         format!("Table 3 analog — gradient precision for OAC on `{config}`"),

@@ -25,10 +25,10 @@ fn main() -> anyhow::Result<()> {
         &["Method", "α=0.001", "α=0.01", "α=0.1", "α=1"],
     );
     for (method, bits) in [
-        (Method::baseline(Backend::SpQR), 2),
-        (Method::oac(Backend::SpQR), 2),
-        (Method::baseline(Backend::BiLLM), 1),
-        (Method::oac(Backend::BiLLM), 1),
+        (Method::baseline(Backend::SPQR), 2),
+        (Method::oac(Backend::SPQR), 2),
+        (Method::baseline(Backend::BILLM), 1),
+        (Method::oac(Backend::BILLM), 1),
     ] {
         let mut row = vec![format!("{} ({bits}-bit)", method.name())];
         for alpha in alphas {

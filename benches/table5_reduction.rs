@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
         &["Hessian Reduction", "C4*", "WikiText2*"],
     );
     for (label, red) in [("Mean (eq. 14)", Reduction::Mean), ("Sum (eq. 22)", Reduction::Sum)] {
-        let mut p = wb.pipeline(Method::oac(Backend::SpQR), 2);
+        let mut p = wb.pipeline(Method::oac(Backend::SPQR), 2);
         p.calib.reduction = red;
         let (_, er) = wb.run(&p)?;
         table.row(vec![label.into(), fmt_ppl(er.ppl_in_domain), fmt_ppl(er.ppl_shifted)]);

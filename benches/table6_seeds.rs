@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
         format!("Table 6 analog — seed sensitivity on `{config}` (4 seeds)"),
         &["Method", "C4*", "WikiText2*", "PTB*", "LMEH*"],
     );
-    for method in [Method::baseline(Backend::SpQR), Method::oac(Backend::SpQR)] {
+    for method in [Method::baseline(Backend::SPQR), Method::oac(Backend::SPQR)] {
         let (mut c4, mut wt, mut ptb, mut lmeh) = (vec![], vec![], vec![], vec![]);
         for &seed in &seeds {
             // Seed affects calibration sampling, task sampling and the

@@ -19,9 +19,9 @@ fn main() -> anyhow::Result<()> {
             &["Method", "Time (s)", "Phase1 (s)", "Phase2 (s)", "Peak Mem (MB)", "WikiText2*"],
         );
         let runs: [(&str, Method, GradPrecision); 3] = [
-            ("SpQR", Method::baseline(Backend::SpQR), GradPrecision::F32),
-            ("OAC_FP32", Method::oac(Backend::SpQR), GradPrecision::F32),
-            ("OAC_FP16", Method::oac(Backend::SpQR), GradPrecision::F16 { loss_scale: 256.0 }),
+            ("SpQR", Method::baseline(Backend::SPQR), GradPrecision::F32),
+            ("OAC_FP32", Method::oac(Backend::SPQR), GradPrecision::F32),
+            ("OAC_FP16", Method::oac(Backend::SPQR), GradPrecision::F16 { loss_scale: 256.0 }),
         ];
         for (label, method, prec) in runs {
             let mut p = wb.pipeline(method, 2);

@@ -20,14 +20,14 @@ fn main() -> Result<()> {
         format!("OAC x backend ablation on `{config}` (paper Table 14 analog)"),
         &ROW_HEADERS,
     );
-    for backend in [Backend::Optq, Backend::Quip, Backend::SpQR] {
+    for backend in [Backend::OPTQ, Backend::QUIP, Backend::SPQR] {
         for method in [Method::baseline(backend), Method::oac(backend)] {
             let (qr, er) = wb.run(&wb.pipeline(method, 2))?;
             table.row(method_row(&qr.method, qr.avg_bits, &er));
         }
     }
     // Binary pair.
-    for method in [Method::baseline(Backend::BiLLM), Method::oac(Backend::BiLLM)] {
+    for method in [Method::baseline(Backend::BILLM), Method::oac(Backend::BILLM)] {
         let (qr, er) = wb.run(&wb.pipeline(method, 1))?;
         table.row(method_row(&qr.method, qr.avg_bits, &er));
     }

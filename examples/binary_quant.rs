@@ -21,9 +21,9 @@ fn main() -> Result<()> {
     );
     table.row(baseline_row(&wb.eval_baseline()?));
     for method in [
-        Method::baseline(Backend::Rtn),
-        Method::baseline(Backend::BiLLM),
-        Method::oac(Backend::BiLLM),
+        Method::baseline(Backend::RTN),
+        Method::baseline(Backend::BILLM),
+        Method::oac(Backend::BILLM),
     ] {
         let (qr, er) = wb.run(&wb.pipeline(method, 1))?;
         table.row(method_row(&qr.method, qr.avg_bits, &er));

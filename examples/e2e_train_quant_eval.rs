@@ -41,9 +41,9 @@ fn main() -> Result<()> {
     );
     table.row(baseline_row(&base));
     for method in [
-        Method::baseline(Backend::Rtn),
-        Method::baseline(Backend::SpQR),
-        Method::oac(Backend::SpQR),
+        Method::baseline(Backend::RTN),
+        Method::baseline(Backend::SPQR),
+        Method::oac(Backend::SPQR),
     ] {
         let t = std::time::Instant::now();
         let (qr, er) = wb.run(&wb.pipeline(method, 2))?;

@@ -9,7 +9,7 @@
 //! Run: cargo run --release --example quickstart
 
 use anyhow::Result;
-use oac::calib::{calibrate, Backend, CalibConfig, Method};
+use oac::calib::{Backend, CalibConfig, LayerCtx, Method};
 use oac::coordinator::{Coordinator, PipelineConfig};
 use oac::data::{Flavor, Splits};
 use oac::experiments::artifacts_root;
@@ -35,8 +35,8 @@ fn main() -> Result<()> {
 
     // Phase 1 (per paper Algorithm 1) for block 0, both Hessian kinds.
     let coord = Coordinator::new(&rt, &meta)?;
-    let oac_cfg = PipelineConfig::new(Method::oac(Backend::SpQR), 2);
-    let agn_cfg = PipelineConfig::new(Method::baseline(Backend::SpQR), 2);
+    let oac_cfg = PipelineConfig::new(Method::oac(Backend::SPQR), 2);
+    let agn_cfg = PipelineConfig::new(Method::baseline(Backend::SPQR), 2);
     let h_oac = coord.block_hessians(&ws, 0, &calib, &oac_cfg)?;
     let h_agn = coord.block_hessians(&ws, 0, &calib, &agn_cfg)?;
 
@@ -52,9 +52,14 @@ fn main() -> Result<()> {
     for (kind, hmap) in [("agnostic", &h_agn), ("output-adaptive", &h_oac)] {
         let damped = hmap[&layer.name].regularized(cfg.alpha, cfg.reduction);
         let prepared = oac::hessian::prepare(damped)?;
-        for backend in [Backend::Rtn, Backend::Optq, Backend::SpQR, Backend::Quip] {
-            let method = Method { backend, hessian: hmap[&layer.name].kind };
-            let q = calibrate(&layer.name, &w, &prepared, method, &cfg);
+        for backend in [Backend::RTN, Backend::OPTQ, Backend::SPQR, Backend::QUIP] {
+            // The one dispatch point every backend shares: the trait object.
+            let q = backend.quantize(&LayerCtx {
+                name: &layer.name,
+                w: &w,
+                hessian: &prepared,
+                cfg: &cfg,
+            });
             table.row(vec![
                 backend.name().to_string(),
                 kind.to_string(),

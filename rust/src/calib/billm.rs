@@ -14,12 +14,34 @@
 //!    column's error is compensated on later columns (eq. 3) — with Ĥ_OAC
 //!    this is OAC_BiLLM.
 
+use std::ops::RangeInclusive;
+
 use super::optq::{optq_core, GroupMode, OutlierPolicy};
-use super::{quad_error, CalibConfig};
+use super::{quad_error, CalibBackend, CalibConfig, LayerCtx};
 use crate::hessian::PreparedHessian;
 use crate::quant::binary;
 use crate::quant::{BitBudget, QuantizedLayer};
 use crate::tensor::Mat;
+
+/// BiLLM: a 1-bit method (the `--bits` knob is meaningless above 1, so the
+/// registry declares exactly that). Exports via codebook capture: the
+/// column-loop compensation plus the 4-alpha bell split leave each row on
+/// a small level set, but not the plain two-plane ±α₁±α₂ grid.
+pub struct BiLLM;
+
+impl CalibBackend for BiLLM {
+    fn name(&self) -> &'static str {
+        "BiLLM"
+    }
+
+    fn supported_bits(&self) -> RangeInclusive<usize> {
+        1..=1
+    }
+
+    fn quantize(&self, ctx: &LayerCtx) -> QuantizedLayer {
+        billm(ctx.name, ctx.w, ctx.hessian, ctx.cfg)
+    }
+}
 
 /// Binarization plan precomputed from the original weights. Both the salient
 /// selection *and* the bell split are column-structured, so decode needs no

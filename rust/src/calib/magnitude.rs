@@ -1,0 +1,185 @@
+//! `magnitude-rtn` — the registry's extensibility proof.
+//!
+//! A complete backend living entirely in this file: round-to-nearest on a
+//! per-group *magnitude-clipped* grid (the clip ratio from
+//! `cfg.clip_grid` minimizing the plain, unweighted ℓ2 quantization error —
+//! OmniQuant's clip search without the Hessian-diagonal weighting). It was
+//! added with exactly one `register_backends!` line in
+//! [`super::registry`]; no dispatch code in `calib`, `serve`,
+//! `coordinator` or the CLI knows it exists:
+//!
+//! * `oac quantize --synthetic --method magnitude-rtn` dispatches through
+//!   the [`CalibBackend`] trait object;
+//! * `--pack-out` exports bit-exactly through the declared
+//!   [`PackSpec::AffineGrid`] (the grid is a pure function of the original
+//!   weights, so codes are recovered by rounding);
+//! * `oac backends` lists it from the registry.
+
+use super::{CalibBackend, CalibConfig, LayerCtx};
+use crate::quant::scale_quant::fp16_param_bits;
+use crate::quant::uniform::{self, GroupParams};
+use crate::quant::{BitBudget, PackSpec, QuantizedLayer};
+use crate::tensor::Mat;
+
+pub struct MagnitudeRtn;
+
+impl CalibBackend for MagnitudeRtn {
+    fn name(&self) -> &'static str {
+        "MagnitudeRTN"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        // `-` ≡ `_` in registry lookup, so this also covers magnitude_rtn.
+        &["magnitude-rtn", "mag-rtn"]
+    }
+
+    fn uses_hessian(&self) -> bool {
+        false
+    }
+
+    fn quantize(&self, ctx: &LayerCtx) -> QuantizedLayer {
+        let (w, cfg) = (ctx.w, ctx.cfg);
+        let params = grid(w, cfg);
+        let gpr = w.cols / cfg.group_size;
+        let mut dq = w.clone();
+        for r in 0..w.rows {
+            for c in 0..w.cols {
+                let p = params[r * gpr + c / cfg.group_size];
+                // Decode semantics match the packed store exactly
+                // (`scale <= 0` holds the group at `zero`), so the
+                // AffineGrid export needs no outlier overrides.
+                *dq.at_mut(r, c) = if p.scale <= 0.0 {
+                    p.zero
+                } else {
+                    uniform::qdq(w.at(r, c), p, cfg.bits)
+                };
+            }
+        }
+        QuantizedLayer {
+            name: ctx.name.to_string(),
+            calib_error: 0.0, // Hessian-free: proxy error not defined (like RTN)
+            dq,
+            budget: BitBudget {
+                weight_elems: w.rows * w.cols,
+                weight_bits: cfg.bits,
+                param_bits: fp16_param_bits(w.rows * gpr),
+                outliers: 0,
+            },
+        }
+    }
+
+    fn pack_spec(&self) -> PackSpec {
+        PackSpec::AffineGrid { grid }
+    }
+}
+
+/// Per-(row, group) params: the clip ratio from `cfg.clip_grid` minimizing
+/// plain ℓ2 error. A pure function of `(w, cfg)` — which is what makes the
+/// packed export exact. Ties break toward the earlier grid entry
+/// (strict `<`), keeping the search deterministic. Like the RTN grid
+/// ([`crate::quant::uniform::qdq_mat`] and the `encode_with_params` export
+/// it feeds), groups must tile the row exactly.
+pub fn grid(w: &Mat, cfg: &CalibConfig) -> Vec<GroupParams> {
+    let g = cfg.group_size;
+    assert_eq!(w.cols % g, 0, "cols {} % group {}", w.cols, g);
+    let mut out = Vec::with_capacity(w.rows * (w.cols / g));
+    for r in 0..w.rows {
+        for g0 in (0..w.cols).step_by(g) {
+            let g1 = g0 + g;
+            let vals = &w.row(r)[g0..g1];
+            let mut best = (f64::INFINITY, GroupParams { scale: 0.0, zero: vals[0] });
+            for &clip in &cfg.clip_grid {
+                let p = fit(vals, cfg.bits, clip);
+                let err: f64 = vals
+                    .iter()
+                    .map(|&v| {
+                        let q = if p.scale <= 0.0 { p.zero } else { uniform::qdq(v, p, cfg.bits) };
+                        ((q - v) as f64).powi(2)
+                    })
+                    .sum();
+                if err < best.0 {
+                    best = (err, p);
+                }
+            }
+            out.push(best.1);
+        }
+    }
+    out
+}
+
+/// Clipped min-max params; degenerate (constant or underflowed) groups get
+/// the packed store's constant-group encoding `{scale: 0, zero: vals[0]}`.
+fn fit(vals: &[f32], bits: usize, clip: f32) -> GroupParams {
+    let p = uniform::group_params_clipped(vals, bits, clip);
+    if p.scale <= 0.0 {
+        GroupParams { scale: 0.0, zero: vals[0] }
+    } else {
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hessian::{prepare, Hessian, HessianKind, Reduction};
+    use crate::util::rng::Rng;
+
+    fn ctx_parts(rows: usize, cols: usize, seed: u64) -> (Mat, crate::hessian::PreparedHessian) {
+        let mut rng = Rng::new(seed);
+        let mut w = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.5);
+        let mut h = Hessian::zeros(cols, HessianKind::Agnostic);
+        let mut x = Mat::zeros(cols, cols);
+        rng.fill_normal(&mut x.data, 1.0);
+        h.accumulate(&x);
+        (w, prepare(h.regularized(0.1, Reduction::Sum)).unwrap())
+    }
+
+    #[test]
+    fn dq_is_exactly_the_grid_decode() {
+        // The invariant the AffineGrid export relies on: quantize's output
+        // is elementwise qdq against grid(w, cfg).
+        let (w, hes) = ctx_parts(6, 64, 0);
+        let cfg = CalibConfig::for_bits(2);
+        let q = MagnitudeRtn.quantize(&LayerCtx { name: "t", w: &w, hessian: &hes, cfg: &cfg });
+        let params = grid(&w, &cfg);
+        let gpr = w.cols / cfg.group_size;
+        for r in 0..w.rows {
+            for c in 0..w.cols {
+                let p = params[r * gpr + c / cfg.group_size];
+                let want = if p.scale <= 0.0 { p.zero } else { uniform::qdq(w.at(r, c), p, 2) };
+                assert_eq!(q.dq.at(r, c).to_bits(), want.to_bits(), "({r},{c})");
+            }
+        }
+        assert!(!q.dq.has_non_finite());
+    }
+
+    #[test]
+    fn never_worse_than_plain_rtn_l2() {
+        // clip_grid includes 1.0 (= plain min-max), so the search can only
+        // improve the unweighted l2 error it optimizes.
+        let mut rng = Rng::new(3);
+        let (mut w, hes) = ctx_parts(8, 64, 1);
+        for v in w.data.iter_mut() {
+            let z = rng.normal_f32();
+            *v = z * z * z * 0.3; // heavy tails make clipping matter
+        }
+        let cfg = CalibConfig::for_bits(2);
+        let q = MagnitudeRtn.quantize(&LayerCtx { name: "t", w: &w, hessian: &hes, cfg: &cfg });
+        let rtn = uniform::qdq_mat(&w, cfg.group_size, cfg.bits);
+        let e_mag: f64 =
+            w.data.iter().zip(&q.dq.data).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let e_rtn: f64 = w.data.iter().zip(&rtn.data).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        assert!(e_mag <= e_rtn + 1e-9, "{e_mag} vs {e_rtn}");
+    }
+
+    #[test]
+    fn constant_groups_pass_through() {
+        let mut w = Mat::zeros(2, 32);
+        w.data.fill(0.7);
+        let (_, hes) = ctx_parts(2, 32, 2);
+        let cfg = CalibConfig::for_bits(2);
+        let q = MagnitudeRtn.quantize(&LayerCtx { name: "t", w: &w, hessian: &hes, cfg: &cfg });
+        assert!(q.dq.data.iter().all(|v| v.to_bits() == 0.7f32.to_bits()));
+    }
+}

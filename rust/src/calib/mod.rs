@@ -1,72 +1,188 @@
-//! Calibration backends (paper §3, §5, Appendix I).
+//! Calibration backends (paper §3, §5, Appendix I) behind one extension
+//! point: the [`CalibBackend`] trait and the static registry in
+//! [`registry`].
 //!
-//! Every backend consumes a weight matrix and a *prepared Hessian* and
-//! produces dequantized weights + a bit budget. The Hessian's provenance is
-//! decided upstream by the coordinator: feed the ℓ2 Hessian and you get the
-//! published baseline (OPTQ / SpQR / QuIP / BiLLM); feed the output-adaptive
-//! Hessian `Σ GᵀG` and you get the corresponding OAC variant
-//! (OAC_OPTQ / OAC_SpQR / OAC_QuIP / OAC_BiLLM — paper Table 14). That
-//! factorization *is* the paper's thesis: OAC is a Hessian swap, not a new
-//! update rule.
+//! Every backend consumes a weight matrix and a *prepared Hessian* (bundled
+//! in a [`LayerCtx`]) and produces dequantized weights + a bit budget. The
+//! Hessian's provenance is decided upstream by the coordinator: feed the ℓ2
+//! Hessian and you get the published baseline (OPTQ / SpQR / QuIP / BiLLM);
+//! feed the output-adaptive Hessian `Σ GᵀG` and you get the corresponding
+//! OAC variant (OAC_OPTQ / OAC_SpQR / OAC_QuIP / OAC_BiLLM — paper
+//! Table 14). That factorization *is* the paper's thesis: OAC is a Hessian
+//! swap, not a new update rule — which is why the backend surface is a
+//! trait, not an enum: related calibration rules (QuantEase's
+//! coordinate-descent updates, FOEM's first-order compensation, …) drop
+//! into exactly this slot.
+//!
+//! ## Architecture
+//!
+//! * [`CalibBackend`] — one unit struct per backend implements
+//!   `name()/aliases()/uses_hessian()/supported_bits()/quantize(&LayerCtx)/
+//!   pack_spec()`. `pack_spec()` declares the serve-export scheme
+//!   ([`crate::quant::PackSpec`]: affine group grid, residual-binary
+//!   planes, or codebook capture), so `serve::PackedModel::from_quantized`
+//!   packs without per-backend knowledge.
+//! * [`registry`] — the static `register_backends![…]` list. [`Backend`] is
+//!   a copyable handle to a registered backend; [`Backend::parse`] is a
+//!   registry lookup (case-insensitive, `-`/`_`-insensitive, aliases).
+//! * [`Method`] = backend × [`HessianKind`]. `Method::name()` round-trips
+//!   through `Method::parse` for every registered backend and both Hessian
+//!   kinds.
+//!
+//! **Adding a backend** is one new module implementing [`CalibBackend`]
+//! plus one line in `registry::register_backends![…]` — no dispatch edits
+//! anywhere: the coordinator, the serve exporter, and the CLI all operate
+//! on trait objects (see [`magnitude`] for the template).
 
 pub mod billm;
+pub mod magnitude;
 pub mod optq;
 pub mod quip;
+pub mod registry;
 pub mod rtn;
 pub mod spqr;
 
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::ops::RangeInclusive;
+
 use crate::hessian::{HessianKind, PreparedHessian, Reduction};
-use crate::quant::QuantizedLayer;
+use crate::quant::{PackSpec, QuantizedLayer};
 use crate::tensor::Mat;
 
-/// The calibration backends the paper evaluates.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Backend {
-    /// Round-to-nearest, group-wise (no Hessian, no updates).
-    Rtn,
-    /// OPTQ/GPTQ column-wise updates (eq. 3).
-    Optq,
-    /// SpQR: OPTQ + outlier isolation (eq. 4) + scale/zero second-round.
-    SpQR,
-    /// QuIP-lite: randomized Hadamard incoherence + OPTQ core.
-    Quip,
-    /// BiLLM: structural salient selection + residual binarization (1-bit).
-    BiLLM,
-    /// OmniQuant-lite: per-group clip-ratio search, no updates.
-    OmniQuant,
-    /// SqueezeLLM-lite: sensitivity-weighted non-uniform k-means.
-    Squeeze,
+/// Everything a backend sees when quantizing one linear layer. Pure CPU
+/// inputs; a backend must be a deterministic function of this context (the
+/// coordinator fans layers out across worker threads and relies on it).
+pub struct LayerCtx<'a> {
+    /// Layer name (reporting only).
+    pub name: &'a str,
+    /// The weight matrix to quantize.
+    pub w: &'a Mat,
+    /// Prepared (damped, factorized) Hessian. Always present; Hessian-free
+    /// backends simply ignore it.
+    pub hessian: &'a PreparedHessian,
+    pub cfg: &'a CalibConfig,
 }
 
-impl Backend {
-    pub fn parse(s: &str) -> Option<Backend> {
-        Some(match s.to_ascii_lowercase().as_str() {
-            "rtn" => Backend::Rtn,
-            "optq" | "gptq" => Backend::Optq,
-            "spqr" => Backend::SpQR,
-            "quip" => Backend::Quip,
-            "billm" => Backend::BiLLM,
-            "omniquant" => Backend::OmniQuant,
-            "squeeze" | "squeezellm" => Backend::Squeeze,
-            _ => return None,
-        })
+/// One calibration backend. Implementations are stateless unit structs
+/// registered in [`registry`]; `Sync` because the coordinator calls
+/// `quantize` from its worker pool.
+pub trait CalibBackend: Sync {
+    /// Canonical display name (`"SpQR"`, `"OPTQ"`, …) — also the
+    /// registry-lookup key after case/hyphen normalization, and the string
+    /// reports print.
+    fn name(&self) -> &'static str;
+
+    /// Extra lookup spellings (`"gptq"` for OPTQ, …).
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
     }
 
-    pub fn name(&self) -> &'static str {
-        match self {
-            Backend::Rtn => "RTN",
-            Backend::Optq => "OPTQ",
-            Backend::SpQR => "SpQR",
-            Backend::Quip => "QuIP",
-            Backend::BiLLM => "BiLLM",
-            Backend::OmniQuant => "OmniQuant",
-            Backend::Squeeze => "SqueezeLLM",
-        }
+    /// Whether the quadratic objective (and therefore the α damping sweep)
+    /// is meaningful for this backend. Note OmniQuant-lite reads only the
+    /// Hessian diagonal and reports `false` here, matching its published
+    /// "tune the quantizer, not the weights" framing.
+    fn uses_hessian(&self) -> bool {
+        true
+    }
+
+    /// Weight bit widths this backend supports (`--bits` is validated
+    /// against this by the [`crate::coordinator::Pipeline`] builder).
+    fn supported_bits(&self) -> RangeInclusive<usize> {
+        1..=8
+    }
+
+    /// Quantize one layer. Must be a pure, deterministic function of `ctx`.
+    fn quantize(&self, ctx: &LayerCtx) -> QuantizedLayer;
+
+    /// How a calibrated layer exports into the packed serving store.
+    fn pack_spec(&self) -> PackSpec {
+        PackSpec::Codebook
+    }
+}
+
+/// A copyable handle to a registered [`CalibBackend`]. Equality, hashing
+/// and `Debug` go through the backend's canonical name (unique within the
+/// registry, enforced by `registry::tests`).
+#[derive(Clone, Copy)]
+pub struct Backend(pub(crate) &'static dyn CalibBackend);
+
+impl Backend {
+    /// Round-to-nearest, group-wise (no Hessian, no updates).
+    pub const RTN: Backend = Backend(&rtn::Rtn);
+    /// OPTQ/GPTQ column-wise updates (eq. 3).
+    pub const OPTQ: Backend = Backend(&optq::Optq);
+    /// SpQR: OPTQ + outlier isolation (eq. 4) + scale/zero second round.
+    pub const SPQR: Backend = Backend(&spqr::SpQR);
+    /// QuIP-lite: randomized Hadamard incoherence + OPTQ core.
+    pub const QUIP: Backend = Backend(&quip::Quip);
+    /// BiLLM: structural salient selection + residual binarization (1-bit).
+    pub const BILLM: Backend = Backend(&billm::BiLLM);
+    /// OmniQuant-lite: per-group clip-ratio search, no updates.
+    pub const OMNIQUANT: Backend = Backend(&rtn::OmniQuant);
+    /// SqueezeLLM-lite: sensitivity-weighted non-uniform k-means.
+    pub const SQUEEZE: Backend = Backend(&rtn::Squeeze);
+
+    /// Registry lookup by name or alias — case-insensitive and
+    /// `-`/`_`-insensitive (`"SpQR"`, `"spqr"`, `"magnitude-rtn"`,
+    /// `"magnitude_rtn"` all resolve).
+    pub fn parse(s: &str) -> Option<Backend> {
+        registry::lookup(s)
+    }
+
+    pub fn name(self) -> &'static str {
+        self.0.name()
+    }
+
+    pub fn aliases(self) -> &'static [&'static str] {
+        self.0.aliases()
     }
 
     /// Does this backend consume a Hessian at all?
-    pub fn uses_hessian(&self) -> bool {
-        !matches!(self, Backend::Rtn | Backend::OmniQuant)
+    pub fn uses_hessian(self) -> bool {
+        self.0.uses_hessian()
+    }
+
+    pub fn supported_bits(self) -> RangeInclusive<usize> {
+        self.0.supported_bits()
+    }
+
+    pub fn pack_spec(self) -> PackSpec {
+        self.0.pack_spec()
+    }
+
+    /// Quantize one layer through the trait object — the single dispatch
+    /// point every backend is invoked through, which is what lets the
+    /// coordinator fan layers (and whole backends) out across worker
+    /// threads uniformly. Pure CPU, deterministic given its inputs.
+    pub fn quantize(self, ctx: &LayerCtx) -> QuantizedLayer {
+        self.0.quantize(ctx)
+    }
+}
+
+impl PartialEq for Backend {
+    fn eq(&self, other: &Backend) -> bool {
+        self.name() == other.name()
+    }
+}
+
+impl Eq for Backend {}
+
+impl Hash for Backend {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        self.name().hash(state);
+    }
+}
+
+impl fmt::Debug for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl fmt::Display for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -90,7 +206,7 @@ impl Method {
         match self.hessian {
             HessianKind::Agnostic => self.backend.name().to_string(),
             HessianKind::OutputAdaptive => {
-                if self.backend == Backend::SpQR {
+                if self.backend == Backend::SPQR {
                     // The paper's headline "OAC" is OAC_SpQR.
                     "OAC".to_string()
                 } else {
@@ -100,15 +216,18 @@ impl Method {
         }
     }
 
+    /// Inverse of [`Method::name`] for every registered backend × Hessian
+    /// kind, tolerant of case and `-`/`_` spelling (`oac_billm`,
+    /// `OAC-BiLLM`, `gptq`, …).
     pub fn parse(s: &str) -> Option<Method> {
-        let s = s.trim();
-        if let Some(rest) = s.strip_prefix("oac_").or_else(|| s.strip_prefix("OAC_")) {
+        let norm = s.trim().to_ascii_lowercase().replace('-', "_");
+        if norm == "oac" {
+            return Some(Method::oac(Backend::SPQR));
+        }
+        if let Some(rest) = norm.strip_prefix("oac_") {
             return Backend::parse(rest).map(Method::oac);
         }
-        if s.eq_ignore_ascii_case("oac") {
-            return Some(Method::oac(Backend::SpQR));
-        }
-        Backend::parse(s).map(Method::baseline)
+        Backend::parse(&norm).map(Method::baseline)
     }
 }
 
@@ -130,7 +249,7 @@ pub struct CalibConfig {
     pub alpha: f32,
     /// eq. 14 (Mean) vs eq. 22 (Sum) Hessian reduction.
     pub reduction: Reduction,
-    /// Clip grid for OmniQuant-lite.
+    /// Clip grid for OmniQuant-lite (and the magnitude-rtn demo backend).
     pub clip_grid: Vec<f32>,
     /// Seed for the QuIP Hadamard rotation.
     pub seed: u64,
@@ -165,39 +284,6 @@ impl CalibConfig {
     }
 }
 
-/// Dispatch a calibration method on one layer — the single entry point
-/// every backend (RTN/OPTQ/SpQR/QuIP/BiLLM/OmniQuant/Squeeze) is invoked
-/// through, which is what lets the coordinator fan layers out across
-/// worker threads uniformly. Pure CPU, deterministic given its inputs.
-pub fn run(
-    name: &str,
-    w: &Mat,
-    hessian: &PreparedHessian,
-    method: Method,
-    cfg: &CalibConfig,
-) -> QuantizedLayer {
-    match method.backend {
-        Backend::Rtn => rtn::rtn(name, w, cfg),
-        Backend::OmniQuant => rtn::omniquant_lite(name, w, hessian, cfg),
-        Backend::Squeeze => rtn::squeeze(name, w, hessian, cfg),
-        Backend::Optq => optq::optq(name, w, hessian, cfg),
-        Backend::SpQR => spqr::spqr(name, w, hessian, cfg),
-        Backend::Quip => quip::quip(name, w, hessian, cfg),
-        Backend::BiLLM => billm::billm(name, w, hessian, cfg),
-    }
-}
-
-/// Back-compat alias for [`run`].
-pub fn calibrate(
-    name: &str,
-    w: &Mat,
-    hessian: &PreparedHessian,
-    method: Method,
-    cfg: &CalibConfig,
-) -> QuantizedLayer {
-    run(name, w, hessian, method, cfg)
-}
-
 /// tr(dW H dW^T): the quadratic objective every method is minimizing
 /// (eq. 2 with the given Hessian). Reported for diagnostics/ablations.
 pub fn quad_error(w: &Mat, dq: &Mat, h: &Mat) -> f64 {
@@ -218,20 +304,40 @@ mod tests {
 
     #[test]
     fn method_names() {
-        assert_eq!(Method::baseline(Backend::SpQR).name(), "SpQR");
-        assert_eq!(Method::oac(Backend::SpQR).name(), "OAC");
-        assert_eq!(Method::oac(Backend::BiLLM).name(), "OAC_BiLLM");
-        assert_eq!(Method::oac(Backend::Optq).name(), "OAC_OPTQ");
+        assert_eq!(Method::baseline(Backend::SPQR).name(), "SpQR");
+        assert_eq!(Method::oac(Backend::SPQR).name(), "OAC");
+        assert_eq!(Method::oac(Backend::BILLM).name(), "OAC_BiLLM");
+        assert_eq!(Method::oac(Backend::OPTQ).name(), "OAC_OPTQ");
     }
 
     #[test]
     fn method_parse_roundtrip() {
-        for s in ["rtn", "optq", "spqr", "quip", "billm", "omniquant", "squeeze"] {
+        for s in [
+            "rtn", "optq", "spqr", "quip", "billm", "omniquant", "squeeze", "magnitude-rtn",
+        ] {
             assert!(Method::parse(s).is_some(), "{s}");
         }
-        assert_eq!(Method::parse("oac").unwrap(), Method::oac(Backend::SpQR));
-        assert_eq!(Method::parse("oac_billm").unwrap(), Method::oac(Backend::BiLLM));
+        assert_eq!(Method::parse("oac").unwrap(), Method::oac(Backend::SPQR));
+        assert_eq!(Method::parse("oac_billm").unwrap(), Method::oac(Backend::BILLM));
+        assert_eq!(Method::parse("oac-billm").unwrap(), Method::oac(Backend::BILLM));
+        assert_eq!(Method::parse("OAC-BiLLM").unwrap(), Method::oac(Backend::BILLM));
+        assert_eq!(Method::parse("gptq").unwrap(), Method::baseline(Backend::OPTQ));
         assert!(Method::parse("nope").is_none());
+    }
+
+    #[test]
+    fn backend_consts_are_registered() {
+        for b in [
+            Backend::RTN,
+            Backend::OPTQ,
+            Backend::SPQR,
+            Backend::QUIP,
+            Backend::BILLM,
+            Backend::OMNIQUANT,
+            Backend::SQUEEZE,
+        ] {
+            assert_eq!(Backend::parse(b.name()), Some(b), "{}", b.name());
+        }
     }
 
     #[test]

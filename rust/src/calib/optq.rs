@@ -11,12 +11,32 @@
 //! `W[r, q+1:] -= err_r · u[1:] ` where `err_r = (w - ŵ)/u[0]`. Processing
 //! columns in natural order with U rows makes each step O(rows·(cols-q)).
 
-use super::{quad_error, CalibConfig};
+use super::{quad_error, CalibBackend, CalibConfig, LayerCtx};
 use crate::hessian::PreparedHessian;
 use crate::quant::scale_quant::quantize_group_params;
 use crate::quant::uniform::{all_group_params, group_params, qdq, GroupParams};
 use crate::quant::{BitBudget, QuantizedLayer};
 use crate::tensor::Mat;
+
+/// OPTQ/GPTQ: dynamic groups, fp16 group params, no outlier isolation.
+/// Exports via codebook capture — the dynamic per-group grids are refit
+/// from already-corrected weights mid-loop, so no pure function of the
+/// original weights reproduces them.
+pub struct Optq;
+
+impl CalibBackend for Optq {
+    fn name(&self) -> &'static str {
+        "OPTQ"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["gptq"]
+    }
+
+    fn quantize(&self, ctx: &LayerCtx) -> QuantizedLayer {
+        optq(ctx.name, ctx.w, ctx.hessian, ctx.cfg)
+    }
+}
 
 /// How `optq_core` obtains the per-element quantizer.
 pub enum GroupMode {

@@ -9,11 +9,25 @@
 //! part — the part OAC composes with (paper Table 14) — is retained).
 
 use super::optq::{optq_core, GroupMode, OutlierPolicy};
-use super::{quad_error, CalibConfig};
+use super::{quad_error, CalibBackend, CalibConfig, LayerCtx};
 use crate::hessian::{self, PreparedHessian};
 use crate::quant::{BitBudget, QuantizedLayer};
 use crate::tensor::hadamard::RandHadamard;
 use crate::tensor::Mat;
+
+/// QuIP-lite. Requires power-of-two layer width (the Hadamard rotation);
+/// exports via codebook capture (the grid lives in the rotated space).
+pub struct Quip;
+
+impl CalibBackend for Quip {
+    fn name(&self) -> &'static str {
+        "QuIP"
+    }
+
+    fn quantize(&self, ctx: &LayerCtx) -> QuantizedLayer {
+        quip(ctx.name, ctx.w, ctx.hessian, ctx.cfg)
+    }
+}
 
 pub fn quip(name: &str, w: &Mat, hes: &PreparedHessian, cfg: &CalibConfig) -> QuantizedLayer {
     assert!(w.cols.is_power_of_two(), "QuIP-lite requires power-of-two d_col");

@@ -1,0 +1,91 @@
+//! The static calibration-backend registry.
+//!
+//! One `register_backends![…]` invocation is the single source of truth for
+//! which backends exist: [`all`] enumerates them (in registration order —
+//! the order `oac backends` prints and multi-backend fan-outs iterate), and
+//! [`lookup`] resolves user-facing method strings. Adding a backend is one
+//! new module implementing [`CalibBackend`](super::CalibBackend) plus one
+//! line in the list below — no dispatch `match` to edit anywhere else.
+
+use super::{billm, magnitude, optq, quip, rtn, spqr, Backend};
+
+/// Build the `BACKENDS` table from trait-impl unit structs.
+macro_rules! register_backends {
+    ($($imp:expr),+ $(,)?) => {
+        /// Every registered backend, in registration order.
+        pub static BACKENDS: &[Backend] = &[$(Backend(&$imp)),+];
+    };
+}
+
+register_backends![
+    rtn::Rtn,
+    optq::Optq,
+    spqr::SpQR,
+    quip::Quip,
+    billm::BiLLM,
+    rtn::OmniQuant,
+    rtn::Squeeze,
+    magnitude::MagnitudeRtn,
+];
+
+/// Every registered backend, in registration order.
+pub fn all() -> &'static [Backend] {
+    BACKENDS
+}
+
+/// Lookup key normalization: trim, lowercase, `-` ≡ `_`.
+pub(crate) fn normalize(s: &str) -> String {
+    s.trim().to_ascii_lowercase().replace('-', "_")
+}
+
+/// Resolve a backend by canonical name or alias (after normalization).
+pub fn lookup(s: &str) -> Option<Backend> {
+    let key = normalize(s);
+    all().iter().copied().find(|b| {
+        normalize(b.name()) == key || b.aliases().iter().any(|a| normalize(a) == key)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn names_and_aliases_unique_after_normalization() {
+        let mut seen = BTreeSet::new();
+        for b in all() {
+            assert!(seen.insert(normalize(b.name())), "duplicate name {}", b.name());
+            for a in b.aliases() {
+                assert!(seen.insert(normalize(a)), "duplicate alias {a} on {}", b.name());
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_is_case_and_hyphen_insensitive() {
+        assert_eq!(lookup("SPQR"), lookup("spqr"));
+        assert_eq!(lookup("gptq").unwrap().name(), "OPTQ");
+        assert_eq!(lookup("magnitude-rtn").unwrap().name(), "MagnitudeRTN");
+        assert_eq!(lookup("magnitude_rtn").unwrap().name(), "MagnitudeRTN");
+        assert_eq!(lookup(" SqueezeLLM ").unwrap().name(), "SqueezeLLM");
+        assert!(lookup("nope").is_none());
+    }
+
+    #[test]
+    fn bit_ranges_fit_the_packed_code_word() {
+        // The packed store's code streams are 1..=8-bit (u8 codes), so no
+        // backend may declare widths outside that.
+        for b in all() {
+            let r = b.supported_bits();
+            assert!(*r.start() >= 1 && *r.end() <= 8 && r.start() <= r.end(), "{}", b.name());
+        }
+    }
+
+    #[test]
+    fn registry_has_the_paper_backends() {
+        for name in ["RTN", "OPTQ", "SpQR", "QuIP", "BiLLM", "OmniQuant", "SqueezeLLM"] {
+            assert!(lookup(name).is_some(), "{name} missing from registry");
+        }
+    }
+}

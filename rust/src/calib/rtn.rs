@@ -3,12 +3,78 @@
 //! k-means). None of these move other weights; they differ in how the grid
 //! (or codebook) is fit.
 
-use super::{quad_error, CalibConfig};
+use super::{quad_error, CalibBackend, CalibConfig, LayerCtx};
 use crate::hessian::PreparedHessian;
 use crate::quant::scale_quant::fp16_param_bits;
-use crate::quant::uniform::{group_params_clipped, qdq, qdq_mat};
-use crate::quant::{BitBudget, QuantizedLayer};
+use crate::quant::uniform::{self, group_params_clipped, qdq, qdq_mat, GroupParams};
+use crate::quant::{BitBudget, PackSpec, QuantizedLayer};
 use crate::tensor::Mat;
+
+/// Round-to-nearest, group-wise (no Hessian, no updates).
+pub struct Rtn;
+
+impl CalibBackend for Rtn {
+    fn name(&self) -> &'static str {
+        "RTN"
+    }
+
+    fn uses_hessian(&self) -> bool {
+        false
+    }
+
+    fn quantize(&self, ctx: &LayerCtx) -> QuantizedLayer {
+        rtn(ctx.name, ctx.w, ctx.cfg)
+    }
+
+    fn pack_spec(&self) -> PackSpec {
+        PackSpec::AffineGrid { grid: rtn_grid }
+    }
+}
+
+/// The RTN export grid: min-max group params of the original weights (what
+/// [`qdq_mat`] quantized against), regenerated for the serve exporter.
+pub fn rtn_grid(w: &Mat, cfg: &CalibConfig) -> Vec<GroupParams> {
+    uniform::all_group_params(w, cfg.group_size, cfg.bits)
+}
+
+/// OmniQuant-lite: per-group clip-ratio search, no weight updates.
+///
+/// `uses_hessian` is `false` even though the clip search weights its error
+/// by the Hessian *diagonal*: the quadratic objective (and the α damping
+/// sweep) is not what this backend optimizes, matching its published "tune
+/// the quantizer parameters, freeze the weights" framing.
+pub struct OmniQuant;
+
+impl CalibBackend for OmniQuant {
+    fn name(&self) -> &'static str {
+        "OmniQuant"
+    }
+
+    fn uses_hessian(&self) -> bool {
+        false
+    }
+
+    fn quantize(&self, ctx: &LayerCtx) -> QuantizedLayer {
+        omniquant_lite(ctx.name, ctx.w, ctx.hessian, ctx.cfg)
+    }
+}
+
+/// SqueezeLLM-lite: sensitivity-weighted non-uniform k-means codebooks.
+pub struct Squeeze;
+
+impl CalibBackend for Squeeze {
+    fn name(&self) -> &'static str {
+        "SqueezeLLM"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["squeeze"]
+    }
+
+    fn quantize(&self, ctx: &LayerCtx) -> QuantizedLayer {
+        squeeze(ctx.name, ctx.w, ctx.hessian, ctx.cfg)
+    }
+}
 
 /// Plain group-wise round-to-nearest.
 pub fn rtn(name: &str, w: &Mat, cfg: &CalibConfig) -> QuantizedLayer {

@@ -6,10 +6,36 @@
 //! method **OAC** (OAC_SpQR).
 
 use super::optq::{optq_core, static_params, GroupMode, OutlierPolicy};
-use super::{quad_error, CalibConfig};
+use super::{quad_error, CalibBackend, CalibConfig, LayerCtx};
 use crate::hessian::PreparedHessian;
-use crate::quant::{BitBudget, QuantizedLayer};
+use crate::quant::uniform::GroupParams;
+use crate::quant::{BitBudget, PackSpec, QuantizedLayer};
 use crate::tensor::Mat;
+
+/// SpQR (and, fed the output-adaptive Hessian, the paper's headline OAC).
+pub struct SpQR;
+
+impl CalibBackend for SpQR {
+    fn name(&self) -> &'static str {
+        "SpQR"
+    }
+
+    fn quantize(&self, ctx: &LayerCtx) -> QuantizedLayer {
+        spqr(ctx.name, ctx.w, ctx.hessian, ctx.cfg)
+    }
+
+    fn pack_spec(&self) -> PackSpec {
+        PackSpec::AffineGrid { grid: spqr_grid }
+    }
+}
+
+/// The SpQR export grid: static (second-round-quantized) group params of
+/// the original weights — exactly what [`spqr`] quantized against, so the
+/// serve exporter recovers codes bit-exactly (FP32 outliers become sparse
+/// overrides).
+pub fn spqr_grid(w: &Mat, cfg: &CalibConfig) -> Vec<GroupParams> {
+    static_params(w, cfg).0
+}
 
 pub fn spqr(name: &str, w: &Mat, hes: &PreparedHessian, cfg: &CalibConfig) -> QuantizedLayer {
     let (params, param_bits) = static_params(w, cfg);

@@ -15,7 +15,9 @@
 //!
 //! **Phase 2 — Calibration.** Each linear layer in the block is quantized
 //! by the configured backend (RTN/OPTQ/SpQR/QuIP/BiLLM/... — all dispatched
-//! through `calib::run`) using its Hessian; the dequantized weights replace
+//! through the [`crate::calib::CalibBackend`] trait object, so the
+//! coordinator never names a backend) using its Hessian; the dequantized
+//! weights replace
 //! the originals in the weight store (and therefore in every later block's
 //! Phase 1). Within a block the layers are independent given their prepared
 //! Hessians, so Phase 2 fans them out across the `--threads` worker pool
@@ -24,14 +26,15 @@
 //! shared through a [`PreparedCache`].
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::rc::Rc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
-use crate::calib::{self, CalibConfig, Method};
+use crate::calib::{CalibConfig, LayerCtx, Method};
 use crate::eval::DeviceWeights;
-use crate::hessian::{Hessian, HessianKind, PreparedCache};
+use crate::hessian::{Hessian, HessianKind, PreparedCache, Reduction};
 use crate::model::{KernelIndex, LinearSpec, ModelMeta, WeightEntry, WeightStore};
 use crate::quant::{BitBudget, QuantizedLayer};
 use crate::runtime::{literal_to_mat, Runtime};
@@ -49,7 +52,9 @@ pub enum GradPrecision {
     F16 { loss_scale: f32 },
 }
 
-/// Pipeline configuration.
+/// Pipeline configuration. Assemble one from user input with the
+/// [`Pipeline`] builder; [`PipelineConfig::new`] remains the low-level
+/// typed constructor for benches/tests.
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
     pub method: Method,
@@ -59,6 +64,9 @@ pub struct PipelineConfig {
     pub grad_precision: GradPrecision,
     /// Use the L1 Pallas kernel artifact for the Hessian contraction.
     pub use_kernel: bool,
+    /// Where to save the packed serving export (`--pack-out`); None skips
+    /// the export.
+    pub pack_out: Option<PathBuf>,
 }
 
 impl PipelineConfig {
@@ -69,7 +77,165 @@ impl PipelineConfig {
             n_calib: 24,
             grad_precision: GradPrecision::F32,
             use_kernel: true,
+            pack_out: None,
         }
+    }
+}
+
+/// Fluent front door for assembling a [`PipelineConfig`] from user input —
+/// `Pipeline::method("oac_billm")?.threads(8).pack_out("m.pack").build()?`.
+/// Replaces ad-hoc field poking at every entry point (CLI, scripts,
+/// multi-backend fan-outs) and is where method strings and `--bits` are
+/// validated against the backend registry.
+pub struct Pipeline;
+
+impl Pipeline {
+    /// Start from a method string (registry lookup: names, aliases, `oac`/
+    /// `oac_x` prefixes, case- and `-`/`_`-insensitive).
+    pub fn method(name: &str) -> Result<PipelineBuilder> {
+        let method = Method::parse(name)
+            .with_context(|| format!("unknown method `{name}` (see `oac backends`)"))?;
+        Ok(Pipeline::with(method))
+    }
+
+    /// Start from an already-typed method.
+    pub fn with(method: Method) -> PipelineBuilder {
+        PipelineBuilder {
+            method,
+            bits: None,
+            n_calib: None,
+            alpha: None,
+            group_size: None,
+            seed: None,
+            reduction: None,
+            threads: None,
+            grad_precision: None,
+            use_kernel: None,
+            pack_out: None,
+        }
+    }
+}
+
+/// Builder state for [`Pipeline`]. Unset knobs keep the
+/// [`CalibConfig::for_bits`] paper defaults.
+pub struct PipelineBuilder {
+    method: Method,
+    bits: Option<usize>,
+    n_calib: Option<usize>,
+    alpha: Option<f32>,
+    group_size: Option<usize>,
+    seed: Option<u64>,
+    reduction: Option<Reduction>,
+    threads: Option<usize>,
+    grad_precision: Option<GradPrecision>,
+    use_kernel: Option<bool>,
+    pack_out: Option<PathBuf>,
+}
+
+impl PipelineBuilder {
+    /// Weight bit width; validated against the backend's
+    /// `supported_bits()` at [`PipelineBuilder::build`]. Unset defaults to
+    /// 2 clamped into the supported range (so BiLLM defaults to 1).
+    pub fn bits(mut self, bits: usize) -> Self {
+        self.bits = Some(bits);
+        self
+    }
+
+    pub fn n_calib(mut self, n: usize) -> Self {
+        self.n_calib = Some(n);
+        self
+    }
+
+    pub fn alpha(mut self, alpha: f32) -> Self {
+        self.alpha = Some(alpha);
+        self
+    }
+
+    pub fn group_size(mut self, group_size: usize) -> Self {
+        self.group_size = Some(group_size);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn reduction(mut self, reduction: Reduction) -> Self {
+        self.reduction = Some(reduction);
+        self
+    }
+
+    /// Worker-pool width (wall-clock only — bit-identical for any value).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads.max(1));
+        self
+    }
+
+    /// Emulate the paper's FP16 gradient pipeline with this loss scale.
+    pub fn fp16_grads(mut self, loss_scale: f32) -> Self {
+        self.grad_precision = Some(GradPrecision::F16 { loss_scale });
+        self
+    }
+
+    pub fn use_kernel(mut self, use_kernel: bool) -> Self {
+        self.use_kernel = Some(use_kernel);
+        self
+    }
+
+    /// Where the packed serving export should be saved. The path is carried
+    /// on [`PipelineConfig::pack_out`] for the run driver to act on —
+    /// `oac quantize` saves via [`Coordinator::quantize_model_packed`] /
+    /// [`crate::serve::PackedModel::save`] when it is set; `run_pipeline`
+    /// and `run_synthetic` themselves never write files.
+    pub fn pack_out(mut self, path: impl Into<PathBuf>) -> Self {
+        self.pack_out = Some(path.into());
+        self
+    }
+
+    pub fn build(self) -> Result<PipelineConfig> {
+        let supported = self.method.backend.supported_bits();
+        let bits = match self.bits {
+            Some(b) => {
+                ensure!(
+                    supported.contains(&b),
+                    "{} supports {}..={} bits, got {b}",
+                    self.method.backend.name(),
+                    supported.start(),
+                    supported.end()
+                );
+                b
+            }
+            None if supported.contains(&2) => 2,
+            None => *supported.start(),
+        };
+        let mut p = PipelineConfig::new(self.method, bits);
+        if let Some(v) = self.n_calib {
+            p.n_calib = v;
+        }
+        if let Some(v) = self.alpha {
+            p.calib.alpha = v;
+        }
+        if let Some(v) = self.group_size {
+            p.calib.group_size = v;
+        }
+        if let Some(v) = self.seed {
+            p.calib.seed = v;
+        }
+        if let Some(v) = self.reduction {
+            p.calib.reduction = v;
+        }
+        if let Some(v) = self.threads {
+            p.calib.threads = v;
+        }
+        if let Some(v) = self.grad_precision {
+            p.grad_precision = v;
+        }
+        if let Some(v) = self.use_kernel {
+            p.use_kernel = v;
+        }
+        p.pack_out = self.pack_out;
+        Ok(p)
     }
 }
 
@@ -437,8 +603,9 @@ pub fn run_pipeline(
 }
 
 /// Phase 2 for one layer: fetch (or compute) the prepared Hessian from the
-/// shared cache and dispatch the configured backend. Free function so the
-/// parallel fan-out does not have to capture the (non-`Sync`) runtime.
+/// shared cache and dispatch through the backend trait object. Free
+/// function so the parallel fan-out does not have to capture the
+/// (non-`Sync`) runtime.
 fn calibrate_one(
     cache: &PreparedCache,
     ws: &WeightStore,
@@ -450,7 +617,12 @@ fn calibrate_one(
     let prepared = cache
         .get_or_prepare(&layer.name, hessian, cfg.calib.alpha, cfg.calib.reduction)
         .with_context(|| format!("preparing Hessian for {}", layer.name))?;
-    Ok(calib::run(&layer.name, &w, &prepared, cfg.method, &cfg.calib))
+    Ok(cfg.method.backend.quantize(&LayerCtx {
+        name: &layer.name,
+        w: &w,
+        hessian: &*prepared,
+        cfg: &cfg.calib,
+    }))
 }
 
 /// Phase 2 for one block: calibrate every linear layer concurrently on a
@@ -629,6 +801,32 @@ pub fn run_synthetic(spec: &SyntheticSpec, cfg: &PipelineConfig) -> Result<(Weig
     Ok((ws, report))
 }
 
+/// Run the synthetic pipeline for several methods **concurrently** on one
+/// worker pool (the paper's Table-14 shape: one model, many backends).
+/// Each method is one pool task running its own serial [`run_synthetic`]
+/// (inner `calib.threads` is forced to 1 — the pool is already saturated
+/// across methods, and nesting would oversubscribe the cores); results
+/// merge in `cfgs` order.
+///
+/// Bit-determinism: every method's `(weights, report)` is a pure function
+/// of `(spec, its cfg)` — thread counts are never a numerics knob — so the
+/// output is bit-identical to running the same configs sequentially at any
+/// `--threads`, enforced by `rust/tests/parallel.rs`.
+pub fn run_synthetic_fanout(
+    spec: &SyntheticSpec,
+    cfgs: &[PipelineConfig],
+    threads: usize,
+) -> Result<Vec<(WeightStore, QuantReport)>> {
+    let pool = Pool::new(threads);
+    pool.map(cfgs, |_, cfg| {
+        let mut c = cfg.clone();
+        c.calib.threads = 1;
+        run_synthetic(spec, &c)
+    })
+    .into_iter()
+    .collect()
+}
+
 // Keep Rc import used when compiling without tests.
 #[allow(unused)]
 type _Unused = Rc<()>;
@@ -663,7 +861,7 @@ mod tests {
             return;
         };
         let coord = Coordinator::new(&rt, &meta).unwrap();
-        let mut cfg = PipelineConfig::new(Method::oac(Backend::SpQR), 2);
+        let mut cfg = PipelineConfig::new(Method::oac(Backend::SPQR), 2);
         cfg.n_calib = 2;
         let with_kernel = coord.block_hessians(&ws, 0, &calib[..2], &cfg).unwrap();
         cfg.use_kernel = false;
@@ -687,7 +885,7 @@ mod tests {
         let splits = Splits::new(meta.vocab, Flavor::C4Analog, 7);
         let calib = splits.calibration(meta.calib_batch, meta.seq);
         let coord = Coordinator::new(&rt, &meta).unwrap();
-        for method in [Method::oac(Backend::SpQR), Method::baseline(Backend::SpQR)] {
+        for method in [Method::oac(Backend::SPQR), Method::baseline(Backend::SPQR)] {
             let mut cfg = PipelineConfig::new(method, 2);
             cfg.n_calib = calib.len();
             let fast = coord.block_hessians(&ws, 0, &calib, &cfg).unwrap();
@@ -709,7 +907,7 @@ mod tests {
             return;
         };
         let coord = Coordinator::new(&rt, &meta).unwrap();
-        let cfg = PipelineConfig::new(Method::baseline(Backend::SpQR), 2);
+        let cfg = PipelineConfig::new(Method::baseline(Backend::SPQR), 2);
         let hes = coord.block_hessians(&ws, 0, &calib[..2], &cfg).unwrap();
         // q, k, v share the same input so their Hessians must be identical.
         let q = &hes["blocks.0.q"].mat;
@@ -726,7 +924,7 @@ mod tests {
             return;
         };
         let before = ws.get_mat("blocks.0.q");
-        let mut cfg = PipelineConfig::new(Method::oac(Backend::SpQR), 2);
+        let mut cfg = PipelineConfig::new(Method::oac(Backend::SPQR), 2);
         cfg.n_calib = 2;
         let report = run_pipeline(&rt, &meta, &mut ws, &calib, &cfg).unwrap();
         let after = ws.get_mat("blocks.0.q");
@@ -747,7 +945,7 @@ mod tests {
             return;
         };
         let coord = Coordinator::new(&rt, &meta).unwrap();
-        let mut cfg = PipelineConfig::new(Method::oac(Backend::SpQR), 2);
+        let mut cfg = PipelineConfig::new(Method::oac(Backend::SPQR), 2);
         cfg.n_calib = 2;
         let f32h = coord.block_hessians(&ws, 0, &calib[..2], &cfg).unwrap();
         cfg.grad_precision = GradPrecision::F16 { loss_scale: 256.0 };

@@ -234,8 +234,10 @@ impl Default for EvalConfig {
 /// decoded onto a copy of `base` (embeddings/norms and any layer the packed
 /// store does not carry come from `base`) and evaluated through the usual
 /// artifact path. The PJRT executables take dense f32 uploads, so this is
-/// the one place the serve subsystem materializes dense weights — decoding
-/// is bit-exact, so the scores are exactly those of the calibrated model.
+/// the one place the serve subsystem materializes dense weights — every
+/// registry backend's declared [`crate::quant::PackSpec`] decodes
+/// bit-exactly (`rust/tests/serve_props.rs`), so the scores are exactly
+/// those of the calibrated model, whichever backend produced it.
 pub fn evaluate_packed(
     rt: &Runtime,
     meta: &ModelMeta,

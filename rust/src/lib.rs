@@ -32,6 +32,33 @@
 //! linear algebra ([`tensor::linalg`]: blocked Cholesky / triangular
 //! inversion over fixed column panels) and the serving path below.
 //!
+//! ## The backend registry and the pipeline builder
+//!
+//! The quantization API has exactly one extension point: the
+//! [`calib::CalibBackend`] trait. Each backend (RTN, OPTQ, SpQR, QuIP-lite,
+//! BiLLM, OmniQuant-lite, SqueezeLLM-lite, and the `magnitude-rtn` demo) is
+//! a stateless unit struct registered once in [`calib::registry`];
+//! [`calib::Backend`] is a copyable handle to a registered entry, and
+//! [`calib::Method`] = backend × Hessian kind. Everything downstream
+//! operates on trait objects:
+//!
+//! * the coordinator dispatches Phase 2 through `Backend::quantize`
+//!   (never a `match`),
+//! * the serve exporter packs from the backend's declared
+//!   [`quant::PackSpec`] (affine grid / binary planes / codebook),
+//! * the CLI resolves `--method`/`--methods` strings via registry lookup
+//!   and prints the registry with `oac backends`,
+//! * `registry::all()` powers multi-backend fan-outs
+//!   ([`coordinator::run_synthetic_fanout`], paper Table 14 style): one
+//!   model, many backends, concurrently on the worker pool, bit-identical
+//!   to sequential runs.
+//!
+//! Run configuration is assembled through the [`coordinator::Pipeline`]
+//! builder (`Pipeline::method("oac_billm")?.threads(8).pack_out(path)
+//! .build()?`), which validates method strings and `--bits` against the
+//! registry. **Adding a backend is one new module + one
+//! `register_backends!` line** — no dispatch edits anywhere else.
+//!
 //! ## The serving subsystem and the packed-weight format
 //!
 //! [`serve`] is the consumer the quantizer produces for: instead of
@@ -49,6 +76,19 @@
 //! latency/throughput/weight-bytes against the dense baseline; its output
 //! checksum is part of the `--threads` determinism contract
 //! (`rust/tests/serve_props.rs`, CI's serving smoke job).
+
+// CI denies warnings (`cargo clippy -- -D warnings`). The style lints
+// below are deliberately tolerated crate-wide: this is index-heavy numeric
+// code where explicit `for i in 0..n` loops mirror the math they implement,
+// and the kernel/coordinator call surfaces legitimately carry many
+// parameters.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::manual_memcpy,
+    clippy::uninlined_format_args
+)]
 
 pub mod calib;
 pub mod coordinator;

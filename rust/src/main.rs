@@ -2,33 +2,44 @@
 //!
 //! Subcommands:
 //!   info      — model configs, artifacts, kernel inventory
+//!   backends  — print the calibration-backend registry
 //!   train     — train a checkpoint via the AOT train_step artifact
 //!   quantize  — run a PTQ method (Algorithm 1) on a checkpoint
 //!   serve     — batched inference on packed quantized weights
 //!   eval      — perplexity + task accuracy of a checkpoint
 //!   sweep     — α regularization sweep (paper Table 4 style)
+//!
+//! All method handling goes through the backend registry
+//! (`oac::calib::registry`) and the `Pipeline` builder — this file never
+//! names an individual backend.
 
 use anyhow::{Context, Result};
 
-use oac::calib::Method;
+use oac::calib::registry;
 use oac::coordinator::{
-    run_pipeline, run_synthetic, Coordinator, GradPrecision, PipelineConfig, SyntheticSpec,
+    run_pipeline, run_synthetic, run_synthetic_fanout, Coordinator, Pipeline, PipelineBuilder,
+    PipelineConfig, SyntheticSpec,
 };
 use oac::data::{Flavor, Splits, TestSplit};
 use oac::eval::{evaluate, evaluate_packed, EvalConfig};
 use oac::experiments::{artifacts_root, baseline_row, method_row, ROW_HEADERS};
+use oac::hessian::Reduction;
 use oac::model::{ModelMeta, WeightStore};
 use oac::report::Table;
 use oac::runtime::Runtime;
 use oac::serve::{engine::ServeConfig, PackedModel};
 use oac::train::{train, TrainConfig};
 use oac::util::cli::Args;
+use oac::util::json::Json;
 
 const USAGE: &str = "\
 oac — Output-adaptive Calibration for post-training quantization (AAAI'25 repro)
 
 USAGE:
   oac info     [--config tiny]
+  oac backends [--json]
+               (print the calibration-backend registry: names, aliases,
+                supported bits, Hessian use, packed-export scheme)
   oac train    --config small --steps 300 --out checkpoints/small.bin [--lr 1e-3] [--seed 0]
   oac quantize --config small --ckpt IN.bin --method oac --bits 2 [--out OUT.bin]
                [--n-calib 16] [--alpha 0.1] [--group 16] [--fp16-grads SCALE]
@@ -39,6 +50,10 @@ USAGE:
                [--seed 0] [--out OUT.bin] [--pack-out MODEL.pack]
                (artifact-free synthetic model; prints a bitwise checksum —
                 bit-identical for every --threads value)
+  oac quantize --synthetic --methods rtn,optq,oac_spqr [--threads 4] ...
+               (fan one synthetic run out across several backends
+                concurrently on the pool; one comparative report, each
+                method's checksum bit-identical to its sequential run)
   oac serve    --synthetic [--batch 4] [--requests 16] [--threads 4] [--method oac]
                [--bits 2] [--blocks 2] [--d-model 64] [--d-ff 128] [--seed 0]
                (quantize the synthetic model, export packed codes, and run the
@@ -50,7 +65,8 @@ USAGE:
                [--packed MODEL.pack]
   oac sweep    --config tiny  --ckpt IN.bin --method oac --bits 2 [--alphas 0.001,0.01,0.1,1]
 
-Methods: rtn optq omniquant quip spqr billm squeeze oac oac_optq oac_quip oac_billm
+Methods (see `oac backends` for the live registry): rtn optq omniquant quip
+spqr billm squeeze magnitude-rtn oac oac_optq oac_quip oac_billm
 ";
 
 fn main() {
@@ -69,27 +85,41 @@ fn splits_for(meta: &ModelMeta, args: &Args) -> Splits {
     Splits::new(meta.vocab, flavor, args.u64_or("seed", 0))
 }
 
-fn pipeline_from_args(args: &Args) -> Result<PipelineConfig> {
-    let method = Method::parse(&args.str_or("method", "oac"))
-        .context("unknown --method (see `oac` usage)")?;
-    let bits = args.usize_or("bits", 2);
-    let mut p = PipelineConfig::new(method, bits);
-    p.n_calib = args.usize_or("n-calib", 16);
-    p.calib.alpha = args.f32_or("alpha", p.calib.alpha);
-    p.calib.group_size = args.usize_or("group", p.calib.group_size);
-    p.calib.seed = args.u64_or("seed", 0);
+/// Layer the CLI flags onto a [`PipelineBuilder`] (shared by the
+/// single-method and `--methods` fan-out paths). Flags that are absent
+/// leave the builder's paper defaults untouched.
+fn apply_pipeline_args(mut b: PipelineBuilder, args: &Args) -> Result<PipelineBuilder> {
+    if let Some(v) = args.get("bits") {
+        b = b.bits(v.parse().context("--bits expects an integer")?);
+    }
+    b = b.n_calib(args.usize_or("n-calib", 16));
+    if let Some(v) = args.get("alpha") {
+        b = b.alpha(v.parse().context("--alpha expects a float")?);
+    }
+    if let Some(v) = args.get("group") {
+        b = b.group_size(v.parse().context("--group expects an integer")?);
+    }
+    b = b.seed(args.u64_or("seed", 0));
     if args.str_or("reduction", "sum") == "mean" {
-        p.calib.reduction = oac::hessian::Reduction::Mean;
+        b = b.reduction(Reduction::Mean);
     }
     if let Some(scale) = args.get("fp16-grads") {
-        p.grad_precision = GradPrecision::F16 { loss_scale: scale.parse()? };
+        b = b.fp16_grads(scale.parse().context("--fp16-grads expects a float")?);
     }
     if args.flag("no-kernel") {
-        p.use_kernel = false;
+        b = b.use_kernel(false);
+    }
+    if let Some(p) = args.get("pack-out") {
+        b = b.pack_out(p);
     }
     // --threads N: Phase-2 fan-out width + the global pool for the sharded
     // tensor reductions. Bit-identical output for every N (see util::pool).
-    p.calib.threads = args.threads();
+    Ok(b.threads(args.threads()))
+}
+
+fn pipeline_from_args(args: &Args) -> Result<PipelineConfig> {
+    let b = apply_pipeline_args(Pipeline::method(&args.str_or("method", "oac"))?, args)?;
+    let p = b.build()?;
     oac::util::pool::set_threads(p.calib.threads);
     Ok(p)
 }
@@ -104,10 +134,13 @@ fn eval_cfg_from_args(args: &Args) -> EvalConfig {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["eval", "far", "no-kernel", "help", "synthetic", "no-baseline"]);
+    let args = Args::from_env(&[
+        "eval", "far", "no-kernel", "help", "synthetic", "no-baseline", "json",
+    ]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "info" => info(&args),
+        "backends" => cmd_backends(&args),
         "train" => cmd_train(&args),
         "quantize" => cmd_quantize(&args),
         "serve" => cmd_serve(&args),
@@ -118,6 +151,53 @@ fn run() -> Result<()> {
             Ok(())
         }
     }
+}
+
+/// `oac backends`: print the registry — the live list of everything
+/// `--method`/`--methods` accepts — as a table or (`--json`) a machine-
+/// readable array.
+fn cmd_backends(args: &Args) -> Result<()> {
+    if args.flag("json") {
+        let arr: Vec<Json> = registry::all()
+            .iter()
+            .map(|b| {
+                let bits = b.supported_bits();
+                Json::obj(vec![
+                    ("name", Json::str(b.name())),
+                    ("aliases", Json::arr(b.aliases().iter().map(|a| Json::str(*a)).collect())),
+                    ("bits_min", Json::num(*bits.start() as f64)),
+                    ("bits_max", Json::num(*bits.end() as f64)),
+                    ("uses_hessian", Json::Bool(b.uses_hessian())),
+                    ("pack_scheme", Json::str(b.pack_spec().label())),
+                ])
+            })
+            .collect();
+        println!("{}", Json::arr(arr));
+        return Ok(());
+    }
+    let mut t = Table::new(
+        "registered calibration backends",
+        &["Name", "Aliases", "Bits", "Hessian", "Pack scheme"],
+    );
+    for b in registry::all() {
+        let bits = b.supported_bits();
+        t.row(vec![
+            b.name().to_string(),
+            b.aliases().join(","),
+            if bits.start() == bits.end() {
+                format!("{}", bits.start())
+            } else {
+                format!("{}-{}", bits.start(), bits.end())
+            },
+            if b.uses_hessian() { "yes" } else { "no" }.to_string(),
+            b.pack_spec().label().to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "method strings: NAME (baseline Hessian) or oac_NAME (output-adaptive); `oac` = oac_spqr."
+    );
+    Ok(())
 }
 
 /// The synthetic model spec shared by `quantize --synthetic` and
@@ -186,23 +266,80 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `oac quantize --synthetic --methods a,b,c`: fan one synthetic run out
+/// across several backends concurrently on the worker pool (the paper's
+/// Table-14 shape) and emit one comparative report. Each method's checksum
+/// is bit-identical to its own sequential `--method` run — the fan-out is
+/// a scheduling choice, never a numerics one.
+fn cmd_quantize_synthetic_multi(args: &Args, list: &str) -> Result<()> {
+    anyhow::ensure!(
+        args.get("pack-out").is_none(),
+        "--pack-out needs a single --method (run the fan-out without it)"
+    );
+    anyhow::ensure!(
+        args.get("out").is_none(),
+        "--out needs a single --method (the fan-out emits a comparative report, not a checkpoint)"
+    );
+    let mut cfgs = Vec::new();
+    for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        cfgs.push(apply_pipeline_args(Pipeline::method(name)?, args)?.build()?);
+    }
+    anyhow::ensure!(!cfgs.is_empty(), "--methods expects a comma-separated list");
+    let threads = args.threads();
+    oac::util::pool::set_threads(threads);
+    let spec = synthetic_spec_from_args(args);
+    let t = std::time::Instant::now();
+    let results = run_synthetic_fanout(&spec, &cfgs, threads)?;
+    println!(
+        "fanout: methods={} threads={threads} total={:.2}s",
+        cfgs.len(),
+        t.elapsed().as_secs_f64()
+    );
+    let mut table = Table::new(
+        "multi-backend fan-out (synthetic)",
+        &["Method", "Avg Bits", "Outliers", "Checksum"],
+    );
+    for (ws, report) in &results {
+        println!(
+            "method={} avg_bits={:.2} outliers={} threads={threads} checksum={:016x}",
+            report.method,
+            report.avg_bits,
+            report.total_outliers,
+            ws.fingerprint()
+        );
+        table.row(vec![
+            report.method.clone(),
+            format!("{:.2}", report.avg_bits),
+            report.total_outliers.to_string(),
+            format!("{:016x}", ws.fingerprint()),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
 /// `oac quantize --synthetic`: the artifact-free pipeline — seeded random
 /// weights + Hessian contributions through the same parallel Phase-2 engine.
 /// Prints a bitwise checksum of the quantized weights so callers (and the
 /// integration tests) can verify `--threads N` ≡ `--threads 1`.
 fn cmd_quantize_synthetic(args: &Args) -> Result<()> {
+    if let Some(list) = args.get("methods") {
+        let list = list.to_string();
+        return cmd_quantize_synthetic_multi(args, &list);
+    }
     let p = pipeline_from_args(args)?;
     let spec = synthetic_spec_from_args(args);
     let t = std::time::Instant::now();
     let (ws, report) = run_synthetic(&spec, &p)?;
-    if let Some(pack_path) = args.get("pack-out") {
+    if let Some(pack_path) = &p.pack_out {
         let original = oac::coordinator::synthetic_weights(&spec);
         let layers = oac::coordinator::synthetic_layers(&spec);
         let packed =
             PackedModel::from_quantized(&layers, &original, &ws, p.method, &p.calib)?;
         packed.save(pack_path)?;
         println!(
-            "saved packed model to {pack_path} ({} packed vs {} dense bytes)",
+            "saved packed model to {} ({} packed vs {} dense bytes)",
+            pack_path.display(),
             packed.packed_bytes(),
             packed.dense_bytes()
         );
@@ -236,6 +373,11 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     if args.flag("synthetic") {
         return cmd_quantize_synthetic(args);
     }
+    anyhow::ensure!(
+        args.get("methods").is_none(),
+        "--methods is synthetic-only today (add --synthetic, or run the artifact path with a \
+         single --method)"
+    );
     let config = args.str_or("config", "tiny");
     let meta = ModelMeta::load(artifacts_root(), &config)?;
     let rt = Runtime::new()?;
@@ -247,11 +389,12 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     let calib = splits.calibration(p.n_calib, meta.seq);
     let t = std::time::Instant::now();
     let coord = Coordinator::new(&rt, &meta)?;
-    let report = if let Some(pack_path) = args.get("pack-out") {
+    let report = if let Some(pack_path) = &p.pack_out {
         let (packed, report) = coord.quantize_model_packed(&mut ws, &calib, &p)?;
         packed.save(pack_path)?;
         println!(
-            "saved packed model to {pack_path} ({} packed vs {} dense bytes)",
+            "saved packed model to {} ({} packed vs {} dense bytes)",
+            pack_path.display(),
             packed.packed_bytes(),
             packed.dense_bytes()
         );
@@ -415,7 +558,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 mod tests {
     #[test]
     fn usage_mentions_all_commands() {
-        for cmd in ["info", "train", "quantize", "serve", "eval", "sweep"] {
+        for cmd in ["info", "backends", "train", "quantize", "serve", "eval", "sweep"] {
             assert!(super::USAGE.contains(cmd), "{cmd} missing from usage");
         }
     }
@@ -427,5 +570,27 @@ mod tests {
             &[],
         );
         assert!(super::pipeline_from_args(&args).is_err());
+    }
+
+    #[test]
+    fn unsupported_bits_is_error() {
+        // BiLLM registers 1..=1; the builder must reject --bits 4.
+        let args = super::Args::parse(
+            &["quantize".into(), "--method".into(), "billm".into(), "--bits".into(), "4".into()],
+            &[],
+        );
+        let err = super::pipeline_from_args(&args).unwrap_err();
+        assert!(format!("{err:#}").contains("BiLLM"), "{err:#}");
+    }
+
+    #[test]
+    fn hyphenated_method_strings_parse() {
+        for m in ["magnitude-rtn", "oac-billm", "OAC_OPTQ"] {
+            let args = super::Args::parse(
+                &["quantize".into(), "--method".into(), m.into()],
+                &[],
+            );
+            assert!(super::pipeline_from_args(&args).is_ok(), "{m}");
+        }
     }
 }

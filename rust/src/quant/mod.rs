@@ -1,7 +1,8 @@
 //! Quantizers: group-wise uniform (RTN core), bit packing, second-round
 //! scale/zero quantization (SpQR), binarization with residual approximation
-//! (BiLLM), sensitivity-weighted non-uniform k-means (SqueezeLLM-lite), and
-//! average-bit accounting.
+//! (BiLLM), sensitivity-weighted non-uniform k-means (SqueezeLLM-lite),
+//! average-bit accounting, and the [`PackSpec`] declaration each
+//! calibration backend publishes for the packed serving export.
 
 pub mod binary;
 pub mod nonuniform;
@@ -9,7 +10,51 @@ pub mod packing;
 pub mod scale_quant;
 pub mod uniform;
 
+use crate::calib::CalibConfig;
+use crate::quant::uniform::GroupParams;
 use crate::tensor::Mat;
+
+/// Recover the affine export grid of a backend from the *original*
+/// (pre-quantization) weights — must be a pure function of `(w, cfg)` so the
+/// serve exporter can regenerate exactly the grid calibration quantized
+/// against.
+pub type GridFn = fn(&Mat, &CalibConfig) -> Vec<GroupParams>;
+
+/// How a backend's calibrated output is exported into the packed serving
+/// store ([`crate::serve::PackedModel::from_quantized`]). Declared by each
+/// [`crate::calib::CalibBackend`] via `pack_spec()`, so the serve exporter
+/// needs no per-backend knowledge: it packs purely from the spec.
+///
+/// Every scheme is **bit-exact**: decoding the packed layer reproduces the
+/// calibrated weights bit-for-bit (non-representable residues are kept as
+/// sparse FP32 overrides).
+#[derive(Clone, Copy, Debug)]
+pub enum PackSpec {
+    /// Group-wise affine codes recovered against `grid(original_w, cfg)` —
+    /// the RTN/SpQR family, whose group grid is a pure function of the
+    /// original weights.
+    AffineGrid { grid: GridFn },
+    /// Two-plane residual binarization with per-row `(α₁, α₂)`
+    /// ([`crate::serve::encode_binary_calibrated`]).
+    BinaryPlanes,
+    /// Universal exact capture: per-row codebook of ≤ 256 distinct f32
+    /// levels. The fallback for backends whose grid is not recoverable
+    /// after calibration (OPTQ's dynamic groups, QuIP's rotated space);
+    /// fails cleanly on rows with more distinct values than a u8 code
+    /// addresses.
+    Codebook,
+}
+
+impl PackSpec {
+    /// Short scheme label for the `oac backends` listing.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PackSpec::AffineGrid { .. } => "affine-grid",
+            PackSpec::BinaryPlanes => "binary-planes",
+            PackSpec::Codebook => "codebook",
+        }
+    }
+}
 
 /// Bit-budget accounting for one quantized weight matrix, mirroring SpQR's
 /// "average bits" metric (paper Tables 1-2 column "Avg Bits"):

@@ -255,7 +255,7 @@ mod tests {
 
     fn small_model() -> PackedModel {
         let spec = SyntheticSpec { blocks: 1, d_model: 32, d_ff: 64, ..SyntheticSpec::default() };
-        let cfg = PipelineConfig::new(Method::baseline(Backend::Rtn), 2);
+        let cfg = PipelineConfig::new(Method::baseline(Backend::RTN), 2);
         super::super::build_synthetic(&spec, &cfg).unwrap().0
     }
 

@@ -12,7 +12,9 @@
 //! * [`PackedModel`] — the named collection of packed layers, buildable
 //!   from the synthetic pipeline ([`build_synthetic`]), exportable from a
 //!   calibrated run ([`PackedModel::from_quantized`] — bit-exact: decoding
-//!   reproduces the calibrated weights), and serializable
+//!   reproduces the calibrated weights; driven entirely by the backend's
+//!   declared [`crate::quant::PackSpec`], so new registry backends export
+//!   with zero edits here), and serializable
 //!   ([`PackedModel::save`]/[`PackedModel::load`]).
 //! * [`engine`] — the batched request engine behind `oac serve`.
 //!
@@ -41,11 +43,12 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::calib::{Backend, CalibConfig, Method};
+use crate::calib::{CalibConfig, Method};
 use crate::coordinator::{self, PipelineConfig, QuantReport, SyntheticSpec};
 use crate::model::{LinearSpec, WeightStore};
 use crate::quant::packing;
 use crate::quant::uniform::{self, GroupParams};
+use crate::quant::PackSpec;
 use crate::tensor::{gemm_row_into, Mat};
 use crate::util::digest;
 use crate::util::pool::{chunk_ranges, Pool};
@@ -319,35 +322,62 @@ pub fn encode_with_params(
     }
 }
 
-/// Encode a raw matrix with two-pass residual binarization. Decoding is
-/// bit-identical to [`crate::quant::binary::residual_binarize`] applied per
-/// row.
-pub fn encode_binary(name: &str, w: &Mat) -> PackedLinear {
-    let mut planes = Vec::with_capacity(2 * w.rows * w.cols);
-    let mut alphas = Vec::with_capacity(w.rows);
-    for r in 0..w.rows {
-        let (a1, a2, _) = crate::quant::binary::residual_binarize(w.row(r));
-        // Plane 1: sign of w; plane 2: sign of the pass-1 residual. Rust's
-        // `f32::signum` maps ±0.0 to ±1.0 (never 0), so one bit per plane
-        // captures `residual_binarize`'s α·signum(·) terms exactly — zeros
-        // included.
-        for &v in w.row(r) {
+/// Shared two-plane residual-binarization encoder: per-row `(α₁, α₂)` +
+/// two 1-bit sign planes, refit from `m` by the
+/// [`residual_binarize`](crate::quant::binary::residual_binarize) rule.
+/// Plane 1 is the sign of the value, plane 2 the sign of the pass-1
+/// residual; Rust's `f32::signum` maps ±0.0 to ±1.0 (never 0), so one bit
+/// per plane captures each α·signum(·) term exactly — zeros included. When
+/// `exact`, every element whose two-plane reconstruction is not
+/// bit-identical to `m` becomes a sparse FP32 override.
+fn encode_binary_planes(name: &str, m: &Mat, exact: bool) -> PackedLinear {
+    let mut planes = Vec::with_capacity(2 * m.rows * m.cols);
+    let mut alphas = Vec::with_capacity(m.rows);
+    let mut outliers = Vec::new();
+    for r in 0..m.rows {
+        let (a1, a2, approx) = crate::quant::binary::residual_binarize(m.row(r));
+        for &v in m.row(r) {
             planes.push(if v.signum() == 1.0 { 1u8 } else { 0 });
         }
-        for &v in w.row(r) {
+        for &v in m.row(r) {
             let resid = v - a1 * v.signum();
             planes.push(if resid.signum() == 1.0 { 1u8 } else { 0 });
+        }
+        if exact {
+            for (c, (&v, &recon)) in m.row(r).iter().zip(&approx).enumerate() {
+                if recon.to_bits() != v.to_bits() {
+                    outliers.push((r as u32, c as u32, v));
+                }
+            }
         }
         alphas.push((a1, a2));
     }
     PackedLinear {
         name: name.to_string(),
-        rows: w.rows,
-        cols: w.cols,
+        rows: m.rows,
+        cols: m.cols,
         scheme: PackScheme::Binary { alphas },
         codes: packing::pack(&planes, 1),
-        outliers: Vec::new(),
+        outliers,
     }
+}
+
+/// Encode a raw matrix with two-pass residual binarization. Decoding is
+/// bit-identical to [`crate::quant::binary::residual_binarize`] applied per
+/// row (the *approximation* of `w`, not `w` itself — no overrides).
+pub fn encode_binary(name: &str, w: &Mat) -> PackedLinear {
+    encode_binary_planes(name, w, false)
+}
+
+/// Exact two-plane residual-binarization capture of a *calibrated* matrix
+/// (the [`PackSpec::BinaryPlanes`] export path): refit alphas/planes plus
+/// sparse FP32 overrides wherever the reconstruction is not bit-identical —
+/// so decoding reproduces `dq` exactly even where calibration moved values
+/// off the ±α₁±α₂ grid. No in-repo backend declares `BinaryPlanes` today
+/// (BiLLM's bell-split output needs the codebook), but the scheme is part
+/// of the [`PackSpec`] contract for future pure-binary backends.
+pub fn encode_binary_calibrated(name: &str, dq: &Mat) -> PackedLinear {
+    encode_binary_planes(name, dq, true)
 }
 
 /// Exact per-row codebook capture: encodes *any* matrix with at most 256
@@ -486,16 +516,18 @@ impl PackedModel {
         }
     }
 
-    /// Export the linear layers of a calibrated run. `original` holds the
-    /// pre-quantization weights (RTN/SpQR group grids are pure functions of
-    /// them); `quantized` the calibrated output. The export is **exact**:
-    /// every layer's decode reproduces the calibrated weights bit-for-bit —
-    /// via recovered affine codes + FP32 outliers where the grid is known,
-    /// via per-row codebook capture otherwise.
+    /// Export the linear layers of a calibrated run, driven purely by the
+    /// backend's declared [`PackSpec`] — no per-backend knowledge lives
+    /// here. `original` holds the pre-quantization weights (an
+    /// `AffineGrid` spec regenerates its grid from them); `quantized` the
+    /// calibrated output. The export is **exact**: every layer's decode
+    /// reproduces the calibrated weights bit-for-bit — via recovered
+    /// affine codes, refit binary planes, or per-row codebook capture,
+    /// with FP32 overrides for anything non-representable.
     ///
-    /// Scale caveat: the codebook fallback (every backend except RTN/SpQR)
-    /// needs ≤ 256 distinct values per row, which holds at synthetic/toy
-    /// widths but fails cleanly (with a per-layer error) once
+    /// Scale caveat: the codebook scheme needs ≤ 256 distinct values per
+    /// row, which holds at synthetic/toy widths but fails cleanly (with
+    /// the layer and backend named in the error) once
     /// `cols / group_size × 2^bits` grows past it — widening the code word
     /// or going per-group is a ROADMAP lever.
     pub fn from_quantized(
@@ -508,19 +540,15 @@ impl PackedModel {
         let mut packed = Vec::with_capacity(layers.len());
         for l in layers {
             let dq = quantized.get_mat(&l.name);
-            let pl = match method.backend {
-                Backend::Rtn => {
+            let pl = match method.backend.pack_spec() {
+                PackSpec::AffineGrid { grid } => {
                     let w = original.get_mat(&l.name);
-                    let params = uniform::all_group_params(&w, cfg.group_size, cfg.bits);
-                    encode_with_params(&l.name, &dq, params, cfg.group_size, cfg.bits)
+                    encode_with_params(&l.name, &dq, grid(&w, cfg), cfg.group_size, cfg.bits)
                 }
-                Backend::SpQR => {
-                    let w = original.get_mat(&l.name);
-                    let (params, _) = crate::calib::optq::static_params(&w, cfg);
-                    encode_with_params(&l.name, &dq, params, cfg.group_size, cfg.bits)
-                }
-                _ => encode_codebook(&l.name, &dq)
-                    .with_context(|| format!("exporting {} ({:?})", l.name, method.backend))?,
+                PackSpec::BinaryPlanes => encode_binary_calibrated(&l.name, &dq),
+                PackSpec::Codebook => encode_codebook(&l.name, &dq).with_context(|| {
+                    format!("exporting {} ({})", l.name, method.backend.name())
+                })?,
             };
             packed.push(pl);
         }
@@ -748,6 +776,22 @@ mod tests {
             want.row_mut(r).copy_from_slice(&approx);
         }
         assert_eq!(bits_of(&pl.dequantize()), bits_of(&want));
+    }
+
+    #[test]
+    fn binary_calibrated_capture_is_exact() {
+        // A matrix already of exact two-plane form round-trips with no
+        // overrides (alternating ±1 rows: α₁ = 1 exactly, α₂ = 0, and
+        // ±1.0 + ±0.0 reconstructs each value bit-for-bit)...
+        let ideal = Mat::from_fn(4, 16, |r, c| if (r + c) % 2 == 0 { 1.0 } else { -1.0 });
+        let pl = encode_binary_calibrated("b", &ideal);
+        assert!(pl.outliers.is_empty(), "{} overrides", pl.outliers.len());
+        assert_eq!(bits_of(&pl.dequantize()), bits_of(&ideal));
+        // ...and arbitrary matrices still decode bit-exactly via overrides.
+        let mut rng = Rng::new(8);
+        let w = randmat(&mut rng, 5, 24);
+        let pl = encode_binary_calibrated("b2", &w);
+        assert_eq!(bits_of(&pl.dequantize()), bits_of(&w));
     }
 
     #[test]

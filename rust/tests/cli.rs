@@ -141,7 +141,7 @@ fn quantized_model_ppl_ordering() {
         let original = synthetic_weights(&spec);
         let layers = synthetic_layers(&spec);
         let mse_at = |bits: usize| -> f64 {
-            let cfg = PipelineConfig::new(Method::baseline(Backend::Rtn), bits);
+            let cfg = PipelineConfig::new(Method::baseline(Backend::RTN), bits);
             let (ws, report) = run_synthetic(&spec, &cfg).unwrap();
             assert!(report.avg_bits >= bits as f64, "{}", report.avg_bits);
             layers
@@ -180,7 +180,7 @@ fn quantized_model_ppl_ordering() {
 
     let mut ppl_at = |bits: usize| -> f64 {
         let mut ws = trained.clone();
-        let p = PipelineConfig::new(Method::baseline(Backend::Rtn), bits);
+        let p = PipelineConfig::new(Method::baseline(Backend::RTN), bits);
         run_pipeline(&rt, &meta, &mut ws, &calib, &p).unwrap();
         evaluate(&rt, &meta, &ws, &splits, &ecfg).unwrap().ppl_in_domain
     };

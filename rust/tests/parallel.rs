@@ -4,8 +4,8 @@
 //! contract (fixed shard geometry + fixed merge order — see `util::pool`),
 //! so the comparisons below are on raw f32 bit patterns, not tolerances.
 
-use oac::calib::{Backend, Method};
-use oac::coordinator::{run_synthetic, PipelineConfig, SyntheticSpec};
+use oac::calib::{Backend, LayerCtx, Method};
+use oac::coordinator::{run_synthetic, run_synthetic_fanout, PipelineConfig, SyntheticSpec};
 use oac::hessian::{Hessian, HessianKind, PreparedCache, Reduction};
 use oac::tensor::{linalg, Mat};
 use oac::util::pool::Pool;
@@ -157,9 +157,9 @@ fn prop_linalg_bit_identical_across_thread_counts() {
 fn synthetic_pipeline_bit_identical_across_thread_counts() {
     let spec = SyntheticSpec::default();
     for method in [
-        Method::oac(Backend::SpQR),
-        Method::baseline(Backend::Optq),
-        Method::baseline(Backend::Rtn),
+        Method::oac(Backend::SPQR),
+        Method::baseline(Backend::OPTQ),
+        Method::baseline(Backend::RTN),
     ] {
         let mut reference: Option<(u64, f64, usize, Vec<u64>)> = None;
         for t in THREAD_COUNTS {
@@ -194,9 +194,49 @@ fn cache_does_not_change_results() {
     let cached = cache.get_or_prepare("l", &h, cfg.alpha, Reduction::Sum).unwrap();
     assert_eq!(cache.hits(), 1);
 
-    let method = Method::oac(Backend::SpQR);
-    let a = oac::calib::run("l", &w, &fresh, method, &cfg);
-    let b = oac::calib::run("l", &w, &cached, method, &cfg);
+    let method = Method::oac(Backend::SPQR);
+    let a = method
+        .backend
+        .quantize(&LayerCtx { name: "l", w: &w, hessian: &fresh, cfg: &cfg });
+    let b = method
+        .backend
+        .quantize(&LayerCtx { name: "l", w: &w, hessian: &cached, cfg: &cfg });
     assert_eq!(bits(&a.dq), bits(&b.dq));
     assert_eq!(a.calib_error.to_bits(), b.calib_error.to_bits());
+}
+
+/// Multi-backend fan-out (`run_synthetic_fanout`): running several methods
+/// concurrently on one pool must be bit-identical to running each method
+/// sequentially on its own, for every outer thread count — the fan-out is
+/// a scheduling choice, never a numerics one.
+#[test]
+fn multi_backend_fanout_bit_identical_to_sequential() {
+    let spec = SyntheticSpec::default();
+    let cfgs: Vec<PipelineConfig> = [
+        PipelineConfig::new(Method::baseline(Backend::RTN), 2),
+        PipelineConfig::new(Method::baseline(Backend::OPTQ), 2),
+        PipelineConfig::new(Method::oac(Backend::SPQR), 2),
+    ]
+    .into_iter()
+    .map(|mut c| {
+        c.calib.threads = 4; // fan-out must override this to stay unnested
+        c
+    })
+    .collect();
+
+    let mut want = Vec::new();
+    for cfg in &cfgs {
+        let mut c = cfg.clone();
+        c.calib.threads = 1;
+        let (ws, report) = run_synthetic(&spec, &c).unwrap();
+        want.push((ws.fingerprint(), report.avg_bits.to_bits(), report.total_outliers));
+    }
+    for threads in THREAD_COUNTS {
+        let got: Vec<_> = run_synthetic_fanout(&spec, &cfgs, threads)
+            .unwrap()
+            .iter()
+            .map(|(ws, r)| (ws.fingerprint(), r.avg_bits.to_bits(), r.total_outliers))
+            .collect();
+        assert_eq!(want, got, "fanout diverged at {threads} threads");
+    }
 }

@@ -1,11 +1,58 @@
 //! Property tests for the quantization round-trip invariants (via the
 //! `util::prop` substrate): bit packing is lossless for binary and 2/3/4-bit
-//! codes, and uniform quantize–dequantize stays within one quantization step
-//! of the clamp range.
+//! codes, uniform quantize–dequantize stays within one quantization step
+//! of the clamp range, and method-name strings round-trip through the
+//! backend registry for every backend × Hessian kind.
 
+use oac::calib::{registry, Method};
 use oac::quant::packing::{pack, packed_size, unpack};
 use oac::quant::uniform::{dequantize, group_params, qdq, quantize};
 use oac::util::prop::{check, PropConfig};
+
+#[test]
+fn prop_method_name_roundtrips_through_parse_under_mangling() {
+    // For every registered backend × Hessian kind, `Method::parse` inverts
+    // `Method::name` — and stays the identity under the spellings users
+    // type: random per-character case flips and `_` ↔ `-` swaps.
+    check(
+        "Method::parse inverts Method::name for every backend × kind",
+        PropConfig { cases: 128, seed: 0x0AC9 },
+        |rng| {
+            let backends = registry::all();
+            let backend = backends[rng.below(backends.len())];
+            let m = if rng.below(2) == 0 {
+                Method::baseline(backend)
+            } else {
+                Method::oac(backend)
+            };
+            let mut mangled = String::new();
+            for c in m.name().chars() {
+                let c = if rng.below(2) == 0 {
+                    c.to_ascii_lowercase()
+                } else {
+                    c.to_ascii_uppercase()
+                };
+                mangled.push(if c == '_' && rng.below(2) == 0 { '-' } else { c });
+            }
+            (m, mangled)
+        },
+        |(m, mangled)| match Method::parse(mangled) {
+            Some(got) if got == *m => Ok(()),
+            other => Err(format!("{mangled:?} parsed to {other:?}, want {m:?}")),
+        },
+    );
+}
+
+#[test]
+fn aliases_resolve_to_their_backend() {
+    for &backend in registry::all() {
+        for alias in backend.aliases() {
+            assert_eq!(Method::parse(alias), Some(Method::baseline(backend)), "{alias}");
+            let oac_spelling = format!("oac_{alias}");
+            assert_eq!(Method::parse(&oac_spelling), Some(Method::oac(backend)), "{oac_spelling}");
+        }
+    }
+}
 
 #[test]
 fn prop_pack_unpack_lossless_for_shipped_widths() {

@@ -11,10 +11,11 @@
 //!    synthetic run must decode to exactly the weights the calibration
 //!    produced, for every servable backend.
 
-use oac::calib::{Backend, Method};
+use oac::calib::{registry, Backend, CalibConfig, Method};
 use oac::coordinator::{
     run_synthetic, synthetic_layers, synthetic_weights, PipelineConfig, SyntheticSpec,
 };
+use oac::model::{LinearSpec, WeightEntry, WeightStore};
 use oac::quant::uniform;
 use oac::serve::{self, engine, PackedModel};
 use oac::tensor::Mat;
@@ -128,37 +129,64 @@ fn prop_codebook_forward_bit_identical() {
 
 #[test]
 fn export_reproduces_calibrated_weights_bit_for_bit() {
-    // Every servable backend: the packed export of a calibrated synthetic
-    // run decodes to exactly the weights calibration wrote back.
-    for (method, bits) in [
-        (Method::baseline(Backend::Rtn), 2usize),
-        (Method::baseline(Backend::SpQR), 2),
-        (Method::oac(Backend::SpQR), 2),
-        (Method::oac(Backend::Optq), 2),
-        (Method::baseline(Backend::OmniQuant), 2),
-        (Method::baseline(Backend::Squeeze), 3),
-        (Method::oac(Backend::BiLLM), 1),
-        (Method::baseline(Backend::Quip), 2),
-    ] {
-        let spec = SyntheticSpec { blocks: 1, ..SyntheticSpec::default() };
-        let cfg = PipelineConfig::new(method, bits);
-        let original = synthetic_weights(&spec);
-        let (quantized, _) = run_synthetic(&spec, &cfg).unwrap();
-        let layers = synthetic_layers(&spec);
-        let model =
-            PackedModel::from_quantized(&layers, &original, &quantized, method, &cfg.calib)
-                .unwrap_or_else(|e| panic!("{method:?}: export failed: {e:#}"));
-        for l in &layers {
-            let dq = quantized.get_mat(&l.name);
-            let dec = model.get(&l.name).dequantize();
-            assert_eq!(
-                bits_of(&dec),
-                bits_of(&dq),
-                "{method:?}: {} decode != calibrated weights",
-                l.name
-            );
+    // Registry-driven: EVERY registered backend × both Hessian kinds — the
+    // packed export of a calibrated synthetic run decodes to exactly the
+    // weights calibration wrote back, purely via the backend's declared
+    // `pack_spec()`. A backend added to the registry is covered here with
+    // zero test edits.
+    for &backend in registry::all() {
+        let supported = backend.supported_bits();
+        let bits = if supported.contains(&2) { 2 } else { *supported.start() };
+        for method in [Method::baseline(backend), Method::oac(backend)] {
+            let spec = SyntheticSpec { blocks: 1, ..SyntheticSpec::default() };
+            let cfg = PipelineConfig::new(method, bits);
+            let original = synthetic_weights(&spec);
+            let (quantized, _) = run_synthetic(&spec, &cfg).unwrap();
+            let layers = synthetic_layers(&spec);
+            let model =
+                PackedModel::from_quantized(&layers, &original, &quantized, method, &cfg.calib)
+                    .unwrap_or_else(|e| panic!("{method:?}: export failed: {e:#}"));
+            for l in &layers {
+                let dq = quantized.get_mat(&l.name);
+                let dec = model.get(&l.name).dequantize();
+                assert_eq!(
+                    bits_of(&dec),
+                    bits_of(&dq),
+                    "{method:?}: {} decode != calibrated weights",
+                    l.name
+                );
+            }
         }
     }
+}
+
+#[test]
+fn wide_codebook_export_fails_cleanly_with_backend_name() {
+    // A row with more distinct values than a u8 code addresses cannot be
+    // captured; the `--pack-out`-time error must name both the layer and
+    // the backend so wide-layer failures are actionable.
+    let mut rng = Rng::new(0x11DE);
+    let wide = randmat(&mut rng, 2, 400);
+    let layers = vec![LinearSpec {
+        name: "wide.l".into(),
+        rows: 2,
+        cols: 400,
+        input: "x".into(),
+        block: 0,
+    }];
+    let ws = WeightStore::from_entries(vec![WeightEntry {
+        name: "wide.l".into(),
+        shape: vec![2, 400],
+        data: wide.data.clone(),
+    }]);
+    let method = Method::baseline(Backend::OPTQ); // codebook pack spec
+    let cfg = CalibConfig::for_bits(2);
+    let err = PackedModel::from_quantized(&layers, &ws, &ws, method, &cfg).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("OPTQ") && msg.contains("wide.l"),
+        "error must name backend and layer: {msg}"
+    );
 }
 
 #[test]
@@ -166,7 +194,7 @@ fn export_outlier_rate_stays_sparse_for_spqr() {
     // The SpQR export stores FP32 outliers sparsely; if code recovery were
     // broken it would degenerate into "everything is an outlier".
     let spec = SyntheticSpec { blocks: 1, ..SyntheticSpec::default() };
-    let cfg = PipelineConfig::new(Method::oac(Backend::SpQR), 2);
+    let cfg = PipelineConfig::new(Method::oac(Backend::SPQR), 2);
     let original = synthetic_weights(&spec);
     let (quantized, _) = run_synthetic(&spec, &cfg).unwrap();
     let layers = synthetic_layers(&spec);
@@ -190,7 +218,7 @@ fn export_outlier_rate_stays_sparse_for_spqr() {
 #[test]
 fn packed_model_save_load_serve_roundtrip() {
     let spec = SyntheticSpec { blocks: 1, d_model: 32, d_ff: 64, ..SyntheticSpec::default() };
-    let cfg = PipelineConfig::new(Method::oac(Backend::SpQR), 2);
+    let cfg = PipelineConfig::new(Method::oac(Backend::SPQR), 2);
     let (model, _) = serve::build_synthetic(&spec, &cfg).unwrap();
     let tmp = std::env::temp_dir().join("oac_serve_props_pack.bin");
     model.save(&tmp).unwrap();
@@ -206,7 +234,7 @@ fn packed_model_save_load_serve_roundtrip() {
 #[test]
 fn serve_engine_checksum_thread_invariant_across_methods() {
     for (method, bits) in
-        [(Method::oac(Backend::SpQR), 2usize), (Method::oac(Backend::BiLLM), 1)]
+        [(Method::oac(Backend::SPQR), 2usize), (Method::oac(Backend::BILLM), 1)]
     {
         let spec = SyntheticSpec { blocks: 1, d_model: 32, d_ff: 64, ..SyntheticSpec::default() };
         let cfg = PipelineConfig::new(method, bits);

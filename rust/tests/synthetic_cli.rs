@@ -84,6 +84,8 @@ fn synthetic_quantize_runs_every_backend() {
         ("oac", "2"),
         ("oac_optq", "2"),
         ("oac_billm", "1"),
+        ("magnitude-rtn", "2"),
+        ("oac-quip", "2"),
     ] {
         let out = oac_bin()
             .args([
@@ -125,6 +127,100 @@ fn synthetic_serve_bit_identical_across_threads() {
     }
     for i in 1..checksums.len() {
         assert_eq!(checksums[0], checksums[i], "serve checksum diverged at run {i}");
+    }
+}
+
+#[test]
+fn backends_subcommand_lists_registry() {
+    let out = oac_bin().args(["backends"]).output().expect("run oac backends");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    for name in
+        ["RTN", "OPTQ", "SpQR", "QuIP", "BiLLM", "OmniQuant", "SqueezeLLM", "MagnitudeRTN"]
+    {
+        assert!(text.contains(name), "{name} missing from registry listing: {text}");
+    }
+    for scheme in ["affine-grid", "codebook"] {
+        assert!(text.contains(scheme), "{scheme} missing: {text}");
+    }
+
+    let out = oac_bin().args(["backends", "--json"]).output().expect("run oac backends --json");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(text.trim_start().starts_with('['), "not a JSON array: {text}");
+    for key in ["\"name\"", "\"aliases\"", "\"uses_hessian\"", "\"pack_scheme\""] {
+        assert!(text.contains(key), "{key} missing from JSON: {text}");
+    }
+}
+
+#[test]
+fn magnitude_rtn_demo_backend_end_to_end() {
+    // The extensibility proof, driven through the real binary: the
+    // registry-only demo backend quantizes, exports packed codes, and
+    // serves from them (the serve engine asserts packed == dense bitwise
+    // on every batch).
+    let dir = std::env::temp_dir().join("oac_magnitude_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let pack = dir.join("mag.pack");
+    let out = oac_bin()
+        .args([
+            "quantize", "--synthetic", "--method", "magnitude-rtn", "--blocks", "1",
+            "--pack-out", pack.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run oac");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    assert_eq!(token(&text, "method="), "MagnitudeRTN", "{text}");
+    assert!(text.contains("saved packed model"), "{text}");
+
+    let out = oac_bin()
+        .args(["serve", "--packed", pack.to_str().unwrap(), "--batch", "2", "--requests", "4"])
+        .output()
+        .expect("run oac serve");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    assert_eq!(token(&text, "method="), "MagnitudeRTN", "{text}");
+    assert!(text.contains("checksum="), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn methods_fanout_matches_sequential_single_runs() {
+    // `--methods a,b,c` runs the backends concurrently on the pool; each
+    // method's checksum must be bit-identical to its own sequential
+    // single-method run.
+    let fan = oac_bin()
+        .args([
+            "quantize", "--synthetic", "--methods", "rtn,optq,oac_spqr", "--threads", "4",
+            "--blocks", "1",
+        ])
+        .output()
+        .expect("run oac fanout");
+    assert!(fan.status.success(), "{}", String::from_utf8_lossy(&fan.stderr));
+    let fan_text = String::from_utf8_lossy(&fan.stdout).to_string();
+    assert!(fan_text.contains("multi-backend fan-out"), "{fan_text}");
+    let fan_checksum = |name: &str| -> String {
+        let line = fan_text
+            .lines()
+            .find(|l| l.contains(&format!("method={name} ")))
+            .unwrap_or_else(|| panic!("no summary line for {name}: {fan_text}"));
+        token(line, "checksum=").to_string()
+    };
+    for (arg, name) in [("rtn", "RTN"), ("optq", "OPTQ"), ("oac_spqr", "OAC")] {
+        let single = oac_bin()
+            .args([
+                "quantize", "--synthetic", "--method", arg, "--threads", "1", "--blocks", "1",
+            ])
+            .output()
+            .expect("run oac single");
+        assert!(single.status.success(), "{}", String::from_utf8_lossy(&single.stderr));
+        let st = String::from_utf8_lossy(&single.stdout).to_string();
+        assert_eq!(
+            token(&st, "checksum="),
+            fan_checksum(name),
+            "{name}: fan-out checksum != sequential"
+        );
     }
 }
 
