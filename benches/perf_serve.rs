@@ -1,92 +1,156 @@
-//! Perf: packed vs dense forward throughput and weight residency at
-//! 2/3/4/8 bits on 1/2/4/8 threads (the serving subsystem's two axes).
-//! Ends with a machine-readable JSON summary suitable for redirecting into
-//! `BENCH_serve.json`.
+//! Perf: serving forward throughput across the three compute paths — dense
+//! f32 GEMM, packed-f32 fused unpack-GEMM, and the integer-domain
+//! packed-int8 kernel — on 1/2/4/8 threads, plus an engine-level tokens/s
+//! comparison on the synthetic packed model.
 //!
-//! Run: cargo bench --bench perf_serve
-//! Expected: packed forward within ~1.2x of dense wall-clock (the unpack is
-//! amortized over the batch) at 4-32x lower weight bytes, and ≥ 2x speedup
-//! from 1 -> 4 threads on both paths.
+//! Run:  cargo bench --bench perf_serve [-- --quick]
+//! Emits a machine-readable `BENCH_serve.json` (tokens/s and ns/token per
+//! path × bits × threads, and the headline `int8_speedup_t4` = geomean
+//! packed-f32 / packed-int8 wall-clock at 4 threads) so the serving perf
+//! trajectory is tracked across PRs. `--quick` shrinks shapes and iteration
+//! counts for CI smoke.
+//!
+//! Expected: packed-int8 ≥ 1.5x the packed-f32 fused path at 4 threads
+//! (integer dot kernel + i8 activation tiles staying L1-resident), and the
+//! exact packed path within ~1.2x of dense at 4-16x lower weight bytes.
 
 use std::time::Duration;
 
-use oac::serve::{self, PackedLinear};
+use oac::calib::{Backend, Method};
+use oac::coordinator::{PipelineConfig, SyntheticSpec};
+use oac::serve::{self, engine, PackedLinear};
 use oac::tensor::Mat;
 use oac::util::bench::{bench_cfg, black_box, BenchConfig};
 use oac::util::json::Json;
 use oac::util::pool::Pool;
 use oac::util::rng::Rng;
-
-const THREADS: [usize; 4] = [1, 2, 4, 8];
-const BITS: [usize; 4] = [2, 3, 4, 8];
+use oac::util::stats;
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (rows, cols, batch, group) =
+        if quick { (192usize, 192usize, 16usize, 32usize) } else { (512, 512, 32, 64) };
+    let bits_axis: &[usize] = if quick { &[2, 4] } else { &[2, 3, 4, 8] };
+    let threads_axis: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: if quick { 2 } else { 3 },
+        max_iters: if quick { 8 } else { 25 },
+        target_time: Duration::from_millis(if quick { 150 } else { 600 }),
+    };
+
     let mut rng = Rng::new(0);
-    let (rows, cols, batch) = (512usize, 512usize, 32usize);
     let mut w = Mat::zeros(rows, cols);
     rng.fill_normal(&mut w.data, 0.5);
     let mut x = Mat::zeros(cols, batch);
     rng.fill_normal(&mut x.data, 1.0);
-    let cfg = BenchConfig {
-        warmup_iters: 1,
-        min_iters: 3,
-        max_iters: 25,
-        target_time: Duration::from_millis(600),
-    };
-    let flops = (2 * rows * cols * batch) as f64;
 
     let mut records: Vec<Json> = Vec::new();
-    for bits in BITS {
-        let pl: PackedLinear = serve::encode_uniform("w", &w, 32, bits);
+    let mut speedups_t4: Vec<f64> = Vec::new();
+    for &bits in bits_axis {
+        let pl: PackedLinear = serve::encode_uniform("w", &w, group, bits);
         let dense = pl.dequantize();
         println!(
-            "\n== packed {bits}-bit {rows}x{cols} @ batch {batch}: {} packed vs {} dense bytes ==",
+            "\n== {bits}-bit {rows}x{cols} @ batch {batch}: {} packed vs {} dense bytes ==",
             pl.packed_bytes(),
             pl.dense_bytes()
         );
-        let mut packed_serial_ns = 0.0f64;
-        for threads in THREADS {
+        for &threads in threads_axis {
             let pool = Pool::new(threads);
-            let rp = bench_cfg(&format!("packed_fwd_b{bits}_t{threads}"), cfg, &mut || {
-                black_box(pl.forward_with(&pool, &x).data.len());
-            });
             let rd = bench_cfg(&format!("dense_fwd_b{bits}_t{threads}"), cfg, &mut || {
                 black_box(dense.matmul_with(&pool, &x).data.len());
             });
-            if threads == 1 {
-                packed_serial_ns = rp.mean_ns;
+            let rf = bench_cfg(&format!("packed_f32_fwd_b{bits}_t{threads}"), cfg, &mut || {
+                black_box(pl.forward_with(&pool, &x).data.len());
+            });
+            let ri = bench_cfg(&format!("packed_int8_fwd_b{bits}_t{threads}"), cfg, &mut || {
+                black_box(pl.forward_int8_with(&pool, &x).data.len());
+            });
+            let int8_speedup = rf.mean_ns / ri.mean_ns;
+            if threads == 4 {
+                speedups_t4.push(int8_speedup);
             }
             println!(
-                "  -> t{threads}: packed {:.2} GFLOP/s (speedup {:.2}x), dense {:.2} GFLOP/s, packed/dense {:.2}x",
-                flops / rp.mean_ns,
-                packed_serial_ns / rp.mean_ns,
-                flops / rd.mean_ns,
-                rp.mean_ns / rd.mean_ns
+                "  -> t{threads}: int8 {:.2}x vs packed-f32 ({:.0} vs {:.0} ns/token), dense {:.0} ns/token",
+                int8_speedup,
+                ri.mean_ns / batch as f64,
+                rf.mean_ns / batch as f64,
+                rd.mean_ns / batch as f64,
+            );
+            for (path, r) in [("dense", &rd), ("packed-f32", &rf), ("packed-int8", &ri)] {
+                records.push(Json::obj(vec![
+                    ("section", Json::str("layer")),
+                    ("path", Json::str(path)),
+                    ("bits", Json::num(bits as f64)),
+                    ("threads", Json::num(threads as f64)),
+                    ("mean_ns", Json::num(r.mean_ns)),
+                    ("ns_per_token", Json::num(r.mean_ns / batch as f64)),
+                    ("tokens_per_s", Json::num(batch as f64 / r.mean_secs())),
+                    ("packed_bytes", Json::num(pl.packed_bytes() as f64)),
+                    ("dense_bytes", Json::num(pl.dense_bytes() as f64)),
+                ]));
+            }
+        }
+    }
+
+    // Engine-level tokens/s on the synthetic packed model: the full batched
+    // request loop (block forward + norms), exact vs int8.
+    let spec = if quick {
+        SyntheticSpec { blocks: 1, d_model: 64, d_ff: 128, ..SyntheticSpec::default() }
+    } else {
+        SyntheticSpec { blocks: 1, d_model: 128, d_ff: 256, ..SyntheticSpec::default() }
+    };
+    let pcfg = PipelineConfig::new(Method::baseline(Backend::RTN), 2);
+    let (model, _) = serve::build_synthetic(&spec, &pcfg).expect("synthetic build");
+    let requests = if quick { 16 } else { 64 };
+    let ebatch = if quick { 8 } else { 16 };
+    println!("\n== engine: synthetic model d_model={} blocks={} ==", spec.d_model, spec.blocks);
+    for &threads in threads_axis {
+        for act_bits in [0usize, 8] {
+            let scfg = engine::ServeConfig {
+                batch: ebatch,
+                requests,
+                threads,
+                seed: 0,
+                baseline: false,
+                act_bits,
+            };
+            let rep = engine::run(&model, &scfg).expect("engine run");
+            let label = if act_bits == 8 { "packed-int8" } else { "packed-f32" };
+            println!(
+                "  engine {label} t{threads}: {:.1} req/s (checksum {:016x})",
+                rep.throughput_rps(),
+                rep.checksum
             );
             records.push(Json::obj(vec![
-                ("bits", Json::num(bits as f64)),
+                ("section", Json::str("engine")),
+                ("path", Json::str(label)),
                 ("threads", Json::num(threads as f64)),
-                ("packed_mean_ns", Json::num(rp.mean_ns)),
-                ("dense_mean_ns", Json::num(rd.mean_ns)),
-                ("packed_gflops", Json::num(flops / rp.mean_ns)),
-                ("dense_gflops", Json::num(flops / rd.mean_ns)),
-                ("packed_bytes", Json::num(pl.packed_bytes() as f64)),
-                ("dense_bytes", Json::num(pl.dense_bytes() as f64)),
+                ("requests", Json::num(requests as f64)),
+                ("tokens_per_s", Json::num(rep.throughput_rps())),
+                (
+                    "ns_per_token",
+                    Json::num(rep.packed_secs * 1e9 / requests as f64),
+                ),
             ]));
         }
     }
 
     let summary = Json::obj(vec![
         ("bench", Json::str("serve")),
+        ("quick", Json::Bool(quick)),
         (
             "shape",
             Json::obj(vec![
                 ("rows", Json::num(rows as f64)),
                 ("cols", Json::num(cols as f64)),
                 ("batch", Json::num(batch as f64)),
+                ("group", Json::num(group as f64)),
             ]),
         ),
+        ("int8_speedup_t4", Json::num(stats::geomean(&speedups_t4))),
         ("records", Json::arr(records)),
     ]);
-    println!("\nBENCH_serve.json = {summary}");
+    std::fs::write("BENCH_serve.json", format!("{summary}\n")).expect("write BENCH_serve.json");
+    println!("\nwrote BENCH_serve.json (int8_speedup_t4 = {:.2}x)", stats::geomean(&speedups_t4));
 }

@@ -230,6 +230,54 @@ impl Default for EvalConfig {
     }
 }
 
+/// Elementwise error statistics of an approximate forward pass against its
+/// exact reference — how `oac serve --act-bits 8` reports the end-to-end
+/// accuracy cost of integer-domain serving (the serve engine feeds it every
+/// request's exact and int8 outputs). Pure CPU math: unlike
+/// [`evaluate_packed`] it needs no artifacts, so CI's synthetic smoke runs
+/// measure the cost on every push.
+#[derive(Debug, Clone, Copy)]
+pub struct OutputError {
+    /// Root-mean-square elementwise deviation.
+    pub rmse: f64,
+    /// Largest absolute elementwise deviation.
+    pub max_abs: f64,
+    /// RMS of the reference outputs (the normalizer for
+    /// [`Self::rel_rmse`]).
+    pub ref_rms: f64,
+}
+
+impl OutputError {
+    /// RMSE relative to the reference's RMS magnitude.
+    pub fn rel_rmse(&self) -> f64 {
+        self.rmse / self.ref_rms.max(1e-12)
+    }
+}
+
+/// Compare an approximate batch of outputs against the exact reference,
+/// elementwise in f64.
+pub fn output_error(reference: &[crate::tensor::Mat], approx: &[crate::tensor::Mat]) -> OutputError {
+    assert_eq!(reference.len(), approx.len(), "output batch count mismatch");
+    let mut se = 0.0f64;
+    let mut ref_sq = 0.0f64;
+    let mut max_abs = 0.0f64;
+    let mut count = 0usize;
+    for (a, b) in reference.iter().zip(approx) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols), "output shape mismatch");
+        for (va, vb) in a.data.iter().zip(&b.data) {
+            let d = *vb as f64 - *va as f64;
+            se += d * d;
+            ref_sq += *va as f64 * *va as f64;
+            if d.abs() > max_abs {
+                max_abs = d.abs();
+            }
+            count += 1;
+        }
+    }
+    let n = count.max(1) as f64;
+    OutputError { rmse: (se / n).sqrt(), max_abs, ref_rms: (ref_sq / n).sqrt() }
+}
+
 /// Perplexity + task evaluation of a packed model: the packed layers are
 /// decoded onto a copy of `base` (embeddings/norms and any layer the packed
 /// store does not carry come from `base`) and evaluated through the usual
@@ -306,6 +354,21 @@ mod tests {
         // Accuracy near chance (25%) for random-distractor tasks at best.
         assert!(rep.task_avg() < 70.0);
         assert!(rep.ppl_far.is_some());
+    }
+
+    #[test]
+    fn output_error_known_values() {
+        use crate::tensor::Mat;
+        let a = Mat::from_vec(1, 4, vec![3.0, 4.0, 0.0, 0.0]);
+        let b = Mat::from_vec(1, 4, vec![3.0, 4.0, 1.0, 0.0]);
+        let e = output_error(&[a.clone()], &[b]);
+        assert!((e.rmse - 0.5).abs() < 1e-12);
+        assert!((e.max_abs - 1.0).abs() < 1e-12);
+        assert!((e.ref_rms - 2.5).abs() < 1e-12);
+        assert!((e.rel_rmse() - 0.2).abs() < 1e-12);
+        let zero = output_error(&[a.clone()], &[a]);
+        assert_eq!(zero.rmse, 0.0);
+        assert_eq!(zero.max_abs, 0.0);
     }
 
     #[test]

@@ -64,18 +64,37 @@
 //! [`serve`] is the consumer the quantizer produces for: instead of
 //! dequantizing back to dense f32, a calibrated run exports its layers into
 //! a [`serve::PackedModel`] — per layer a little-endian packed bit stream
-//! of integer codes ([`quant::packing`], 1–8 bits per weight) plus one of
-//! three decode schemes ([`serve::PackScheme`]): group-wise affine
-//! scales/zeros (uniform), per-row residual-binarization alphas (binary),
-//! or per-row codebooks (non-uniform), with sparse FP32 outlier overrides.
-//! The export is **bit-exact** — decoding reproduces the calibrated weights
-//! — and forward passes run fused (`unpack panel → scratch tile → the
-//! shared [`tensor::gemm_row_into`] kernel`) so dense weight matrices are
-//! never materialized on the serving path. `oac serve --synthetic` drives a
-//! batched request engine ([`serve::engine`]) over this store and reports
-//! latency/throughput/weight-bytes against the dense baseline; its output
-//! checksum is part of the `--threads` determinism contract
-//! (`rust/tests/serve_props.rs`, CI's serving smoke job).
+//! of integer codes ([`quant::packing`], 1–8-bit weights, u16 codebook
+//! indices) plus one of three decode schemes ([`serve::PackScheme`]):
+//! group-wise affine scales/zeros (uniform), per-row
+//! residual-binarization alphas (binary), or per-row codebooks
+//! (non-uniform, u16 codes past 256 levels), with sparse FP32 outlier
+//! overrides. The export is **bit-exact** — decoding
+//! reproduces the calibrated weights — and forward passes run fused
+//! (`unpack panel → scratch tile → the shared [`tensor::gemm_row_into`]
+//! kernel`) so dense weight matrices are never materialized on the serving
+//! path.
+//!
+//! Serving has two compute modes. The default **exact f32** path is
+//! bit-identical to dequantize-then-matmul. The **integer-domain** path
+//! (`oac serve --act-bits 8`) additionally quantizes activations to
+//! per-group symmetric int8 ([`quant::act_quant`]) and keeps the inner
+//! loop on i32 accumulators over raw weight codes
+//! ([`tensor::igemm`]; `PackedLinear::forward_int8_with`): integer dots
+//! with a fused scale/zero-point epilogue for affine grids, ±1 sign dots
+//! for binary planes, per-row i32 LUT partial sums for codebooks — with
+//! sparse FP32 outliers still multiplying full-precision activations.
+//! It trades a bounded, property-tested approximation error for a
+//! measured ≥1.5× forward speedup, and keeps the same determinism
+//! contract: output bits are invariant to `--threads`.
+//!
+//! `oac serve --synthetic` drives a batched request engine
+//! ([`serve::engine`]) over this store — steady-state allocation-free via
+//! a per-run scratch arena ([`serve::ServeScratch`]) — and reports
+//! latency/throughput/weight-bytes against the dense baseline (plus the
+//! int8 accuracy cost via [`eval::output_error`] when `--act-bits 8`); its
+//! output checksum is part of the `--threads` determinism contract
+//! (`rust/tests/serve_props.rs`, CI's serving smoke jobs).
 
 // CI denies warnings (`cargo clippy -- -D warnings`). The style lints
 // below are deliberately tolerated crate-wide: this is index-heavy numeric

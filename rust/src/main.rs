@@ -59,6 +59,10 @@ USAGE:
                (quantize the synthetic model, export packed codes, and run the
                 batched packed-forward engine; the printed output checksum is
                 bit-identical for every --threads value)
+  oac serve    ... [--act-bits 8]
+               (integer-domain forward: int8 activations x weight codes,
+                i32-accumulating kernel; deterministic and thread-invariant,
+                reports the accuracy cost vs the exact path)
   oac serve    --packed MODEL.pack [--batch 4] [--requests 16] [--threads 4]
                [--no-baseline]  (skip the dense reference pass + bitwise check)
   oac eval     --config small --ckpt IN.bin [--ppl-seqs 16] [--tasks 16] [--far]
@@ -463,16 +467,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
         threads: p.calib.threads,
         seed: args.u64_or("seed", 0),
         baseline: !args.flag("no-baseline"),
+        act_bits: args.usize_or("act-bits", 0),
     };
     let rep = oac::serve::engine::run(&model, &scfg)?;
     let dense_rps = match rep.dense_throughput_rps() {
         Some(rps) => format!("{rps:.1}"),
         None => "skipped".to_string(),
     };
+    // The integer-path tokens are only printed when the mode is on, so the
+    // default exact-mode report line is byte-stable across PRs.
+    let int8_info = match (&rep.int8_err, rep.act_bits) {
+        (Some(e), bits) => format!(
+            " act_bits={bits} int8_rel_rmse={:.3e} int8_max_err={:.3e}",
+            e.rel_rmse(),
+            e.max_abs
+        ),
+        (None, 0) => String::new(),
+        (None, bits) => format!(" act_bits={bits}"),
+    };
     println!(
         "serve: method={} layers={} blocks={} d_model={} requests={} batch={} threads={} \
          packed_bytes={} dense_bytes={} ratio={:.3} p50_ms={:.3} p95_ms={:.3} \
-         throughput_rps={:.1} dense_rps={dense_rps} checksum={:016x}",
+         throughput_rps={:.1} dense_rps={dense_rps}{int8_info} checksum={:016x}",
         model.method,
         model.layers.len(),
         rep.blocks,

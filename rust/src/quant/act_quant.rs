@@ -1,0 +1,221 @@
+//! Per-group symmetric int8 activation quantization — the activation half
+//! of the integer-domain serving path.
+//!
+//! An activation matrix `x` (K rows = the weight's input dim, N cols = the
+//! request batch) is quantized per (K-group, column): each group of a
+//! column gets one symmetric scale `amax / 127` and int8 codes
+//! `round(x / scale)` clamped to ±127. Grouping along K mirrors the weight
+//! grid — a uniform-scheme layer quantizes activations with its own weight
+//! `group_size`, so one `(weight scale × activation scale)` product per
+//! group turns the group's i32 code dot straight into f32 output
+//! ([`crate::serve::PackedLinear::forward_int8_with`]).
+//!
+//! The codes are stored twice, in the two layouts the integer kernels
+//! want: transposed and pre-widened to i16 (`qt`, column-major — the
+//! [`crate::tensor::igemm::idot`] operand) and row-major i8 (`q8` — the
+//! codebook LUT walk and the sparse-outlier f32 epilogue). Per-group code
+//! sums (`gsums`) are precomputed once so the uniform epilogue's zero-point
+//! correction costs one multiply per output cell.
+//!
+//! Quantization happens once per layer application, before any worker
+//! fan-out, so every panel worker reads the same codes — thread-invariance
+//! of the int8 forward needs no further argument from this module.
+
+use crate::tensor::Mat;
+use crate::util::pool::chunk_ranges;
+
+/// K-group width used when the weight scheme has no column grouping of its
+/// own (binary planes, codebooks). Small enough that group i32 dots stay
+/// exact in f32 conversion, large enough to amortize the per-group epilogue.
+pub const DEFAULT_ACT_GROUP: usize = 64;
+
+/// One activation matrix quantized to int8, in the layouts the integer
+/// kernels consume. Reusable: [`quantize_into`] resizes without
+/// reallocating once buffers reach their high-water mark.
+#[derive(Debug, Clone, Default)]
+pub struct QuantizedActs {
+    /// K — the quantized matrix's row count (= weight cols).
+    pub rows: usize,
+    /// N — batch width.
+    pub cols: usize,
+    /// K-group size (the last group may be ragged).
+    pub group: usize,
+    /// Transposed, i16-widened codes: `qt[j * rows + c]` is the code of
+    /// `x[c, j]`. One contiguous K-slice per batch column — the `idot`
+    /// operand.
+    pub qt: Vec<i16>,
+    /// Row-major i8 codes, same layout as `x.data`: `q8[c * cols + j]`.
+    pub q8: Vec<i8>,
+    /// Per-(group, column) symmetric scale, `scales[g * cols + j]`;
+    /// 0.0 for all-zero (or non-finite) groups, whose codes are all 0.
+    pub scales: Vec<f32>,
+    /// Per-(group, column) code sums — the uniform scheme's zero-point
+    /// correction term.
+    pub gsums: Vec<i32>,
+}
+
+impl QuantizedActs {
+    /// Number of K-groups.
+    pub fn n_groups(&self) -> usize {
+        self.rows.div_ceil(self.group)
+    }
+
+    /// Dequantized activation at `(c, j)` — `scale * code`, the value the
+    /// integer kernels effectively multiply weights by.
+    pub fn dequant_at(&self, c: usize, j: usize) -> f32 {
+        let g = c / self.group;
+        self.scales[g * self.cols + j] * self.q8[c * self.cols + j] as f32
+    }
+}
+
+/// Quantize `x` into `out` with K-groups of `group` rows. Deterministic in
+/// `(x, group)`; buffers in `out` are reused across calls.
+pub fn quantize_into(x: &Mat, group: usize, out: &mut QuantizedActs) {
+    assert!(group > 0, "activation group must be positive");
+    let (k, n) = (x.rows, x.cols);
+    let groups = chunk_ranges(k, group);
+    out.rows = k;
+    out.cols = n;
+    out.group = group;
+    resize(&mut out.qt, k * n);
+    resize(&mut out.q8, k * n);
+    resize(&mut out.scales, groups.len() * n);
+    resize(&mut out.gsums, groups.len() * n);
+
+    for (g, gr) in groups.iter().enumerate() {
+        let scales = &mut out.scales[g * n..(g + 1) * n];
+        scales.fill(0.0);
+        for c in gr.clone() {
+            for (s, &v) in scales.iter_mut().zip(&x.data[c * n..(c + 1) * n]) {
+                let a = v.abs();
+                if a > *s {
+                    *s = a;
+                }
+            }
+        }
+        for s in scales.iter_mut() {
+            *s = if *s > 0.0 && s.is_finite() { *s / 127.0 } else { 0.0 };
+        }
+        let gsums = &mut out.gsums[g * n..(g + 1) * n];
+        gsums.fill(0);
+        for c in gr.clone() {
+            let xrow = &x.data[c * n..(c + 1) * n];
+            let qrow = &mut out.q8[c * n..(c + 1) * n];
+            for j in 0..n {
+                let s = scales[j];
+                let q = if s > 0.0 {
+                    (xrow[j] / s).round().clamp(-127.0, 127.0) as i32
+                } else {
+                    0
+                };
+                qrow[j] = q as i8;
+                gsums[j] += q;
+            }
+        }
+    }
+    // Second pass: the transposed i16 copy (contiguous writes per column).
+    for j in 0..n {
+        let qt = &mut out.qt[j * k..(j + 1) * k];
+        for (c, slot) in qt.iter_mut().enumerate() {
+            *slot = out.q8[c * n + j] as i16;
+        }
+    }
+}
+
+/// Allocating convenience wrapper around [`quantize_into`].
+pub fn quantize(x: &Mat, group: usize) -> QuantizedActs {
+    let mut out = QuantizedActs::default();
+    quantize_into(x, group, &mut out);
+    out
+}
+
+fn resize<T: Clone + Default>(v: &mut Vec<T>, len: usize) {
+    v.clear();
+    v.resize(len, T::default());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randmat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, 1.0);
+        m
+    }
+
+    #[test]
+    fn codes_within_half_step_and_range() {
+        let mut rng = Rng::new(0);
+        let x = randmat(&mut rng, 70, 5); // ragged last group at group=32
+        let acts = quantize(&x, 32);
+        assert_eq!(acts.n_groups(), 3);
+        for c in 0..x.rows {
+            for j in 0..x.cols {
+                let q = acts.q8[c * x.cols + j];
+                assert!((-127..=127).contains(&(q as i32)));
+                assert_eq!(acts.qt[j * x.rows + c], q as i16, "layouts disagree");
+                let err = (x.at(c, j) - acts.dequant_at(c, j)).abs();
+                let g = c / 32;
+                let s = acts.scales[g * x.cols + j];
+                assert!(err <= 0.5 * s * 1.0001 + 1e-7, "({c},{j}): err {err} scale {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn gsums_match_code_sums() {
+        let mut rng = Rng::new(1);
+        let x = randmat(&mut rng, 48, 4);
+        let acts = quantize(&x, 16);
+        for g in 0..acts.n_groups() {
+            for j in 0..x.cols {
+                let want: i32 = (g * 16..(g + 1) * 16)
+                    .map(|c| acts.q8[c * x.cols + j] as i32)
+                    .sum();
+                assert_eq!(acts.gsums[g * x.cols + j], want, "({g},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_group_has_zero_scale_and_codes() {
+        let mut x = Mat::zeros(32, 3);
+        // First group of column 1 nonzero; everything else zero.
+        *x.at_mut(3, 1) = 2.5;
+        let acts = quantize(&x, 16);
+        assert_eq!(acts.scales[0], 0.0); // (g0, j0)
+        assert!(acts.scales[1] > 0.0); // (g0, j1)
+        assert_eq!(acts.scales[3 + 1], 0.0); // (g1, j1)
+        assert!(acts.q8.iter().enumerate().all(|(i, &q)| q == 0 || i == 3 * 3 + 1));
+        assert_eq!(acts.q8[3 * 3 + 1], 127);
+    }
+
+    #[test]
+    fn reuse_resizes_cleanly() {
+        let mut rng = Rng::new(2);
+        let mut acts = QuantizedActs::default();
+        quantize_into(&randmat(&mut rng, 64, 8), 16, &mut acts);
+        let big = acts.qt.len();
+        quantize_into(&randmat(&mut rng, 16, 2), 16, &mut acts);
+        assert_eq!(acts.qt.len(), 32);
+        assert!(big > acts.qt.len());
+        let x = randmat(&mut rng, 16, 2);
+        quantize_into(&x, 16, &mut acts);
+        let fresh = quantize(&x, 16);
+        assert_eq!(acts.q8, fresh.q8);
+        assert_eq!(acts.qt, fresh.qt);
+        assert_eq!(acts.scales, fresh.scales);
+        assert_eq!(acts.gsums, fresh.gsums);
+    }
+
+    #[test]
+    fn max_magnitude_maps_to_127() {
+        let mut x = Mat::zeros(4, 1);
+        x.data.copy_from_slice(&[1.0, -3.0, 0.5, 3.0]);
+        let acts = quantize(&x, 4);
+        assert_eq!(acts.q8[1], -127);
+        assert_eq!(acts.q8[3], 127);
+    }
+}

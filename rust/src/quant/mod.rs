@@ -1,9 +1,12 @@
 //! Quantizers: group-wise uniform (RTN core), bit packing, second-round
 //! scale/zero quantization (SpQR), binarization with residual approximation
 //! (BiLLM), sensitivity-weighted non-uniform k-means (SqueezeLLM-lite),
-//! average-bit accounting, and the [`PackSpec`] declaration each
-//! calibration backend publishes for the packed serving export.
+//! per-group symmetric int8 activation quantization for integer-domain
+//! serving ([`act_quant`]), average-bit accounting, and the [`PackSpec`]
+//! declaration each calibration backend publishes for the packed serving
+//! export.
 
+pub mod act_quant;
 pub mod binary;
 pub mod nonuniform;
 pub mod packing;
@@ -37,11 +40,11 @@ pub enum PackSpec {
     /// Two-plane residual binarization with per-row `(α₁, α₂)`
     /// ([`crate::serve::encode_binary_calibrated`]).
     BinaryPlanes,
-    /// Universal exact capture: per-row codebook of ≤ 256 distinct f32
-    /// levels. The fallback for backends whose grid is not recoverable
-    /// after calibration (OPTQ's dynamic groups, QuIP's rotated space);
-    /// fails cleanly on rows with more distinct values than a u8 code
-    /// addresses.
+    /// Universal exact capture: per-row codebook of up to 2^16 distinct f32
+    /// levels (u8 codes through 256 levels, u16 codes beyond). The fallback
+    /// for backends whose grid is not recoverable after calibration (OPTQ's
+    /// dynamic groups, QuIP's rotated space); fails cleanly on rows with
+    /// more distinct values than a u16 code addresses.
     Codebook,
 }
 

@@ -1,5 +1,11 @@
-//! Bit packing for 1-8 bit integer weight codes: little-endian bit stream,
-//! the storage format the budget accounting assumes. Round-trip tested.
+//! Bit packing for integer weight codes: little-endian bit stream, the
+//! storage format the budget accounting assumes. Round-trip tested.
+//!
+//! Two code widths share one stream format: the narrow u8 path (1–8 bits,
+//! the uniform/binary weight codes) and the wide u16 path (1–16 bits, the
+//! codebook indices — [`pack_wide`]/[`unpack_wide_into`]). For bits ≤ 8 the
+//! two paths produce identical streams, so widening a codebook never
+//! changes the bytes of an existing pack file.
 
 /// Pack integer codes (each < 2^bits) into a little-endian bit stream.
 pub fn pack(codes: &[u8], bits: usize) -> Vec<u8> {
@@ -48,6 +54,52 @@ pub fn unpack(packed: &[u8], bits: usize, n: usize) -> Vec<u8> {
 /// Exact storage size in bytes for n codes at the given width.
 pub fn packed_size(n: usize, bits: usize) -> usize {
     (n * bits).div_ceil(8)
+}
+
+/// Pack wide integer codes (each < 2^bits, bits 1–16) into a little-endian
+/// bit stream. For bits ≤ 8 the stream is byte-identical to [`pack`].
+pub fn pack_wide(codes: &[u16], bits: usize) -> Vec<u8> {
+    assert!((1..=16).contains(&bits));
+    let total_bits = codes.len() * bits;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!((c as u32) < (1u32 << bits), "code {c} out of range for {bits} bits");
+        let mut v = (c as u32) << (bitpos % 8);
+        let mut byte = bitpos / 8;
+        loop {
+            out[byte] |= (v & 0xFF) as u8;
+            v >>= 8;
+            if v == 0 {
+                break;
+            }
+            byte += 1;
+        }
+        bitpos += bits;
+    }
+    out
+}
+
+/// Unpack `out.len()` wide codes (bits 1–16) starting at code index
+/// `code_offset` — the u16 twin of [`unpack_into`], used by the codebook
+/// decode paths once a row holds more than 256 distinct levels.
+pub fn unpack_wide_into(packed: &[u8], bits: usize, code_offset: usize, out: &mut [u16]) {
+    assert!((1..=16).contains(&bits));
+    let mask = (1u32 << bits) - 1;
+    let mut bitpos = code_offset * bits;
+    for slot in out.iter_mut() {
+        let mut byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut v = (packed[byte] as u32) >> off;
+        let mut got = 8 - off;
+        while got < bits {
+            byte += 1;
+            v |= (packed[byte] as u32) << got;
+            got += 8;
+        }
+        *slot = (v & mask) as u16;
+        bitpos += bits;
+    }
 }
 
 #[cfg(test)]
@@ -110,6 +162,57 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn prop_wide_roundtrip_all_widths() {
+        // Wide codes round-trip at every width 1-16, at arbitrary offsets.
+        crate::util::prop::quick(
+            "pack_wide/unpack_wide_into roundtrip",
+            |rng| {
+                let bits = 1 + rng.below(16);
+                let n = 2 + rng.below(300);
+                let codes: Vec<u16> =
+                    (0..n).map(|_| rng.below(1usize << bits) as u16).collect();
+                let off = rng.below(n);
+                let len = 1 + rng.below(n - off);
+                (bits, codes, off, len)
+            },
+            |(bits, codes, off, len)| {
+                let packed = pack_wide(codes, *bits);
+                assert_eq!(packed.len(), packed_size(codes.len(), *bits));
+                let mut got = vec![0u16; *len];
+                unpack_wide_into(&packed, *bits, *off, &mut got);
+                if got == codes[*off..*off + *len] {
+                    Ok(())
+                } else {
+                    Err(format!("bits={bits} mismatch at offset {off} len {len}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn wide_stream_matches_narrow_for_low_bits() {
+        // For bits <= 8 the wide packer emits byte-identical streams, so the
+        // OACPACK1 format is unchanged by the u16-code widening.
+        let mut rng = Rng::new(7);
+        for bits in 1..=8usize {
+            let n = 131;
+            let narrow: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+            let wide: Vec<u16> = narrow.iter().map(|&c| c as u16).collect();
+            assert_eq!(pack(&narrow, bits), pack_wide(&wide, bits), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn wide_16bit_exact() {
+        let codes: Vec<u16> = vec![0, 1, 65535, 32768, 12345];
+        let packed = pack_wide(&codes, 16);
+        assert_eq!(packed.len(), 10);
+        let mut got = vec![0u16; codes.len()];
+        unpack_wide_into(&packed, 16, 0, &mut got);
+        assert_eq!(got, codes);
     }
 
     #[test]

@@ -1,30 +1,43 @@
 //! The batched request engine behind `oac serve`: queues synthetic eval
-//! requests, batches them through the packed forward path, and reports
+//! requests, batches them through the packed forward path (exact f32 by
+//! default, integer-domain int8 with `--act-bits 8`), and reports
 //! per-request latency, throughput and weight bytes next to the dense
 //! dequantized baseline.
 //!
 //! Determinism: requests are seeded per id, the request→batch assignment is
 //! a fixed [`chunk_ranges`] partition of the id space, and every layer
-//! application goes through the packed forward (bit-identical to the dense
-//! reference for any thread count — the engine *asserts* that agreement on
-//! every batch). The request-order output checksum printed by the CLI is
-//! therefore identical across `--threads 1/2/4/8` (CI's serving smoke job
-//! compares two runs).
+//! application goes through a packed forward whose output bits are
+//! invariant to the thread count — the exact path is additionally
+//! bit-identical to the dense reference (the engine *asserts* that
+//! agreement on every batch), while the int8 path reports its deviation
+//! from the exact reference ([`crate::eval::output_error`]) instead. The
+//! request-order output checksum printed by the CLI is therefore identical
+//! across `--threads 1/2/4/8` in both modes (CI's serving smoke jobs
+//! compare runs).
+//!
+//! Allocation discipline: one [`ServeScratch`] arena, one set of layer
+//! activation buffers (`LayerBufs`), one activation-code buffer and one
+//! batch matrix are created per run and reused across every batch — the
+//! steady-state request loop does not allocate (buffers stop growing once
+//! they reach the first full batch's high-water mark).
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
+use crate::eval::{output_error, OutputError};
+use crate::quant::act_quant::{self, QuantizedActs};
 use crate::tensor::Mat;
 use crate::util::digest;
 use crate::util::pool::{chunk_ranges, Pool};
 use crate::util::rng::Rng;
 use crate::util::stats;
 
-use super::PackedModel;
+use super::{PackedModel, ServeScratch};
 
-/// Engine knobs (`oac serve --batch N --requests M --threads T --seed S`).
+/// Engine knobs (`oac serve --batch N --requests M --threads T --seed S
+/// [--act-bits 8]`).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Requests per forward batch (columns of the batched activation).
@@ -34,15 +47,19 @@ pub struct ServeConfig {
     /// Worker-pool width for the panel forward (wall-clock only).
     pub threads: usize,
     pub seed: u64,
-    /// Also run the dense dequantized baseline and assert bitwise agreement
-    /// (doubles the work and materializes dense weights — disable with
+    /// Also run the dense dequantized baseline: in exact mode assert
+    /// bitwise agreement, in int8 mode measure the accuracy cost (doubles
+    /// the work and materializes dense weights — disable with
     /// `--no-baseline` for pure packed serving).
     pub baseline: bool,
+    /// Activation quantization width: 0 = exact f32 forward (default),
+    /// 8 = integer-domain forward (int8 activations × weight codes).
+    pub act_bits: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
-        ServeConfig { batch: 4, requests: 16, threads: 1, seed: 0, baseline: true }
+        ServeConfig { batch: 4, requests: 16, threads: 1, seed: 0, baseline: true, act_bits: 0 }
     }
 }
 
@@ -54,6 +71,8 @@ pub struct ServeReport {
     pub threads: usize,
     pub blocks: usize,
     pub d_model: usize,
+    /// Activation quantization width (0 = exact f32 path).
+    pub act_bits: usize,
     /// Packed weight residency (codes + params + outliers).
     pub packed_bytes: usize,
     /// Dense f32 residency of the same weights (the baseline's footprint).
@@ -65,6 +84,9 @@ pub struct ServeReport {
     /// Wall-clock of the dense-baseline pass, when it ran (excludes the
     /// one-off dequantization setup).
     pub dense_secs: Option<f64>,
+    /// int8-vs-exact output error over every request (act_bits 8 with the
+    /// baseline pass enabled).
+    pub int8_err: Option<OutputError>,
     /// FNV-1a over every request's output vector bits, in request order.
     pub checksum: u64,
 }
@@ -109,53 +131,81 @@ fn rms_normalize(h: &mut Mat) {
     }
 }
 
+/// Per-run activation buffers for the block forward — sized on first use,
+/// reused (allocation-free) for every subsequent batch.
+#[derive(Default)]
+struct LayerBufs {
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    attn: Mat,
+    u: Mat,
+    d: Mat,
+    h: Mat,
+}
+
 /// One synthetic transformer-ish block pass over a batch (columns =
-/// requests), parameterized by the layer application so the packed and
-/// dense paths share every non-GEMM op bit-for-bit:
+/// requests), parameterized by the layer application so the packed, int8
+/// and dense paths share every non-GEMM op bit-for-bit:
 ///   s = q ⊙ tanh(k) + v;  h += O s;  rms;  h += Down relu(Up h);  rms.
-fn forward_batch<F: Fn(&str, &Mat) -> Mat>(apply: &F, blocks: usize, x: &Mat) -> Mat {
-    let mut h = x.clone();
+/// The layer application writes into a reusable output buffer; the final
+/// hidden state is cloned out (result storage, not scratch).
+fn forward_batch<F: FnMut(&str, &Mat, &mut Mat)>(
+    apply: &mut F,
+    blocks: usize,
+    x: &Mat,
+    bufs: &mut LayerBufs,
+) -> Mat {
+    bufs.h.reset(x.rows, x.cols);
+    bufs.h.data.copy_from_slice(&x.data);
     for b in 0..blocks {
-        let q = apply(&format!("blocks.{b}.q"), &h);
-        let k = apply(&format!("blocks.{b}.k"), &h);
-        let v = apply(&format!("blocks.{b}.v"), &h);
-        let mut s = q;
-        for i in 0..s.data.len() {
-            s.data[i] = s.data[i] * k.data[i].tanh() + v.data[i];
+        apply(&format!("blocks.{b}.q"), &bufs.h, &mut bufs.q);
+        apply(&format!("blocks.{b}.k"), &bufs.h, &mut bufs.k);
+        apply(&format!("blocks.{b}.v"), &bufs.h, &mut bufs.v);
+        // s = q ⊙ tanh(k) + v, in place over q.
+        for i in 0..bufs.q.data.len() {
+            bufs.q.data[i] = bufs.q.data[i] * bufs.k.data[i].tanh() + bufs.v.data[i];
         }
-        let attn = apply(&format!("blocks.{b}.o"), &s);
-        h.add_assign(&attn);
-        rms_normalize(&mut h);
-        let mut u = apply(&format!("blocks.{b}.up"), &h);
-        for uv in u.data.iter_mut() {
+        apply(&format!("blocks.{b}.o"), &bufs.q, &mut bufs.attn);
+        bufs.h.add_assign(&bufs.attn);
+        rms_normalize(&mut bufs.h);
+        apply(&format!("blocks.{b}.up"), &bufs.h, &mut bufs.u);
+        for uv in bufs.u.data.iter_mut() {
             if *uv < 0.0 {
                 *uv = 0.0;
             }
         }
-        let d = apply(&format!("blocks.{b}.down"), &u);
-        h.add_assign(&d);
-        rms_normalize(&mut h);
+        apply(&format!("blocks.{b}.down"), &bufs.u, &mut bufs.d);
+        bufs.h.add_assign(&bufs.d);
+        rms_normalize(&mut bufs.h);
     }
-    h
+    bufs.h.clone()
 }
 
-/// Stack request vectors into a batch activation: column j = request j.
-fn batch_mat(reqs: &[Vec<f32>], d_model: usize) -> Mat {
+/// Stack request vectors into a reusable batch activation: column j =
+/// request j.
+fn batch_mat_into(reqs: &[Vec<f32>], d_model: usize, x: &mut Mat) {
     let b = reqs.len();
-    let mut x = Mat::zeros(d_model, b);
+    x.reset(d_model, b);
     for (j, r) in reqs.iter().enumerate() {
         for (i, &v) in r.iter().enumerate() {
             *x.at_mut(i, j) = v;
         }
     }
-    x
 }
 
 /// Run the batched engine over a packed model: packed pass (timed per
-/// batch), dense-baseline pass, bitwise agreement check, request-order
+/// batch, exact or int8), dense-baseline pass, bitwise agreement check
+/// (exact mode) or accuracy-cost measurement (int8 mode), request-order
 /// checksum.
 pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
     ensure!(cfg.requests > 0, "--requests must be positive");
+    ensure!(
+        cfg.act_bits == 0 || cfg.act_bits == 8,
+        "--act-bits supports only 8 (or 0 = exact f32); got {}",
+        cfg.act_bits
+    );
+    let int8 = cfg.act_bits == 8;
     let blocks = model.block_count();
     ensure!(blocks > 0, "packed model has no blocks.*.q layers");
     // Validate the full block structure up front so a truncated or
@@ -180,15 +230,40 @@ pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
         .collect();
     let batches = chunk_ranges(cfg.requests, cfg.batch.max(1));
 
-    // Packed pass: the fused unpack-GEMM forward, no dense weights anywhere.
-    let apply_packed = |name: &str, x: &Mat| model.get(name).forward_with(&pool, x);
+    // Per-run reusable state: scratch arena + layer buffers + batch matrix
+    // + activation codes. Nothing below allocates once these reach their
+    // first-batch high-water mark.
+    let scratch = ServeScratch::default();
+    let mut bufs = LayerBufs::default();
+    let mut xbuf = Mat::zeros(0, 0);
+    let mut actbuf = QuantizedActs::default();
+
+    // Packed pass: the fused forward, no dense weights anywhere.
     let mut latencies = vec![0.0f64; cfg.requests];
     let mut outputs: Vec<Mat> = Vec::with_capacity(batches.len());
     let t_packed = Instant::now();
     for br in &batches {
         let t = Instant::now();
-        let x = batch_mat(&reqs[br.start..br.end], d_model);
-        let y = forward_batch(&apply_packed, blocks, &x);
+        batch_mat_into(&reqs[br.start..br.end], d_model, &mut xbuf);
+        let y = if int8 {
+            forward_batch(
+                &mut |name, x, out| {
+                    let l = model.get(name);
+                    act_quant::quantize_into(x, l.act_group(), &mut actbuf);
+                    l.forward_int8_into(&pool, x, &actbuf, &scratch, out);
+                },
+                blocks,
+                &xbuf,
+                &mut bufs,
+            )
+        } else {
+            forward_batch(
+                &mut |name, x, out| model.get(name).forward_into_with(&pool, x, &scratch, out),
+                blocks,
+                &xbuf,
+                &mut bufs,
+            )
+        };
         let ms = t.elapsed().as_secs_f64() * 1e3;
         for l in &mut latencies[br.start..br.end] {
             *l = ms;
@@ -198,29 +273,39 @@ pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
     let packed_secs = t_packed.elapsed().as_secs_f64();
 
     // Dense baseline (optional): materialize every layer once (setup,
-    // untimed), run the same batches through plain `matmul_with`, and
-    // assert the packed path agrees bit-for-bit — packing is a storage
-    // change, never a numerics change.
-    let dense_secs = if cfg.baseline {
+    // untimed), run the same batches through plain `matmul_with`. In exact
+    // mode the packed path must agree bit-for-bit — packing is a storage
+    // change, never a numerics change. In int8 mode the deviation IS the
+    // measurement: the end-to-end accuracy cost of activation quantization.
+    let (dense_secs, int8_err) = if cfg.baseline {
         let dense: BTreeMap<String, Mat> =
             model.layers.iter().map(|l| (l.name.clone(), l.dequantize())).collect();
-        let apply_dense = |name: &str, x: &Mat| dense[name].matmul_with(&pool, x);
         let mut dense_outputs: Vec<Mat> = Vec::with_capacity(batches.len());
         let t_dense = Instant::now();
         for br in &batches {
-            let x = batch_mat(&reqs[br.start..br.end], d_model);
-            dense_outputs.push(forward_batch(&apply_dense, blocks, &x));
+            batch_mat_into(&reqs[br.start..br.end], d_model, &mut xbuf);
+            let y = forward_batch(
+                &mut |name, x, out| *out = dense[name].matmul_with(&pool, x),
+                blocks,
+                &xbuf,
+                &mut bufs,
+            );
+            dense_outputs.push(y);
         }
         let secs = t_dense.elapsed().as_secs_f64();
-        for (bi, (a, b)) in outputs.iter().zip(&dense_outputs).enumerate() {
-            ensure!(
-                a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
-                "packed forward diverged from the dense reference in batch {bi}"
-            );
+        if int8 {
+            (Some(secs), Some(output_error(&dense_outputs, &outputs)))
+        } else {
+            for (bi, (a, b)) in outputs.iter().zip(&dense_outputs).enumerate() {
+                ensure!(
+                    a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "packed forward diverged from the dense reference in batch {bi}"
+                );
+            }
+            (Some(secs), None)
         }
-        Some(secs)
     } else {
-        None
+        (None, None)
     };
 
     // Request-order output checksum (column j of a batch = one request).
@@ -238,11 +323,13 @@ pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
         threads: cfg.threads,
         blocks,
         d_model,
+        act_bits: cfg.act_bits,
         packed_bytes: model.packed_bytes(),
         dense_bytes: model.dense_bytes(),
         latencies_ms: latencies,
         packed_secs,
         dense_secs,
+        int8_err,
         checksum: h,
     })
 }
@@ -264,16 +351,63 @@ mod tests {
         let model = small_model();
         let mut reference: Option<u64> = None;
         for threads in [1usize, 2, 4, 8] {
-            let cfg = ServeConfig { batch: 3, requests: 7, threads, seed: 0, baseline: true };
+            let cfg = ServeConfig { batch: 3, requests: 7, threads, ..ServeConfig::default() };
             let rep = run(&model, &cfg).unwrap();
             assert_eq!(rep.latencies_ms.len(), 7);
             assert!(rep.packed_bytes < rep.dense_bytes);
             assert!(rep.throughput_rps() > 0.0);
+            assert_eq!(rep.act_bits, 0);
+            assert!(rep.int8_err.is_none());
             match reference {
                 None => reference = Some(rep.checksum),
                 Some(want) => assert_eq!(want, rep.checksum, "threads={threads}"),
             }
         }
+    }
+
+    #[test]
+    fn int8_engine_checksum_thread_invariant_and_error_small() {
+        let model = small_model();
+        let mut reference: Option<u64> = None;
+        let mut exact_checksum = None;
+        for threads in [1usize, 2, 4, 8] {
+            let cfg = ServeConfig {
+                batch: 3,
+                requests: 7,
+                threads,
+                act_bits: 8,
+                ..ServeConfig::default()
+            };
+            let rep = run(&model, &cfg).unwrap();
+            assert_eq!(rep.act_bits, 8);
+            let err = rep.int8_err.expect("baseline on -> error stats");
+            // int8 serving approximates the exact path closely but not
+            // exactly: small relative error, strictly nonzero.
+            assert!(err.rel_rmse() < 0.05, "rel rmse {}", err.rel_rmse());
+            assert!(err.max_abs > 0.0);
+            match reference {
+                None => reference = Some(rep.checksum),
+                Some(want) => assert_eq!(want, rep.checksum, "threads={threads}"),
+            }
+            if exact_checksum.is_none() {
+                let exact = run(
+                    &model,
+                    &ServeConfig { batch: 3, requests: 7, threads, ..ServeConfig::default() },
+                )
+                .unwrap();
+                exact_checksum = Some(exact.checksum);
+            }
+        }
+        // The int8 path is a different numeric path: its checksum differs
+        // from the exact one (same requests, same model).
+        assert_ne!(reference.unwrap(), exact_checksum.unwrap());
+    }
+
+    #[test]
+    fn rejects_unsupported_act_bits() {
+        let model = small_model();
+        let cfg = ServeConfig { act_bits: 4, ..ServeConfig::default() };
+        assert!(run(&model, &cfg).is_err());
     }
 
     #[test]
@@ -292,15 +426,56 @@ mod tests {
         let model = small_model();
         let a = run(
             &model,
-            &ServeConfig { batch: 1, requests: 6, threads: 2, seed: 1, baseline: false },
+            &ServeConfig {
+                batch: 1,
+                requests: 6,
+                threads: 2,
+                seed: 1,
+                baseline: false,
+                act_bits: 0,
+            },
         )
         .unwrap();
         assert!(a.dense_secs.is_none() && a.dense_throughput_rps().is_none());
         let b = run(
             &model,
-            &ServeConfig { batch: 6, requests: 6, threads: 2, seed: 1, baseline: true },
+            &ServeConfig {
+                batch: 6,
+                requests: 6,
+                threads: 2,
+                seed: 1,
+                baseline: true,
+                act_bits: 0,
+            },
         )
         .unwrap();
         assert_eq!(a.checksum, b.checksum);
+
+        // Same for the int8 path.
+        let a8 = run(
+            &model,
+            &ServeConfig {
+                batch: 2,
+                requests: 6,
+                threads: 2,
+                seed: 1,
+                baseline: false,
+                act_bits: 8,
+            },
+        )
+        .unwrap();
+        let b8 = run(
+            &model,
+            &ServeConfig {
+                batch: 6,
+                requests: 6,
+                threads: 1,
+                seed: 1,
+                baseline: true,
+                act_bits: 8,
+            },
+        )
+        .unwrap();
+        assert_eq!(a8.checksum, b8.checksum);
     }
 }

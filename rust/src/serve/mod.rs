@@ -18,37 +18,63 @@
 //!   ([`PackedModel::save`]/[`PackedModel::load`]).
 //! * [`engine`] — the batched request engine behind `oac serve`.
 //!
-//! ## The fused forward and its determinism contract
+//! ## The exact fused forward and its determinism contract
 //!
 //! [`PackedLinear::forward_with`] computes `Y = Ŵ @ X` without ever
 //! materializing `Ŵ`: output rows are processed in fixed
 //! [`SERVE_PANEL_ROWS`]-row panels (geometry a function of the shape only,
 //! never the worker count), each panel's codes are unpacked+dequantized into
-//! a small reusable scratch tile, and every row goes through the same
-//! [`crate::tensor::gemm_row_into`] kernel `Mat::matmul_with` uses. Panels
-//! merge in panel order. Consequences, both enforced by
-//! `rust/tests/serve_props.rs`:
+//! a small reusable scratch tile ([`ServeScratch`]), and every row goes
+//! through the same [`crate::tensor::gemm_row_into`] kernel
+//! `Mat::matmul_with` uses, each panel writing its own disjoint output rows.
+//! Consequences, both enforced by `rust/tests/serve_props.rs`:
 //!
 //! 1. the packed forward is **bit-identical** to
 //!    `dequantize().matmul_with(..)` — packing is a storage change, never a
 //!    numerics change; and
 //! 2. the result is **bit-identical for every thread count**, extending the
 //!    calibration engine's `--threads` contract to serving.
+//!
+//! ## The integer-domain forward (`--act-bits 8`)
+//!
+//! [`PackedLinear::forward_int8_with`] never leaves the integer domain in
+//! its inner loop: activations are quantized per (K-group, column) to
+//! symmetric int8 ([`crate::quant::act_quant`], group = the weight
+//! `group_size` for uniform schemes so the two grids align), and each
+//! panel × K-group cell reduces weight *codes* against activation codes in
+//! i32 ([`crate::tensor::igemm::idot`]) — uniform grids via an integer dot
+//! plus a fused `scale·act_scale·(dot − zero·Σq)` epilogue, binary planes
+//! via ±1 sign dots, codebooks via per-row i32 LUT partial sums
+//! ([`crate::tensor::igemm::LutAcc`]). Sparse FP32 outliers are applied in
+//! a separate f32 epilogue against the *full-precision* activations, so
+//! SpQR-style saliency preservation is untouched by activation
+//! quantization.
+//!
+//! The int8 path is an approximation of the exact forward (bounded by half
+//! an activation quantization step per element — property-tested), but its
+//! determinism contract is identical: panel geometry is fixed, every f32
+//! accumulation order is a function of the layer shape alone, and the i32
+//! reductions are order-free by construction, so output bits are identical
+//! for every thread count. **The exact f32 path remains the default and is
+//! bit-identical to pre-integer-path builds.**
 
 pub mod engine;
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
 use crate::calib::{CalibConfig, Method};
 use crate::coordinator::{self, PipelineConfig, QuantReport, SyntheticSpec};
 use crate::model::{LinearSpec, WeightStore};
+use crate::quant::act_quant::{self, QuantizedActs};
 use crate::quant::packing;
 use crate::quant::uniform::{self, GroupParams};
 use crate::quant::PackSpec;
+use crate::tensor::igemm::{idot, LutAcc};
 use crate::tensor::{gemm_row_into, Mat};
 use crate::util::digest;
 use crate::util::pool::{chunk_ranges, Pool};
@@ -56,6 +82,75 @@ use crate::util::pool::{chunk_ranges, Pool};
 /// Fixed row-panel height of the fused unpack-GEMM forward. Part of the
 /// determinism contract: panel boundaries depend only on the layer shape.
 pub const SERVE_PANEL_ROWS: usize = 16;
+
+/// Grow-only resize: buffers keep their high-water capacity so steady-state
+/// reuse allocates nothing.
+fn ensure<T: Clone + Default>(v: &mut Vec<T>, len: usize) {
+    if v.len() < len {
+        v.resize(len, T::default());
+    }
+}
+
+/// Reusable per-row code unpack buffers: `narrow` for 1–8-bit u8 codes
+/// (uniform grids, binary planes), `wide` for 1–16-bit u16 codes
+/// (codebooks).
+#[derive(Debug, Clone, Default)]
+pub struct CodeBuf {
+    narrow: Vec<u8>,
+    wide: Vec<u16>,
+}
+
+/// Per-worker scratch for one forward panel: unpack buffers, the f32
+/// dequant tile of the exact path, and the integer path's widened code
+/// panel / LUT accumulators. Checked out of a [`ServeScratch`] arena per
+/// panel and returned afterwards, so the steady-state request loop runs
+/// without allocation.
+#[derive(Debug, Clone, Default)]
+pub struct PanelScratch {
+    codebuf: CodeBuf,
+    /// f32 dequant tile (exact path only).
+    tile: Vec<f32>,
+    /// Panel weight codes widened to i16 (uniform codes, ±1 sign planes).
+    codes16: Vec<i16>,
+    /// Panel codebook indices (u16, wide unpack).
+    wcodes: Vec<u16>,
+    /// Codebook LUT partial sums.
+    lut: LutAcc,
+    /// f32 per-group partial row for the codebook epilogue.
+    facc: Vec<f32>,
+}
+
+/// A lock-guarded pool of [`PanelScratch`] buffers shared by the panel
+/// workers of one (or many) forward calls. Which worker gets which buffer
+/// is scheduling-dependent, but buffers carry no values across checkouts —
+/// every field is fully overwritten before use — so outputs never depend on
+/// the checkout order.
+#[derive(Debug, Default)]
+pub struct ServeScratch {
+    bufs: Mutex<Vec<PanelScratch>>,
+}
+
+impl ServeScratch {
+    pub fn new() -> ServeScratch {
+        ServeScratch::default()
+    }
+
+    fn checkout(&self) -> PanelScratch {
+        self.bufs.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn restore(&self, s: PanelScratch) {
+        self.bufs.lock().unwrap().push(s);
+    }
+}
+
+/// Raw output pointer handed to panel workers. SAFETY contract: panels are
+/// disjoint row ranges of one output matrix, and each worker writes only
+/// its own panel's rows.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
 
 /// How a [`PackedLinear`]'s code stream decodes to f32 weights.
 #[derive(Debug, Clone, PartialEq)]
@@ -68,9 +163,11 @@ pub enum PackScheme {
     /// per-row `(α₁, α₂)`; the code stream holds two 1-bit sign planes per
     /// row (plane 1 then plane 2, `cols` bits each).
     Binary { alphas: Vec<(f32, f32)> },
-    /// Per-row codebook of `2^bits` f32 levels (SqueezeLLM-style, and the
-    /// universal exact-capture fallback for backends whose affine grid is
-    /// not recoverable after calibration).
+    /// Per-row codebook of f32 levels (SqueezeLLM-style, and the universal
+    /// exact-capture fallback for backends whose affine grid is not
+    /// recoverable after calibration). `bits` is the packed code width
+    /// (1–16: u8 codes up to 256 levels per row, u16 codes beyond); the
+    /// per-row level stride is `levels.len() / rows`.
     Codebook { bits: usize, levels: Vec<f32> },
 }
 
@@ -121,16 +218,17 @@ impl PackedLinear {
     }
 
     /// Decode rows `[r0, r1)` into `tile` (row-major, `(r1-r0) × cols`),
-    /// unpacking through `codebuf` (caller-provided, ≥ `codes_per_row()`
-    /// long) — the panel unpack the fused forward reuses per panel.
-    pub fn dequantize_rows_into(&self, r0: usize, r1: usize, codebuf: &mut [u8], tile: &mut [f32]) {
+    /// unpacking through the reusable `bufs` — the panel unpack the fused
+    /// forward reuses per panel.
+    pub fn dequantize_rows_into(&self, r0: usize, r1: usize, bufs: &mut CodeBuf, tile: &mut [f32]) {
         let cols = self.cols;
         debug_assert!(r0 <= r1 && r1 <= self.rows);
         assert_eq!(tile.len(), (r1 - r0) * cols, "tile shape mismatch");
         let cpr = self.codes_per_row();
-        let buf = &mut codebuf[..cpr];
         match &self.scheme {
             PackScheme::Uniform { bits, group_size, params } => {
+                ensure(&mut bufs.narrow, cpr);
+                let buf = &mut bufs.narrow[..cpr];
                 let gpr = cols / group_size;
                 for (tr, r) in (r0..r1).enumerate() {
                     packing::unpack_into(&self.codes, *bits, r * cpr, buf);
@@ -149,6 +247,8 @@ impl PackedLinear {
                 }
             }
             PackScheme::Binary { alphas } => {
+                ensure(&mut bufs.narrow, cpr);
+                let buf = &mut bufs.narrow[..cpr];
                 for (tr, r) in (r0..r1).enumerate() {
                     packing::unpack_into(&self.codes, 1, r * cpr, buf);
                     let (a1, a2) = alphas[r];
@@ -161,9 +261,13 @@ impl PackedLinear {
                 }
             }
             PackScheme::Codebook { bits, levels } => {
-                let k = 1usize << bits;
+                // Wide (u16) unpack covers every code width 1-16; for
+                // bits <= 8 it yields exactly the narrow path's codes.
+                ensure(&mut bufs.wide, cpr);
+                let buf = &mut bufs.wide[..cpr];
+                let k = levels.len() / self.rows;
                 for (tr, r) in (r0..r1).enumerate() {
-                    packing::unpack_into(&self.codes, *bits, r * cpr, buf);
+                    packing::unpack_wide_into(&self.codes, *bits, r * cpr, buf);
                     let row_levels = &levels[r * k..(r + 1) * k];
                     let dst = &mut tile[tr * cols..(tr + 1) * cols];
                     for c in 0..cols {
@@ -187,9 +291,9 @@ impl PackedLinear {
     /// Materialize the dense dequantized matrix (tests, PJRT eval uploads,
     /// and the dense serving baseline — the fused forward never calls this).
     pub fn dequantize(&self) -> Mat {
-        let mut codebuf = vec![0u8; self.codes_per_row()];
+        let mut bufs = CodeBuf::default();
         let mut data = vec![0.0f32; self.rows * self.cols];
-        self.dequantize_rows_into(0, self.rows, &mut codebuf, &mut data);
+        self.dequantize_rows_into(0, self.rows, &mut bufs, &mut data);
         Mat::from_vec(self.rows, self.cols, data)
     }
 
@@ -198,35 +302,281 @@ impl PackedLinear {
         self.forward_with(&Pool::global(), x)
     }
 
+    /// `Y = Ŵ @ X` without materializing `Ŵ` (see
+    /// [`Self::forward_into_with`]); allocates the output and a one-shot
+    /// scratch arena.
+    pub fn forward_with(&self, pool: &Pool, x: &Mat) -> Mat {
+        let scratch = ServeScratch::default();
+        let mut out = Mat::zeros(self.rows, x.cols);
+        self.forward_into_with(pool, x, &scratch, &mut out);
+        out
+    }
+
     /// `Y = Ŵ @ X` without materializing `Ŵ`: fixed [`SERVE_PANEL_ROWS`]-row
     /// panels are unpacked into a scratch tile and pushed through the same
-    /// [`gemm_row_into`] kernel `Mat::matmul_with` uses, merging output rows
-    /// in panel order. Bit-identical to
+    /// [`gemm_row_into`] kernel `Mat::matmul_with` uses, each panel writing
+    /// its own disjoint rows of `out`. Bit-identical to
     /// `self.dequantize().matmul_with(pool, x)` for every thread count.
-    pub fn forward_with(&self, pool: &Pool, x: &Mat) -> Mat {
+    pub fn forward_into_with(&self, pool: &Pool, x: &Mat, scratch: &ServeScratch, out: &mut Mat) {
         assert_eq!(self.cols, x.rows, "packed forward shape mismatch");
         let n = x.cols;
+        out.reset(self.rows, n);
         let panels = chunk_ranges(self.rows, SERVE_PANEL_ROWS);
-        let mut out = Mat::zeros(self.rows, n);
-        let blocks = pool.map(&panels, |_, r| {
+        let optr = SendPtr(out.data.as_mut_ptr());
+        pool.run(&panels, |_, r| {
             let nr = r.end - r.start;
-            let mut codebuf = vec![0u8; self.codes_per_row()];
-            let mut tile = vec![0.0f32; nr * self.cols];
-            self.dequantize_rows_into(r.start, r.end, &mut codebuf, &mut tile);
-            let mut block = vec![0.0f32; nr * n];
+            let mut s = scratch.checkout();
+            ensure(&mut s.tile, nr * self.cols);
+            let tile = &mut s.tile[..nr * self.cols];
+            self.dequantize_rows_into(r.start, r.end, &mut s.codebuf, tile);
+            // SAFETY: panels are disjoint row ranges of `out` (SendPtr
+            // contract); `out` outlives the pool scope.
+            let dst = unsafe { std::slice::from_raw_parts_mut(optr.0.add(r.start * n), nr * n) };
             for bi in 0..nr {
                 gemm_row_into(
                     &tile[bi * self.cols..(bi + 1) * self.cols],
                     x,
-                    &mut block[bi * n..(bi + 1) * n],
+                    &mut dst[bi * n..(bi + 1) * n],
                 );
             }
-            block
+            scratch.restore(s);
         });
-        for (r, b) in panels.iter().zip(&blocks) {
-            out.data[r.start * n..r.end * n].copy_from_slice(b);
+    }
+
+    /// K-group width the integer path quantizes activations with: the
+    /// weight group for uniform schemes (weight and activation grids
+    /// align), [`act_quant::DEFAULT_ACT_GROUP`] otherwise.
+    pub fn act_group(&self) -> usize {
+        match &self.scheme {
+            PackScheme::Uniform { group_size, .. } => *group_size,
+            _ => act_quant::DEFAULT_ACT_GROUP,
         }
+    }
+
+    /// Integer-domain `Y ≈ Ŵ @ X`: quantizes `x` to int8 per
+    /// (K-group, column) and runs [`Self::forward_int8_into`]. Deterministic
+    /// and bit-identical across thread counts; approximation error is
+    /// bounded by half an activation step per element (property-tested in
+    /// `rust/tests/serve_props.rs`).
+    pub fn forward_int8_with(&self, pool: &Pool, x: &Mat) -> Mat {
+        let acts = act_quant::quantize(x, self.act_group());
+        let scratch = ServeScratch::default();
+        let mut out = Mat::zeros(self.rows, x.cols);
+        self.forward_int8_into(pool, x, &acts, &scratch, &mut out);
         out
+    }
+
+    /// The int8 panel forward over pre-quantized activations. `x` is still
+    /// needed: sparse FP32 outliers multiply the *full-precision*
+    /// activations in their epilogue (saliency preservation), and the
+    /// quantized contribution of the code they shadow is subtracted back
+    /// out.
+    pub fn forward_int8_into(
+        &self,
+        pool: &Pool,
+        x: &Mat,
+        acts: &QuantizedActs,
+        scratch: &ServeScratch,
+        out: &mut Mat,
+    ) {
+        assert_eq!(self.cols, x.rows, "packed int8 forward shape mismatch");
+        assert_eq!(acts.rows, x.rows, "activation codes shape mismatch");
+        assert_eq!(acts.cols, x.cols, "activation codes batch mismatch");
+        assert_eq!(acts.group, self.act_group(), "activation group mismatch");
+        let n = x.cols;
+        out.reset(self.rows, n);
+        let panels = chunk_ranges(self.rows, SERVE_PANEL_ROWS);
+        let optr = SendPtr(out.data.as_mut_ptr());
+        pool.run(&panels, |_, r| {
+            let nr = r.end - r.start;
+            let mut s = scratch.checkout();
+            // SAFETY: panels are disjoint row ranges of `out` (SendPtr
+            // contract); `out` outlives the pool scope.
+            let dst = unsafe { std::slice::from_raw_parts_mut(optr.0.add(r.start * n), nr * n) };
+            self.int8_panel(r.start, r.end, x, acts, &mut s, dst);
+            scratch.restore(s);
+        });
+    }
+
+    /// One [`SERVE_PANEL_ROWS`] panel of the integer forward: widen the
+    /// panel's codes once, then reduce K-group × row cells through the
+    /// integer kernels with a fused f32 epilogue, and finally apply the
+    /// sparse FP32 outlier corrections.
+    fn int8_panel(
+        &self,
+        r0: usize,
+        r1: usize,
+        x: &Mat,
+        acts: &QuantizedActs,
+        s: &mut PanelScratch,
+        dst: &mut [f32],
+    ) {
+        let cols = self.cols;
+        let n = acts.cols;
+        let nr = r1 - r0;
+        let cpr = self.codes_per_row();
+        let groups = chunk_ranges(cols, acts.group);
+        match &self.scheme {
+            PackScheme::Uniform { bits, group_size, params } => {
+                let gpr = cols / group_size;
+                ensure(&mut s.codebuf.narrow, cpr);
+                ensure(&mut s.codes16, nr * cpr);
+                for tr in 0..nr {
+                    let buf = &mut s.codebuf.narrow[..cpr];
+                    packing::unpack_into(&self.codes, *bits, (r0 + tr) * cpr, buf);
+                    for (d, &c) in s.codes16[tr * cpr..(tr + 1) * cpr].iter_mut().zip(buf.iter())
+                    {
+                        *d = c as i16;
+                    }
+                }
+                for (g, gr) in groups.iter().enumerate() {
+                    let sx = &acts.scales[g * n..(g + 1) * n];
+                    let gsum = &acts.gsums[g * n..(g + 1) * n];
+                    for tr in 0..nr {
+                        let p = params[(r0 + tr) * gpr + g];
+                        let orow = &mut dst[tr * n..(tr + 1) * n];
+                        if p.scale > 0.0 {
+                            let wrow = &s.codes16[tr * cpr + gr.start..tr * cpr + gr.end];
+                            for j in 0..n {
+                                let q = &acts.qt[j * acts.rows + gr.start
+                                    ..j * acts.rows + gr.end];
+                                let dot = idot(wrow, q);
+                                orow[j] +=
+                                    p.scale * sx[j] * (dot as f32 - p.zero * gsum[j] as f32);
+                            }
+                        } else {
+                            // Degenerate group: every element decodes to the
+                            // constant `zero`, whose dot with the quantized
+                            // activations is `zero · Σq`.
+                            for j in 0..n {
+                                orow[j] += p.zero * sx[j] * gsum[j] as f32;
+                            }
+                        }
+                    }
+                }
+            }
+            PackScheme::Binary { alphas } => {
+                ensure(&mut s.codebuf.narrow, cpr);
+                ensure(&mut s.codes16, nr * cpr);
+                for tr in 0..nr {
+                    let buf = &mut s.codebuf.narrow[..cpr];
+                    packing::unpack_into(&self.codes, 1, (r0 + tr) * cpr, buf);
+                    for (d, &b) in s.codes16[tr * cpr..(tr + 1) * cpr].iter_mut().zip(buf.iter())
+                    {
+                        *d = 2 * b as i16 - 1; // sign plane -> ±1
+                    }
+                }
+                for (g, gr) in groups.iter().enumerate() {
+                    let sx = &acts.scales[g * n..(g + 1) * n];
+                    for tr in 0..nr {
+                        let (a1, a2) = alphas[r0 + tr];
+                        let p1 = &s.codes16[tr * cpr + gr.start..tr * cpr + gr.end];
+                        let p2 =
+                            &s.codes16[tr * cpr + cols + gr.start..tr * cpr + cols + gr.end];
+                        let orow = &mut dst[tr * n..(tr + 1) * n];
+                        for j in 0..n {
+                            let q =
+                                &acts.qt[j * acts.rows + gr.start..j * acts.rows + gr.end];
+                            let d1 = idot(p1, q);
+                            let d2 = idot(p2, q);
+                            orow[j] += sx[j] * (a1 * d1 as f32 + a2 * d2 as f32);
+                        }
+                    }
+                }
+            }
+            PackScheme::Codebook { bits, levels } => {
+                let k = levels.len() / self.rows;
+                ensure(&mut s.wcodes, nr * cpr);
+                for tr in 0..nr {
+                    packing::unpack_wide_into(
+                        &self.codes,
+                        *bits,
+                        (r0 + tr) * cpr,
+                        &mut s.wcodes[tr * cpr..(tr + 1) * cpr],
+                    );
+                }
+                ensure(&mut s.facc, n);
+                for (g, gr) in groups.iter().enumerate() {
+                    let sx = &acts.scales[g * n..(g + 1) * n];
+                    for tr in 0..nr {
+                        let row_levels = &levels[(r0 + tr) * k..(r0 + tr + 1) * k];
+                        s.lut.begin(k, n);
+                        for c in gr.clone() {
+                            s.lut.add_row(
+                                s.wcodes[tr * cpr + c],
+                                &acts.q8[c * n..(c + 1) * n],
+                            );
+                        }
+                        let facc = &mut s.facc[..n];
+                        facc.fill(0.0);
+                        for &v in s.lut.touched() {
+                            let lvl = row_levels[v as usize];
+                            for (f, &b) in facc.iter_mut().zip(s.lut.bucket(v)) {
+                                *f += lvl * b as f32;
+                            }
+                        }
+                        let orow = &mut dst[tr * n..(tr + 1) * n];
+                        for j in 0..n {
+                            orow[j] += sx[j] * facc[j];
+                        }
+                    }
+                }
+            }
+        }
+        // FP32 outlier epilogue: the outlier weight multiplies the exact
+        // activations, and the quantized contribution of the code value it
+        // shadows is subtracted back out.
+        if !self.outliers.is_empty() {
+            let lo = self.outliers.partition_point(|&(r, _, _)| (r as usize) < r0);
+            for &(r, c, v) in &self.outliers[lo..] {
+                let (r, c) = (r as usize, c as usize);
+                if r >= r1 {
+                    break;
+                }
+                let g = c / acts.group;
+                let wc = self.code_value_at(r, c);
+                let orow = &mut dst[(r - r0) * n..(r - r0 + 1) * n];
+                let xrow = &x.data[c * n..(c + 1) * n];
+                let qrow = &acts.q8[c * n..(c + 1) * n];
+                let sx = &acts.scales[g * n..(g + 1) * n];
+                for j in 0..n {
+                    orow[j] += v * xrow[j] - wc * sx[j] * qrow[j] as f32;
+                }
+            }
+        }
+    }
+
+    /// Decode the code-grid value at `(r, c)` — what the integer kernel
+    /// contributed at an outlier position, which its epilogue cancels.
+    fn code_value_at(&self, r: usize, c: usize) -> f32 {
+        let cpr = self.codes_per_row();
+        match &self.scheme {
+            PackScheme::Uniform { bits, group_size, params } => {
+                let mut code = [0u8; 1];
+                packing::unpack_into(&self.codes, *bits, r * cpr + c, &mut code);
+                let p = params[r * (self.cols / group_size) + c / group_size];
+                if p.scale > 0.0 {
+                    uniform::dequantize(code[0] as f32, p)
+                } else {
+                    p.zero
+                }
+            }
+            PackScheme::Binary { alphas } => {
+                let mut b = [0u8; 1];
+                packing::unpack_into(&self.codes, 1, r * cpr + c, &mut b);
+                let s1 = if b[0] == 1 { 1.0f32 } else { -1.0 };
+                packing::unpack_into(&self.codes, 1, r * cpr + self.cols + c, &mut b);
+                let s2 = if b[0] == 1 { 1.0f32 } else { -1.0 };
+                let (a1, a2) = alphas[r];
+                a1 * s1 + a2 * s2
+            }
+            PackScheme::Codebook { bits, levels } => {
+                let k = levels.len() / self.rows;
+                let mut code = [0u16; 1];
+                packing::unpack_wide_into(&self.codes, *bits, r * cpr + c, &mut code);
+                levels[r * k + code[0] as usize]
+            }
+        }
     }
 }
 
@@ -380,11 +730,16 @@ pub fn encode_binary_calibrated(name: &str, dq: &Mat) -> PackedLinear {
     encode_binary_planes(name, dq, true)
 }
 
-/// Exact per-row codebook capture: encodes *any* matrix with at most 256
-/// distinct values per row, bit-for-bit (distinctness by f32 bit pattern).
-/// The Squeeze/BiLLM export path, and the universal fallback for backends
-/// whose affine grid is not recoverable after calibration (OPTQ's dynamic
-/// groups, QuIP's rotated space).
+/// Maximum distinct levels one codebook row can hold (u16 code addressing).
+pub const MAX_CODEBOOK_LEVELS: usize = 1 << 16;
+
+/// Exact per-row codebook capture: encodes *any* matrix with at most
+/// [`MAX_CODEBOOK_LEVELS`] distinct values per row, bit-for-bit
+/// (distinctness by f32 bit pattern). Rows with ≤ 256 distinct values pack
+/// as u8 codes exactly as before; wider rows widen the code word up to u16
+/// — the OPTQ/QuIP/BiLLM `--pack-out` path no longer errors at realistic
+/// layer widths. The per-row level stride is the *largest* row's level
+/// count (not a power of two), so wide rows don't inflate narrow models.
 pub fn encode_codebook(name: &str, m: &Mat) -> Result<PackedLinear> {
     assert!(m.rows > 0 && m.cols > 0, "empty matrix");
     let mut row_levels: Vec<Vec<f32>> = Vec::with_capacity(m.rows);
@@ -393,32 +748,34 @@ pub fn encode_codebook(name: &str, m: &Mat) -> Result<PackedLinear> {
         let mut lv: Vec<f32> = m.row(r).to_vec();
         lv.sort_by(f32::total_cmp);
         lv.dedup_by_key(|v| v.to_bits());
-        if lv.len() > 256 {
-            bail!("row {r} has {} distinct values (max 256 for a codebook)", lv.len());
+        if lv.len() > MAX_CODEBOOK_LEVELS {
+            bail!(
+                "row {r} has {} distinct values (max {MAX_CODEBOOK_LEVELS} for a u16 codebook)",
+                lv.len()
+            );
         }
         max_k = max_k.max(lv.len());
         row_levels.push(lv);
     }
     let bits = ((usize::BITS - (max_k - 1).leading_zeros()) as usize).max(1);
-    let k = 1usize << bits;
-    let mut levels = Vec::with_capacity(m.rows * k);
+    let mut levels = Vec::with_capacity(m.rows * max_k);
     let mut codes = Vec::with_capacity(m.rows * m.cols);
     for (r, lv) in row_levels.iter().enumerate() {
         for &v in m.row(r) {
             let idx = lv
                 .binary_search_by(|probe| probe.total_cmp(&v))
                 .expect("codebook level missing its own value");
-            codes.push(idx as u8);
+            codes.push(idx as u16);
         }
         levels.extend_from_slice(lv);
-        levels.extend(std::iter::repeat(*lv.last().unwrap()).take(k - lv.len()));
+        levels.extend(std::iter::repeat(*lv.last().unwrap()).take(max_k - lv.len()));
     }
     Ok(PackedLinear {
         name: name.to_string(),
         rows: m.rows,
         cols: m.cols,
         scheme: PackScheme::Codebook { bits, levels },
-        codes: packing::pack(&codes, bits),
+        codes: packing::pack_wide(&codes, bits),
         outliers: Vec::new(),
     })
 }
@@ -525,11 +882,11 @@ impl PackedModel {
     /// affine codes, refit binary planes, or per-row codebook capture,
     /// with FP32 overrides for anything non-representable.
     ///
-    /// Scale caveat: the codebook scheme needs ≤ 256 distinct values per
-    /// row, which holds at synthetic/toy widths but fails cleanly (with
-    /// the layer and backend named in the error) once
-    /// `cols / group_size × 2^bits` grows past it — widening the code word
-    /// or going per-group is a ROADMAP lever.
+    /// Scale caveat: the codebook scheme holds up to
+    /// [`MAX_CODEBOOK_LEVELS`] (65536) distinct values per row — u16 codes
+    /// widen automatically past 256 — so OPTQ/QuIP/BiLLM exports now cover
+    /// realistic layer widths; a row beyond that still fails cleanly with
+    /// the layer and backend named in the error.
     pub fn from_quantized(
         layers: &[LinearSpec],
         original: &WeightStore,
@@ -658,6 +1015,9 @@ impl PackedModel {
                 }
                 2 => {
                     let sbits = read_u32(&mut f)? as usize;
+                    if !(1..=16).contains(&sbits) {
+                        bail!("codebook code width {sbits} out of range (1-16)");
+                    }
                     let nl = read_u32(&mut f)? as usize;
                     let mut levels = Vec::with_capacity(nl);
                     for _ in 0..nl {
@@ -806,10 +1166,102 @@ mod tests {
     }
 
     #[test]
-    fn codebook_rejects_too_many_levels() {
+    fn codebook_widens_past_u8_codes() {
+        // ~400 distinct values per row — beyond u8 codes — now captures
+        // exactly with u16 codes instead of erroring.
         let mut rng = Rng::new(3);
-        let m = randmat(&mut rng, 1, 400); // ~400 distinct values in one row
+        let m = randmat(&mut rng, 3, 400);
+        let pl = encode_codebook("wide", &m).unwrap();
+        match &pl.scheme {
+            PackScheme::Codebook { bits, .. } => assert!(*bits > 8, "bits={bits}"),
+            s => panic!("wrong scheme {s:?}"),
+        }
+        assert_eq!(bits_of(&pl.dequantize()), bits_of(&m));
+        // And the wide layer still serves: fused == dense, bitwise.
+        let x = randmat(&mut rng, 400, 3);
+        let want = bits_of(&pl.dequantize().matmul_with(&Pool::serial(), &x));
+        assert_eq!(bits_of(&pl.forward_with(&Pool::new(4), &x)), want);
+    }
+
+    #[test]
+    fn codebook_rejects_more_than_u16_levels() {
+        // > 2^16 distinct values in one row cannot be captured even wide.
+        let m = Mat::from_fn(1, (1 << 16) + 5, |_, c| c as f32);
         assert!(encode_codebook("l", &m).is_err());
+    }
+
+    #[test]
+    fn int8_uniform_matches_naive_epilogue_reference() {
+        // The tiled int8 kernel must equal a naive per-(row, group, column)
+        // evaluation of the same epilogue formula, bit for bit — catching
+        // any indexing slip in the panel/K-group tiling.
+        let mut rng = Rng::new(9);
+        for bits in [2usize, 4, 8] {
+            let w = randmat(&mut rng, 37, 64);
+            let x = randmat(&mut rng, 64, 5);
+            let pl = encode_uniform("l", &w, 16, bits);
+            let acts = crate::quant::act_quant::quantize(&x, pl.act_group());
+            let got = pl.forward_int8_with(&Pool::serial(), &x);
+            let (gpr, gs, n) = (64 / 16, 16usize, x.cols);
+            let params = match &pl.scheme {
+                PackScheme::Uniform { params, .. } => params.clone(),
+                _ => unreachable!(),
+            };
+            let codes = packing::unpack(&pl.codes, bits, pl.rows * pl.cols);
+            let mut want = Mat::zeros(pl.rows, n);
+            for r in 0..pl.rows {
+                for g in 0..gpr {
+                    let p = params[r * gpr + g];
+                    for j in 0..n {
+                        let sx = acts.scales[g * n + j];
+                        let gsum = acts.gsums[g * n + j];
+                        let cell = if p.scale > 0.0 {
+                            let mut dot = 0i32;
+                            for c in g * gs..(g + 1) * gs {
+                                dot += codes[r * 64 + c] as i32
+                                    * acts.q8[c * n + j] as i32;
+                            }
+                            p.scale * sx * (dot as f32 - p.zero * gsum as f32)
+                        } else {
+                            p.zero * sx * gsum as f32
+                        };
+                        *want.at_mut(r, j) += cell;
+                    }
+                }
+            }
+            assert_eq!(bits_of(&got), bits_of(&want), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn int8_forward_error_tracks_activation_steps() {
+        // The int8 output must sit within half an activation step per
+        // element of the exact forward (plus f32 slop).
+        let mut rng = Rng::new(10);
+        let w = randmat(&mut rng, 24, 64);
+        let x = randmat(&mut rng, 64, 4);
+        let pl = encode_uniform("l", &w, 16, 4);
+        let exact = pl.dequantize().matmul_with(&Pool::serial(), &x);
+        let got = pl.forward_int8_with(&Pool::serial(), &x);
+        let dq = pl.dequantize();
+        let acts = crate::quant::act_quant::quantize(&x, pl.act_group());
+        for r in 0..pl.rows {
+            for j in 0..x.cols {
+                let mut bound = 0.0f64;
+                let mut mag = 0.0f64;
+                for c in 0..pl.cols {
+                    let g = c / acts.group;
+                    let sx = acts.scales[g * x.cols + j] as f64;
+                    bound += dq.at(r, c).abs() as f64 * 0.5 * sx;
+                    mag += (dq.at(r, c) as f64 * x.at(c, j) as f64).abs();
+                }
+                let err = (got.at(r, j) as f64 - exact.at(r, j) as f64).abs();
+                assert!(
+                    err <= bound * 1.01 + mag * 1e-3 + 1e-4,
+                    "({r},{j}): err {err} bound {bound}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,171 @@
+//! Integer-domain GEMM kernels for the packed serving path.
+//!
+//! The int8 forward ([`crate::serve::PackedLinear::forward_int8_with`])
+//! keeps its inner loop entirely in integer arithmetic: weight codes are
+//! widened to i16 (values stay in 0..=255, or ±1 for sign planes),
+//! activations are quantized to int8 and stored pre-widened/transposed
+//! ([`crate::quant::act_quant`]), and each (output row, batch column,
+//! K-group) cell reduces through [`idot`] into an i32 before a single
+//! fused scale/zero-point epilogue converts to f32.
+//!
+//! Determinism here is *structural*: every product fits i32 with huge
+//! margin (|code·qx| ≤ 255·127 = 32385, summed over one K-group), and
+//! integer addition is associative — any evaluation order the
+//! autovectorizer picks yields the same i32 bit pattern. Only the f32
+//! epilogue has an order, and it is a fixed serial loop per output cell.
+
+/// i32 dot product of two i16 slices (weight codes × quantized
+/// activations). Written as the plain reduction loop the loop vectorizer
+/// turns into widening-multiply SIMD (`pmaddwd` on x86); the result is
+/// exact integer arithmetic, identical for every lane order.
+///
+/// Overflow margin: |a·b| ≤ 255·127 per element, so i32 is safe for any
+/// slice shorter than 66 000 elements — far beyond any K-group.
+#[inline]
+pub fn idot(w: &[i16], q: &[i16]) -> i32 {
+    debug_assert_eq!(w.len(), q.len(), "idot length mismatch");
+    let mut dot = 0i32;
+    for (a, b) in w.iter().zip(q.iter()) {
+        dot += *a as i32 * *b as i32;
+    }
+    dot
+}
+
+/// Per-row i32 LUT partial sums for the codebook int8 path: activations are
+/// bucketed by their weight code (`bucket[v][j] += qx[c][j]` for every
+/// column `c` in the K-group whose code is `v`), so the f32 epilogue
+/// multiplies each distinct level once per bucket instead of once per
+/// element.
+///
+/// Buckets are cleared lazily via a generation stamp — [`Self::begin`] is
+/// O(1) in the codebook size — and `touched` records first-seen code order,
+/// a pure function of the code stream, so the epilogue's f32 accumulation
+/// order is deterministic and thread-invariant.
+#[derive(Debug, Default, Clone)]
+pub struct LutAcc {
+    buckets: Vec<i32>,
+    stamp: Vec<u32>,
+    touched: Vec<u16>,
+    gen: u32,
+    n: usize,
+}
+
+impl LutAcc {
+    /// Start accumulating one (row, K-group) cell: `k` addressable codes,
+    /// `n` batch columns. Reuses buffers; no clearing of `buckets`.
+    pub fn begin(&mut self, k: usize, n: usize) {
+        self.n = n;
+        if self.buckets.len() < k * n {
+            self.buckets.resize(k * n, 0);
+        }
+        if self.stamp.len() < k {
+            self.stamp.resize(k, 0);
+        }
+        self.touched.clear();
+        self.gen = self.gen.wrapping_add(1);
+        if self.gen == 0 {
+            // Stamp wrap (once per 2^32 cells): reset and restart.
+            for s in self.stamp.iter_mut() {
+                *s = 0;
+            }
+            self.gen = 1;
+        }
+    }
+
+    /// Fold one activation row into the bucket of `code`.
+    pub fn add_row(&mut self, code: u16, qx_row: &[i8]) {
+        let v = code as usize;
+        let n = self.n;
+        debug_assert_eq!(qx_row.len(), n, "LutAcc row width mismatch");
+        let row = &mut self.buckets[v * n..(v + 1) * n];
+        if self.stamp[v] != self.gen {
+            self.stamp[v] = self.gen;
+            self.touched.push(code);
+            row.fill(0);
+        }
+        for (b, &q) in row.iter_mut().zip(qx_row.iter()) {
+            *b += q as i32;
+        }
+    }
+
+    /// Codes seen since [`Self::begin`], in first-seen order.
+    pub fn touched(&self) -> &[u16] {
+        &self.touched
+    }
+
+    /// The i32 partial-sum row of a touched code.
+    pub fn bucket(&self, code: u16) -> &[i32] {
+        let v = code as usize;
+        &self.buckets[v * self.n..(v + 1) * self.n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn idot_matches_scalar_reference() {
+        let mut rng = Rng::new(0);
+        for len in [0usize, 1, 7, 8, 9, 64, 100] {
+            let w: Vec<i16> = (0..len).map(|_| rng.below(256) as i16).collect();
+            let q: Vec<i16> = (0..len).map(|_| rng.below(255) as i16 - 127).collect();
+            let want: i64 = w.iter().zip(&q).map(|(&a, &b)| a as i64 * b as i64).sum();
+            assert_eq!(idot(&w, &q) as i64, want, "len={len}");
+        }
+    }
+
+    #[test]
+    fn idot_extreme_values_no_overflow() {
+        // 1000 elements at the magnitude ceiling stays far inside i32.
+        let w = vec![255i16; 1000];
+        let q = vec![-127i16; 1000];
+        assert_eq!(idot(&w, &q), -255 * 127 * 1000);
+    }
+
+    #[test]
+    fn lut_buckets_match_direct_sums() {
+        let mut rng = Rng::new(1);
+        let (k, n, cols) = (16usize, 5usize, 40usize);
+        let codes: Vec<u16> = (0..cols).map(|_| rng.below(k) as u16).collect();
+        let qx: Vec<i8> = (0..cols * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let mut lut = LutAcc::default();
+        // Two rounds through the same accumulator: reuse must not leak.
+        for round in 0..2 {
+            lut.begin(k, n);
+            for (c, &code) in codes.iter().enumerate() {
+                lut.add_row(code, &qx[c * n..(c + 1) * n]);
+            }
+            let mut want = vec![0i32; k * n];
+            for (c, &code) in codes.iter().enumerate() {
+                for j in 0..n {
+                    want[code as usize * n + j] += qx[c * n + j] as i32;
+                }
+            }
+            let mut seen = std::collections::BTreeSet::new();
+            for &v in lut.touched() {
+                assert!(seen.insert(v), "round {round}: code {v} touched twice");
+                assert_eq!(
+                    lut.bucket(v),
+                    &want[v as usize * n..(v as usize + 1) * n],
+                    "round {round}: bucket {v}"
+                );
+            }
+            let distinct: std::collections::BTreeSet<u16> = codes.iter().copied().collect();
+            assert_eq!(seen, distinct, "round {round}");
+        }
+    }
+
+    #[test]
+    fn lut_touched_order_is_first_seen() {
+        let mut lut = LutAcc::default();
+        lut.begin(8, 1);
+        for &c in &[3u16, 1, 3, 7, 1, 0] {
+            lut.add_row(c, &[1i8]);
+        }
+        assert_eq!(lut.touched(), &[3, 1, 7, 0]);
+        assert_eq!(lut.bucket(3), &[2]);
+        assert_eq!(lut.bucket(0), &[1]);
+    }
+}

@@ -4,11 +4,13 @@
 //! (model fwd/bwd) runs through PJRT artifacts; this module carries the
 //! calibration algebra — Hessians (≤ d_ff × d_ff), weight matrices, and the
 //! OPTQ/SpQR column loops. `linalg` adds Cholesky/LDL, `hadamard` the FWHT
-//! used by QuIP-lite, and `half` the f16/bf16 round-trip emulation used by
-//! the Table-3 precision study.
+//! used by QuIP-lite, `half` the f16/bf16 round-trip emulation used by the
+//! Table-3 precision study, and `igemm` the integer-domain dot/LUT kernels
+//! behind the int8 serving forward.
 
 pub mod half;
 pub mod hadamard;
+pub mod igemm;
 pub mod linalg;
 
 use crate::util::pool::{self, Pool};
@@ -44,8 +46,9 @@ pub fn gemm_row_into(arow: &[f32], b: &Mat, orow: &mut [f32]) {
 }
 
 /// 2-D row-major matrix of f32 (the only rank we need CPU-side; rank-1 uses
-/// rows == 1).
-#[derive(Clone, Debug, PartialEq)]
+/// rows == 1). `Default` is the empty 0×0 matrix — the natural seed for
+/// reusable buffers sized later via [`Mat::reset`].
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Mat {
     pub rows: usize,
     pub cols: usize,
@@ -60,6 +63,17 @@ impl Mat {
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
         assert_eq!(data.len(), rows * cols, "shape mismatch");
         Mat { rows, cols, data }
+    }
+
+    /// Reshape in place to a zeroed `rows × cols`, reusing the allocation.
+    /// Capacity is retained, so steady-state reuse (the serve engine's
+    /// per-batch buffers) allocates nothing once buffers reach their
+    /// high-water mark.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
     }
 
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
@@ -423,6 +437,18 @@ mod tests {
             let grow: Vec<u32> = orow.iter().map(|v| v.to_bits()).collect();
             assert_eq!(grow, wrow, "row {i}");
         }
+    }
+
+    #[test]
+    fn reset_zeroes_and_keeps_capacity() {
+        let mut a = Mat::from_vec(2, 3, vec![1.0; 6]);
+        let cap = a.data.capacity();
+        a.reset(3, 2);
+        assert_eq!((a.rows, a.cols), (3, 2));
+        assert!(a.data.iter().all(|&v| v == 0.0));
+        assert_eq!(a.data.capacity(), cap);
+        a.reset(1, 2);
+        assert_eq!(a.data.len(), 2);
     }
 
     #[test]

@@ -117,6 +117,20 @@ impl Pool {
             .map(|r| r.expect("pool worker dropped an item"))
             .collect()
     }
+
+    /// Apply `f` to every item, discarding results — for callers that
+    /// scatter output themselves into disjoint regions (e.g. the packed
+    /// serve forward writing each row panel straight into the output
+    /// matrix). The determinism contract is the caller's: `f(i, item)` must
+    /// write only to a region derived from `i`/`item`, never from the
+    /// worker identity.
+    pub fn run<T, F>(&self, items: &[T], f: F)
+    where
+        T: Sync,
+        F: Fn(usize, &T) + Sync,
+    {
+        self.map(items, |i, t| f(i, t));
+    }
 }
 
 #[cfg(test)]
@@ -141,6 +155,20 @@ mod tests {
         let items = [10usize, 20];
         assert_eq!(Pool::new(8).map(&items, |_, &x| x + 1), vec![11, 21]);
         assert_eq!(Pool::new(8).map(&[] as &[usize], |_, &x| x), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn run_executes_every_item_once() {
+        use std::sync::atomic::AtomicU64;
+        let items: Vec<usize> = (0..97).collect();
+        for t in [1usize, 4] {
+            let hits: Vec<AtomicU64> = (0..items.len()).map(|_| AtomicU64::new(0)).collect();
+            Pool::new(t).run(&items, |i, &x| {
+                assert_eq!(i, x);
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1), "threads={t}");
+        }
     }
 
     #[test]

@@ -1,24 +1,30 @@
 //! Property coverage for the packed serving store (`oac::serve`).
 //!
-//! Two contracts, both at the raw-bit level:
+//! Three contracts:
 //!
-//! 1. **Fused == dense.** `PackedLinear::forward_with` must equal
+//! 1. **Fused == dense, bitwise.** `PackedLinear::forward_with` must equal
 //!    `dequantize()` followed by `Mat::matmul_with` bit-for-bit, for every
 //!    scheme (uniform / binary / codebook), every bit width 1–8, and every
 //!    thread count in {1, 2, 4, 8} — packing is a storage change, never a
 //!    numerics change.
-//! 2. **Export == calibration.** A `PackedModel` exported from a calibrated
-//!    synthetic run must decode to exactly the weights the calibration
-//!    produced, for every servable backend.
+//! 2. **Export == calibration, bitwise.** A `PackedModel` exported from a
+//!    calibrated synthetic run must decode to exactly the weights the
+//!    calibration produced, for every servable backend.
+//! 3. **Int8 is deterministic and bounded.** The integer-domain forward
+//!    (`forward_int8_with`) must be bit-identical across thread counts
+//!    (checksum-stable) for every scheme and bit width, and its deviation
+//!    from the exact forward must stay within half an activation
+//!    quantization step per element.
 
 use oac::calib::{registry, Backend, CalibConfig, Method};
 use oac::coordinator::{
     run_synthetic, synthetic_layers, synthetic_weights, PipelineConfig, SyntheticSpec,
 };
 use oac::model::{LinearSpec, WeightEntry, WeightStore};
-use oac::quant::uniform;
+use oac::quant::{act_quant, uniform};
 use oac::serve::{self, engine, PackedModel};
 use oac::tensor::Mat;
+use oac::util::digest;
 use oac::util::pool::Pool;
 use oac::util::prop::{check, PropConfig};
 use oac::util::rng::Rng;
@@ -161,10 +167,10 @@ fn export_reproduces_calibrated_weights_bit_for_bit() {
 }
 
 #[test]
-fn wide_codebook_export_fails_cleanly_with_backend_name() {
-    // A row with more distinct values than a u8 code addresses cannot be
-    // captured; the `--pack-out`-time error must name both the layer and
-    // the backend so wide-layer failures are actionable.
+fn wide_codebook_export_succeeds_past_u8_codes() {
+    // A row with more distinct values than a u8 code addresses now widens
+    // to u16 codes: the export must succeed and decode bit-exactly (this
+    // used to be a clean `--pack-out` error — the widening satellite).
     let mut rng = Rng::new(0x11DE);
     let wide = randmat(&mut rng, 2, 400);
     let layers = vec![LinearSpec {
@@ -180,6 +186,36 @@ fn wide_codebook_export_fails_cleanly_with_backend_name() {
         data: wide.data.clone(),
     }]);
     let method = Method::baseline(Backend::OPTQ); // codebook pack spec
+    let cfg = CalibConfig::for_bits(2);
+    let model = PackedModel::from_quantized(&layers, &ws, &ws, method, &cfg).unwrap();
+    assert_eq!(bits_of(&model.get("wide.l").dequantize()), bits_of(&wide));
+    // Save/load round-trips the wide code stream too.
+    let tmp = std::env::temp_dir().join("oac_serve_props_wide.bin");
+    model.save(&tmp).unwrap();
+    let loaded = PackedModel::load(&tmp).unwrap();
+    assert_eq!(model.fingerprint(), loaded.fingerprint());
+    std::fs::remove_file(tmp).ok();
+}
+
+#[test]
+fn overwide_codebook_export_fails_cleanly_with_backend_name() {
+    // Past u16 addressing (> 65536 distinct values in one row) the export
+    // still fails cleanly, naming both the layer and the backend.
+    let cols = (1usize << 16) + 3;
+    let wide = Mat::from_fn(1, cols, |_, c| c as f32);
+    let layers = vec![LinearSpec {
+        name: "wide.l".into(),
+        rows: 1,
+        cols,
+        input: "x".into(),
+        block: 0,
+    }];
+    let ws = WeightStore::from_entries(vec![WeightEntry {
+        name: "wide.l".into(),
+        shape: vec![1, cols],
+        data: wide.data.clone(),
+    }]);
+    let method = Method::baseline(Backend::OPTQ);
     let cfg = CalibConfig::for_bits(2);
     let err = PackedModel::from_quantized(&layers, &ws, &ws, method, &cfg).unwrap_err();
     let msg = format!("{err:#}");
@@ -224,11 +260,173 @@ fn packed_model_save_load_serve_roundtrip() {
     model.save(&tmp).unwrap();
     let loaded = PackedModel::load(&tmp).unwrap();
     assert_eq!(model.fingerprint(), loaded.fingerprint());
-    let scfg = engine::ServeConfig { batch: 2, requests: 5, threads: 2, seed: 3, baseline: true };
+    let scfg =
+        engine::ServeConfig { batch: 2, requests: 5, threads: 2, seed: 3, ..Default::default() };
     let a = engine::run(&model, &scfg).unwrap();
     let b = engine::run(&loaded, &scfg).unwrap();
     assert_eq!(a.checksum, b.checksum);
     std::fs::remove_file(tmp).ok();
+}
+
+/// Build one packed layer of each scheme family from a random matrix:
+/// uniform at the given bits, two-plane binary, per-row codebook.
+fn schemes_of(rng: &mut Rng, rows: usize, cols16: usize, bits: usize) -> Vec<serve::PackedLinear> {
+    let cols = 16 * cols16;
+    let w = randmat(rng, rows, cols);
+    let uni = serve::encode_uniform("uniform", &w, 16, bits);
+    let bin = serve::encode_binary("binary", &w);
+    // Codebook input: few distinct values per row so the capture is exact.
+    let k = 1 + rng.below(40);
+    let levels: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+    let mut cm = Mat::zeros(rows, cols);
+    for v in cm.data.iter_mut() {
+        *v = levels[rng.below(k)];
+    }
+    let cb = serve::encode_codebook("codebook", &cm).unwrap();
+    vec![uni, bin, cb]
+}
+
+#[test]
+fn prop_int8_forward_thread_invariant_all_schemes() {
+    // The integer-domain forward must be bit-identical (checksum-stable)
+    // across thread counts for every scheme and every bit width 1-8.
+    check(
+        "int8 forward bit-identical across threads, schemes x bits 1-8",
+        PropConfig { cases: 12, seed: 0x18A7 },
+        |rng| {
+            let bits = 1 + rng.below(8);
+            let rows = 1 + rng.below(50);
+            let cols16 = 1 + rng.below(4);
+            let batch = 1 + rng.below(6);
+            let seed = rng.next_u64();
+            (bits, rows, cols16, batch, seed)
+        },
+        |&(bits, rows, cols16, batch, seed)| {
+            let mut rng = Rng::new(seed);
+            for pl in schemes_of(&mut rng, rows, cols16, bits) {
+                let x = randmat(&mut rng, pl.cols, batch);
+                let want = bits_of(&pl.forward_int8_with(&Pool::serial(), &x));
+                let checksum = {
+                    let y = pl.forward_int8_with(&Pool::serial(), &x);
+                    digest::fnv1a_f32(digest::FNV_OFFSET, &y.data)
+                };
+                for t in THREAD_COUNTS {
+                    let y = pl.forward_int8_with(&Pool::new(t), &x);
+                    if bits_of(&y) != want {
+                        return Err(format!("{}: int8 diverged at {t} threads", pl.name));
+                    }
+                    if digest::fnv1a_f32(digest::FNV_OFFSET, &y.data) != checksum {
+                        return Err(format!("{}: checksum unstable at {t} threads", pl.name));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The per-element error bound of the int8 path against the exact decoded
+/// weights: `bound(r,j) = Σ_c |ŵ[r,c]| · sx[g(c),j] / 2` (outlier columns
+/// excluded — they see full-precision activations), with multiplicative and
+/// additive slop for f32 accumulation-order differences.
+fn assert_int8_error_bounded(pl: &serve::PackedLinear, x: &Mat) -> Result<(), String> {
+    let dq = pl.dequantize();
+    let exact = dq.matmul_with(&Pool::serial(), x);
+    let got = pl.forward_int8_with(&Pool::serial(), x);
+    let acts = act_quant::quantize(x, pl.act_group());
+    let outliers: std::collections::BTreeSet<(usize, usize)> =
+        pl.outliers.iter().map(|&(r, c, _)| (r as usize, c as usize)).collect();
+    for r in 0..pl.rows {
+        for j in 0..x.cols {
+            let mut bound = 0.0f64;
+            let mut mag = 0.0f64;
+            for c in 0..pl.cols {
+                let term = dq.at(r, c) as f64 * x.at(c, j) as f64;
+                mag += term.abs();
+                if !outliers.contains(&(r, c)) {
+                    let sx = acts.scales[(c / acts.group) * x.cols + j] as f64;
+                    bound += dq.at(r, c).abs() as f64 * 0.5 * sx;
+                }
+            }
+            let err = (got.at(r, j) as f64 - exact.at(r, j) as f64).abs();
+            let limit = bound * 1.01 + mag * 1e-3 + 1e-4;
+            if err > limit {
+                return Err(format!(
+                    "{}: ({r},{j}) err {err:.3e} > limit {limit:.3e}",
+                    pl.name
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_int8_forward_error_bounded_all_schemes() {
+    // |int8 - exact| per output element is bounded by the activation
+    // quantization half-steps weighted by the decoded weight magnitudes
+    // (plus f32 accumulation slop): err(r,j) <= Σ_c |ŵ[r,c]|·sx[g(c),j]/2.
+    check(
+        "int8 forward error within activation half-steps",
+        PropConfig { cases: 10, seed: 0xB04D },
+        |rng| {
+            let bits = 2 + rng.below(7);
+            let rows = 1 + rng.below(30);
+            let cols16 = 1 + rng.below(3);
+            let batch = 1 + rng.below(5);
+            let seed = rng.next_u64();
+            (bits, rows, cols16, batch, seed)
+        },
+        |&(bits, rows, cols16, batch, seed)| {
+            let mut rng = Rng::new(seed);
+            for pl in schemes_of(&mut rng, rows, cols16, bits) {
+                let x = randmat(&mut rng, pl.cols, batch);
+                assert_int8_error_bounded(&pl, &x)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn int8_outliers_see_full_precision_activations() {
+    // Saliency preservation: a huge FP32 outlier weight must contribute
+    // `v · x[c,j]` exactly (full-precision activations), not `v` times a
+    // quantized activation — so the int8 error stays at the scale of the
+    // *non-outlier* weights even when the outlier dwarfs them.
+    let mut rng = Rng::new(0x0417);
+    let w = randmat(&mut rng, 8, 32);
+    let params = uniform::all_group_params(&w, 16, 3);
+    let mut dq = uniform::qdq_mat(&w, 16, 3);
+    *dq.at_mut(2, 5) = 1000.0; // outlier, ~3 orders above the grid
+    *dq.at_mut(6, 17) = -750.0;
+    let pl = serve::encode_with_params("outlier", &dq, params, 16, 3);
+    assert_eq!(pl.outliers.len(), 2);
+    let x = randmat(&mut rng, 32, 4);
+    // The bound below EXCLUDES the outlier positions: it only passes if the
+    // outlier columns are served at full precision.
+    assert_int8_error_bounded(&pl, &x).unwrap();
+    // And the outputs really carry the outlier contribution.
+    let exact = pl.dequantize().matmul_with(&Pool::serial(), &x);
+    let got = pl.forward_int8_with(&Pool::serial(), &x);
+    for j in 0..x.cols {
+        assert!((got.at(2, j) - exact.at(2, j)).abs() < 0.05 * exact.at(2, j).abs() + 1.0);
+    }
+}
+
+#[test]
+fn int8_wide_codebook_layer_serves() {
+    // A u16-code codebook layer (> 256 distinct levels per row) runs the
+    // int8 LUT path, thread-invariantly and within the error bound.
+    let mut rng = Rng::new(0x71DE);
+    let w = randmat(&mut rng, 6, 400);
+    let pl = serve::encode_codebook("wide", &w).unwrap();
+    let x = randmat(&mut rng, 400, 3);
+    let want = bits_of(&pl.forward_int8_with(&Pool::serial(), &x));
+    for t in THREAD_COUNTS {
+        assert_eq!(bits_of(&pl.forward_int8_with(&Pool::new(t), &x)), want, "threads={t}");
+    }
+    assert_int8_error_bounded(&pl, &x).unwrap();
 }
 
 #[test]
@@ -242,7 +440,7 @@ fn serve_engine_checksum_thread_invariant_across_methods() {
         let mut reference: Option<u64> = None;
         for threads in THREAD_COUNTS {
             let scfg =
-                engine::ServeConfig { batch: 4, requests: 9, threads, seed: 0, baseline: true };
+                engine::ServeConfig { batch: 4, requests: 9, threads, ..Default::default() };
             let rep = engine::run(&model, &scfg).unwrap();
             match reference {
                 None => reference = Some(rep.checksum),

@@ -131,6 +131,46 @@ fn synthetic_serve_bit_identical_across_threads() {
 }
 
 #[test]
+fn synthetic_serve_int8_bit_identical_across_threads() {
+    // The integer-domain serving mode (`--act-bits 8`) carries the same
+    // determinism contract as the exact path: one checksum for every
+    // --threads value — and it reports its accuracy cost vs the exact
+    // reference on the same line.
+    let mut checksums = Vec::new();
+    for threads in ["1", "2", "4", "8"] {
+        let out = oac_bin()
+            .args([
+                "serve", "--synthetic", "--batch", "4", "--requests", "12",
+                "--threads", threads, "--blocks", "1", "--act-bits", "8",
+            ])
+            .output()
+            .expect("run oac serve --act-bits 8");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout).to_string();
+        assert_eq!(token(&text, "act_bits="), "8", "{text}");
+        assert!(text.contains("int8_rel_rmse="), "{text}");
+        checksums.push(token(&text, "checksum=").to_string());
+    }
+    for i in 1..checksums.len() {
+        assert_eq!(checksums[0], checksums[i], "int8 serve checksum diverged at run {i}");
+    }
+
+    // And the int8 checksum is a genuinely different numeric path from the
+    // exact default.
+    let exact = oac_bin()
+        .args([
+            "serve", "--synthetic", "--batch", "4", "--requests", "12",
+            "--threads", "1", "--blocks", "1",
+        ])
+        .output()
+        .expect("run oac serve");
+    assert!(exact.status.success());
+    let text = String::from_utf8_lossy(&exact.stdout).to_string();
+    assert!(!text.contains("act_bits="), "exact-mode line must be unchanged: {text}");
+    assert_ne!(token(&text, "checksum="), checksums[0]);
+}
+
+#[test]
 fn backends_subcommand_lists_registry() {
     let out = oac_bin().args(["backends"]).output().expect("run oac backends");
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
