@@ -3,36 +3,48 @@
 //! `Hessian::accumulate_batch`, on synthetic layer shapes. Every variant is
 //! bit-identical (fixed shard merge order); the pool buys wall clock only.
 //!
-//! Run: cargo bench --bench perf_hessian
+//! Run:  cargo bench --bench perf_hessian [-- --quick]
+//! Emits the `hessian` section of `BENCH_calib.json` (tokens-eq/s per
+//! thread count, where one "token-equivalent" is one contribution row —
+//! the Phase-1 unit of calibration work) through the shared
+//! `util::bench::BenchJson` writer; `perf_quant` contributes the `quant`
+//! section with the end-to-end pipeline + overlap headline. `--quick`
+//! shrinks shapes and iteration counts for CI smoke.
+//!
 //! Expected: ≥ 2x at 4 threads on the default sizes (hardware permitting).
 
 use std::time::Duration;
 
 use oac::hessian::{Hessian, HessianKind};
 use oac::tensor::Mat;
-use oac::util::bench::{bench_cfg, black_box, BenchConfig};
+use oac::util::bench::{bench_cfg, black_box, BenchConfig, BenchJson};
+use oac::util::json::Json;
 use oac::util::pool::Pool;
 use oac::util::rng::Rng;
 
-const THREADS: [usize; 4] = [1, 2, 4, 8];
-
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let threads_axis: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
     let mut rng = Rng::new(0);
     let cfg = BenchConfig {
-        warmup_iters: 2,
-        min_iters: 5,
-        max_iters: 60,
-        target_time: Duration::from_secs(1),
+        warmup_iters: if quick { 1 } else { 2 },
+        min_iters: if quick { 2 } else { 5 },
+        max_iters: if quick { 10 } else { 60 },
+        target_time: Duration::from_millis(if quick { 150 } else { 1000 }),
     };
+    let mut out = BenchJson::new("hessian");
+    out.field("quick", Json::Bool(quick));
 
     println!("\n== gram: H = G^T G, fixed-shard parallel (GFLOP/s, higher better) ==");
-    for (m, n) in [(256usize, 256usize), (512, 256), (512, 512), (1024, 512)] {
+    let shapes: &[(usize, usize)] =
+        if quick { &[(256, 256), (512, 256)] } else { &[(256, 256), (512, 256), (512, 512), (1024, 512)] };
+    for &(m, n) in shapes {
         let mut g = Mat::zeros(m, n);
         rng.fill_normal(&mut g.data, 1.0);
         // Upper triangle only: ~m*n*n MAC-pairs / 2, 2 flops each.
         let flops = m as f64 * n as f64 * n as f64;
         let mut serial_ns = 0.0;
-        for threads in THREADS {
+        for &threads in threads_axis {
             let pool = Pool::new(threads);
             let r = bench_cfg(&format!("gram_{m}x{n}_t{threads}"), cfg, &mut || {
                 black_box(g.gram_with(&pool));
@@ -45,29 +57,64 @@ fn main() {
                 flops / r.mean_ns,
                 serial_ns / r.mean_ns
             );
+            out.record(vec![
+                ("section", Json::str("gram")),
+                ("rows", Json::num(m as f64)),
+                ("cols", Json::num(n as f64)),
+                ("threads", Json::num(threads as f64)),
+                ("mean_ns", Json::num(r.mean_ns)),
+                ("gflops", Json::num(flops / r.mean_ns)),
+                ("tokens_eq_per_s", Json::num(m as f64 / r.mean_secs())),
+                ("speedup_vs_t1", Json::num(serial_ns / r.mean_ns)),
+            ]);
         }
         println!();
     }
 
-    println!("== accumulate_batch: 16 contributions of 64x256 per layer ==");
-    let contribs: Vec<Mat> = (0..16)
+    // Sample-sharded Phase-1 accumulation: one Gram unit per contribution,
+    // merged in sample order — the scheduler's accumulate stage in
+    // isolation. tokens-eq = contributions × rows.
+    let (n_contrib, crows, dim) = if quick { (8usize, 64usize, 128usize) } else { (16, 64, 256) };
+    println!("== accumulate_batch: {n_contrib} contributions of {crows}x{dim} per layer ==");
+    let contribs: Vec<Mat> = (0..n_contrib)
         .map(|_| {
-            let mut c = Mat::zeros(64, 256);
+            let mut c = Mat::zeros(crows, dim);
             rng.fill_normal(&mut c.data, 1.0);
             c
         })
         .collect();
+    let tokens_eq = (n_contrib * crows) as f64;
     let mut serial_ns = 0.0;
-    for threads in THREADS {
+    for &threads in threads_axis {
         let pool = Pool::new(threads);
-        let r = bench_cfg(&format!("accumulate_batch_16x64x256_t{threads}"), cfg, &mut || {
-            let mut h = Hessian::zeros(256, HessianKind::OutputAdaptive);
-            h.accumulate_batch(&pool, &contribs);
-            black_box(&h.mat);
-        });
+        let r = bench_cfg(
+            &format!("accumulate_batch_{n_contrib}x{crows}x{dim}_t{threads}"),
+            cfg,
+            &mut || {
+                let mut h = Hessian::zeros(dim, HessianKind::OutputAdaptive);
+                h.accumulate_batch(&pool, &contribs);
+                black_box(&h.mat);
+            },
+        );
         if threads == 1 {
             serial_ns = r.mean_ns;
         }
-        println!("  -> t{threads}: speedup {:.2}x", serial_ns / r.mean_ns);
+        println!(
+            "  -> t{threads}: {:.0} tokens-eq/s, speedup {:.2}x",
+            tokens_eq / r.mean_secs(),
+            serial_ns / r.mean_ns
+        );
+        out.record(vec![
+            ("section", Json::str("accumulate")),
+            ("n_contrib", Json::num(n_contrib as f64)),
+            ("contrib_rows", Json::num(crows as f64)),
+            ("dim", Json::num(dim as f64)),
+            ("threads", Json::num(threads as f64)),
+            ("mean_ns", Json::num(r.mean_ns)),
+            ("tokens_eq_per_s", Json::num(tokens_eq / r.mean_secs())),
+            ("speedup_vs_t1", Json::num(serial_ns / r.mean_ns)),
+        ]);
     }
+
+    out.write_section("BENCH_calib.json", "calib");
 }

@@ -1,31 +1,103 @@
-//! Perf: quantization primitives and the Phase-2 fan-out — concurrent
-//! per-layer calibration at 1/2/4/8 threads (bit-identical across all of
-//! them), fused qdq, bit packing, binarization.
+//! Perf: quantization primitives, the Phase-2 fan-out, and the end-to-end
+//! block-pipeline scheduler — concurrent per-layer calibration at 1/2/4/8
+//! threads, the full synthetic pipeline with overlap on vs off, fused qdq,
+//! bit packing, binarization. Every variant is bit-identical across thread
+//! counts and schedules; the pool and the overlap buy wall clock only.
 //!
-//! Run: cargo bench --bench perf_quant
-//! Expected: ≥ 2x at 4 threads for the 8-layer calibration fan-out.
+//! Run:  cargo bench --bench perf_quant [-- --quick]
+//! Emits the `quant` section of `BENCH_calib.json` (pipeline tokens-eq/s
+//! per thread count × overlap mode, and the headline `overlap_speedup_t4`
+//! = no-overlap wall / overlapped wall at 4 threads) through the shared
+//! `util::bench::BenchJson` writer; `perf_hessian` contributes the
+//! `hessian` section. `--quick` shrinks shapes and iteration counts for
+//! CI smoke.
+//!
+//! Expected: ≥ 2x at 4 threads for the 8-layer calibration fan-out, and
+//! ≥ 1.2x end-to-end at 4 threads from overlap + sample-sharded Phase 1
+//! (hardware permitting).
 
 use std::time::Duration;
 
 use oac::calib::{Backend, CalibConfig, LayerCtx, Method};
+use oac::coordinator::{run_synthetic, PipelineConfig, SyntheticSpec};
 use oac::hessian::{prepare, Hessian, HessianKind, PreparedHessian, Reduction};
 use oac::quant::{binary, packing, uniform};
 use oac::tensor::Mat;
-use oac::util::bench::{bench, bench_cfg, black_box, BenchConfig};
+use oac::util::bench::{bench_cfg, black_box, BenchConfig, BenchJson};
+use oac::util::json::Json;
 use oac::util::pool::Pool;
 use oac::util::rng::Rng;
 
-const THREADS: [usize; 4] = [1, 2, 4, 8];
-
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let threads_axis: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
     let mut rng = Rng::new(0);
     let cfg = BenchConfig {
         warmup_iters: 1,
-        min_iters: 5,
-        max_iters: 40,
-        target_time: Duration::from_secs(1),
+        min_iters: if quick { 2 } else { 5 },
+        max_iters: if quick { 10 } else { 40 },
+        target_time: Duration::from_millis(if quick { 150 } else { 1000 }),
     };
+    let mut out = BenchJson::new("quant");
+    out.field("quick", Json::Bool(quick));
 
+    // ---- end-to-end block pipeline: overlap on vs off -------------------
+    // The tentpole measurement: the full synthetic two-phase pipeline
+    // through the block scheduler, pitting the double-buffered overlap
+    // schedule against the `--no-overlap` serial alternation at the same
+    // thread count. tokens-eq = blocks × samples × contribution rows (the
+    // Phase-1 calibration stream the run consumes).
+    let spec = if quick {
+        SyntheticSpec { blocks: 4, d_model: 64, d_ff: 128, n_contrib: 12, contrib_rows: 32, seed: 0 }
+    } else {
+        SyntheticSpec { blocks: 6, d_model: 96, d_ff: 192, n_contrib: 16, contrib_rows: 48, seed: 0 }
+    };
+    let pipe_cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: if quick { 2 } else { 3 },
+        max_iters: if quick { 4 } else { 8 },
+        target_time: Duration::from_millis(if quick { 600 } else { 2500 }),
+    };
+    let tokens_eq = (spec.blocks * spec.n_contrib * spec.contrib_rows) as f64;
+    println!(
+        "\n== pipeline: synthetic OAC 2-bit, blocks={} d_model={} d_ff={} n_contrib={} ==",
+        spec.blocks, spec.d_model, spec.d_ff, spec.n_contrib
+    );
+    let mut overlap_speedup_t4 = 0.0;
+    for &threads in threads_axis {
+        let mut walls = [0.0f64; 2]; // [no-overlap, overlap]
+        for (slot, overlap) in [(0usize, false), (1, true)] {
+            let mut pc = PipelineConfig::new(Method::oac(Backend::SPQR), 2);
+            pc.calib.threads = threads;
+            pc.overlap = overlap;
+            let label = if overlap { "overlap" } else { "serial" };
+            let r = bench_cfg(&format!("pipeline_{label}_t{threads}"), pipe_cfg, &mut || {
+                black_box(run_synthetic(&spec, &pc).expect("synthetic pipeline").1.avg_bits);
+            });
+            walls[slot] = r.mean_ns;
+            out.record(vec![
+                ("section", Json::str("pipeline")),
+                ("overlap", Json::Bool(overlap)),
+                ("threads", Json::num(threads as f64)),
+                ("mean_ns", Json::num(r.mean_ns)),
+                ("tokens_eq_per_s", Json::num(tokens_eq / r.mean_secs())),
+            ]);
+        }
+        let speedup = walls[0] / walls[1];
+        if threads == 4 {
+            overlap_speedup_t4 = speedup;
+        }
+        println!(
+            "  -> t{threads}: overlap {:.2}x vs serial ({:.1} vs {:.1} ms, {:.0} tokens-eq/s)",
+            speedup,
+            walls[1] / 1e6,
+            walls[0] / 1e6,
+            tokens_eq / (walls[1] / 1e9),
+        );
+    }
+    out.field("overlap_speedup_t4", Json::num(overlap_speedup_t4));
+
+    // ---- Phase-2 layer fan-out in isolation ----------------------------
     println!("\n== concurrent per-layer calibration: 8 x [128x128] SpQR 2-bit ==");
     let layers: Vec<(Mat, PreparedHessian)> = (0..8)
         .map(|_| {
@@ -44,7 +116,7 @@ fn main() {
     let ccfg = CalibConfig::for_bits(2);
     let method = Method::oac(Backend::SPQR);
     let mut serial_ns = 0.0;
-    for threads in THREADS {
+    for &threads in threads_axis {
         let pool = Pool::new(threads);
         let r = bench_cfg(&format!("calibrate_8_layers_t{threads}"), cfg, &mut || {
             let out = pool.map(&layers, |i, (w, prep)| {
@@ -61,36 +133,45 @@ fn main() {
             serial_ns = r.mean_ns;
         }
         println!("  -> t{threads}: speedup {:.2}x", serial_ns / r.mean_ns);
+        out.record(vec![
+            ("section", Json::str("calibrate")),
+            ("threads", Json::num(threads as f64)),
+            ("mean_ns", Json::num(r.mean_ns)),
+            ("speedup_vs_t1", Json::num(serial_ns / r.mean_ns)),
+        ]);
     }
 
     println!("\n== fused qdq (CPU reference of the L1 kernel) ==");
     let mut w = Mat::zeros(512, 512);
     rng.fill_normal(&mut w.data, 0.5);
     let bytes = (512 * 512 * 4) as f64;
-    let r = bench("cpu_qdq_512x512_g32b2", || {
+    let r = bench_cfg("cpu_qdq_512x512_g32b2", cfg, &mut || {
         black_box(uniform::qdq_mat(&w, 32, 2));
     });
     println!("  -> {:.2} GB/s\n", bytes / r.mean_ns);
 
     println!("== packing ==");
     let codes: Vec<u8> = (0..1 << 20).map(|_| rng.below(4) as u8).collect();
-    let r = bench("pack_2bit_1M", || {
+    let r = bench_cfg("pack_2bit_1M", cfg, &mut || {
         black_box(packing::pack(&codes, 2));
     });
     println!("  -> {:.2} Melem/s\n", codes.len() as f64 / r.mean_ns * 1e3);
     let packed = packing::pack(&codes, 2);
-    bench("unpack_2bit_1M", || {
+    bench_cfg("unpack_2bit_1M", cfg, &mut || {
         black_box(packing::unpack(&packed, 2, codes.len()));
     });
 
     println!("\n== binarization ==");
     let mut wb = Mat::zeros(256, 1024);
     rng.fill_normal(&mut wb.data, 1.0);
-    bench("bell_binarize_256x1024", || {
+    bench_cfg("bell_binarize_256x1024", cfg, &mut || {
         black_box(binary::bell_binarize_mat(&wb));
     });
     let row: Vec<f32> = wb.row(0).to_vec();
-    bench("residual_binarize_row_1024", || {
+    bench_cfg("residual_binarize_row_1024", cfg, &mut || {
         black_box(binary::residual_binarize(&row));
     });
+
+    out.write_section("BENCH_calib.json", "calib");
+    println!("overlap_speedup_t4 = {overlap_speedup_t4:.2}x");
 }

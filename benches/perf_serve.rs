@@ -20,7 +20,7 @@ use oac::calib::{Backend, Method};
 use oac::coordinator::{PipelineConfig, SyntheticSpec};
 use oac::serve::{self, engine, PackedLinear};
 use oac::tensor::Mat;
-use oac::util::bench::{bench_cfg, black_box, BenchConfig};
+use oac::util::bench::{bench_cfg, black_box, BenchConfig, BenchJson};
 use oac::util::json::Json;
 use oac::util::pool::Pool;
 use oac::util::rng::Rng;
@@ -45,7 +45,17 @@ fn main() {
     let mut x = Mat::zeros(cols, batch);
     rng.fill_normal(&mut x.data, 1.0);
 
-    let mut records: Vec<Json> = Vec::new();
+    let mut out = BenchJson::new("serve");
+    out.field("quick", Json::Bool(quick));
+    out.field(
+        "shape",
+        Json::obj(vec![
+            ("rows", Json::num(rows as f64)),
+            ("cols", Json::num(cols as f64)),
+            ("batch", Json::num(batch as f64)),
+            ("group", Json::num(group as f64)),
+        ]),
+    );
     let mut speedups_t4: Vec<f64> = Vec::new();
     for &bits in bits_axis {
         let pl: PackedLinear = serve::encode_uniform("w", &w, group, bits);
@@ -78,7 +88,7 @@ fn main() {
                 rd.mean_ns / batch as f64,
             );
             for (path, r) in [("dense", &rd), ("packed-f32", &rf), ("packed-int8", &ri)] {
-                records.push(Json::obj(vec![
+                out.record(vec![
                     ("section", Json::str("layer")),
                     ("path", Json::str(path)),
                     ("bits", Json::num(bits as f64)),
@@ -88,7 +98,7 @@ fn main() {
                     ("tokens_per_s", Json::num(batch as f64 / r.mean_secs())),
                     ("packed_bytes", Json::num(pl.packed_bytes() as f64)),
                     ("dense_bytes", Json::num(pl.dense_bytes() as f64)),
-                ]));
+                ]);
             }
         }
     }
@@ -122,7 +132,7 @@ fn main() {
                 rep.throughput_rps(),
                 rep.checksum
             );
-            records.push(Json::obj(vec![
+            out.record(vec![
                 ("section", Json::str("engine")),
                 ("path", Json::str(label)),
                 ("threads", Json::num(threads as f64)),
@@ -132,25 +142,11 @@ fn main() {
                     "ns_per_token",
                     Json::num(rep.packed_secs * 1e9 / requests as f64),
                 ),
-            ]));
+            ]);
         }
     }
 
-    let summary = Json::obj(vec![
-        ("bench", Json::str("serve")),
-        ("quick", Json::Bool(quick)),
-        (
-            "shape",
-            Json::obj(vec![
-                ("rows", Json::num(rows as f64)),
-                ("cols", Json::num(cols as f64)),
-                ("batch", Json::num(batch as f64)),
-                ("group", Json::num(group as f64)),
-            ]),
-        ),
-        ("int8_speedup_t4", Json::num(stats::geomean(&speedups_t4))),
-        ("records", Json::arr(records)),
-    ]);
-    std::fs::write("BENCH_serve.json", format!("{summary}\n")).expect("write BENCH_serve.json");
-    println!("\nwrote BENCH_serve.json (int8_speedup_t4 = {:.2}x)", stats::geomean(&speedups_t4));
+    out.field("int8_speedup_t4", Json::num(stats::geomean(&speedups_t4)));
+    out.write("BENCH_serve.json");
+    println!("int8_speedup_t4 = {:.2}x", stats::geomean(&speedups_t4));
 }

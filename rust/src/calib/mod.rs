@@ -27,7 +27,10 @@
 //!   registry lookup (case-insensitive, `-`/`_`-insensitive, aliases).
 //! * [`Method`] = backend × [`HessianKind`]. `Method::name()` round-trips
 //!   through `Method::parse` for every registered backend and both Hessian
-//!   kinds.
+//!   kinds. The declared kind is also the fan-out's **Hessian sharing
+//!   key** ([`distinct_hessian_kinds`]): the coordinator accumulates each
+//!   distinct kind once per block and every method declaring it reads the
+//!   same store entry.
 //!
 //! **Adding a backend** is one new module implementing [`CalibBackend`]
 //! plus one line in `registry::register_backends![…]` — no dispatch edits
@@ -231,6 +234,25 @@ impl Method {
     }
 }
 
+/// Distinct Hessian kinds declared by a set of methods, in first-occurrence
+/// order — the sharing axis of the multi-backend fan-out's accumulate stage.
+/// A method *declares* the Hessian it calibrates against via
+/// [`Method::hessian`]; the block-pipeline scheduler
+/// ([`crate::coordinator::schedule`]) accumulates each declared kind **once**
+/// per block and shares it read-only across every method that declares it
+/// (Hessian-free backends still declare a kind — they receive the prepared
+/// factorization and ignore it, which keeps their fan-out output
+/// bit-identical to their solo runs).
+pub fn distinct_hessian_kinds(methods: impl IntoIterator<Item = Method>) -> Vec<HessianKind> {
+    let mut kinds = Vec::new();
+    for m in methods {
+        if !kinds.contains(&m.hessian) {
+            kinds.push(m.hessian);
+        }
+    }
+    kinds
+}
+
 /// Knobs shared by all backends (paper Tables 8-9 defaults via
 /// [`CalibConfig::for_bits`]).
 #[derive(Debug, Clone)]
@@ -338,6 +360,21 @@ mod tests {
         ] {
             assert_eq!(Backend::parse(b.name()), Some(b), "{}", b.name());
         }
+    }
+
+    #[test]
+    fn distinct_hessian_kinds_dedup_in_first_occurrence_order() {
+        let kinds = distinct_hessian_kinds([
+            Method::baseline(Backend::OPTQ),
+            Method::oac(Backend::SPQR),
+            Method::baseline(Backend::RTN),
+            Method::oac(Backend::BILLM),
+        ]);
+        assert_eq!(kinds, vec![HessianKind::Agnostic, HessianKind::OutputAdaptive]);
+        assert_eq!(
+            distinct_hessian_kinds([Method::oac(Backend::SPQR)]),
+            vec![HessianKind::OutputAdaptive]
+        );
     }
 
     #[test]

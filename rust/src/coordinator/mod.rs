@@ -1,11 +1,11 @@
-//! The OAC pipeline coordinator — paper Algorithm 1 / Fig. 3.
+//! The OAC pipeline coordinator — paper Algorithm 1 / Fig. 3 as a
+//! **block-pipeline stage graph** (see [`schedule`] for the executor).
 //!
-//! Per transformer block (iterated in order, so later blocks see the
-//! already-quantized earlier blocks, exactly as the paper's layer-by-layer
-//! recipe prescribes):
+//! Per transformer block, the work decomposes into stages
+//! `accumulate → prepare → calibrate → (optional) pack`:
 //!
-//! **Phase 1 — Hessian estimation.** For every calibration sample, run one
-//! full-model execution with the *current* weights:
+//! **accumulate (Phase 1 — Hessian estimation).** For every calibration
+//! sample, one full-model execution with the *current* weights:
 //! * OAC: the `model_grads` artifact (fwd + CE loss + bwd fused at AOT
 //!   time) yields the per-layer gradient matrices G[i]; each layer's
 //!   `Ĥ_OAC += G[i]ᵀG[i]` (eq. 14/22) is contracted by the L1 Pallas
@@ -13,17 +13,49 @@
 //! * Baselines: the `layer_inputs` artifact yields the activations X
 //!   entering each layer; `H̄ += XᵀX` (eq. 1) through the same kernel.
 //!
-//! **Phase 2 — Calibration.** Each linear layer in the block is quantized
-//! by the configured backend (RTN/OPTQ/SpQR/QuIP/BiLLM/... — all dispatched
+//! On the host path the contraction is **sharded across calibration
+//! samples**: one Gram unit per sample, merged per layer in sample order —
+//! fixed shard geometry, fixed merge order, bit-identical to the serial
+//! per-sample loop for any thread count.
+//!
+//! **prepare.** Damp + factorize each accumulated Hessian through the
+//! `(block, layer, kind)`-keyed [`PreparedCache`], shared by every backend
+//! consuming the same `(kind, α, reduction)` variant.
+//!
+//! **calibrate (Phase 2).** Each linear layer is quantized by the
+//! configured backend (RTN/OPTQ/SpQR/QuIP/BiLLM/... — all dispatched
 //! through the [`crate::calib::CalibBackend`] trait object, so the
-//! coordinator never names a backend) using its Hessian; the dequantized
-//! weights replace
-//! the originals in the weight store (and therefore in every later block's
-//! Phase 1). Within a block the layers are independent given their prepared
-//! Hessians, so Phase 2 fans them out across the `--threads` worker pool
-//! ([`calibrate_block`]) and merges results in layer order — bit-identical
-//! to the serial loop for any thread count. Hessian factorizations are
-//! shared through a [`PreparedCache`].
+//! coordinator never names a backend) against its prepared Hessian; the
+//! dequantized weights replace the originals in the weight store (and
+//! therefore in every later block's Phase 1). Layers (and, in the
+//! multi-backend fan-out, whole methods) fan out across the `--threads`
+//! worker pool and merge in `(method, layer)` order.
+//!
+//! **pack.** When a packed serving export is requested, the block's
+//! calibrated layers are encoded into [`crate::serve::PackedLinear`]s right
+//! after calibration (originals snapshotted per block — the full-model
+//! pre-quantization clone is gone).
+//!
+//! ## Scheduling
+//!
+//! The synthetic pipeline ([`run_synthetic`] / [`run_synthetic_fanout`])
+//! executes this stage graph through the double-buffered scheduler in
+//! [`schedule`]: block b+1's accumulate stage (and block b+2's
+//! sample-generation stage) run **concurrently** with block b's
+//! prepare+calibrate stage on one shared work queue ([`crate::util::pool::
+//! Pool::map2`]), and the fan-out accumulates each distinct Hessian kind
+//! once, shared read-only across methods ([`crate::hessian::
+//! HessianStore`]). `--no-overlap` (or [`PipelineBuilder::overlap`])
+//! selects the classic serial alternation; both schedules are bit-identical
+//! for every thread count (`rust/tests/parallel.rs`).
+//!
+//! The artifact path ([`Coordinator::quantize_model`]) runs the same stage
+//! graph with overlap forced off: its Phase 1 is *weight-dependent* (block
+//! b+1's model executions must see block b already quantized, per
+//! Algorithm 1), so the prefetch seam stays empty until the PJRT artifact
+//! path can stage activation snapshots ahead of the weight mutation.
+
+pub mod schedule;
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -31,6 +63,8 @@ use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
+
+pub use schedule::{run_synthetic_pipeline, ScheduleStats};
 
 use crate::calib::{CalibConfig, LayerCtx, Method};
 use crate::eval::DeviceWeights;
@@ -64,6 +98,11 @@ pub struct PipelineConfig {
     pub grad_precision: GradPrecision,
     /// Use the L1 Pallas kernel artifact for the Hessian contraction.
     pub use_kernel: bool,
+    /// Run the block-pipeline scheduler with Phase-1 prefetch overlap
+    /// (`--no-overlap` turns it off). A wall-clock knob only: both
+    /// schedules are bit-identical. Ignored (forced off) on the artifact
+    /// path, whose Phase 1 is weight-dependent.
+    pub overlap: bool,
     /// Where to save the packed serving export (`--pack-out`); None skips
     /// the export.
     pub pack_out: Option<PathBuf>,
@@ -77,6 +116,7 @@ impl PipelineConfig {
             n_calib: 24,
             grad_precision: GradPrecision::F32,
             use_kernel: true,
+            overlap: true,
             pack_out: None,
         }
     }
@@ -111,6 +151,7 @@ impl Pipeline {
             threads: None,
             grad_precision: None,
             use_kernel: None,
+            overlap: None,
             pack_out: None,
         }
     }
@@ -129,6 +170,7 @@ pub struct PipelineBuilder {
     threads: Option<usize>,
     grad_precision: Option<GradPrecision>,
     use_kernel: Option<bool>,
+    overlap: Option<bool>,
     pack_out: Option<PathBuf>,
 }
 
@@ -183,6 +225,13 @@ impl PipelineBuilder {
         self
     }
 
+    /// Toggle the block-pipeline prefetch overlap (`--no-overlap` passes
+    /// `false`). Wall-clock only — results are bit-identical either way.
+    pub fn overlap(mut self, overlap: bool) -> Self {
+        self.overlap = Some(overlap);
+        self
+    }
+
     /// Where the packed serving export should be saved. The path is carried
     /// on [`PipelineConfig::pack_out`] for the run driver to act on —
     /// `oac quantize` saves via [`Coordinator::quantize_model_packed`] /
@@ -234,6 +283,9 @@ impl PipelineBuilder {
         if let Some(v) = self.use_kernel {
             p.use_kernel = v;
         }
+        if let Some(v) = self.overlap {
+            p.overlap = v;
+        }
         p.pack_out = self.pack_out;
         Ok(p)
     }
@@ -246,12 +298,24 @@ pub struct QuantReport {
     pub layers: Vec<LayerReport>,
     pub avg_bits: f64,
     pub total_outliers: usize,
-    /// Wall-clock split for the cost table (Table 7).
+    /// Work split for the cost table (Table 7). Under the overlapped
+    /// scheduler these are **work-seconds** (per-unit durations summed
+    /// across workers — comparable across overlap modes); on the serial
+    /// artifact path they are plain per-phase wall clock.
     pub phase1_secs: f64,
     pub phase2_secs: f64,
-    /// Peak transient memory estimate: largest simultaneously-held Hessian
-    /// set + gradient matrices, in bytes (Table 7's memory column analog).
+    /// Peak transient memory estimate: the largest simultaneously-live
+    /// stage footprint — Hessians + prepared factorizations of the
+    /// calibrating block, plus (under overlap) the next block's sample
+    /// buffers, in-flight Grams and freshly merged Hessians (Table 7's
+    /// memory column analog).
     pub peak_mem_bytes: usize,
+    /// Estimated wall clock the overlapped schedule saved vs running the
+    /// same stages as separate barriered passes (0 when overlap is off or
+    /// on the serial artifact path). See [`ScheduleStats`].
+    pub overlap_secs: f64,
+    /// Measured wall clock of the whole block loop.
+    pub wall_secs: f64,
 }
 
 #[derive(Debug, Clone)]
@@ -504,38 +568,97 @@ impl<'a> Coordinator<'a> {
 
     /// The full Algorithm-1 pipeline. Mutates `ws` in place (quantized
     /// weights replace originals) and returns the report.
+    ///
+    /// Runs the stage graph `accumulate → prepare → calibrate` per block
+    /// with overlap forced off: on this path Phase 1 is *weight-dependent*
+    /// (block b+1's full-model executions must see block b already
+    /// quantized, per Algorithm 1), so accumulate(b+1) cannot legally run
+    /// while calibrate(b) is still mutating the store. The synthetic
+    /// pipeline, whose Phase 1 is weight-independent, overlaps —
+    /// see [`schedule`].
     pub fn quantize_model(
         &self,
         ws: &mut WeightStore,
         calib_tokens: &[Vec<i32>],
         cfg: &PipelineConfig,
     ) -> Result<QuantReport> {
+        self.quantize_model_inner(ws, calib_tokens, cfg, None)
+    }
+
+    fn quantize_model_inner(
+        &self,
+        ws: &mut WeightStore,
+        calib_tokens: &[Vec<i32>],
+        cfg: &PipelineConfig,
+        mut pack: Option<&mut Vec<crate::serve::PackedLinear>>,
+    ) -> Result<QuantReport> {
+        if cfg.overlap {
+            log::debug!(
+                "artifact path: Phase 1 is weight-dependent (Algorithm 1's sequential \
+                 block order) — running the stage graph without prefetch overlap"
+            );
+        }
         let tokens = &calib_tokens[..cfg.n_calib.min(calib_tokens.len())];
+        let pool = Pool::new(cfg.calib.threads);
         let mut layers = Vec::new();
         let mut budgets: Vec<BitBudget> = Vec::new();
         let mut phase1 = 0.0f64;
         let mut phase2 = 0.0f64;
         let mut peak_mem = 0usize;
+        let t_loop = Instant::now();
 
         for block in 0..self.meta.n_layers {
+            // accumulate: the Hessians for this block's layers.
             let t1 = Instant::now();
             let hes = self.block_hessians(ws, block, tokens, cfg)?;
-            phase1 += t1.elapsed().as_secs_f64();
+            let p1_block = t1.elapsed().as_secs_f64();
+            phase1 += p1_block;
 
-            // Memory accounting: Hessians of this block + one grad matrix.
-            let hess_bytes: usize = hes.values().map(|h| h.mat.data.len() * 4).sum();
-            let grad_bytes = self
-                .meta
-                .block_layers(block)
-                .iter()
-                .map(|l| l.rows * l.cols * 4)
-                .max()
-                .unwrap_or(0);
-            peak_mem = peak_mem.max(hess_bytes + grad_bytes);
-
-            let t2 = Instant::now();
             let block_layers = self.meta.block_layers(block);
-            for q in calibrate_block(&self.prepared, ws, &block_layers, &hes, cfg)? {
+
+            // pack (stage input): snapshot the block's original weights
+            // before calibrate overwrites them — per block instead of the
+            // old whole-model clone.
+            let originals: Option<Vec<Mat>> = pack
+                .as_ref()
+                .map(|_| block_layers.iter().map(|l| ws.get_mat(&l.name)).collect());
+
+            // prepare: warm the block-keyed factorization cache
+            // concurrently (pure per layer, so bit-identical to the lazy
+            // in-worker prepare it replaces). The closure captures only the
+            // Sync cache, never the non-Sync runtime.
+            let t2 = Instant::now();
+            let prepared_cache = &self.prepared;
+            pool.map(&block_layers, |_, l| {
+                prepared_cache
+                    .get_or_prepare(block, &l.name, &hes[&l.name], cfg.calib.alpha, cfg.calib.reduction)
+                    .map(|_| ())
+            })
+            .into_iter()
+            .collect::<Result<Vec<()>, _>>()
+            .with_context(|| format!("preparing Hessians for block {block}"))?;
+
+            // Memory accounting: true high-water mark of the block's
+            // stages — accumulate holds the Hessians + one in-flight
+            // contribution matrix; calibrate holds the Hessians + three
+            // factor matrices per layer.
+            let hess_bytes: usize = hes.values().map(|h| h.mat.data.len() * 4).sum();
+            let grad_bytes = block_layers.iter().map(|l| l.rows * l.cols * 4).max().unwrap_or(0);
+            let prepared_bytes: usize =
+                block_layers.iter().map(|l| 3 * l.cols * l.cols * 4).sum();
+            peak_mem = peak_mem.max(hess_bytes + grad_bytes.max(prepared_bytes));
+
+            // calibrate: fan the block's layers across the pool.
+            let quantized = calibrate_block(&self.prepared, ws, &block_layers, &hes, cfg)?;
+
+            // pack: encode this block's layers against the snapshotted
+            // originals while they are still at hand.
+            if let (Some(out), Some(orig)) = (pack.as_deref_mut(), originals.as_ref()) {
+                for (l, (q, w)) in block_layers.iter().zip(quantized.iter().zip(orig)) {
+                    out.push(crate::serve::pack_layer(&l.name, w, &q.dq, cfg.method, &cfg.calib)?);
+                }
+            }
+            for q in quantized {
                 layers.push(LayerReport {
                     name: q.name.clone(),
                     calib_error: q.calib_error,
@@ -544,13 +667,15 @@ impl<'a> Coordinator<'a> {
                 });
                 budgets.push(q.budget);
             }
-            phase2 += t2.elapsed().as_secs_f64();
+            let p2_block = t2.elapsed().as_secs_f64();
+            phase2 += p2_block;
             // Later blocks re-accumulate their Hessians (new fingerprints),
-            // so these factorizations can never hit again — drop them
-            // rather than holding 3 n×n matrices per layer for the run.
-            self.prepared.clear();
+            // so this block's factorizations can never hit again — retire
+            // them rather than holding 3 n×n matrices per layer for the run.
+            self.prepared.clear_block(block);
             log::info!(
-                "block {block}: phase1 {phase1:.1}s cum, phase2 {phase2:.1}s cum"
+                "block {block}: phase1 {p1_block:.2}s phase2 {p2_block:.2}s | \
+                 cum phase1 {phase1:.1}s phase2 {phase2:.1}s"
             );
         }
 
@@ -562,31 +687,30 @@ impl<'a> Coordinator<'a> {
             phase1_secs: phase1,
             phase2_secs: phase2,
             peak_mem_bytes: peak_mem,
+            overlap_secs: 0.0,
+            wall_secs: t_loop.elapsed().as_secs_f64(),
         })
     }
 
-    /// Algorithm 1 + packed export: snapshot the original weights, quantize
-    /// in place, then export every linear layer into a
-    /// [`crate::serve::PackedModel`] — packed bit-stream codes + group
-    /// params instead of the dequantized dense f32 the eval path keeps. The
-    /// export reproduces the calibrated weights bit-for-bit (codes recovered
-    /// against the original weights' group grids, FP32 residues kept as
-    /// sparse outliers).
+    /// Algorithm 1 + packed export: quantize in place with a per-block pack
+    /// stage — each block's original weights are snapshotted just before
+    /// calibration and its layers encoded into
+    /// [`crate::serve::PackedLinear`]s right after (packed bit-stream codes
+    /// + group params instead of the dequantized dense f32 the eval path
+    /// keeps; no whole-model pre-quantization clone). The export reproduces
+    /// the calibrated weights bit-for-bit (codes recovered against the
+    /// original weights' group grids, FP32 residues kept as sparse
+    /// outliers).
     pub fn quantize_model_packed(
         &self,
         ws: &mut WeightStore,
         calib_tokens: &[Vec<i32>],
         cfg: &PipelineConfig,
     ) -> Result<(crate::serve::PackedModel, QuantReport)> {
-        let original = ws.clone();
-        let report = self.quantize_model(ws, calib_tokens, cfg)?;
-        let model = crate::serve::PackedModel::from_quantized(
-            &self.meta.linear_layers,
-            &original,
-            ws,
-            cfg.method,
-            &cfg.calib,
-        )?;
+        let mut packed = Vec::with_capacity(self.meta.linear_layers.len());
+        let report = self.quantize_model_inner(ws, calib_tokens, cfg, Some(&mut packed))?;
+        let model =
+            crate::serve::PackedModel::from_layers(packed, cfg.method.name(), cfg.calib.bits);
         Ok((model, report))
     }
 }
@@ -602,11 +726,12 @@ pub fn run_pipeline(
     Coordinator::new(rt, meta)?.quantize_model(ws, calib_tokens, cfg)
 }
 
-/// Phase 2 for one layer: fetch (or compute) the prepared Hessian from the
-/// shared cache and dispatch through the backend trait object. Free
-/// function so the parallel fan-out does not have to capture the
-/// (non-`Sync`) runtime.
-fn calibrate_one(
+/// The prepare+calibrate stages for one layer: fetch (or compute) the
+/// prepared Hessian from the block-keyed shared cache and dispatch through
+/// the backend trait object. Free function so the parallel fan-out does not
+/// have to capture the (non-`Sync`) runtime; `pub(crate)` because the
+/// block-pipeline scheduler's calibrate units are exactly this call.
+pub(crate) fn calibrate_one(
     cache: &PreparedCache,
     ws: &WeightStore,
     layer: &LinearSpec,
@@ -615,7 +740,7 @@ fn calibrate_one(
 ) -> Result<QuantizedLayer> {
     let w = ws.get_mat(&layer.name);
     let prepared = cache
-        .get_or_prepare(&layer.name, hessian, cfg.calib.alpha, cfg.calib.reduction)
+        .get_or_prepare(layer.block, &layer.name, hessian, cfg.calib.alpha, cfg.calib.reduction)
         .with_context(|| format!("preparing Hessian for {}", layer.name))?;
     Ok(cfg.method.backend.quantize(&LayerCtx {
         name: &layer.name,
@@ -724,107 +849,52 @@ pub fn synthetic_weights(spec: &SyntheticSpec) -> WeightStore {
     WeightStore::from_entries(entries)
 }
 
-/// Run the full two-phase pipeline on a synthetic model: Phase 1
-/// accumulates each layer's Hessian from seeded random contribution
-/// matrices via the batch-sharded [`Hessian::accumulate_batch`]; Phase 2 is
-/// the same concurrent [`calibrate_block`] the artifact pipeline uses.
-/// Returns the quantized weights and the usual report. Deterministic: the
-/// output depends only on `(spec, cfg)` — never on `cfg.calib.threads`.
+/// Run the full two-phase pipeline on a synthetic model through the
+/// block-pipeline scheduler ([`schedule`]): Phase 1 is sharded across
+/// calibration samples (one Gram unit per sample, merged in sample order)
+/// and — unless `cfg.overlap` is off — block b+1's Phase 1 runs
+/// concurrently with block b's Phase 2 on the shared pool. Returns the
+/// quantized weights and the usual report. Deterministic: the output
+/// depends only on `(spec, cfg)` — never on `cfg.calib.threads` or the
+/// overlap mode.
 pub fn run_synthetic(spec: &SyntheticSpec, cfg: &PipelineConfig) -> Result<(WeightStore, QuantReport)> {
-    let layers = synthetic_layers(spec);
-    let pool = Pool::new(cfg.calib.threads);
-    let mut ws = synthetic_weights(spec);
-
-    let cache = PreparedCache::new();
-    let mut reports = Vec::new();
-    let mut budgets: Vec<BitBudget> = Vec::new();
-    let mut phase1 = 0.0f64;
-    let mut phase2 = 0.0f64;
-    let mut peak_mem = 0usize;
-
-    for block in 0..spec.blocks {
-        let block_layers: Vec<&LinearSpec> = layers.iter().filter(|l| l.block == block).collect();
-
-        let t1 = Instant::now();
-        let mut hes: BTreeMap<String, Hessian> = BTreeMap::new();
-        for (i, l) in block_layers.iter().enumerate() {
-            // OAC methods see per-layer "gradient" streams; agnostic ones
-            // per-input "activation" streams — either way a seeded stream
-            // keyed by (block, layer index) keeps runs reproducible.
-            let mut rng = Rng::new(
-                spec.seed ^ 0xC0DE_F00D ^ ((block as u64) << 32) ^ (i as u64 + 1),
-            );
-            let contribs: Vec<Mat> = (0..spec.n_contrib)
-                .map(|_| {
-                    let mut g = Mat::zeros(spec.contrib_rows, l.cols);
-                    rng.fill_normal(&mut g.data, 1.0);
-                    g
-                })
-                .collect();
-            let mut h = Hessian::zeros(l.cols, cfg.method.hessian);
-            h.accumulate_batch(&pool, &contribs);
-            hes.insert(l.name.clone(), h);
-        }
-        phase1 += t1.elapsed().as_secs_f64();
-
-        let hess_bytes: usize = hes.values().map(|h| h.mat.data.len() * 4).sum();
-        let grad_bytes = block_layers
-            .iter()
-            .map(|l| spec.contrib_rows * l.cols * 4)
-            .max()
-            .unwrap_or(0);
-        peak_mem = peak_mem.max(hess_bytes + grad_bytes);
-
-        let t2 = Instant::now();
-        for q in calibrate_block(&cache, &mut ws, &block_layers, &hes, cfg)? {
-            reports.push(LayerReport {
-                name: q.name.clone(),
-                calib_error: q.calib_error,
-                avg_bits: q.budget.avg_bits(),
-                outliers: q.budget.outliers,
-            });
-            budgets.push(q.budget);
-        }
-        cache.clear();
-        phase2 += t2.elapsed().as_secs_f64();
-    }
-
-    let report = QuantReport {
-        method: cfg.method.name(),
-        avg_bits: BitBudget::merged_avg(&budgets),
-        total_outliers: budgets.iter().map(|b| b.outliers).sum(),
-        layers: reports,
-        phase1_secs: phase1,
-        phase2_secs: phase2,
-        peak_mem_bytes: peak_mem,
-    };
-    Ok((ws, report))
+    let (mut out, _) =
+        run_synthetic_pipeline(spec, std::slice::from_ref(cfg), cfg.calib.threads, cfg.overlap)?;
+    Ok(out.remove(0))
 }
 
 /// Run the synthetic pipeline for several methods **concurrently** on one
 /// worker pool (the paper's Table-14 shape: one model, many backends).
-/// Each method is one pool task running its own serial [`run_synthetic`]
-/// (inner `calib.threads` is forced to 1 — the pool is already saturated
-/// across methods, and nesting would oversubscribe the cores); results
-/// merge in `cfgs` order.
+/// All methods advance block-synchronously through the pipeline scheduler,
+/// which accumulates each distinct Hessian kind **once** per block and
+/// shares it read-only across every backend that declares it (the old
+/// per-method Phase 1 re-runs are gone); `(method, layer)` calibrate units
+/// fan out across the pool and merge in `cfgs` order.
 ///
 /// Bit-determinism: every method's `(weights, report)` is a pure function
-/// of `(spec, its cfg)` — thread counts are never a numerics knob — so the
-/// output is bit-identical to running the same configs sequentially at any
+/// of `(spec, its cfg)` — thread counts, the fan-out, the overlap mode and
+/// the Hessian sharing are never numerics knobs — so the output is
+/// bit-identical to running the same configs sequentially at any
 /// `--threads`, enforced by `rust/tests/parallel.rs`.
 pub fn run_synthetic_fanout(
     spec: &SyntheticSpec,
     cfgs: &[PipelineConfig],
     threads: usize,
 ) -> Result<Vec<(WeightStore, QuantReport)>> {
-    let pool = Pool::new(threads);
-    pool.map(cfgs, |_, cfg| {
-        let mut c = cfg.clone();
-        c.calib.threads = 1;
-        run_synthetic(spec, &c)
-    })
-    .into_iter()
-    .collect()
+    Ok(run_synthetic_fanout_stats(spec, cfgs, threads)?.0)
+}
+
+/// [`run_synthetic_fanout`] plus the scheduler's accounting
+/// ([`ScheduleStats`]) — the Hessian-sharing and overlap counters the CLI
+/// report and the acceptance tests read. Overlap is enabled iff every
+/// config asks for it.
+pub fn run_synthetic_fanout_stats(
+    spec: &SyntheticSpec,
+    cfgs: &[PipelineConfig],
+    threads: usize,
+) -> Result<(Vec<(WeightStore, QuantReport)>, ScheduleStats)> {
+    let overlap = cfgs.iter().all(|c| c.overlap);
+    run_synthetic_pipeline(spec, cfgs, threads, overlap)
 }
 
 // Keep Rc import used when compiling without tests.

@@ -1,0 +1,618 @@
+//! The block-pipeline scheduler: Algorithm 1 as an explicit stage graph.
+//!
+//! Every transformer block flows through the stages
+//!
+//! ```text
+//!   generate ──▶ accumulate ──▶ prepare ──▶ calibrate ──▶ (optional) pack
+//!   (Phase-1 inputs) (Phase-1 grams) (factorize)  (Phase 2)
+//! ```
+//!
+//! and the scheduler keeps **two blocks in flight**: while block b sits in
+//! its prepare+calibrate stage, block b+1's accumulate stage (and block
+//! b+2's generate stage) run concurrently on the *same* worker pool. The
+//! overlap primitive is [`Pool::map2`]: one shared work queue holds block
+//! b's Phase-2 units first and block b+1's Phase-1 units behind them, so a
+//! worker that runs out of calibration work immediately picks up Hessian
+//! sample shards instead of idling at a per-stage barrier. `--no-overlap`
+//! degrades to the classic serial alternation (generate → accumulate →
+//! calibrate per block) for A/B-ing the schedule; both orders are
+//! bit-identical by construction.
+//!
+//! ## Work units and the determinism contract
+//!
+//! * **generate** — one unit per layer: the layer's seeded contribution
+//!   stream, drawn sequentially from its own split PRNG (pure function of
+//!   `(spec, block, layer)`).
+//! * **accumulate** — one unit per *(layer, calibration sample)*: the
+//!   sample's Gram `GᵀG`, computed with a serial inner pool. This is
+//!   Phase 1 sharded across calibration samples; partials merge per layer
+//!   **in sample order** ([`Hessian::from_grams`]), so the accumulated
+//!   Hessian is bit-identical to the serial per-sample loop for any thread
+//!   count.
+//! * **prepare + calibrate** — one unit per *(method, layer)*: fetch the
+//!   damped factorization through the block-keyed [`PreparedCache`] (the
+//!   prepare stage; backends sharing `(block, layer, kind, α, reduction)`
+//!   share one Cholesky) and dispatch the backend trait object. Quantized
+//!   weights scatter back in `(method, layer)` order.
+//!
+//! Every unit is a pure function of its index and immutable inputs, shard
+//! geometry is a function of the problem size only, and all merges happen
+//! in fixed index order — so the pipelined schedule, the `--no-overlap`
+//! serial schedule, and every `--threads` value produce bit-identical
+//! weights and reports (enforced across every registered backend × Hessian
+//! kind in `rust/tests/parallel.rs`).
+//!
+//! ## Hessian reuse across the multi-backend fan-out
+//!
+//! The fan-out runs one accumulate stage per **distinct Hessian kind**, not
+//! per method: Gram units execute once per `(block, layer, sample)` and the
+//! resulting sums are stored per kind in the kind-keyed [`HessianStore`],
+//! shared read-only by every backend that declares that kind
+//! ([`crate::calib::Method::hessian`]). `oac quantize --synthetic --methods
+//! optq,spqr,billm` therefore pays Phase 1 once instead of three times,
+//! bit-identically to three solo runs (accumulation never depended on the
+//! backend). [`ScheduleStats::hessian_builds`] / [`ScheduleStats::
+//! gram_units`] expose the exactly-once counters the tests assert on.
+//!
+//! The same seam is what the future PJRT artifact path will reuse: its
+//! accumulate stage is weight-*dependent* (block b+1's Hessians see block
+//! b's quantized weights), so [`crate::coordinator::Coordinator::
+//! quantize_model`] runs this stage graph with overlap forced off — the
+//! prefetch slot is there, it just cannot be filled until artifacts are
+//! produced ahead of the weight mutation (e.g. activation checkpoints).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::hessian::{Hessian, HessianKind, HessianStore, PreparedCache};
+use crate::model::{LinearSpec, WeightStore};
+use crate::quant::{BitBudget, QuantizedLayer};
+use crate::tensor::Mat;
+use crate::util::pool::Pool;
+use crate::util::rng::Rng;
+
+use super::{
+    calibrate_one, synthetic_layers, synthetic_weights, LayerReport, PipelineConfig, QuantReport,
+    SyntheticSpec,
+};
+
+/// Aggregate schedule accounting, shared by the run's [`QuantReport`]s.
+///
+/// `phase1_secs` / `phase2_secs` are **work-seconds** (per-unit durations
+/// summed over all workers — comparable across overlap modes), `wall_secs`
+/// is the measured wall clock of the whole block loop, and `overlap_secs`
+/// estimates the wall clock the overlapped schedule saved: per step, the
+/// makespan the step's Phase-1 and Phase-2 unit sets would have needed as
+/// two separate barriered pool passes (greedy earliest-free-worker
+/// replay of the measured unit durations — the same policy the pool's
+/// atomic work queue implements) minus the combined step's actual wall.
+#[derive(Debug, Clone, Default)]
+pub struct ScheduleStats {
+    pub phase1_secs: f64,
+    pub phase2_secs: f64,
+    pub wall_secs: f64,
+    pub overlap_secs: f64,
+    /// Analytic transient high-water mark of the schedule's live stage
+    /// footprints (two blocks in flight under overlap), in bytes.
+    pub peak_mem_bytes: usize,
+    /// `(block, layer, kind)` Hessian materializations (== blocks × layers
+    /// × distinct kinds when sharing works; methods never multiply it).
+    pub hessian_builds: usize,
+    pub distinct_kinds: usize,
+    /// Gram units executed (== blocks × layers × samples — each sample
+    /// contracted exactly once no matter how many methods/kinds consume it).
+    pub gram_units: usize,
+}
+
+/// Per-block transient footprint of the synthetic pipeline, in bytes.
+struct BlockMem {
+    /// Contribution matrices (the sample buffer feeding the Gram units).
+    contrib: usize,
+    /// Per-sample Gram outputs held until the in-order merge.
+    gram_out: usize,
+    /// Accumulated Hessians (one copy per distinct kind).
+    hes: usize,
+    /// Prepared factorizations: 3 n×n matrices per layer per distinct
+    /// `(kind, α, reduction)` variant, live for the calibrate stage.
+    prepared: usize,
+}
+
+fn block_mem(layers: &[&LinearSpec], spec: &SyntheticSpec, kinds: usize, variants: usize) -> BlockMem {
+    let mut m = BlockMem { contrib: 0, gram_out: 0, hes: 0, prepared: 0 };
+    for l in layers {
+        let n2 = l.cols * l.cols * 4;
+        m.contrib += spec.n_contrib * spec.contrib_rows * l.cols * 4;
+        m.gram_out += spec.n_contrib * n2;
+        m.hes += kinds * n2;
+        m.prepared += 3 * n2 * variants;
+    }
+    m
+}
+
+/// Greedy earliest-free-worker makespan of `durs` scheduled in queue order —
+/// a replay of the pool's dynamic-index policy over measured durations, used
+/// only for the `overlap_secs` estimate (never for scheduling).
+fn makespan(durs: &[f64], workers: usize) -> f64 {
+    if durs.is_empty() {
+        return 0.0;
+    }
+    let w = workers.max(1).min(durs.len());
+    let mut free = vec![0.0f64; w];
+    for &d in durs {
+        let mut k = 0;
+        for i in 1..w {
+            if free[i] < free[k] {
+                k = i;
+            }
+        }
+        free[k] += d;
+    }
+    free.iter().cloned().fold(0.0, f64::max)
+}
+
+/// A Phase-1 work unit for one block: a layer's whole contribution stream,
+/// or one (layer, sample) Gram shard.
+enum P1 {
+    Gen { block: usize, li: usize },
+    Gram { block: usize, li: usize, sample: usize },
+}
+
+enum P1Out {
+    Gen(Vec<Mat>),
+    Gram(Mat),
+}
+
+/// One (method, layer) prepare+calibrate unit for the step's front block.
+struct P2 {
+    method: usize,
+    li: usize,
+}
+
+/// The mutable run state a completed Phase-2 pass scatters into — one
+/// borrow bundle so the overlap and serial branches share a single
+/// [`scatter_p2`] implementation (the bit-identity contract requires the
+/// two schedules to keep this step in lockstep).
+struct P2Sink<'a> {
+    wss: &'a mut [WeightStore],
+    reports: &'a mut [Vec<LayerReport>],
+    budgets: &'a mut [Vec<BitBudget>],
+    phase2_method: &'a mut [f64],
+    phase2_block: &'a mut f64,
+}
+
+/// Scatter one block's Phase-2 results in `(method, layer)` unit order:
+/// write dequantized weights back, record per-layer reports/budgets, and
+/// attribute unit durations to their method and block.
+fn scatter_p2(
+    sink: &mut P2Sink,
+    layers: &[&LinearSpec],
+    p2u: &[P2],
+    p2o: Vec<(Result<QuantizedLayer>, f64)>,
+) -> Result<()> {
+    for (u, (q, s)) in p2u.iter().zip(p2o) {
+        let q = q?;
+        sink.wss[u.method].set_mat(&layers[u.li].name, &q.dq);
+        sink.phase2_method[u.method] += s;
+        *sink.phase2_block += s;
+        sink.reports[u.method].push(LayerReport {
+            name: q.name.clone(),
+            calib_error: q.calib_error,
+            avg_bits: q.budget.avg_bits(),
+            outliers: q.budget.outliers,
+        });
+        sink.budgets[u.method].push(q.budget);
+    }
+    Ok(())
+}
+
+/// Run the synthetic two-phase pipeline for one or many methods through the
+/// block-pipeline scheduler. One entry point serves both `run_synthetic`
+/// (`cfgs.len() == 1`) and the multi-backend fan-out: all methods advance
+/// block-synchronously, sharing the per-kind Hessians and the block-keyed
+/// prepared cache, and each method's `(weights, report)` is bit-identical
+/// to its own solo serial run for every `threads`/`overlap` combination.
+pub fn run_synthetic_pipeline(
+    spec: &SyntheticSpec,
+    cfgs: &[PipelineConfig],
+    threads: usize,
+    overlap: bool,
+) -> Result<(Vec<(WeightStore, QuantReport)>, ScheduleStats)> {
+    ensure!(!cfgs.is_empty(), "scheduler needs at least one method config");
+    let layers = synthetic_layers(spec);
+    let blocks: Vec<Vec<&LinearSpec>> = (0..spec.blocks)
+        .map(|b| layers.iter().filter(|l| l.block == b).collect())
+        .collect();
+
+    // Distinct Hessian kinds in first-occurrence order — the fan-out's
+    // sharing axis, declared per method by the registry ([`crate::calib::
+    // distinct_hessian_kinds`]). Every method reads the store through its
+    // own kind.
+    let kinds: Vec<HessianKind> =
+        crate::calib::distinct_hessian_kinds(cfgs.iter().map(|c| c.method));
+    // Distinct (kind, α, reduction) prepare variants, for the memory model.
+    let mut variants: Vec<(HessianKind, u32, crate::hessian::Reduction)> = Vec::new();
+    for c in cfgs {
+        let v = (c.method.hessian, c.calib.alpha.to_bits(), c.calib.reduction);
+        if !variants.contains(&v) {
+            variants.push(v);
+        }
+    }
+
+    let pool = Pool::new(threads);
+    let cache = PreparedCache::new();
+    let mut store = HessianStore::new();
+    // Double-buffered contribution streams, keyed by block: the generate
+    // stage fills block b+2's buffer while block b+1's drains into grams.
+    let mut contribs: BTreeMap<usize, Vec<Vec<Mat>>> = BTreeMap::new();
+
+    let base = synthetic_weights(spec);
+    let mut wss: Vec<WeightStore> = cfgs.iter().map(|_| base.clone()).collect();
+    let mut reports: Vec<Vec<LayerReport>> = vec![Vec::new(); cfgs.len()];
+    let mut budgets: Vec<Vec<BitBudget>> = vec![Vec::new(); cfgs.len()];
+    let mut phase2_method: Vec<f64> = vec![0.0; cfgs.len()];
+
+    let mut stats = ScheduleStats { distinct_kinds: kinds.len(), ..Default::default() };
+    let mut phase1_block: Vec<f64> = vec![0.0; spec.blocks];
+    let mut phase2_block: Vec<f64> = vec![0.0; spec.blocks];
+    // Wall clock of the shared prepare-warming passes (fan-out only) —
+    // counted in the run's phase2_secs but not attributed to any method.
+    let mut shared_prepare = 0.0f64;
+
+    // The layer's seeded contribution stream — drawn sequentially so the
+    // values match the pre-scheduler pipeline bit for bit.
+    let gen_layer = |block: usize, li: usize| -> Vec<Mat> {
+        let l = blocks[block][li];
+        let mut rng =
+            Rng::new(spec.seed ^ 0xC0DE_F00D ^ ((block as u64) << 32) ^ (li as u64 + 1));
+        (0..spec.n_contrib)
+            .map(|_| {
+                let mut g = Mat::zeros(spec.contrib_rows, l.cols);
+                rng.fill_normal(&mut g.data, 1.0);
+                g
+            })
+            .collect()
+    };
+
+    // Phase-1 units for one block: all layers' streams already generated →
+    // one Gram unit per (layer, sample).
+    let gram_units = |block: usize| -> Vec<P1> {
+        let mut units = Vec::with_capacity(blocks[block].len() * spec.n_contrib);
+        for li in 0..blocks[block].len() {
+            for sample in 0..spec.n_contrib {
+                units.push(P1::Gram { block, li, sample });
+            }
+        }
+        units
+    };
+    let gen_units =
+        |block: usize| -> Vec<P1> { (0..blocks[block].len()).map(|li| P1::Gen { block, li }).collect() };
+
+    // Merge one block's Gram outputs (in unit = sample order) into the
+    // kind-keyed store. The contraction is backend- and kind-independent,
+    // so the expensive part — the Gram units — runs once no matter how
+    // many kinds consume it; each kind then gets its own *tagged* Hessian
+    // value (the tag rides on `Hessian.kind` and flows into the prepared-
+    // cache key). Deliberate tradeoff: a mixed-kind fan-out materializes
+    // one n×n copy + one O(samples·n²) re-fold per extra kind rather than
+    // threading a kind override through `PreparedKey` — bounded cost,
+    // honestly charged by the `hes × kinds` term in the memory model.
+    let merge_block = |store: &mut HessianStore,
+                       block: usize,
+                       grams: &[Mat],
+                       gram_units_ct: &mut usize| {
+        let nl = blocks[block].len();
+        debug_assert_eq!(grams.len(), nl * spec.n_contrib);
+        *gram_units_ct += grams.len();
+        for (li, l) in blocks[block].iter().enumerate() {
+            let slice = &grams[li * spec.n_contrib..(li + 1) * spec.n_contrib];
+            for &kind in &kinds {
+                let h = Hessian::from_grams(l.cols, kind, slice);
+                store.insert(block, &l.name, kind, Arc::new(h));
+            }
+        }
+    };
+
+    // Timed unit runners (durations feed the overlap estimate + reports).
+    // Mutable run state (contribution buffers, Hessian store, weight
+    // stores) comes in as parameters so each pool pass borrows it only for
+    // the duration of that call.
+    let run_p1 = |contribs: &BTreeMap<usize, Vec<Vec<Mat>>>, u: &P1| -> (P1Out, f64) {
+        let t = Instant::now();
+        let out = match *u {
+            P1::Gen { block, li } => P1Out::Gen(gen_layer(block, li)),
+            P1::Gram { block, li, sample } => {
+                P1Out::Gram(contribs[&block][li][sample].gram_with(&Pool::serial()))
+            }
+        };
+        (out, t.elapsed().as_secs_f64())
+    };
+    let run_p2 = |store: &HessianStore,
+                  wss: &[WeightStore],
+                  front: usize,
+                  u: &P2|
+     -> (Result<QuantizedLayer>, f64) {
+        let t = Instant::now();
+        let l = blocks[front][u.li];
+        let cfg = &cfgs[u.method];
+        let h = store
+            .get(front, &l.name, cfg.method.hessian)
+            .expect("front block Hessian not accumulated");
+        let q = calibrate_one(&cache, &wss[u.method], l, h.as_ref(), cfg);
+        (q, t.elapsed().as_secs_f64())
+    };
+
+    let p2_units = |front: usize| -> Vec<P2> {
+        let mut units = Vec::with_capacity(cfgs.len() * blocks[front].len());
+        for method in 0..cfgs.len() {
+            for li in 0..blocks[front].len() {
+                units.push(P2 { method, li });
+            }
+        }
+        units
+    };
+
+    // When at least two methods share a prepare variant (pigeonhole:
+    // more methods than distinct variants), warm the front block's
+    // factorizations once per (layer, variant) before fanning out the
+    // calibrate units. Without this, concurrent (method, layer) units
+    // racing through the cold cache would each pay a duplicate O(n³)
+    // factorization — results identical (prepare is pure and computed
+    // outside the cache lock), wall clock not. Prepare errors are
+    // swallowed here so the calibrate unit resurfaces them with its
+    // richer per-layer context, deterministically.
+    let warm_prepare = cfgs.len() > variants.len();
+    let warm_block = |store: &HessianStore, block: usize| {
+        let units: Vec<(usize, usize)> = (0..blocks[block].len())
+            .flat_map(|li| (0..variants.len()).map(move |vi| (li, vi)))
+            .collect();
+        pool.map(&units, |_, &(li, vi)| {
+            let l = blocks[block][li];
+            let (kind, alpha_bits, reduction) = variants[vi];
+            if let Some(h) = store.get(block, &l.name, kind) {
+                let _ = cache.get_or_prepare(
+                    block,
+                    &l.name,
+                    h.as_ref(),
+                    f32::from_bits(alpha_bits),
+                    reduction,
+                );
+            }
+        });
+    };
+
+    let t_loop = Instant::now();
+    if overlap && spec.blocks > 0 {
+        // -------- pipeline fill: gen(0), then gram(0) ∥ gen(1) ----------
+        let t = Instant::now();
+        let gen0 = pool.map(&gen_units(0), |_, u| run_p1(&contribs, u));
+        let mut secs = 0.0;
+        contribs.insert(
+            0,
+            gen0.into_iter()
+                .map(|(o, s)| {
+                    secs += s;
+                    phase1_block[0] += s;
+                    match o {
+                        P1Out::Gen(v) => v,
+                        P1Out::Gram(_) => unreachable!(),
+                    }
+                })
+                .collect(),
+        );
+        let mut fill_units = gram_units(0);
+        if spec.blocks > 1 {
+            fill_units.extend(gen_units(1));
+        }
+        let fill = pool.map(&fill_units, |_, u| run_p1(&contribs, u));
+        let mut grams0 = Vec::new();
+        let mut gen1 = Vec::new();
+        for (o, s) in fill {
+            secs += s;
+            // Attribute each unit's time to its own block (gen(1) belongs
+            // to block 1), matching the steady-state accounting.
+            match o {
+                P1Out::Gram(g) => {
+                    phase1_block[0] += s;
+                    grams0.push(g);
+                }
+                P1Out::Gen(v) => {
+                    phase1_block[1] += s;
+                    gen1.push(v);
+                }
+            }
+        }
+        merge_block(&mut store, 0, &grams0, &mut stats.gram_units);
+        contribs.remove(&0); // block 0's sample buffer is fully contracted
+        if spec.blocks > 1 {
+            contribs.insert(1, gen1);
+        }
+        log::debug!("pipeline fill: {:.3}s wall, {:.3}s work", t.elapsed().as_secs_f64(), secs);
+
+        // -------- steady state: calibrate(b) ∥ gram(b+1) ∥ gen(b+2) -----
+        for b in 0..spec.blocks {
+            if warm_prepare {
+                let tw = Instant::now();
+                warm_block(&store, b);
+                let w = tw.elapsed().as_secs_f64();
+                phase2_block[b] += w;
+                shared_prepare += w;
+            }
+            let t_step = Instant::now();
+            let p2u = p2_units(b);
+            let mut p1u = Vec::new();
+            if b + 1 < spec.blocks {
+                p1u.extend(gram_units(b + 1));
+            }
+            if b + 2 < spec.blocks {
+                p1u.extend(gen_units(b + 2));
+            }
+            let (p2o, p1o) = pool.map2(
+                &p2u,
+                &p1u,
+                |_, u| run_p2(&store, &wss, b, u),
+                |_, u| run_p1(&contribs, u),
+            );
+            let step_wall = t_step.elapsed().as_secs_f64();
+
+            let p2durs: Vec<f64> = p2o.iter().map(|(_, s)| *s).collect();
+            let p1durs: Vec<f64> = p1o.iter().map(|(_, s)| *s).collect();
+            let saved = (makespan(&p2durs, threads) + makespan(&p1durs, threads) - step_wall)
+                .max(0.0);
+            stats.overlap_secs += saved;
+
+            scatter_p2(
+                &mut P2Sink {
+                    wss: &mut wss,
+                    reports: &mut reports,
+                    budgets: &mut budgets,
+                    phase2_method: &mut phase2_method,
+                    phase2_block: &mut phase2_block[b],
+                },
+                &blocks[b],
+                &p2u,
+                p2o,
+            )?;
+            // Merge Phase-1 results for the blocks behind us.
+            let mut grams = Vec::new();
+            let mut gens = Vec::new();
+            for (o, s) in p1o {
+                match o {
+                    P1Out::Gram(g) => {
+                        phase1_block[b + 1] += s;
+                        grams.push(g);
+                    }
+                    P1Out::Gen(v) => {
+                        phase1_block[b + 2] += s;
+                        gens.push(v);
+                    }
+                }
+            }
+            if b + 1 < spec.blocks {
+                merge_block(&mut store, b + 1, &grams, &mut stats.gram_units);
+                contribs.remove(&(b + 1));
+            }
+            if b + 2 < spec.blocks {
+                contribs.insert(b + 2, gens);
+            }
+            store.drop_block(b);
+            cache.clear_block(b);
+            log::info!(
+                "block {b}: phase1 {:.3}s phase2 {:.3}s | cum phase1 {:.2}s phase2 {:.2}s | \
+                 overlap saved ~{saved:.3}s ({:.2}s cum)",
+                phase1_block[b],
+                phase2_block[b],
+                phase1_block[..=b].iter().sum::<f64>(),
+                phase2_block[..=b].iter().sum::<f64>(),
+                stats.overlap_secs,
+            );
+        }
+    } else {
+        // -------- serial alternation: gen(b) → gram(b) → calibrate(b) ---
+        for b in 0..spec.blocks {
+            let gen = pool.map(&gen_units(b), |_, u| run_p1(&contribs, u));
+            contribs.insert(
+                b,
+                gen.into_iter()
+                    .map(|(o, s)| {
+                        phase1_block[b] += s;
+                        match o {
+                            P1Out::Gen(v) => v,
+                            P1Out::Gram(_) => unreachable!(),
+                        }
+                    })
+                    .collect(),
+            );
+            let gram = pool.map(&gram_units(b), |_, u| run_p1(&contribs, u));
+            let mut grams = Vec::with_capacity(gram.len());
+            for (o, s) in gram {
+                phase1_block[b] += s;
+                match o {
+                    P1Out::Gram(g) => grams.push(g),
+                    P1Out::Gen(_) => unreachable!(),
+                }
+            }
+            merge_block(&mut store, b, &grams, &mut stats.gram_units);
+            contribs.remove(&b);
+
+            if warm_prepare {
+                let tw = Instant::now();
+                warm_block(&store, b);
+                let w = tw.elapsed().as_secs_f64();
+                phase2_block[b] += w;
+                shared_prepare += w;
+            }
+            let p2u = p2_units(b);
+            let p2o = pool.map(&p2u, |_, u| run_p2(&store, &wss, b, u));
+            scatter_p2(
+                &mut P2Sink {
+                    wss: &mut wss,
+                    reports: &mut reports,
+                    budgets: &mut budgets,
+                    phase2_method: &mut phase2_method,
+                    phase2_block: &mut phase2_block[b],
+                },
+                &blocks[b],
+                &p2u,
+                p2o,
+            )?;
+            store.drop_block(b);
+            cache.clear_block(b);
+            log::info!(
+                "block {b}: phase1 {:.3}s phase2 {:.3}s | cum phase1 {:.2}s phase2 {:.2}s",
+                phase1_block[b],
+                phase2_block[b],
+                phase1_block[..=b].iter().sum::<f64>(),
+                phase2_block[..=b].iter().sum::<f64>(),
+            );
+        }
+    }
+    stats.wall_secs = t_loop.elapsed().as_secs_f64();
+    stats.phase1_secs = phase1_block.iter().sum();
+    stats.phase2_secs = phase2_method.iter().sum::<f64>() + shared_prepare;
+    stats.hessian_builds = store.builds();
+
+    // Transient high-water mark of the schedule (analytic): under overlap,
+    // block b's Hessians + live factorizations coexist with block b+1's
+    // sample buffer, in-flight Grams and freshly merged Hessians, plus
+    // block b+2's generating sample buffer. Serial mode holds one block's
+    // stages at a time.
+    let mem: Vec<BlockMem> =
+        blocks.iter().map(|bl| block_mem(bl, spec, kinds.len(), variants.len())).collect();
+    let at = |b: usize| mem.get(b);
+    for b in 0..spec.blocks {
+        let m = &mem[b];
+        let peak = if overlap {
+            m.hes
+                + m.prepared
+                + at(b + 1).map_or(0, |n| n.contrib + n.gram_out + n.hes)
+                + at(b + 2).map_or(0, |n| n.contrib)
+        } else {
+            (m.contrib + m.gram_out + m.hes).max(m.hes + m.prepared)
+        };
+        stats.peak_mem_bytes = stats.peak_mem_bytes.max(peak);
+    }
+
+    let out = wss
+        .into_iter()
+        .zip(cfgs)
+        .enumerate()
+        .map(|(m, (ws, cfg))| {
+            let report = QuantReport {
+                method: cfg.method.name(),
+                avg_bits: BitBudget::merged_avg(&budgets[m]),
+                total_outliers: budgets[m].iter().map(|b| b.outliers).sum(),
+                layers: std::mem::take(&mut reports[m]),
+                phase1_secs: stats.phase1_secs,
+                phase2_secs: phase2_method[m],
+                peak_mem_bytes: stats.peak_mem_bytes,
+                overlap_secs: stats.overlap_secs,
+                wall_secs: stats.wall_secs,
+            };
+            (ws, report)
+        })
+        .collect();
+    Ok((out, stats))
+}

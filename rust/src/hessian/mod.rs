@@ -13,7 +13,7 @@
 //! eq. 22 sum) machinery, which is exactly what lets OAC slot into any
 //! Hessian-based calibration backend (paper Appendix I).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -23,7 +23,8 @@ use crate::util::digest;
 use crate::util::pool::Pool;
 
 /// Which Hessian a calibration run uses (the paper's central comparison).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// `Ord` so the kind can key the B-tree-backed [`HessianStore`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum HessianKind {
     /// ℓ2 layer-wise Hessian Σ x xᵀ (output-agnostic baselines).
     Agnostic,
@@ -91,6 +92,20 @@ impl Hessian {
         self.samples += 1;
     }
 
+    /// Assemble a Hessian from per-sample Gram contributions computed
+    /// elsewhere (the pipeline scheduler's sample-sharded Phase 1), folding
+    /// them **in slice order** — the fixed-merge-order half of the
+    /// determinism contract. Bit-identical to [`Hessian::accumulate`]-ing
+    /// the original contributions one by one, provided each Gram was
+    /// computed with a serial inner pool (see [`Mat::gram_with`]).
+    pub fn from_grams(dim: usize, kind: HessianKind, grams: &[Mat]) -> Hessian {
+        let mut h = Hessian::zeros(dim, kind);
+        for g in grams {
+            h.add_gram(g);
+        }
+        h
+    }
+
     /// Apply the reduction (eq. 14 vs eq. 22).
     pub fn reduced(&self, reduction: Reduction) -> Mat {
         let mut m = self.mat.clone();
@@ -149,13 +164,20 @@ pub fn prepare(h: Mat) -> Result<PreparedHessian, LinalgError> {
 
 // ------------------------------------------------------- prepared-Hessian cache
 
-/// Cache key for a prepared (damped + factorized) Hessian. Deliberately
-/// excludes the calibration *backend*: OPTQ/SpQR/QuIP/BiLLM consuming the
-/// same `(layer, kind, reduction, damping)` Hessian share one Cholesky.
-/// `samples` and the bitwise `fingerprint` of the accumulator invalidate
-/// the entry whenever the underlying Hessian content changes.
+/// Cache key for a prepared (damped + factorized) Hessian, keyed by
+/// `(block, layer, kind, reduction, damping)`. Deliberately excludes the
+/// calibration *backend*: OPTQ/SpQR/QuIP/BiLLM consuming the same
+/// `(block, layer, kind, reduction, damping)` Hessian share one Cholesky —
+/// this is what lets the multi-backend fan-out factorize each shared
+/// Hessian once across every method that declares its kind. `block` is
+/// part of the key so the pipeline scheduler can retire exactly one
+/// block's factorizations ([`PreparedCache::clear_block`]) while block
+/// b+1's prefetched entries stay live. `samples` and the bitwise
+/// `fingerprint` of the accumulator invalidate the entry whenever the
+/// underlying Hessian content changes.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct PreparedKey {
+    pub block: usize,
     pub layer: String,
     pub kind: HessianKind,
     pub reduction: Reduction,
@@ -167,8 +189,15 @@ pub struct PreparedKey {
 }
 
 impl PreparedKey {
-    pub fn new(layer: &str, h: &Hessian, alpha: f32, reduction: Reduction) -> PreparedKey {
+    pub fn new(
+        block: usize,
+        layer: &str,
+        h: &Hessian,
+        alpha: f32,
+        reduction: Reduction,
+    ) -> PreparedKey {
         PreparedKey {
+            block,
             layer: layer.to_string(),
             kind: h.kind,
             reduction,
@@ -198,16 +227,17 @@ impl PreparedCache {
         PreparedCache::default()
     }
 
-    /// Fetch the prepared factorization for `(layer, h, alpha, reduction)`,
-    /// computing and inserting it on a miss.
+    /// Fetch the prepared factorization for `(block, layer, h, alpha,
+    /// reduction)`, computing and inserting it on a miss.
     pub fn get_or_prepare(
         &self,
+        block: usize,
         layer: &str,
         h: &Hessian,
         alpha: f32,
         reduction: Reduction,
     ) -> Result<Arc<PreparedHessian>, LinalgError> {
-        let key = PreparedKey::new(layer, h, alpha, reduction);
+        let key = PreparedKey::new(block, layer, h, alpha, reduction);
         if let Some(p) = self.map.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(p.clone());
@@ -244,6 +274,72 @@ impl PreparedCache {
     /// fingerprints) and can never hit the old entries anyway.
     pub fn clear(&self) {
         self.map.lock().unwrap().clear();
+    }
+
+    /// Retire one block's factorizations only. The pipeline scheduler calls
+    /// this at the end of block b's calibrate stage: block b's entries can
+    /// never hit again, while entries prefetched for block b+1 (keyed with
+    /// their own block index) must survive. A blanket [`PreparedCache::
+    /// clear`] here would silently discard the prefetch and repay every
+    /// factorization.
+    pub fn clear_block(&self, block: usize) {
+        self.map.lock().unwrap().retain(|k, _| k.block != block);
+    }
+}
+
+// ------------------------------------------------------------ Hessian store
+
+/// Kind-keyed, read-only store of accumulated Hessians for the blocks
+/// currently in flight — the pipeline scheduler's double buffer.
+///
+/// Keys are `(block, layer, kind)`: the multi-backend fan-out accumulates
+/// each distinct [`HessianKind`] **once** per block and every backend that
+/// declares that kind reads the same `Arc<Hessian>` (sharing is safe because
+/// accumulation is a pure function of `(spec, block, layer, kind)` — see the
+/// bit-identity props in `rust/tests/parallel.rs`). `builds` counts
+/// materializations so tests can assert the exactly-once contract, and
+/// [`HessianStore::drop_block`] retires the front buffer as soon as its
+/// block's calibrate stage has consumed it.
+#[derive(Default)]
+pub struct HessianStore {
+    map: BTreeMap<(usize, String, HessianKind), Arc<Hessian>>,
+    builds: usize,
+}
+
+impl HessianStore {
+    pub fn new() -> HessianStore {
+        HessianStore::default()
+    }
+
+    /// Insert one accumulated Hessian for `(block, layer, kind)`. Counts as
+    /// one build even when the same `Arc` is shared across kinds.
+    pub fn insert(&mut self, block: usize, layer: &str, kind: HessianKind, h: Arc<Hessian>) {
+        self.builds += 1;
+        self.map.insert((block, layer.to_string(), kind), h);
+    }
+
+    pub fn get(&self, block: usize, layer: &str, kind: HessianKind) -> Option<&Arc<Hessian>> {
+        self.map.get(&(block, layer.to_string(), kind))
+    }
+
+    /// Retire every entry of one block (the consumed front buffer).
+    pub fn drop_block(&mut self, block: usize) {
+        self.map.retain(|k, _| k.0 != block);
+    }
+
+    /// Total `(block, layer, kind)` materializations so far — the counter
+    /// behind the fan-out's "each Hessian kind accumulated exactly once"
+    /// acceptance test.
+    pub fn builds(&self) -> usize {
+        self.builds
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
     }
 }
 
@@ -366,9 +462,9 @@ mod tests {
         let mut h = Hessian::zeros(6, HessianKind::OutputAdaptive);
         h.accumulate(&rand_contrib(&mut rng, 12, 6));
         let cache = PreparedCache::new();
-        let a = cache.get_or_prepare("blocks.0.q", &h, 0.1, Reduction::Sum).unwrap();
+        let a = cache.get_or_prepare(0, "blocks.0.q", &h, 0.1, Reduction::Sum).unwrap();
         assert_eq!((cache.hits(), cache.misses()), (0, 1));
-        let b = cache.get_or_prepare("blocks.0.q", &h, 0.1, Reduction::Sum).unwrap();
+        let b = cache.get_or_prepare(0, "blocks.0.q", &h, 0.1, Reduction::Sum).unwrap();
         assert_eq!((cache.hits(), cache.misses()), (1, 1));
         assert!(std::sync::Arc::ptr_eq(&a, &b));
         assert_eq!(cache.len(), 1);
@@ -380,23 +476,84 @@ mod tests {
         let mut h = Hessian::zeros(5, HessianKind::Agnostic);
         h.accumulate(&rand_contrib(&mut rng, 10, 5));
         let cache = PreparedCache::new();
-        cache.get_or_prepare("l", &h, 0.1, Reduction::Sum).unwrap();
+        cache.get_or_prepare(0, "l", &h, 0.1, Reduction::Sum).unwrap();
         // Different damping: miss.
-        cache.get_or_prepare("l", &h, 0.2, Reduction::Sum).unwrap();
+        cache.get_or_prepare(0, "l", &h, 0.2, Reduction::Sum).unwrap();
         assert_eq!(cache.misses(), 2);
         // Different reduction: miss.
-        cache.get_or_prepare("l", &h, 0.1, Reduction::Mean).unwrap();
+        cache.get_or_prepare(0, "l", &h, 0.1, Reduction::Mean).unwrap();
         assert_eq!(cache.misses(), 3);
         // Different layer name: miss.
-        cache.get_or_prepare("other", &h, 0.1, Reduction::Sum).unwrap();
+        cache.get_or_prepare(0, "other", &h, 0.1, Reduction::Sum).unwrap();
         assert_eq!(cache.misses(), 4);
+        // Different block: miss.
+        cache.get_or_prepare(1, "l", &h, 0.1, Reduction::Sum).unwrap();
+        assert_eq!(cache.misses(), 5);
         // Hessian content changed: the fingerprint invalidates the entry.
         h.accumulate(&rand_contrib(&mut rng, 10, 5));
-        cache.get_or_prepare("l", &h, 0.1, Reduction::Sum).unwrap();
-        assert_eq!(cache.misses(), 5);
+        cache.get_or_prepare(0, "l", &h, 0.1, Reduction::Sum).unwrap();
+        assert_eq!(cache.misses(), 6);
         assert_eq!(cache.hits(), 0);
         // And the original key still hits.
-        assert_eq!(cache.len(), 5);
+        assert_eq!(cache.len(), 6);
+    }
+
+    #[test]
+    fn clear_block_retires_one_block_only() {
+        let mut rng = Rng::new(7);
+        let mut h = Hessian::zeros(5, HessianKind::Agnostic);
+        h.accumulate(&rand_contrib(&mut rng, 10, 5));
+        let cache = PreparedCache::new();
+        cache.get_or_prepare(0, "l", &h, 0.1, Reduction::Sum).unwrap();
+        cache.get_or_prepare(1, "l", &h, 0.1, Reduction::Sum).unwrap();
+        assert_eq!(cache.len(), 2);
+        cache.clear_block(0);
+        assert_eq!(cache.len(), 1);
+        // Block 1's prefetched entry survived and still hits.
+        cache.get_or_prepare(1, "l", &h, 0.1, Reduction::Sum).unwrap();
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn from_grams_bit_identical_to_accumulate() {
+        let mut rng = Rng::new(8);
+        let contribs: Vec<Mat> = (0..4).map(|_| rand_contrib(&mut rng, 9, 7)).collect();
+        let mut serial = Hessian::zeros(7, HessianKind::OutputAdaptive);
+        for c in &contribs {
+            serial.accumulate(c);
+        }
+        let grams: Vec<Mat> = contribs.iter().map(|c| c.gram_with(&Pool::serial())).collect();
+        let merged = Hessian::from_grams(7, HessianKind::OutputAdaptive, &grams);
+        assert_eq!(merged.samples, serial.samples);
+        let a: Vec<u32> = merged.mat.data.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = serial.mat.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn hessian_store_kind_keyed_sharing() {
+        let mut rng = Rng::new(9);
+        let mut h = Hessian::zeros(4, HessianKind::Agnostic);
+        h.accumulate(&rand_contrib(&mut rng, 6, 4));
+        let shared = Arc::new(h);
+        let mut store = HessianStore::new();
+        // One accumulation shared across two kinds is still two builds
+        // (entries), one Arc (memory).
+        store.insert(0, "l", HessianKind::Agnostic, shared.clone());
+        store.insert(0, "l", HessianKind::OutputAdaptive, shared.clone());
+        assert_eq!(store.builds(), 2);
+        assert_eq!(store.len(), 2);
+        assert!(Arc::ptr_eq(
+            store.get(0, "l", HessianKind::Agnostic).unwrap(),
+            store.get(0, "l", HessianKind::OutputAdaptive).unwrap()
+        ));
+        assert!(store.get(1, "l", HessianKind::Agnostic).is_none());
+        store.insert(1, "l", HessianKind::Agnostic, shared);
+        store.drop_block(0);
+        assert_eq!(store.len(), 1);
+        assert!(store.get(1, "l", HessianKind::Agnostic).is_some());
+        // builds() is a lifetime counter — drop_block does not rewind it.
+        assert_eq!(store.builds(), 3);
     }
 
     #[test]

@@ -13,24 +13,35 @@
 //! - **L1** (`python/compile/kernels/`, build time): Pallas kernels for the
 //!   Hessian contraction and fused quantize–dequantize.
 //!
-//! ## Threading layer and the determinism contract
+//! ## Threading layer, the block-pipeline scheduler, and determinism
 //!
 //! All CPU-side hot paths run on the scoped worker pool in [`util::pool`]
 //! (`--threads N` on the CLI): [`tensor::Mat::gram_with`] /
 //! [`tensor::Mat::matmul_with`] shard rows, [`hessian::Hessian::
-//! accumulate_batch`] shards the calibration batch, and the coordinator's
-//! Phase 2 ([`coordinator::calibrate_block`]) calibrates every linear layer
-//! of a block concurrently, sharing Cholesky factorizations through
-//! [`hessian::PreparedCache`].
+//! accumulate_batch`] shards the calibration batch, and the coordinator
+//! executes Algorithm 1 as an explicit stage graph
+//! (`accumulate → prepare → calibrate → pack`, see
+//! [`coordinator::schedule`]): Phase 1 is sharded across calibration
+//! samples (one Gram unit per sample, merged per layer in sample order),
+//! Phase 2 fans `(method, layer)` calibrate units across the pool, and the
+//! double-buffered scheduler runs block b+1's Phase 1 **concurrently**
+//! with block b's Phase 2 through one shared work queue
+//! ([`util::pool::Pool::map2`]; `--no-overlap` selects the serial
+//! alternation). Cholesky factorizations are shared through the `(block,
+//! layer, kind)`-keyed [`hessian::PreparedCache`], and the multi-backend
+//! fan-out accumulates each distinct Hessian kind once per block, shared
+//! read-only via [`hessian::HessianStore`].
 //!
 //! The contract — enforced by `rust/tests/parallel.rs` and the
-//! `tests/synthetic_cli.rs` binary tests — is that **every thread count
-//! produces bit-identical output**: shard geometry is a function of the
-//! problem size only, partial results merge in fixed shard/layer order, and
-//! each unit of work is a pure function of its index. `--threads` is a
-//! wall-clock knob, never a numerics knob. The same recipe covers the dense
-//! linear algebra ([`tensor::linalg`]: blocked Cholesky / triangular
-//! inversion over fixed column panels) and the serving path below.
+//! `tests/synthetic_cli.rs` binary tests — is that **every thread count,
+//! either overlap mode, and the fan-out's Hessian sharing all produce
+//! bit-identical output**: shard geometry is a function of the problem
+//! size only, partial results merge in fixed shard/layer order, and each
+//! unit of work is a pure function of its index. `--threads` and the
+//! schedule are wall-clock knobs, never numerics knobs. The same recipe
+//! covers the dense linear algebra ([`tensor::linalg`]: blocked Cholesky /
+//! triangular inversion over fixed column panels) and the serving path
+//! below.
 //!
 //! ## The backend registry and the pipeline builder
 //!

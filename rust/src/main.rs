@@ -17,8 +17,8 @@ use anyhow::{Context, Result};
 
 use oac::calib::registry;
 use oac::coordinator::{
-    run_pipeline, run_synthetic, run_synthetic_fanout, Coordinator, Pipeline, PipelineBuilder,
-    PipelineConfig, SyntheticSpec,
+    run_pipeline, run_synthetic, run_synthetic_fanout_stats, Coordinator, Pipeline,
+    PipelineBuilder, PipelineConfig, SyntheticSpec,
 };
 use oac::data::{Flavor, Splits, TestSplit};
 use oac::eval::{evaluate, evaluate_packed, EvalConfig};
@@ -47,13 +47,18 @@ USAGE:
                [--pack-out MODEL.pack]
   oac quantize --synthetic [--method oac] [--bits 2] [--threads 4] [--blocks 2]
                [--d-model 64] [--d-ff 128] [--n-calib 8] [--contrib-rows 32]
-               [--seed 0] [--out OUT.bin] [--pack-out MODEL.pack]
-               (artifact-free synthetic model; prints a bitwise checksum —
-                bit-identical for every --threads value)
+               [--seed 0] [--out OUT.bin] [--pack-out MODEL.pack] [--no-overlap]
+               (artifact-free synthetic model through the block-pipeline
+                scheduler: block b+1's Hessians accumulate while block b
+                calibrates; --no-overlap runs the serial alternation.
+                Prints a bitwise checksum — bit-identical for every
+                --threads value and either overlap mode)
   oac quantize --synthetic --methods rtn,optq,oac_spqr [--threads 4] ...
-               (fan one synthetic run out across several backends
-                concurrently on the pool; one comparative report, each
-                method's checksum bit-identical to its sequential run)
+               (fan one synthetic run out across several backends on the
+                pool; each distinct Hessian kind is accumulated once and
+                shared read-only across the methods that declare it; one
+                comparative report, each method's checksum bit-identical
+                to its sequential run)
   oac serve    --synthetic [--batch 4] [--requests 16] [--threads 4] [--method oac]
                [--bits 2] [--blocks 2] [--d-model 64] [--d-ff 128] [--seed 0]
                (quantize the synthetic model, export packed codes, and run the
@@ -113,6 +118,9 @@ fn apply_pipeline_args(mut b: PipelineBuilder, args: &Args) -> Result<PipelineBu
     if args.flag("no-kernel") {
         b = b.use_kernel(false);
     }
+    if args.flag("no-overlap") {
+        b = b.overlap(false);
+    }
     if let Some(p) = args.get("pack-out") {
         b = b.pack_out(p);
     }
@@ -139,7 +147,7 @@ fn eval_cfg_from_args(args: &Args) -> EvalConfig {
 
 fn run() -> Result<()> {
     let args = Args::from_env(&[
-        "eval", "far", "no-kernel", "help", "synthetic", "no-baseline", "json",
+        "eval", "far", "no-kernel", "no-overlap", "help", "synthetic", "no-baseline", "json",
     ]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
@@ -293,10 +301,15 @@ fn cmd_quantize_synthetic_multi(args: &Args, list: &str) -> Result<()> {
     oac::util::pool::set_threads(threads);
     let spec = synthetic_spec_from_args(args);
     let t = std::time::Instant::now();
-    let results = run_synthetic_fanout(&spec, &cfgs, threads)?;
+    let (results, stats) = run_synthetic_fanout_stats(&spec, &cfgs, threads)?;
     println!(
-        "fanout: methods={} threads={threads} total={:.2}s",
+        "fanout: methods={} threads={threads} hessian_kinds={} hessian_builds={} \
+         gram_units={} overlap_saved={:.2}s total={:.2}s",
         cfgs.len(),
+        stats.distinct_kinds,
+        stats.hessian_builds,
+        stats.gram_units,
+        stats.overlap_secs,
         t.elapsed().as_secs_f64()
     );
     let mut table = Table::new(
@@ -349,11 +362,16 @@ fn cmd_quantize_synthetic(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "method={} avg_bits={:.2} outliers={} threads={} checksum={:016x} total={:.2}s",
+        "method={} avg_bits={:.2} outliers={} threads={} overlap={} phase1={:.2}s \
+         phase2={:.2}s overlap_saved={:.2}s checksum={:016x} total={:.2}s",
         report.method,
         report.avg_bits,
         report.total_outliers,
         p.calib.threads,
+        if p.overlap { "on" } else { "off" },
+        report.phase1_secs,
+        report.phase2_secs,
+        report.overlap_secs,
         ws.fingerprint(),
         t.elapsed().as_secs_f64()
     );

@@ -897,17 +897,8 @@ impl PackedModel {
         let mut packed = Vec::with_capacity(layers.len());
         for l in layers {
             let dq = quantized.get_mat(&l.name);
-            let pl = match method.backend.pack_spec() {
-                PackSpec::AffineGrid { grid } => {
-                    let w = original.get_mat(&l.name);
-                    encode_with_params(&l.name, &dq, grid(&w, cfg), cfg.group_size, cfg.bits)
-                }
-                PackSpec::BinaryPlanes => encode_binary_calibrated(&l.name, &dq),
-                PackSpec::Codebook => encode_codebook(&l.name, &dq).with_context(|| {
-                    format!("exporting {} ({})", l.name, method.backend.name())
-                })?,
-            };
-            packed.push(pl);
+            let w = original.get_mat(&l.name);
+            packed.push(pack_layer(&l.name, &w, &dq, method, cfg)?);
         }
         Ok(PackedModel::from_layers(packed, method.name(), cfg.bits))
     }
@@ -1076,6 +1067,30 @@ fn read_f32(f: &mut impl Read) -> Result<f32> {
 }
 
 // ------------------------------------------------------------ synthetic path
+
+/// Encode one calibrated layer into its packed form, driven by the
+/// backend's declared [`PackSpec`] — the per-layer unit behind
+/// [`PackedModel::from_quantized`] and the coordinator's per-block pack
+/// stage (which snapshots only the current block's originals instead of
+/// cloning the whole weight store). `w` is the layer's *original*
+/// (pre-quantization) weights — only the affine-grid schemes read it, to
+/// recover the group grids the codes index into.
+pub fn pack_layer(
+    name: &str,
+    w: &Mat,
+    dq: &Mat,
+    method: Method,
+    cfg: &CalibConfig,
+) -> Result<PackedLinear> {
+    Ok(match method.backend.pack_spec() {
+        PackSpec::AffineGrid { grid } => {
+            encode_with_params(name, dq, grid(w, cfg), cfg.group_size, cfg.bits)
+        }
+        PackSpec::BinaryPlanes => encode_binary_calibrated(name, dq),
+        PackSpec::Codebook => encode_codebook(name, dq)
+            .with_context(|| format!("exporting {} ({})", name, method.backend.name()))?,
+    })
+}
 
 /// Quantize the synthetic model and export it as a [`PackedModel`] — the
 /// artifact-free `oac serve --synthetic` entry. Deterministic in

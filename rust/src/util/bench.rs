@@ -4,9 +4,18 @@
 //! timed iterations, and a one-line report with mean ± σ, p50 and p95.
 //! Table benches (`benches/table*.rs`) print paper-style rows instead and use
 //! this only for the timing columns.
+//!
+//! [`BenchJson`] is the shared machine-readable emitter behind the
+//! `BENCH_*.json` files CI tracks across PRs: headline fields + flat record
+//! rows, written either as a whole file ([`BenchJson::write`], e.g.
+//! `BENCH_serve.json`) or merged as one named section of a multi-bench file
+//! ([`BenchJson::write_section`], e.g. `perf_hessian` and `perf_quant` both
+//! contributing to `BENCH_calib.json`).
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats;
 
 #[derive(Debug, Clone, Copy)]
@@ -106,6 +115,74 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Accumulator for one bench's machine-readable summary: ordered headline
+/// `field`s (quick flag, shapes, speedup headlines) plus flat `record`
+/// rows, serialized as `{"bench": <name>, <fields…>, "records": [...]}`.
+pub struct BenchJson {
+    bench: String,
+    fields: Vec<(String, Json)>,
+    records: Vec<Json>,
+}
+
+impl BenchJson {
+    pub fn new(bench: &str) -> BenchJson {
+        BenchJson { bench: bench.to_string(), fields: Vec::new(), records: Vec::new() }
+    }
+
+    /// Set (or overwrite) a headline field.
+    pub fn field(&mut self, key: &str, value: Json) {
+        if let Some(slot) = self.fields.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = value;
+        } else {
+            self.fields.push((key.to_string(), value));
+        }
+    }
+
+    /// Append one flat record row.
+    pub fn record(&mut self, pairs: Vec<(&str, Json)>) {
+        self.records.push(Json::obj(pairs));
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("bench".to_string(), Json::str(self.bench.clone()));
+        for (k, v) in &self.fields {
+            m.insert(k.clone(), v.clone());
+        }
+        m.insert("records".to_string(), Json::arr(self.records.clone()));
+        Json::Obj(m)
+    }
+
+    /// Write this bench as the whole file (e.g. `BENCH_serve.json`).
+    pub fn write(&self, path: &str) {
+        let text = format!("{}\n", self.to_json());
+        std::fs::write(path, text).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path}");
+    }
+
+    /// Merge this bench into `path` as section `self.bench` of a shared
+    /// summary file (`{"bench": <file_bench>, "sections": {...}}`),
+    /// preserving the other sections already present — this is how
+    /// `perf_hessian` and `perf_quant` both feed `BENCH_calib.json`
+    /// without clobbering each other. An unreadable or unparsable existing
+    /// file is replaced rather than appended to.
+    pub fn write_section(&self, path: &str, file_bench: &str) {
+        let mut root: BTreeMap<String, Json> = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|s| Json::parse(&s).ok())
+            .and_then(|j| j.as_obj().cloned())
+            .unwrap_or_default();
+        root.insert("bench".to_string(), Json::str(file_bench));
+        let mut sections =
+            root.get("sections").and_then(|s| s.as_obj().cloned()).unwrap_or_default();
+        sections.insert(self.bench.clone(), self.to_json());
+        root.insert("sections".to_string(), Json::Obj(sections));
+        let text = format!("{}\n", Json::Obj(root));
+        std::fs::write(path, text).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path} (section {})", self.bench);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,6 +201,39 @@ mod tests {
         });
         assert_eq!(r.iters, 5);
         assert!(r.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn bench_json_shape_and_section_merge() {
+        let mut b = BenchJson::new("quant");
+        b.field("quick", Json::Bool(true));
+        b.field("overlap_speedup_t4", Json::num(1.5));
+        b.field("overlap_speedup_t4", Json::num(1.25)); // overwrite, not dup
+        b.record(vec![("threads", Json::num(4.0)), ("tokens_per_s", Json::num(10.0))]);
+        let j = b.to_json();
+        assert_eq!(j.req("bench").as_str(), Some("quant"));
+        assert_eq!(j.req("overlap_speedup_t4").as_f64(), Some(1.25));
+        assert_eq!(j.req("records").as_arr().unwrap().len(), 1);
+
+        let dir = std::env::temp_dir().join("oac_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let path = path.to_str().unwrap();
+        std::fs::remove_file(path).ok();
+        b.write_section(path, "calib");
+        let mut h = BenchJson::new("hessian");
+        h.record(vec![("threads", Json::num(2.0))]);
+        h.write_section(path, "calib");
+        let merged = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(merged.req("bench").as_str(), Some("calib"));
+        let sections = merged.req("sections");
+        // Both sections survived the second write.
+        assert_eq!(
+            sections.req("quant").req("overlap_speedup_t4").as_f64(),
+            Some(1.25)
+        );
+        assert_eq!(sections.req("hessian").req("bench").as_str(), Some("hessian"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -118,6 +118,91 @@ impl Pool {
             .collect()
     }
 
+    /// Run two heterogeneous unit lists through **one shared work queue** and
+    /// return both result vectors in item order — the overlap primitive
+    /// behind the coordinator's double-buffered block pipeline: the `a` units
+    /// (e.g. block b's Phase-2 calibrations) and the `b` units (block b+1's
+    /// Phase-1 sample shards) drain from a single atomic index, so whichever
+    /// stage runs short of work its idle workers immediately pick up the
+    /// other stage's units instead of stalling at a per-stage barrier.
+    ///
+    /// The determinism contract is inherited from [`Pool::map`] verbatim:
+    /// `fa`/`fb` must be pure functions of `(index, item)`, results scatter
+    /// back by index, and the queue order (`a` first, then `b`) is a function
+    /// of the item lists only — never of the worker count. A 1-thread pool
+    /// degenerates to `fa` over `a` then `fb` over `b`, serially.
+    pub fn map2<A, B, RA, RB, FA, FB>(
+        &self,
+        a: &[A],
+        b: &[B],
+        fa: FA,
+        fb: FB,
+    ) -> (Vec<RA>, Vec<RB>)
+    where
+        A: Sync,
+        B: Sync,
+        RA: Send,
+        RB: Send,
+        FA: Fn(usize, &A) -> RA + Sync,
+        FB: Fn(usize, &B) -> RB + Sync,
+    {
+        let (na, nb) = (a.len(), b.len());
+        let n = na + nb;
+        if self.threads <= 1 || n <= 1 {
+            return (
+                a.iter().enumerate().map(|(i, t)| fa(i, t)).collect(),
+                b.iter().enumerate().map(|(i, t)| fb(i, t)).collect(),
+            );
+        }
+        enum Out<RA, RB> {
+            A(RA),
+            B(RB),
+        }
+        let workers = self.threads.min(n);
+        let next = AtomicUsize::new(0);
+        let mut buckets: Vec<Vec<(usize, Out<RA, RB>)>> = Vec::with_capacity(workers);
+        std::thread::scope(|s| {
+            let (fa, fb, next) = (&fa, &fb, &next);
+            let mut handles = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                handles.push(s.spawn(move || {
+                    let mut local: Vec<(usize, Out<RA, RB>)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let out = if i < na {
+                            Out::A(fa(i, &a[i]))
+                        } else {
+                            Out::B(fb(i - na, &b[i - na]))
+                        };
+                        local.push((i, out));
+                    }
+                    local
+                }));
+            }
+            for h in handles {
+                match h.join() {
+                    Ok(local) => buckets.push(local),
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
+            }
+        });
+        let mut slots_a: Vec<Option<RA>> = std::iter::repeat_with(|| None).take(na).collect();
+        let mut slots_b: Vec<Option<RB>> = std::iter::repeat_with(|| None).take(nb).collect();
+        for (i, out) in buckets.into_iter().flatten() {
+            match out {
+                Out::A(r) => slots_a[i] = Some(r),
+                Out::B(r) => slots_b[i - na] = Some(r),
+            }
+        }
+        (
+            slots_a.into_iter().map(|r| r.expect("pool worker dropped an `a` item")).collect(),
+            slots_b.into_iter().map(|r| r.expect("pool worker dropped a `b` item")).collect(),
+        )
+    }
+
     /// Apply `f` to every item, discarding results — for callers that
     /// scatter output themselves into disjoint regions (e.g. the packed
     /// serve forward writing each row panel straight into the output
@@ -155,6 +240,60 @@ mod tests {
         let items = [10usize, 20];
         assert_eq!(Pool::new(8).map(&items, |_, &x| x + 1), vec![11, 21]);
         assert_eq!(Pool::new(8).map(&[] as &[usize], |_, &x| x), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn map2_preserves_order_and_values() {
+        let a: Vec<usize> = (0..53).collect();
+        let b: Vec<usize> = (0..91).collect();
+        let want_a: Vec<usize> = a.iter().map(|x| x * 2).collect();
+        let want_b: Vec<usize> = b.iter().map(|x| x + 100).collect();
+        for t in [1, 2, 4, 8, 32] {
+            let (got_a, got_b) = Pool::new(t).map2(
+                &a,
+                &b,
+                |i, &x| {
+                    assert_eq!(i, x);
+                    x * 2
+                },
+                |i, &x| {
+                    assert_eq!(i, x);
+                    x + 100
+                },
+            );
+            assert_eq!(got_a, want_a, "threads={t}");
+            assert_eq!(got_b, want_b, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn map2_handles_empty_sides() {
+        let a = [1usize, 2, 3];
+        let empty: [usize; 0] = [];
+        let (ra, rb) = Pool::new(4).map2(&a, &empty, |_, &x| x * 10, |_, &x| x);
+        assert_eq!(ra, vec![10, 20, 30]);
+        assert!(rb.is_empty());
+        let (ra, rb) = Pool::new(4).map2(&empty, &a, |_, &x| x, |_, &x| x * 10);
+        assert!(ra.is_empty());
+        assert_eq!(rb, vec![10, 20, 30]);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom b3")]
+    fn map2_worker_panic_propagates() {
+        let a: Vec<usize> = (0..8).collect();
+        let b: Vec<usize> = (0..8).collect();
+        Pool::new(4).map2(
+            &a,
+            &b,
+            |_, &x| x,
+            |i, _| {
+                if i == 3 {
+                    panic!("boom b3");
+                }
+                i
+            },
+        );
     }
 
     #[test]

@@ -4,8 +4,11 @@
 //! contract (fixed shard geometry + fixed merge order — see `util::pool`),
 //! so the comparisons below are on raw f32 bit patterns, not tolerances.
 
-use oac::calib::{Backend, LayerCtx, Method};
-use oac::coordinator::{run_synthetic, run_synthetic_fanout, PipelineConfig, SyntheticSpec};
+use oac::calib::{registry, Backend, LayerCtx, Method};
+use oac::coordinator::{
+    run_synthetic, run_synthetic_fanout, run_synthetic_fanout_stats, Pipeline, PipelineConfig,
+    SyntheticSpec,
+};
 use oac::hessian::{Hessian, HessianKind, PreparedCache, Reduction};
 use oac::tensor::{linalg, Mat};
 use oac::util::pool::Pool;
@@ -179,6 +182,87 @@ fn synthetic_pipeline_bit_identical_across_thread_counts() {
     }
 }
 
+/// The pipelined block scheduler (overlap on: block b+1's Phase 1 runs
+/// concurrently with block b's Phase 2, Phase 1 sharded across samples)
+/// must be bit-identical to the `--no-overlap` serial alternation at one
+/// thread, for **every registered backend × both Hessian kinds × threads
+/// 1/2/4/8 × both overlap modes** — the schedule is a wall-clock choice,
+/// never a numerics one.
+#[test]
+fn pipelined_scheduler_bit_identical_to_serial_all_backends() {
+    // Power-of-two dims (QuIP's Hadamard requires them); ≥3 blocks
+    // exercises the full fill → steady state → drain pipeline.
+    let spec = SyntheticSpec {
+        blocks: 3,
+        d_model: 32,
+        d_ff: 64,
+        n_contrib: 4,
+        contrib_rows: 16,
+        seed: 0,
+    };
+    for &backend in registry::all() {
+        for method in [Method::baseline(backend), Method::oac(backend)] {
+            // Registry-default bits (BiLLM pins 1, everything else 2).
+            let base = Pipeline::with(method).build().unwrap();
+            let mut cfg = base.clone();
+            cfg.calib.threads = 1;
+            cfg.overlap = false;
+            let (ws, report) = run_synthetic(&spec, &cfg).unwrap();
+            let errs: Vec<u64> = report.layers.iter().map(|l| l.calib_error.to_bits()).collect();
+            let want = (ws.fingerprint(), report.avg_bits.to_bits(), report.total_outliers, errs);
+            for overlap in [false, true] {
+                for t in THREAD_COUNTS {
+                    let mut cfg = base.clone();
+                    cfg.calib.threads = t;
+                    cfg.overlap = overlap;
+                    let (ws, report) = run_synthetic(&spec, &cfg).unwrap();
+                    let errs: Vec<u64> =
+                        report.layers.iter().map(|l| l.calib_error.to_bits()).collect();
+                    let got =
+                        (ws.fingerprint(), report.avg_bits.to_bits(), report.total_outliers, errs);
+                    assert_eq!(
+                        want, got,
+                        "{method:?} diverged (threads={t}, overlap={overlap})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Fan-out Hessian sharing: `--methods` accumulates each distinct Hessian
+/// kind exactly once per block (Gram units never multiply with the method
+/// count), and the shared Hessians reproduce per-method accumulation bit
+/// for bit.
+#[test]
+fn fanout_shares_hessians_across_kinds_exactly_once() {
+    let spec = SyntheticSpec::default();
+    // Three methods, two distinct kinds (agnostic ×2, output-adaptive ×1).
+    let cfgs = [
+        PipelineConfig::new(Method::baseline(Backend::OPTQ), 2),
+        PipelineConfig::new(Method::baseline(Backend::RTN), 2),
+        PipelineConfig::new(Method::oac(Backend::SPQR), 2),
+    ];
+    let (results, stats) = run_synthetic_fanout_stats(&spec, &cfgs, 4).unwrap();
+    let layers_per_block = 6;
+    assert_eq!(stats.distinct_kinds, 2);
+    // One (block, layer, kind) build per kind — methods never multiply it.
+    assert_eq!(stats.hessian_builds, spec.blocks * layers_per_block * 2);
+    // One Gram per (block, layer, sample) — kinds don't multiply the
+    // contraction either (the synthetic streams are kind-independent).
+    assert_eq!(stats.gram_units, spec.blocks * layers_per_block * spec.n_contrib);
+    // Shared accumulation ≡ per-method accumulation, bitwise.
+    for (cfg, (ws, report)) in cfgs.iter().zip(&results) {
+        let mut solo = cfg.clone();
+        solo.calib.threads = 1;
+        solo.overlap = false;
+        let (ws1, r1) = run_synthetic(&spec, &solo).unwrap();
+        assert_eq!(ws.fingerprint(), ws1.fingerprint(), "{}", report.method);
+        assert_eq!(report.avg_bits.to_bits(), r1.avg_bits.to_bits(), "{}", report.method);
+        assert_eq!(report.total_outliers, r1.total_outliers, "{}", report.method);
+    }
+}
+
 /// Per-layer calibration error must be invariant to whether the prepared
 /// Hessian came from the cache or was computed fresh.
 #[test]
@@ -190,8 +274,8 @@ fn cache_does_not_change_results() {
 
     let cfg = oac::calib::CalibConfig::for_bits(2);
     let cache = PreparedCache::new();
-    let fresh = cache.get_or_prepare("l", &h, cfg.alpha, Reduction::Sum).unwrap();
-    let cached = cache.get_or_prepare("l", &h, cfg.alpha, Reduction::Sum).unwrap();
+    let fresh = cache.get_or_prepare(0, "l", &h, cfg.alpha, Reduction::Sum).unwrap();
+    let cached = cache.get_or_prepare(0, "l", &h, cfg.alpha, Reduction::Sum).unwrap();
     assert_eq!(cache.hits(), 1);
 
     let method = Method::oac(Backend::SPQR);

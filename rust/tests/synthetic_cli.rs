@@ -131,6 +131,39 @@ fn synthetic_serve_bit_identical_across_threads() {
 }
 
 #[test]
+fn synthetic_quantize_overlap_bit_identical_to_serial() {
+    // The pipelined block scheduler (default) vs the `--no-overlap` serial
+    // alternation: same checksum, same metrics, at any thread count — the
+    // schedule is a wall-clock choice, never a numerics one.
+    let mut lines = Vec::new();
+    for extra in [&[][..], &["--no-overlap"][..]] {
+        for threads in ["1", "4"] {
+            let mut argv = vec![
+                "quantize", "--synthetic", "--method", "oac", "--blocks", "3", "--threads",
+                threads,
+            ];
+            argv.extend_from_slice(extra);
+            let out = oac_bin().args(&argv).output().expect("run oac");
+            assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+            let text = String::from_utf8_lossy(&out.stdout).to_string();
+            assert_eq!(
+                token(&text, "overlap="),
+                if extra.is_empty() { "on" } else { "off" },
+                "{text}"
+            );
+            lines.push((
+                token(&text, "avg_bits=").to_string(),
+                token(&text, "outliers=").to_string(),
+                token(&text, "checksum=").to_string(),
+            ));
+        }
+    }
+    for i in 1..lines.len() {
+        assert_eq!(lines[0], lines[i], "overlap/serial diverged at run {i}");
+    }
+}
+
+#[test]
 fn synthetic_serve_int8_bit_identical_across_threads() {
     // The integer-domain serving mode (`--act-bits 8`) carries the same
     // determinism contract as the exact path: one checksum for every
