@@ -5,7 +5,9 @@
 //!
 //! Run:  cargo bench --bench perf_serve [-- --quick]
 //! Emits a machine-readable `BENCH_serve.json` (tokens/s and ns/token per
-//! path × bits × threads, and the headline `int8_speedup_t4` = geomean
+//! path × bits × threads, the continuous-batching latency curves —
+//! p50/p95/p99 + throughput per queue depth × threads under a seeded
+//! arrival schedule — and the headline `int8_speedup_t4` = geomean
 //! packed-f32 / packed-int8 wall-clock at 4 threads) so the serving perf
 //! trajectory is tracked across PRs. `--quick` shrinks shapes and iteration
 //! counts for CI smoke.
@@ -124,6 +126,7 @@ fn main() {
                 seed: 0,
                 baseline: false,
                 act_bits,
+                ..engine::ServeConfig::default()
             };
             let rep = engine::run(&model, &scfg).expect("engine run");
             let label = if act_bits == 8 { "packed-int8" } else { "packed-f32" };
@@ -142,6 +145,53 @@ fn main() {
                     "ns_per_token",
                     Json::num(rep.packed_secs * 1e9 / requests as f64),
                 ),
+            ]);
+        }
+    }
+
+    // Continuous-batching latency/throughput curves: a seeded staggered
+    // arrival schedule served at several queue depths — deeper queues trade
+    // per-request latency for throughput; the p50/p95/p99 spread shows the
+    // queueing tail. Exact f32 path, no baseline pass.
+    let depth_axis: &[usize] = if quick { &[2, 8] } else { &[2, 4, 16] };
+    let creq = if quick { 24 } else { 64 };
+    println!("\n== continuous: arrival every:1, {creq} requests ==");
+    for &queue_depth in depth_axis {
+        for &threads in threads_axis {
+            let scfg = engine::ServeConfig {
+                batch: ebatch,
+                requests: creq,
+                threads,
+                seed: 0,
+                baseline: false,
+                arrival: engine::ArrivalKind::Every(1),
+                queue_depth,
+                ..engine::ServeConfig::default()
+            };
+            let rep = engine::run(&model, &scfg).expect("continuous engine run");
+            println!(
+                "  depth {queue_depth} t{threads}: p50 {:.3}ms p95 {:.3}ms p99 {:.3}ms, \
+                 {:.1} req/s, mean batch {:.1}, {} prefix hits",
+                rep.p50_ms(),
+                rep.p95_ms(),
+                rep.p99_ms(),
+                rep.throughput_rps(),
+                rep.mean_batch,
+                rep.prefix_hits
+            );
+            out.record(vec![
+                ("section", Json::str("continuous")),
+                ("schedule", Json::str(&rep.schedule)),
+                ("queue_depth", Json::num(queue_depth as f64)),
+                ("threads", Json::num(threads as f64)),
+                ("requests", Json::num(creq as f64)),
+                ("p50_ms", Json::num(rep.p50_ms())),
+                ("p95_ms", Json::num(rep.p95_ms())),
+                ("p99_ms", Json::num(rep.p99_ms())),
+                ("throughput_rps", Json::num(rep.throughput_rps())),
+                ("mean_batch", Json::num(rep.mean_batch)),
+                ("prefix_hits", Json::num(rep.prefix_hits as f64)),
+                ("shared_tokens", Json::num(rep.shared_tokens as f64)),
             ]);
         }
     }

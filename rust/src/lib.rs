@@ -99,13 +99,30 @@
 //! measured ≥1.5× forward speedup, and keeps the same determinism
 //! contract: output bits are invariant to `--threads`.
 //!
-//! `oac serve --synthetic` drives a batched request engine
-//! ([`serve::engine`]) over this store — steady-state allocation-free via
-//! a per-run scratch arena ([`serve::ServeScratch`]) — and reports
-//! latency/throughput/weight-bytes against the dense baseline (plus the
-//! int8 accuracy cost via [`eval::output_error`] when `--act-bits 8`); its
-//! output checksum is part of the `--threads` determinism contract
-//! (`rust/tests/serve_props.rs`, CI's serving smoke jobs).
+//! `oac serve --synthetic` drives a **continuous-batching** request engine
+//! ([`serve::engine`]) over this store: requests enter through an admission
+//! queue from a seeded, deterministic arrival schedule
+//! ([`serve::engine::ArrivalSchedule`]; `--arrival-schedule
+//! burst|every:K|random:K`), at most `--queue-depth` are in flight, and each
+//! tick advances every active request by one token step through the block
+//! stack ([`serve::block_forward_into`] /
+//! [`serve::PackedModel::step_exact`] / [`serve::PackedModel::step_int8`]) —
+//! a prefill-like first pass over the prompt, then cheap incremental decode
+//! steps over memoized per-request forward state. Requests sharing a prompt
+//! prefix reuse the cached prefix state bit-exactly (LCP lookup at
+//! admission; `--no-prefix-share` recomputes from scratch). Scheduling runs
+//! on a tick-based virtual clock, so batch composition is pure arithmetic
+//! over the schedule: outputs, completion order, and tick counts are
+//! invariant to `--threads`, to continuous vs. `--no-continuous`
+//! fixed-batch replay, and to prefix sharing — wall-clock only moves the
+//! reported enqueue→completion latency percentiles (p50/p95/p99 via
+//! [`util::stats::percentile`]) and throughput. Buffers stay steady-state
+//! allocation-free via a per-run scratch arena ([`serve::ServeScratch`]),
+//! the dense baseline replay cross-checks packed outputs bitwise (plus the
+//! int8 accuracy cost via [`eval::output_error`] when `--act-bits 8`), and
+//! the contract is enforced by `rust/tests/serve_props.rs`,
+//! `rust/tests/parallel.rs`, the `tests/synthetic_cli.rs` binary tests, and
+//! CI's `serve-smoke`/`serve-continuous-smoke` jobs.
 
 // CI denies warnings (`cargo clippy -- -D warnings`). The style lints
 // below are deliberately tolerated crate-wide: this is index-heavy numeric

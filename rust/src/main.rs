@@ -27,7 +27,10 @@ use oac::hessian::Reduction;
 use oac::model::{ModelMeta, WeightStore};
 use oac::report::Table;
 use oac::runtime::Runtime;
-use oac::serve::{engine::ServeConfig, PackedModel};
+use oac::serve::{
+    engine::{ArrivalKind, ServeConfig},
+    PackedModel,
+};
 use oac::train::{train, TrainConfig};
 use oac::util::cli::Args;
 use oac::util::json::Json;
@@ -61,9 +64,18 @@ USAGE:
                 to its sequential run)
   oac serve    --synthetic [--batch 4] [--requests 16] [--threads 4] [--method oac]
                [--bits 2] [--blocks 2] [--d-model 64] [--d-ff 128] [--seed 0]
+               [--arrival-schedule burst|every:K|random:K] [--queue-depth 4]
+               [--prompt-len 4] [--decode-steps 2] [--shared-len 2]
+               [--share-groups 2] [--no-continuous] [--no-prefix-share]
                (quantize the synthetic model, export packed codes, and run the
-                batched packed-forward engine; the printed output checksum is
-                bit-identical for every --threads value)
+                continuous-batching packed-forward engine: requests arrive
+                mid-run from the seeded schedule, are admitted up to
+                --queue-depth in flight, and share common prompt-prefix
+                states bit-exactly via the LCP cache; --no-continuous replays
+                the legacy fixed-batch chunk loop, --no-prefix-share serves
+                every request from scratch. The printed output and
+                completion checksums are bit-identical for every --threads
+                value and for continuous vs fixed scheduling)
   oac serve    ... [--act-bits 8]
                (integer-domain forward: int8 activations x weight codes,
                 i32-accumulating kernel; deterministic and thread-invariant,
@@ -147,7 +159,16 @@ fn eval_cfg_from_args(args: &Args) -> EvalConfig {
 
 fn run() -> Result<()> {
     let args = Args::from_env(&[
-        "eval", "far", "no-kernel", "no-overlap", "help", "synthetic", "no-baseline", "json",
+        "eval",
+        "far",
+        "no-kernel",
+        "no-overlap",
+        "help",
+        "synthetic",
+        "no-baseline",
+        "json",
+        "no-continuous",
+        "no-prefix-share",
     ]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
@@ -486,6 +507,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 0),
         baseline: !args.flag("no-baseline"),
         act_bits: args.usize_or("act-bits", 0),
+        arrival: ArrivalKind::parse(&args.str_or("arrival-schedule", "burst"))?,
+        queue_depth: args.usize_or("queue-depth", 0),
+        prompt_len: args.usize_or("prompt-len", 4),
+        decode_steps: args.usize_or("decode-steps", 2),
+        shared_len: args.usize_or("shared-len", 2),
+        share_groups: args.usize_or("share-groups", 2),
+        continuous: !args.flag("no-continuous"),
+        prefix_share: !args.flag("no-prefix-share"),
     };
     let rep = oac::serve::engine::run(&model, &scfg)?;
     let dense_rps = match rep.dense_throughput_rps() {
@@ -505,8 +534,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     println!(
         "serve: method={} layers={} blocks={} d_model={} requests={} batch={} threads={} \
-         packed_bytes={} dense_bytes={} ratio={:.3} p50_ms={:.3} p95_ms={:.3} \
-         throughput_rps={:.1} dense_rps={dense_rps}{int8_info} checksum={:016x}",
+         mode={} schedule={} queue_depth={} packed_bytes={} dense_bytes={} ratio={:.3} \
+         ticks={} mean_batch={:.2} prefix_hits={} shared_tokens={} \
+         p50_ms={:.3} p95_ms={:.3} p99_ms={:.3} throughput_rps={:.1} \
+         dense_rps={dense_rps}{int8_info} checksum={:016x} completion={:016x}",
         model.method,
         model.layers.len(),
         rep.blocks,
@@ -514,13 +545,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         rep.requests,
         rep.batch,
         rep.threads,
+        if rep.continuous { "continuous" } else { "fixed" },
+        rep.schedule,
+        rep.queue_depth,
         rep.packed_bytes,
         rep.dense_bytes,
         rep.bytes_ratio(),
+        rep.ticks,
+        rep.mean_batch,
+        rep.prefix_hits,
+        rep.shared_tokens,
         rep.p50_ms(),
         rep.p95_ms(),
+        rep.p99_ms(),
         rep.throughput_rps(),
-        rep.checksum
+        rep.checksum,
+        rep.completion_checksum()
     );
     Ok(())
 }

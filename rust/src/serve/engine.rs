@@ -1,30 +1,72 @@
-//! The batched request engine behind `oac serve`: queues synthetic eval
-//! requests, batches them through the packed forward path (exact f32 by
-//! default, integer-domain int8 with `--act-bits 8`), and reports
-//! per-request latency, throughput and weight bytes next to the dense
-//! dequantized baseline.
+//! The continuous-batching request engine behind `oac serve`: an admission
+//! queue accepts requests mid-run from a deterministic [`ArrivalSchedule`],
+//! each request runs as a prefill-like first pass plus cheap incremental
+//! steps with its forward state memoized across blocks, and an LCP prefix
+//! cache shares common prompt work between requests bit-exactly.
 //!
-//! Determinism: requests are seeded per id, the request→batch assignment is
-//! a fixed [`chunk_ranges`] partition of the id space, and every layer
-//! application goes through a packed forward whose output bits are
-//! invariant to the thread count — the exact path is additionally
-//! bit-identical to the dense reference (the engine *asserts* that
-//! agreement on every batch), while the int8 path reports its deviation
-//! from the exact reference ([`crate::eval::output_error`]) instead. The
-//! request-order output checksum printed by the CLI is therefore identical
-//! across `--threads 1/2/4/8` in both modes (CI's serving smoke jobs
-//! compare runs).
+//! ## Request model
 //!
-//! Allocation discipline: one [`ServeScratch`] arena, one set of layer
-//! activation buffers (`LayerBufs`), one activation-code buffer and one
-//! batch matrix are created per run and reused across every batch — the
-//! steady-state request loop does not allocate (buffers stop growing once
-//! they reach the first full batch's high-water mark).
+//! A request is a seeded *token sequence*: `tokens` prompt tokens followed
+//! by `decode_steps` incremental steps. Its forward state is the hidden
+//! residual column carried across steps — the KV-cache analog: this
+//! synthetic block stack has no cross-token attention, so the residual
+//! vector *is* the entire per-request state. One scheduler tick advances
+//! every active request by one token step through the whole block stack
+//! ([`super::block_forward_into`]): a prefill step consumes the next prompt
+//! token (`x = state + embed(token)`, [`embed_token`]); a decode step feeds
+//! the state straight back (`x = state`). This is iteration-level
+//! (Orca-style) scheduling: requests join and leave the batch between
+//! ticks, never mid-pass.
+//!
+//! ## Admission queue
+//!
+//! [`ArrivalSchedule`] assigns each request a tick-granular arrival time
+//! (burst, fixed-gap, or seeded-random gaps). Arrived requests wait in id
+//! order; the engine admits them into the active batch whenever occupancy
+//! drops below `queue_depth`. Legacy fixed-batch mode (`--no-continuous`)
+//! replays the old engine: all requests enqueue at run start and
+//! [`chunk_ranges`] chunks run to completion one after another.
+//!
+//! ## Prefix sharing
+//!
+//! At admission, the engine looks up the request's longest prompt prefix in
+//! an LCP cache (prompt-prefix tokens → hidden state recorded after a
+//! prefill step consumed that prefix). On a hit the request starts from the
+//! cached state with the shared prefill steps skipped — the shared prefix's
+//! activations are computed once, by the first request through, and reused
+//! bit-exactly by every later arrival with the same prefix.
+//!
+//! ## Determinism argument
+//!
+//! Batch composition is pure tick/id arithmetic — wall-clock time never
+//! influences scheduling, only the latency numbers. Every op in the block
+//! pass (panel GEMM, gate, relu, column-wise RMS norm, per-(group, column)
+//! activation quantization) reads only its own column, so a request's
+//! output is a pure function of its own input column, independent of batch
+//! composition. Three bit-identity guarantees follow, all property-tested:
+//! identical output checksums across `--threads 1/2/4/8` (fixed panel
+//! geometry + fixed merge order, the standing pool contract), across
+//! continuous vs fixed-batch scheduling, and across prefix-shared vs
+//! from-scratch serving (a cached prefix state has exactly the bits a
+//! fresh recompute would produce). The exact f32 path additionally asserts
+//! bitwise agreement against a from-scratch dense baseline every run; the
+//! int8 path reports its deviation ([`crate::eval::output_error`]) instead.
+//!
+//! ## Latency accounting
+//!
+//! A request's reported latency spans **enqueue → completion**: the
+//! [`Instant`] taken when its arrival tick is first observed (fixed mode:
+//! run start — every request is enqueued up front) to the instant after
+//! the batch that finished it. Its service time sums only the wall-clock
+//! of batches it participated in. Both are integer-nanosecond [`Duration`]s
+//! over disjoint intervals inside the latency span, so the invariant
+//! `latency ≥ service` holds exactly (and survives the f64-ms conversion,
+//! which is monotone) — asserted in tests.
 
-use std::collections::BTreeMap;
-use std::time::Instant;
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::eval::{output_error, OutputError};
 use crate::quant::act_quant::{self, QuantizedActs};
@@ -34,32 +76,223 @@ use crate::util::pool::{chunk_ranges, Pool};
 use crate::util::rng::Rng;
 use crate::util::stats;
 
-use super::{PackedModel, ServeScratch};
+use super::{block_forward_into, LayerBufs, PackedModel, ServeScratch};
 
-/// Engine knobs (`oac serve --batch N --requests M --threads T --seed S
-/// [--act-bits 8]`).
+/// Arrival process of the admission queue, tick-granular.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Every request is available at tick 0.
+    Burst,
+    /// Request `i` arrives at tick `i * gap`.
+    Every(u64),
+    /// Seeded random inter-arrival gaps, uniform in `0..=2*mean_gap`.
+    Random { mean_gap: u64 },
+}
+
+impl ArrivalKind {
+    /// Parse a CLI spec: `burst`, `every[:GAP]`, `random[:MEAN_GAP]`.
+    pub fn parse(spec: &str) -> Result<ArrivalKind> {
+        let (name, arg) = match spec.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (spec, None),
+        };
+        Ok(match (name, arg) {
+            ("burst", None) => ArrivalKind::Burst,
+            ("every", None) => ArrivalKind::Every(1),
+            ("every", Some(g)) => {
+                ArrivalKind::Every(g.parse().map_err(|_| {
+                    anyhow::anyhow!("bad arrival gap `{g}` in `--arrival-schedule {spec}`")
+                })?)
+            }
+            ("random", None) => ArrivalKind::Random { mean_gap: 2 },
+            ("random", Some(m)) => ArrivalKind::Random {
+                mean_gap: m.parse().map_err(|_| {
+                    anyhow::anyhow!("bad mean gap `{m}` in `--arrival-schedule {spec}`")
+                })?,
+            },
+            _ => bail!("unknown arrival schedule `{spec}` (burst | every[:GAP] | random[:MEAN_GAP])"),
+        })
+    }
+
+    /// The canonical spec string (`parse(label())` round-trips).
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalKind::Burst => "burst".to_string(),
+            ArrivalKind::Every(g) => format!("every:{g}"),
+            ArrivalKind::Random { mean_gap } => format!("random:{mean_gap}"),
+        }
+    }
+}
+
+/// One request of a schedule: arrival tick, prompt tokens, decode steps.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestSpec {
+    pub id: usize,
+    pub arrival_tick: u64,
+    /// Prompt token ids (shared-prefix structure lives in token equality).
+    pub tokens: Vec<u64>,
+    /// Incremental post-prompt steps.
+    pub decode_steps: usize,
+}
+
+/// A deterministic request workload: arrival ticks, prompts with shared
+/// prefixes, decode-step counts — a pure function of its fields, so tests
+/// and the CLI construct the *same* schedule and a CLI run is reproducible
+/// in-process bit for bit. [`ServeConfig::schedule`] builds one from the
+/// engine knobs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrivalSchedule {
+    pub kind: ArrivalKind,
+    pub seed: u64,
+    pub requests: usize,
+    /// Base length of the per-request (unshared) prompt suffix; actual
+    /// suffix lengths vary in `[max(1, len/2), max(1, len/2) + len)`.
+    pub prompt_len: usize,
+    /// Incremental post-prompt steps per request.
+    pub decode_steps: usize,
+    /// Length of each shared prompt prefix (0 disables prefix structure).
+    pub shared_len: usize,
+    /// Number of distinct shared prefixes requests draw from.
+    pub share_groups: usize,
+}
+
+impl ArrivalSchedule {
+    /// Materialize the per-request specs, in id order with non-decreasing
+    /// arrival ticks. Deterministic in the schedule fields alone.
+    pub fn specs(&self) -> Vec<RequestSpec> {
+        let shared: Vec<Vec<u64>> = (0..self.share_groups)
+            .map(|g| {
+                let mut r = Rng::new(self.seed).split(0x5A1E_0000 ^ g as u64);
+                (0..self.shared_len).map(|_| r.next_u64()).collect()
+            })
+            .collect();
+        let mut gaps = Rng::new(self.seed).split(0xA1C0);
+        let mut tick = 0u64;
+        let mut out = Vec::with_capacity(self.requests);
+        for i in 0..self.requests {
+            let mut r = Rng::new(self.seed).split(0x7EA1_0000 ^ i as u64);
+            let base = self.prompt_len.max(1);
+            let suffix = (base / 2).max(1) + r.below(base);
+            let mut tokens: Vec<u64> = Vec::with_capacity(self.shared_len + suffix);
+            if self.shared_len > 0 && self.share_groups > 0 {
+                tokens.extend_from_slice(&shared[r.below(self.share_groups)]);
+            }
+            for _ in 0..suffix {
+                tokens.push(r.next_u64());
+            }
+            let arrival_tick = match self.kind {
+                ArrivalKind::Burst => 0,
+                ArrivalKind::Every(g) => i as u64 * g,
+                ArrivalKind::Random { mean_gap } => {
+                    if i > 0 {
+                        tick += gaps.below(2 * mean_gap as usize + 1) as u64;
+                    }
+                    tick
+                }
+            };
+            out.push(RequestSpec {
+                id: i,
+                arrival_tick,
+                tokens,
+                decode_steps: self.decode_steps,
+            });
+        }
+        out
+    }
+}
+
+/// Deterministic token embedding: a seeded unit-normal model-width vector,
+/// a pure function of `(seed, token)` — equal tokens embed identically,
+/// which is what makes prefix states reusable across requests.
+pub fn embed_token(seed: u64, token: u64, out: &mut [f32]) {
+    let mut rng = Rng::new(seed).split(0xE3BED_0000 ^ token);
+    rng.fill_normal(out, 1.0);
+}
+
+/// Engine knobs (`oac serve --requests M --threads T --seed S
+/// [--arrival-schedule burst|every:K|random:K] [--queue-depth D]
+/// [--no-continuous] [--no-prefix-share] [--act-bits 8]`).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// Requests per forward batch (columns of the batched activation).
+    /// Fixed-batch chunk size in `--no-continuous` mode, and the default
+    /// queue depth in continuous mode.
     pub batch: usize,
-    /// Total queued requests.
+    /// Total scheduled requests.
     pub requests: usize,
     /// Worker-pool width for the panel forward (wall-clock only).
     pub threads: usize,
     pub seed: u64,
-    /// Also run the dense dequantized baseline: in exact mode assert
-    /// bitwise agreement, in int8 mode measure the accuracy cost (doubles
-    /// the work and materializes dense weights — disable with
-    /// `--no-baseline` for pure packed serving).
+    /// Also run the from-scratch dense dequantized baseline: in exact mode
+    /// assert bitwise agreement (this simultaneously checks packing
+    /// transparency AND prefix-sharing exactness — the baseline never
+    /// shares), in int8 mode measure the accuracy cost. Disable with
+    /// `--no-baseline` for pure packed serving.
     pub baseline: bool,
     /// Activation quantization width: 0 = exact f32 forward (default),
     /// 8 = integer-domain forward (int8 activations × weight codes).
     pub act_bits: usize,
+    /// Arrival process for the admission queue.
+    pub arrival: ArrivalKind,
+    /// Max requests in flight at once in continuous mode (0 = `batch`).
+    pub queue_depth: usize,
+    /// Base unshared prompt length (see [`ArrivalSchedule::prompt_len`]).
+    pub prompt_len: usize,
+    /// Decode steps per request.
+    pub decode_steps: usize,
+    /// Shared prompt-prefix length (0 = no shared structure).
+    pub shared_len: usize,
+    /// Number of distinct shared prefixes.
+    pub share_groups: usize,
+    /// Continuous-batching scheduler (default) vs the legacy fixed-batch
+    /// chunk loop (`--no-continuous`).
+    pub continuous: bool,
+    /// LCP prefix sharing of prompt states (`--no-prefix-share` disables).
+    pub prefix_share: bool,
 }
 
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
-        ServeConfig { batch: 4, requests: 16, threads: 1, seed: 0, baseline: true, act_bits: 0 }
+        ServeConfig {
+            batch: 4,
+            requests: 16,
+            threads: 1,
+            seed: 0,
+            baseline: true,
+            act_bits: 0,
+            arrival: ArrivalKind::Burst,
+            queue_depth: 0,
+            prompt_len: 4,
+            decode_steps: 2,
+            shared_len: 2,
+            share_groups: 2,
+            continuous: true,
+            prefix_share: true,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// The deterministic workload this config serves — the same type tests
+    /// construct directly.
+    pub fn schedule(&self) -> ArrivalSchedule {
+        ArrivalSchedule {
+            kind: self.arrival,
+            seed: self.seed,
+            requests: self.requests,
+            prompt_len: self.prompt_len,
+            decode_steps: self.decode_steps,
+            shared_len: self.shared_len,
+            share_groups: self.share_groups,
+        }
+    }
+
+    /// Effective in-flight cap (0 defaults to `batch`).
+    pub fn effective_queue_depth(&self) -> usize {
+        if self.queue_depth == 0 {
+            self.batch.max(1)
+        } else {
+            self.queue_depth
+        }
     }
 }
 
@@ -73,18 +306,44 @@ pub struct ServeReport {
     pub d_model: usize,
     /// Activation quantization width (0 = exact f32 path).
     pub act_bits: usize,
+    /// Continuous scheduler (vs legacy fixed-batch chunks).
+    pub continuous: bool,
+    /// Effective in-flight cap of the continuous scheduler.
+    pub queue_depth: usize,
+    /// Canonical arrival-schedule spec string.
+    pub schedule: String,
     /// Packed weight residency (codes + params + outliers).
     pub packed_bytes: usize,
     /// Dense f32 residency of the same weights (the baseline's footprint).
     pub dense_bytes: usize,
-    /// Per-request latency in ms (a request completes with its batch).
+    /// Per-request enqueue→completion latency in ms, id order (arrival
+    /// wait included).
     pub latencies_ms: Vec<f64>,
-    /// Wall-clock of the packed pass over all batches.
+    /// Per-request pure service time in ms, id order: the summed
+    /// wall-clock of every batch the request participated in. Invariant:
+    /// `service_ms[i] <= latencies_ms[i]`.
+    pub service_ms: Vec<f64>,
+    /// Request ids in completion order (tick, then batch position —
+    /// deterministic, thread-invariant).
+    pub completion_order: Vec<usize>,
+    /// Scheduler ticks executed (batches run) by the packed pass.
+    pub ticks: usize,
+    /// Prefill token steps actually computed (after prefix sharing).
+    pub prefill_steps: usize,
+    /// Decode steps computed.
+    pub decode_steps: usize,
+    /// Requests admitted onto a cached prompt prefix.
+    pub prefix_hits: usize,
+    /// Prompt tokens skipped via the prefix cache, summed over requests.
+    pub shared_tokens: usize,
+    /// Mean batch width over ticks (continuous-batch occupancy).
+    pub mean_batch: f64,
+    /// Wall-clock of the packed pass over the whole schedule.
     pub packed_secs: f64,
     /// Wall-clock of the dense-baseline pass, when it ran (excludes the
     /// one-off dequantization setup).
     pub dense_secs: Option<f64>,
-    /// int8-vs-exact output error over every request (act_bits 8 with the
+    /// int8-vs-dense output error over every request (act_bits 8 with the
     /// baseline pass enabled).
     pub int8_err: Option<OutputError>,
     /// FNV-1a over every request's output vector bits, in request order.
@@ -108,96 +367,315 @@ impl ServeReport {
         stats::percentile(&self.latencies_ms, 95.0)
     }
 
+    pub fn p99_ms(&self) -> f64 {
+        stats::percentile(&self.latencies_ms, 99.0)
+    }
+
     /// Packed-vs-dense weight residency ratio (< 1 is the win).
     pub fn bytes_ratio(&self) -> f64 {
         self.packed_bytes as f64 / self.dense_bytes.max(1) as f64
     }
-}
 
-/// Column-wise RMS normalization (one column = one request) — keeps the
-/// synthetic residual stream bounded across blocks. f64 accumulation,
-/// identical for packed and dense paths.
-fn rms_normalize(h: &mut Mat) {
-    for c in 0..h.cols {
-        let mut ss = 0.0f64;
-        for r in 0..h.rows {
-            let v = h.at(r, c) as f64;
-            ss += v * v;
+    /// FNV-1a over the completion order (request ids as little-endian
+    /// u64) — the CLI's `completion=` token; thread- and, for single-chunk
+    /// burst workloads, mode-invariant.
+    pub fn completion_checksum(&self) -> u64 {
+        let mut h = digest::FNV_OFFSET;
+        for &id in &self.completion_order {
+            h = digest::fnv1a_with(h, &(id as u64).to_le_bytes());
         }
-        let scale = (1.0 / (ss / h.rows as f64).sqrt().max(1e-6)) as f32;
-        for r in 0..h.rows {
-            *h.at_mut(r, c) *= scale;
-        }
+        h
     }
 }
 
-/// Per-run activation buffers for the block forward — sized on first use,
-/// reused (allocation-free) for every subsequent batch.
-#[derive(Default)]
-struct LayerBufs {
-    q: Mat,
-    k: Mat,
-    v: Mat,
-    attn: Mat,
-    u: Mat,
-    d: Mat,
-    h: Mat,
+/// Live per-request scheduler state.
+struct ReqState {
+    cursor: usize,
+    decoded: usize,
+    state: Vec<f32>,
+    arrived: Option<Instant>,
+    completed: Option<Instant>,
+    service: Duration,
 }
 
-/// One synthetic transformer-ish block pass over a batch (columns =
-/// requests), parameterized by the layer application so the packed, int8
-/// and dense paths share every non-GEMM op bit-for-bit:
-///   s = q ⊙ tanh(k) + v;  h += O s;  rms;  h += Down relu(Up h);  rms.
-/// The layer application writes into a reusable output buffer; the final
-/// hidden state is cloned out (result storage, not scratch).
-fn forward_batch<F: FnMut(&str, &Mat, &mut Mat)>(
-    apply: &mut F,
-    blocks: usize,
-    x: &Mat,
-    bufs: &mut LayerBufs,
-) -> Mat {
-    bufs.h.reset(x.rows, x.cols);
-    bufs.h.data.copy_from_slice(&x.data);
-    for b in 0..blocks {
-        apply(&format!("blocks.{b}.q"), &bufs.h, &mut bufs.q);
-        apply(&format!("blocks.{b}.k"), &bufs.h, &mut bufs.k);
-        apply(&format!("blocks.{b}.v"), &bufs.h, &mut bufs.v);
-        // s = q ⊙ tanh(k) + v, in place over q.
-        for i in 0..bufs.q.data.len() {
-            bufs.q.data[i] = bufs.q.data[i] * bufs.k.data[i].tanh() + bufs.v.data[i];
+/// One simulated pass over a schedule (counters + outputs, id order).
+struct SimOut {
+    outputs: Vec<Vec<f32>>,
+    latency: Vec<Duration>,
+    service: Vec<Duration>,
+    completion_order: Vec<usize>,
+    ticks: usize,
+    prefill_steps: usize,
+    decode_steps: usize,
+    prefix_hits: usize,
+    shared_tokens: usize,
+    col_steps: usize,
+    wall: Duration,
+}
+
+/// The scheduler core shared by the continuous and fixed-batch modes (and
+/// by the packed, int8 and dense compute paths via the `apply` closure).
+struct Sim<'a> {
+    specs: &'a [RequestSpec],
+    seed: u64,
+    d_model: usize,
+    prefix_share: bool,
+    reqs: Vec<ReqState>,
+    /// LCP cache: prompt prefix tokens → hidden state after consuming it.
+    cache: BTreeMap<Vec<u64>, Vec<f32>>,
+    bufs: LayerBufs,
+    xbuf: Mat,
+    embed: Vec<f32>,
+    completion_order: Vec<usize>,
+    ticks: usize,
+    prefill_steps: usize,
+    decode_steps: usize,
+    prefix_hits: usize,
+    shared_tokens: usize,
+    col_steps: usize,
+}
+
+impl<'a> Sim<'a> {
+    fn new(specs: &'a [RequestSpec], seed: u64, d_model: usize, prefix_share: bool) -> Sim<'a> {
+        let reqs = specs
+            .iter()
+            .map(|_| ReqState {
+                cursor: 0,
+                decoded: 0,
+                state: vec![0.0f32; d_model],
+                arrived: None,
+                completed: None,
+                service: Duration::ZERO,
+            })
+            .collect();
+        Sim {
+            specs,
+            seed,
+            d_model,
+            prefix_share,
+            reqs,
+            cache: BTreeMap::new(),
+            bufs: LayerBufs::default(),
+            xbuf: Mat::zeros(0, 0),
+            embed: vec![0.0f32; d_model],
+            completion_order: Vec::with_capacity(specs.len()),
+            ticks: 0,
+            prefill_steps: 0,
+            decode_steps: 0,
+            prefix_hits: 0,
+            shared_tokens: 0,
+            col_steps: 0,
         }
-        apply(&format!("blocks.{b}.o"), &bufs.q, &mut bufs.attn);
-        bufs.h.add_assign(&bufs.attn);
-        rms_normalize(&mut bufs.h);
-        apply(&format!("blocks.{b}.up"), &bufs.h, &mut bufs.u);
-        for uv in bufs.u.data.iter_mut() {
-            if *uv < 0.0 {
-                *uv = 0.0;
+    }
+
+    fn done(&self, i: usize) -> bool {
+        self.reqs[i].cursor >= self.specs[i].tokens.len()
+            && self.reqs[i].decoded >= self.specs[i].decode_steps
+    }
+
+    /// Admission-time LCP lookup: jump the request onto the longest cached
+    /// prompt prefix. Bit-transparent: the cached state is exactly what a
+    /// from-scratch prefill of the same prefix would produce.
+    fn admit(&mut self, i: usize) {
+        if self.prefix_share {
+            let tokens = &self.specs[i].tokens;
+            for l in (1..=tokens.len()).rev() {
+                if let Some(st) = self.cache.get(&tokens[..l]) {
+                    self.reqs[i].state.copy_from_slice(st);
+                    self.reqs[i].cursor = l;
+                    self.prefix_hits += 1;
+                    self.shared_tokens += l;
+                    break;
+                }
             }
         }
-        apply(&format!("blocks.{b}.down"), &bufs.u, &mut bufs.d);
-        bufs.h.add_assign(&bufs.d);
-        rms_normalize(&mut bufs.h);
+        // Fully-cached prompt with nothing to decode: complete at
+        // admission (zero batches, zero service).
+        if self.done(i) {
+            self.reqs[i].completed = self.reqs[i].arrived;
+            self.completion_order.push(i);
+        }
     }
-    bufs.h.clone()
-}
 
-/// Stack request vectors into a reusable batch activation: column j =
-/// request j.
-fn batch_mat_into(reqs: &[Vec<f32>], d_model: usize, x: &mut Mat) {
-    let b = reqs.len();
-    x.reset(d_model, b);
-    for (j, r) in reqs.iter().enumerate() {
-        for (i, &v) in r.iter().enumerate() {
-            *x.at_mut(i, j) = v;
+    /// One scheduler tick over the `active` set (admission order): compose
+    /// the batch (one column per request), run the block stack once,
+    /// scatter states back, advance cursors, record completions. Removes
+    /// finished requests from `active`.
+    fn step<F: FnMut(&str, &Mat, &mut Mat)>(
+        &mut self,
+        apply: &mut F,
+        blocks: usize,
+        active: &mut Vec<usize>,
+    ) {
+        let width = active.len();
+        self.xbuf.reset(self.d_model, width);
+        for (j, &i) in active.iter().enumerate() {
+            let r = &self.reqs[i];
+            if r.cursor < self.specs[i].tokens.len() {
+                embed_token(self.seed, self.specs[i].tokens[r.cursor], &mut self.embed);
+                for row in 0..self.d_model {
+                    *self.xbuf.at_mut(row, j) = r.state[row] + self.embed[row];
+                }
+            } else {
+                for row in 0..self.d_model {
+                    *self.xbuf.at_mut(row, j) = r.state[row];
+                }
+            }
+        }
+        let t0 = Instant::now();
+        block_forward_into(apply, blocks, &self.xbuf, &mut self.bufs);
+        let t1 = Instant::now();
+        let dt = t1 - t0;
+        let mut still = Vec::with_capacity(width);
+        for (j, &i) in active.iter().enumerate() {
+            let r = &mut self.reqs[i];
+            for row in 0..self.d_model {
+                r.state[row] = self.bufs.h.at(row, j);
+            }
+            r.service += dt;
+            self.col_steps += 1;
+            if r.cursor < self.specs[i].tokens.len() {
+                r.cursor += 1;
+                self.prefill_steps += 1;
+                if self.prefix_share {
+                    let key = self.specs[i].tokens[..r.cursor].to_vec();
+                    self.cache.entry(key).or_insert_with(|| r.state.clone());
+                }
+            } else {
+                r.decoded += 1;
+                self.decode_steps += 1;
+            }
+            if self.done(i) {
+                self.reqs[i].completed = Some(t1);
+                self.completion_order.push(i);
+            } else {
+                still.push(i);
+            }
+        }
+        *active = still;
+        self.ticks += 1;
+    }
+
+    fn finish(self, start: Instant) -> SimOut {
+        let wall = start.elapsed();
+        let mut outputs = Vec::with_capacity(self.reqs.len());
+        let mut latency = Vec::with_capacity(self.reqs.len());
+        let mut service = Vec::with_capacity(self.reqs.len());
+        for r in &self.reqs {
+            outputs.push(r.state.clone());
+            let (a, c) = (r.arrived.expect("request never arrived"), r.completed.expect("request never completed"));
+            latency.push(c - a);
+            service.push(r.service);
+        }
+        SimOut {
+            outputs,
+            latency,
+            service,
+            completion_order: self.completion_order,
+            ticks: self.ticks,
+            prefill_steps: self.prefill_steps,
+            decode_steps: self.decode_steps,
+            prefix_hits: self.prefix_hits,
+            shared_tokens: self.shared_tokens,
+            col_steps: self.col_steps,
+            wall,
         }
     }
 }
 
-/// Run the batched engine over a packed model: packed pass (timed per
-/// batch, exact or int8), dense-baseline pass, bitwise agreement check
-/// (exact mode) or accuracy-cost measurement (int8 mode), request-order
-/// checksum.
+/// Run a schedule through one compute path. `continuous` selects the
+/// admission-queue scheduler; otherwise the legacy fixed-batch chunk loop
+/// runs (`chunk` requests per chunk, all enqueued at run start).
+#[allow(clippy::too_many_arguments)]
+fn simulate<F: FnMut(&str, &Mat, &mut Mat)>(
+    apply: &mut F,
+    blocks: usize,
+    d_model: usize,
+    specs: &[RequestSpec],
+    seed: u64,
+    continuous: bool,
+    queue_depth: usize,
+    chunk: usize,
+    prefix_share: bool,
+) -> SimOut {
+    let start = Instant::now();
+    let mut sim = Sim::new(specs, seed, d_model, prefix_share);
+    let n = specs.len();
+    if continuous {
+        // Arrival observation order: (tick, id). specs() emits
+        // non-decreasing ticks in id order, but don't rely on it.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| (specs[i].arrival_tick, specs[i].id));
+        let mut next_arrival = 0usize;
+        let mut waiting: VecDeque<usize> = VecDeque::new();
+        let mut active: Vec<usize> = Vec::new();
+        let mut tick = 0u64;
+        loop {
+            while next_arrival < n && specs[order[next_arrival]].arrival_tick <= tick {
+                let i = order[next_arrival];
+                sim.reqs[i].arrived = Some(Instant::now());
+                waiting.push_back(i);
+                next_arrival += 1;
+            }
+            while active.len() < queue_depth {
+                match waiting.pop_front() {
+                    Some(i) => {
+                        sim.admit(i);
+                        if sim.reqs[i].completed.is_none() {
+                            active.push(i);
+                        }
+                    }
+                    None => break,
+                }
+            }
+            if active.is_empty() {
+                if next_arrival >= n && waiting.is_empty() {
+                    break;
+                }
+                if waiting.is_empty() {
+                    // Idle: jump the virtual clock to the next arrival.
+                    tick = specs[order[next_arrival]].arrival_tick;
+                    continue;
+                }
+                // queue_depth 0 is rejected by run(); unreachable.
+                break;
+            }
+            sim.step(apply, blocks, &mut active);
+            tick += 1;
+        }
+    } else {
+        // Legacy fixed-batch mode: the whole request set is enqueued up
+        // front (arrival ticks ignored), chunks run to completion in id
+        // order. Latency therefore includes the wait for earlier chunks.
+        for r in &mut sim.reqs {
+            r.arrived = Some(start);
+        }
+        for cr in chunk_ranges(n, chunk) {
+            let mut active: Vec<usize> = Vec::with_capacity(cr.end - cr.start);
+            for i in cr.start..cr.end {
+                sim.admit(i);
+                if sim.reqs[i].completed.is_none() {
+                    active.push(i);
+                }
+            }
+            while !active.is_empty() {
+                sim.step(apply, blocks, &mut active);
+            }
+        }
+    }
+    sim.finish(start)
+}
+
+/// Stack per-request output vectors into one matrix (column j = request j)
+/// for [`output_error`].
+fn outputs_mat(outs: &[Vec<f32>], d_model: usize) -> Mat {
+    Mat::from_fn(d_model, outs.len(), |r, c| outs[c][r])
+}
+
+/// Run the continuous-batching engine over a packed model: packed pass
+/// (exact or int8), optional from-scratch dense-baseline pass, bitwise
+/// agreement check (exact mode) or accuracy-cost measurement (int8 mode),
+/// request-order checksum, latency/queue statistics.
 pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
     ensure!(cfg.requests > 0, "--requests must be positive");
     ensure!(
@@ -217,117 +695,117 @@ pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
         }
     }
     let d_model = model.get("blocks.0.q").cols;
+    let queue_depth = cfg.effective_queue_depth();
+    ensure!(queue_depth > 0, "--queue-depth must be positive");
+    let chunk = cfg.batch.max(1);
     let pool = Pool::new(cfg.threads);
+    let specs = cfg.schedule().specs();
 
-    // Deterministic request queue: request i is a seeded unit-normal vector.
-    let reqs: Vec<Vec<f32>> = (0..cfg.requests)
-        .map(|i| {
-            let mut rng = Rng::new(cfg.seed).split(0x5E57E ^ i as u64);
-            let mut x = vec![0.0f32; d_model];
-            rng.fill_normal(&mut x, 1.0);
-            x
-        })
-        .collect();
-    let batches = chunk_ranges(cfg.requests, cfg.batch.max(1));
-
-    // Per-run reusable state: scratch arena + layer buffers + batch matrix
-    // + activation codes. Nothing below allocates once these reach their
-    // first-batch high-water mark.
+    // Per-run reusable state: scratch arena + activation-code buffer. The
+    // Sim owns the layer buffers and batch matrix; nothing in the
+    // steady-state loop allocates beyond the prefix-cache inserts.
     let scratch = ServeScratch::default();
-    let mut bufs = LayerBufs::default();
-    let mut xbuf = Mat::zeros(0, 0);
     let mut actbuf = QuantizedActs::default();
 
     // Packed pass: the fused forward, no dense weights anywhere.
-    let mut latencies = vec![0.0f64; cfg.requests];
-    let mut outputs: Vec<Mat> = Vec::with_capacity(batches.len());
-    let t_packed = Instant::now();
-    for br in &batches {
-        let t = Instant::now();
-        batch_mat_into(&reqs[br.start..br.end], d_model, &mut xbuf);
-        let y = if int8 {
-            forward_batch(
-                &mut |name, x, out| {
-                    let l = model.get(name);
-                    act_quant::quantize_into(x, l.act_group(), &mut actbuf);
-                    l.forward_int8_into(&pool, x, &actbuf, &scratch, out);
-                },
-                blocks,
-                &xbuf,
-                &mut bufs,
-            )
-        } else {
-            forward_batch(
-                &mut |name, x, out| model.get(name).forward_into_with(&pool, x, &scratch, out),
-                blocks,
-                &xbuf,
-                &mut bufs,
-            )
-        };
-        let ms = t.elapsed().as_secs_f64() * 1e3;
-        for l in &mut latencies[br.start..br.end] {
-            *l = ms;
-        }
-        outputs.push(y);
-    }
-    let packed_secs = t_packed.elapsed().as_secs_f64();
+    let packed = if int8 {
+        simulate(
+            &mut |name, x, out| {
+                let l = model.get(name);
+                act_quant::quantize_into(x, l.act_group(), &mut actbuf);
+                l.forward_int8_into(&pool, x, &actbuf, &scratch, out);
+            },
+            blocks,
+            d_model,
+            &specs,
+            cfg.seed,
+            cfg.continuous,
+            queue_depth,
+            chunk,
+            cfg.prefix_share,
+        )
+    } else {
+        simulate(
+            &mut |name, x, out| model.get(name).forward_into_with(&pool, x, &scratch, out),
+            blocks,
+            d_model,
+            &specs,
+            cfg.seed,
+            cfg.continuous,
+            queue_depth,
+            chunk,
+            cfg.prefix_share,
+        )
+    };
 
-    // Dense baseline (optional): materialize every layer once (setup,
-    // untimed), run the same batches through plain `matmul_with`. In exact
-    // mode the packed path must agree bit-for-bit — packing is a storage
-    // change, never a numerics change. In int8 mode the deviation IS the
+    // Dense from-scratch baseline (optional): materialize every layer once
+    // (setup, untimed), replay the same request set with prefix sharing
+    // OFF through the legacy chunk loop. In exact mode the packed
+    // continuous pass must agree bit-for-bit — per-column independence
+    // makes scheduling, packing and prefix sharing all storage/ordering
+    // changes, never numerics changes. In int8 mode the deviation IS the
     // measurement: the end-to-end accuracy cost of activation quantization.
     let (dense_secs, int8_err) = if cfg.baseline {
         let dense: BTreeMap<String, Mat> =
             model.layers.iter().map(|l| (l.name.clone(), l.dequantize())).collect();
-        let mut dense_outputs: Vec<Mat> = Vec::with_capacity(batches.len());
-        let t_dense = Instant::now();
-        for br in &batches {
-            batch_mat_into(&reqs[br.start..br.end], d_model, &mut xbuf);
-            let y = forward_batch(
-                &mut |name, x, out| *out = dense[name].matmul_with(&pool, x),
-                blocks,
-                &xbuf,
-                &mut bufs,
-            );
-            dense_outputs.push(y);
-        }
-        let secs = t_dense.elapsed().as_secs_f64();
+        let base = simulate(
+            &mut |name, x, out| *out = dense[name].matmul_with(&pool, x),
+            blocks,
+            d_model,
+            &specs,
+            cfg.seed,
+            false,
+            queue_depth,
+            chunk,
+            false,
+        );
         if int8 {
-            (Some(secs), Some(output_error(&dense_outputs, &outputs)))
+            let err = output_error(
+                &[outputs_mat(&base.outputs, d_model)],
+                &[outputs_mat(&packed.outputs, d_model)],
+            );
+            (Some(base.wall.as_secs_f64()), Some(err))
         } else {
-            for (bi, (a, b)) in outputs.iter().zip(&dense_outputs).enumerate() {
+            for (i, (a, b)) in packed.outputs.iter().zip(&base.outputs).enumerate() {
                 ensure!(
-                    a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
-                    "packed forward diverged from the dense reference in batch {bi}"
+                    a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "packed forward diverged from the from-scratch dense reference on request {i}"
                 );
             }
-            (Some(secs), None)
+            (Some(base.wall.as_secs_f64()), None)
         }
     } else {
         (None, None)
     };
 
-    // Request-order output checksum (column j of a batch = one request).
+    // Request-order output checksum.
     let mut h = digest::FNV_OFFSET;
-    for (br, y) in batches.iter().zip(&outputs) {
-        for j in 0..(br.end - br.start) {
-            let col = y.col(j);
-            h = digest::fnv1a_f32(h, &col);
-        }
+    for out in &packed.outputs {
+        h = digest::fnv1a_f32(h, out);
     }
 
     Ok(ServeReport {
         requests: cfg.requests,
-        batch: cfg.batch.max(1),
+        batch: chunk,
         threads: cfg.threads,
         blocks,
         d_model,
         act_bits: cfg.act_bits,
+        continuous: cfg.continuous,
+        queue_depth,
+        schedule: cfg.arrival.label(),
         packed_bytes: model.packed_bytes(),
         dense_bytes: model.dense_bytes(),
-        latencies_ms: latencies,
-        packed_secs,
+        latencies_ms: packed.latency.iter().map(|d| d.as_secs_f64() * 1e3).collect(),
+        service_ms: packed.service.iter().map(|d| d.as_secs_f64() * 1e3).collect(),
+        completion_order: packed.completion_order,
+        ticks: packed.ticks,
+        prefill_steps: packed.prefill_steps,
+        decode_steps: packed.decode_steps,
+        prefix_hits: packed.prefix_hits,
+        shared_tokens: packed.shared_tokens,
+        mean_batch: packed.col_steps as f64 / (packed.ticks.max(1)) as f64,
+        packed_secs: packed.wall.as_secs_f64(),
         dense_secs,
         int8_err,
         checksum: h,
@@ -347,20 +825,79 @@ mod tests {
     }
 
     #[test]
+    fn arrival_kind_parses_and_round_trips() {
+        for spec in ["burst", "every:1", "every:3", "random:2", "random:0"] {
+            let k = ArrivalKind::parse(spec).unwrap();
+            assert_eq!(k.label(), spec);
+        }
+        assert_eq!(ArrivalKind::parse("every").unwrap(), ArrivalKind::Every(1));
+        assert_eq!(ArrivalKind::parse("random").unwrap(), ArrivalKind::Random { mean_gap: 2 });
+        assert!(ArrivalKind::parse("poisson").is_err());
+        assert!(ArrivalKind::parse("every:x").is_err());
+    }
+
+    #[test]
+    fn schedule_specs_are_deterministic_and_shared() {
+        let sched = ArrivalSchedule {
+            kind: ArrivalKind::Every(2),
+            seed: 7,
+            requests: 8,
+            prompt_len: 4,
+            decode_steps: 2,
+            shared_len: 3,
+            share_groups: 2,
+        };
+        let a = sched.specs();
+        let b = sched.specs();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+        for (i, s) in a.iter().enumerate() {
+            assert_eq!(s.id, i);
+            assert_eq!(s.arrival_tick, 2 * i as u64);
+            assert!(s.tokens.len() > 3, "shared prefix + nonempty suffix");
+        }
+        // Shared-prefix structure: some pair of requests agrees on the
+        // first shared_len tokens (2 groups over 8 requests must collide).
+        let mut shared_pair = false;
+        for i in 0..a.len() {
+            for j in i + 1..a.len() {
+                if a[i].tokens[..3] == a[j].tokens[..3] {
+                    shared_pair = true;
+                }
+            }
+        }
+        assert!(shared_pair);
+        // Different seed, different workload.
+        let c = ArrivalSchedule { seed: 8, ..sched }.specs();
+        assert_ne!(a, c);
+    }
+
+    #[test]
     fn engine_runs_and_checksums_are_thread_invariant() {
         let model = small_model();
-        let mut reference: Option<u64> = None;
+        let mut reference: Option<(u64, u64)> = None;
         for threads in [1usize, 2, 4, 8] {
-            let cfg = ServeConfig { batch: 3, requests: 7, threads, ..ServeConfig::default() };
+            let cfg = ServeConfig {
+                batch: 3,
+                requests: 7,
+                threads,
+                arrival: ArrivalKind::Every(1),
+                ..ServeConfig::default()
+            };
             let rep = run(&model, &cfg).unwrap();
             assert_eq!(rep.latencies_ms.len(), 7);
+            assert_eq!(rep.service_ms.len(), 7);
+            assert_eq!(rep.completion_order.len(), 7);
             assert!(rep.packed_bytes < rep.dense_bytes);
             assert!(rep.throughput_rps() > 0.0);
+            assert!(rep.ticks > 0);
+            assert!(rep.mean_batch > 0.0);
             assert_eq!(rep.act_bits, 0);
             assert!(rep.int8_err.is_none());
+            let got = (rep.checksum, rep.completion_checksum());
             match reference {
-                None => reference = Some(rep.checksum),
-                Some(want) => assert_eq!(want, rep.checksum, "threads={threads}"),
+                None => reference = Some(got),
+                Some(want) => assert_eq!(want, got, "threads={threads}"),
             }
         }
     }
@@ -376,6 +913,7 @@ mod tests {
                 requests: 7,
                 threads,
                 act_bits: 8,
+                arrival: ArrivalKind::Every(1),
                 ..ServeConfig::default()
             };
             let rep = run(&model, &cfg).unwrap();
@@ -392,7 +930,13 @@ mod tests {
             if exact_checksum.is_none() {
                 let exact = run(
                     &model,
-                    &ServeConfig { batch: 3, requests: 7, threads, ..ServeConfig::default() },
+                    &ServeConfig {
+                        batch: 3,
+                        requests: 7,
+                        threads,
+                        arrival: ArrivalKind::Every(1),
+                        ..ServeConfig::default()
+                    },
                 )
                 .unwrap();
                 exact_checksum = Some(exact.checksum);
@@ -419,63 +963,154 @@ mod tests {
     }
 
     #[test]
-    fn batch_partition_does_not_change_outputs() {
-        // Batching is a scheduling choice: request outputs (and therefore
-        // the request-order checksum) are independent of the batch size.
-        // (One run skips the baseline, covering the packed-only path.)
+    fn continuous_matches_fixed_batch_bitwise() {
+        // Scheduling is a composition choice: per-column independence
+        // makes the request outputs (and the request-order checksum)
+        // identical for the continuous admission queue and the legacy
+        // chunk loop, in both numeric modes, at any queue depth.
         let model = small_model();
-        let a = run(
-            &model,
-            &ServeConfig {
-                batch: 1,
-                requests: 6,
-                threads: 2,
-                seed: 1,
-                baseline: false,
-                act_bits: 0,
-            },
-        )
-        .unwrap();
-        assert!(a.dense_secs.is_none() && a.dense_throughput_rps().is_none());
-        let b = run(
-            &model,
-            &ServeConfig {
-                batch: 6,
-                requests: 6,
-                threads: 2,
-                seed: 1,
-                baseline: true,
-                act_bits: 0,
-            },
-        )
-        .unwrap();
-        assert_eq!(a.checksum, b.checksum);
+        for act_bits in [0usize, 8] {
+            let cont = run(
+                &model,
+                &ServeConfig {
+                    batch: 2,
+                    requests: 6,
+                    threads: 2,
+                    seed: 1,
+                    act_bits,
+                    arrival: ArrivalKind::Random { mean_gap: 2 },
+                    queue_depth: 3,
+                    baseline: false,
+                    ..ServeConfig::default()
+                },
+            )
+            .unwrap();
+            let fixed = run(
+                &model,
+                &ServeConfig {
+                    batch: 4,
+                    requests: 6,
+                    threads: 1,
+                    seed: 1,
+                    act_bits,
+                    continuous: false,
+                    baseline: act_bits == 0,
+                    ..ServeConfig::default()
+                },
+            )
+            .unwrap();
+            assert_eq!(cont.checksum, fixed.checksum, "act_bits={act_bits}");
+        }
+    }
 
-        // Same for the int8 path.
-        let a8 = run(
+    #[test]
+    fn prefix_sharing_is_bit_transparent_and_saves_work() {
+        let model = small_model();
+        let base = ServeConfig {
+            requests: 6,
+            seed: 3,
+            arrival: ArrivalKind::Every(2),
+            queue_depth: 4,
+            shared_len: 3,
+            share_groups: 1,
+            baseline: false,
+            ..ServeConfig::default()
+        };
+        let shared = run(&model, &ServeConfig { prefix_share: true, ..base.clone() }).unwrap();
+        let scratch = run(&model, &ServeConfig { prefix_share: false, ..base }).unwrap();
+        assert_eq!(shared.checksum, scratch.checksum);
+        assert!(shared.prefix_hits > 0, "staggered same-group arrivals must hit the cache");
+        assert!(shared.shared_tokens > 0);
+        assert!(
+            shared.prefill_steps < scratch.prefill_steps,
+            "sharing must skip prefill work ({} vs {})",
+            shared.prefill_steps,
+            scratch.prefill_steps
+        );
+        assert_eq!(scratch.prefix_hits, 0);
+    }
+
+    #[test]
+    fn latency_includes_arrival_wait_and_bounds_service() {
+        let model = small_model();
+        // queue_depth 1 forces later requests to wait for earlier ones.
+        let rep = run(
             &model,
             &ServeConfig {
-                batch: 2,
-                requests: 6,
-                threads: 2,
-                seed: 1,
+                requests: 4,
+                queue_depth: 1,
+                arrival: ArrivalKind::Burst,
                 baseline: false,
-                act_bits: 8,
+                ..ServeConfig::default()
             },
         )
         .unwrap();
-        let b8 = run(
+        for (i, (&lat, &svc)) in rep.latencies_ms.iter().zip(&rep.service_ms).enumerate() {
+            assert!(lat >= svc, "request {i}: latency {lat}ms < service {svc}ms");
+        }
+        // With serialized admission, a burst request that is not first
+        // must wait at least one other request's full service time.
+        let waited = rep
+            .latencies_ms
+            .iter()
+            .zip(&rep.service_ms)
+            .filter(|(l, s)| *l > *s)
+            .count();
+        assert!(waited >= 1, "burst at depth 1 must make someone wait");
+    }
+
+    #[test]
+    fn completion_order_is_deterministic() {
+        let model = small_model();
+        let cfg = ServeConfig {
+            requests: 8,
+            batch: 3,
+            seed: 5,
+            arrival: ArrivalKind::Random { mean_gap: 1 },
+            queue_depth: 3,
+            baseline: false,
+            ..ServeConfig::default()
+        };
+        let a = run(&model, &cfg).unwrap();
+        let b = run(&model, &ServeConfig { threads: 8, ..cfg }).unwrap();
+        assert_eq!(a.completion_order, b.completion_order);
+        assert_eq!(a.ticks, b.ticks);
+        // Every request completes exactly once.
+        let mut seen = a.completion_order.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn burst_single_chunk_completion_order_matches_fixed_mode() {
+        // With burst arrival and one chunk the two schedulers run the same
+        // lockstep batches, so even completion order agrees bit-for-bit.
+        let model = small_model();
+        let cont = run(
             &model,
             &ServeConfig {
-                batch: 6,
-                requests: 6,
-                threads: 1,
-                seed: 1,
-                baseline: true,
-                act_bits: 8,
+                requests: 5,
+                batch: 5,
+                queue_depth: 5,
+                arrival: ArrivalKind::Burst,
+                baseline: false,
+                ..ServeConfig::default()
             },
         )
         .unwrap();
-        assert_eq!(a8.checksum, b8.checksum);
+        let fixed = run(
+            &model,
+            &ServeConfig {
+                requests: 5,
+                batch: 5,
+                continuous: false,
+                baseline: false,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(cont.completion_order, fixed.completion_order);
+        assert_eq!(cont.checksum, fixed.checksum);
+        assert_eq!(cont.completion_checksum(), fixed.completion_checksum());
     }
 }

@@ -16,7 +16,11 @@
 //!   declared [`crate::quant::PackSpec`], so new registry backends export
 //!   with zero edits here), and serializable
 //!   ([`PackedModel::save`]/[`PackedModel::load`]).
-//! * [`engine`] — the batched request engine behind `oac serve`.
+//! * [`engine`] — the continuous-batching request engine behind
+//!   `oac serve`: admission queue over a seeded arrival schedule,
+//!   per-request incremental steps through [`block_forward_into`] /
+//!   [`PackedModel::step_exact`] / [`PackedModel::step_int8`], LCP
+//!   prefix sharing of prompt states.
 //!
 //! ## The exact fused forward and its determinism contract
 //!
@@ -1104,6 +1108,133 @@ pub fn build_synthetic(
     let layers = coordinator::synthetic_layers(spec);
     let model = PackedModel::from_quantized(&layers, &original, &quantized, cfg.method, &cfg.calib)?;
     Ok((model, report))
+}
+
+// --------------------------------------------- incremental forward entry
+
+/// Per-run activation buffers for the block forward — sized on first use,
+/// reused (allocation-free) for every subsequent batch. The continuous
+/// engine keeps one of these alive across its whole scheduler loop; the
+/// final hidden state of the most recent step lives in [`LayerBufs::hidden`].
+#[derive(Debug, Default)]
+pub struct LayerBufs {
+    pub(crate) q: Mat,
+    pub(crate) k: Mat,
+    pub(crate) v: Mat,
+    pub(crate) attn: Mat,
+    pub(crate) u: Mat,
+    pub(crate) d: Mat,
+    pub(crate) h: Mat,
+}
+
+impl LayerBufs {
+    /// Hidden state produced by the last [`block_forward_into`] call
+    /// (columns = the requests of that step's batch, in batch order).
+    pub fn hidden(&self) -> &Mat {
+        &self.h
+    }
+}
+
+/// Column-wise RMS normalization (one column = one request) — keeps the
+/// synthetic residual stream bounded across blocks. f64 accumulation,
+/// identical for packed and dense paths, and a function of each column
+/// alone (part of the per-column-independence determinism argument the
+/// continuous engine relies on).
+pub fn rms_normalize(h: &mut Mat) {
+    for c in 0..h.cols {
+        let mut ss = 0.0f64;
+        for r in 0..h.rows {
+            let v = h.at(r, c) as f64;
+            ss += v * v;
+        }
+        let scale = (1.0 / (ss / h.rows as f64).sqrt().max(1e-6)) as f32;
+        for r in 0..h.rows {
+            *h.at_mut(r, c) *= scale;
+        }
+    }
+}
+
+/// One synthetic transformer-ish block-stack pass over a batch (columns =
+/// requests), parameterized by the layer application so the packed, int8
+/// and dense paths share every non-GEMM op bit-for-bit:
+///   s = q ⊙ tanh(k) + v;  h += O s;  rms;  h += Down relu(Up h);  rms.
+/// The result is left in `bufs.hidden()` (no per-call allocation once the
+/// buffers reach their high-water size).
+///
+/// Every op here — the GEMMs (`out[r][c] = dot(w_row_r, x_col_c)`), the
+/// elementwise gate/relu, `rms_normalize`, and the per-(group, column)
+/// activation quantization of the int8 path — reads only its own column.
+/// A request's output is therefore a pure function of its own input
+/// column, independent of which other requests share the batch: the
+/// incremental engine's continuous-vs-fixed-batch and prefix-sharing
+/// bit-identity guarantees both reduce to this property.
+pub fn block_forward_into<F: FnMut(&str, &Mat, &mut Mat)>(
+    apply: &mut F,
+    blocks: usize,
+    x: &Mat,
+    bufs: &mut LayerBufs,
+) {
+    bufs.h.reset(x.rows, x.cols);
+    bufs.h.data.copy_from_slice(&x.data);
+    for b in 0..blocks {
+        apply(&format!("blocks.{b}.q"), &bufs.h, &mut bufs.q);
+        apply(&format!("blocks.{b}.k"), &bufs.h, &mut bufs.k);
+        apply(&format!("blocks.{b}.v"), &bufs.h, &mut bufs.v);
+        // s = q ⊙ tanh(k) + v, in place over q.
+        for i in 0..bufs.q.data.len() {
+            bufs.q.data[i] = bufs.q.data[i] * bufs.k.data[i].tanh() + bufs.v.data[i];
+        }
+        apply(&format!("blocks.{b}.o"), &bufs.q, &mut bufs.attn);
+        bufs.h.add_assign(&bufs.attn);
+        rms_normalize(&mut bufs.h);
+        apply(&format!("blocks.{b}.up"), &bufs.h, &mut bufs.u);
+        for uv in bufs.u.data.iter_mut() {
+            if *uv < 0.0 {
+                *uv = 0.0;
+            }
+        }
+        apply(&format!("blocks.{b}.down"), &bufs.u, &mut bufs.d);
+        bufs.h.add_assign(&bufs.d);
+        rms_normalize(&mut bufs.h);
+    }
+}
+
+impl PackedModel {
+    /// One incremental engine step over the whole block stack, exact f32
+    /// fused path. Result in `bufs.hidden()`.
+    pub fn step_exact(&self, pool: &Pool, scratch: &ServeScratch, x: &Mat, bufs: &mut LayerBufs) {
+        let blocks = self.block_count();
+        block_forward_into(
+            &mut |name, xin, out| self.get(name).forward_into_with(pool, xin, scratch, out),
+            blocks,
+            x,
+            bufs,
+        );
+    }
+
+    /// One incremental engine step over the whole block stack,
+    /// integer-domain path (per-layer int8 activation quantization feeding
+    /// the codes×int8 kernel). Result in `bufs.hidden()`.
+    pub fn step_int8(
+        &self,
+        pool: &Pool,
+        scratch: &ServeScratch,
+        acts: &mut QuantizedActs,
+        x: &Mat,
+        bufs: &mut LayerBufs,
+    ) {
+        let blocks = self.block_count();
+        block_forward_into(
+            &mut |name, xin, out| {
+                let l = self.get(name);
+                act_quant::quantize_into(xin, l.act_group(), acts);
+                l.forward_int8_into(pool, xin, acts, scratch, out);
+            },
+            blocks,
+            x,
+            bufs,
+        );
+    }
 }
 
 #[cfg(test)]

@@ -85,6 +85,51 @@ mod tests {
         assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
     }
 
+    // Exact-value latency-report percentiles (the serve engine's
+    // p50/p95/p99 all route through `percentile`): linear interpolation at
+    // rank p/100·(n−1) over the sorted copy.
+
+    #[test]
+    fn latency_percentiles_exact_values() {
+        // Ten "latencies": sorted 1..=10, handed over shuffled (the
+        // function must sort its own copy).
+        let xs = [7.0, 1.0, 10.0, 3.0, 5.0, 9.0, 2.0, 8.0, 4.0, 6.0];
+        assert!((percentile(&xs, 50.0) - 5.5).abs() < 1e-12); // rank 4.5
+        assert!((percentile(&xs, 95.0) - 9.55).abs() < 1e-12); // rank 8.55
+        assert!((percentile(&xs, 99.0) - 9.91).abs() < 1e-12); // rank 8.91
+        assert_eq!(percentile(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn latency_percentiles_with_ties() {
+        // Duplicate latencies must not confuse the interpolation: with
+        // sorted [5, 5, 5, 7, 9], p50 lands inside the tie plateau and the
+        // tail percentiles interpolate between the two distinct top values.
+        let xs = [5.0, 5.0, 5.0, 7.0, 9.0];
+        assert_eq!(percentile(&xs, 50.0), 5.0); // rank 2.0, exact index
+        assert!((percentile(&xs, 95.0) - 8.6).abs() < 1e-12); // rank 3.8
+        assert!((percentile(&xs, 99.0) - 8.92).abs() < 1e-12); // rank 3.96
+        // All-equal set: every percentile is that value.
+        let flat = [3.25; 7];
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile(&flat, p), 3.25);
+        }
+    }
+
+    #[test]
+    fn latency_percentiles_single_element() {
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[42.0], p), 42.0);
+        }
+    }
+
+    #[test]
+    fn latency_percentiles_empty_guard() {
+        for p in [50.0, 95.0, 99.0] {
+            assert_eq!(percentile(&[], p), 0.0);
+        }
+    }
+
     #[test]
     fn geomean_of_ratios() {
         assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);

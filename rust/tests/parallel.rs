@@ -289,6 +289,120 @@ fn cache_does_not_change_results() {
     assert_eq!(a.calib_error.to_bits(), b.calib_error.to_bits());
 }
 
+/// Continuous-batching serve determinism: one seeded [`ArrivalSchedule`]
+/// must yield identical request-order output checksums AND identical
+/// completion orders across threads 1/2/4/8, and identical output
+/// checksums across continuous vs legacy fixed-batch scheduling — batch
+/// composition is tick/id arithmetic and every block op is per-column, so
+/// scheduling is never a numerics change. Checked for every arrival kind
+/// and both numeric paths; the exact enqueue→completion latency invariant
+/// (latency ≥ service) rides along on every run.
+#[test]
+fn serve_schedule_bit_identical_across_threads_and_modes() {
+    use oac::serve::{self, engine};
+    let spec = SyntheticSpec { blocks: 1, d_model: 32, d_ff: 64, ..SyntheticSpec::default() };
+    let pcfg = PipelineConfig::new(Method::oac(Backend::SPQR), 2);
+    let (model, _) = serve::build_synthetic(&spec, &pcfg).unwrap();
+    for kind in [
+        engine::ArrivalKind::Burst,
+        engine::ArrivalKind::Every(2),
+        engine::ArrivalKind::Random { mean_gap: 1 },
+    ] {
+        for act_bits in [0usize, 8] {
+            let base = engine::ServeConfig {
+                requests: 9,
+                batch: 3,
+                seed: 11,
+                act_bits,
+                arrival: kind,
+                queue_depth: 3,
+                baseline: false,
+                ..Default::default()
+            };
+            let mut want: Option<(u64, u64, Vec<usize>, usize)> = None;
+            for threads in THREAD_COUNTS {
+                let rep = engine::run(
+                    &model,
+                    &engine::ServeConfig { threads, ..base.clone() },
+                )
+                .unwrap();
+                for (i, (l, s)) in rep.latencies_ms.iter().zip(&rep.service_ms).enumerate() {
+                    assert!(
+                        l >= s,
+                        "{kind:?} act_bits={act_bits} threads={threads} request {i}: \
+                         latency {l}ms < service {s}ms"
+                    );
+                }
+                let got = (
+                    rep.checksum,
+                    rep.completion_checksum(),
+                    rep.completion_order.clone(),
+                    rep.ticks,
+                );
+                match &want {
+                    None => want = Some(got),
+                    Some(w) => assert_eq!(
+                        w, &got,
+                        "{kind:?} act_bits={act_bits} diverged at {threads} threads"
+                    ),
+                }
+            }
+            // Legacy fixed-batch mode on the same request set: identical
+            // request outputs (completion TIMING differs when arrivals are
+            // staggered — chunks serialize — but output bits may not).
+            let fixed = engine::run(
+                &model,
+                &engine::ServeConfig { continuous: false, threads: 2, ..base },
+            )
+            .unwrap();
+            assert_eq!(
+                want.unwrap().0,
+                fixed.checksum,
+                "{kind:?} act_bits={act_bits}: fixed-batch outputs diverged from continuous"
+            );
+        }
+    }
+}
+
+/// With burst arrival and a single chunk (batch = queue depth = requests)
+/// the continuous scheduler and the legacy chunk loop run the same
+/// lockstep batches, so even the completion ORDER matches bit-for-bit —
+/// and it is thread-invariant in both modes.
+#[test]
+fn serve_completion_order_matches_across_modes_single_chunk() {
+    use oac::serve::{self, engine};
+    let spec = SyntheticSpec { blocks: 1, d_model: 32, d_ff: 64, ..SyntheticSpec::default() };
+    let pcfg = PipelineConfig::new(Method::baseline(Backend::RTN), 2);
+    let (model, _) = serve::build_synthetic(&spec, &pcfg).unwrap();
+    let mut want: Option<(u64, Vec<usize>)> = None;
+    for threads in THREAD_COUNTS {
+        for continuous in [true, false] {
+            let rep = engine::run(
+                &model,
+                &engine::ServeConfig {
+                    requests: 6,
+                    batch: 6,
+                    queue_depth: 6,
+                    threads,
+                    seed: 4,
+                    continuous,
+                    baseline: false,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let got = (rep.checksum, rep.completion_order.clone());
+            match &want {
+                None => want = Some(got),
+                Some(w) => assert_eq!(
+                    w, &got,
+                    "completion order diverged (threads={threads}, continuous={continuous})"
+                ),
+            }
+        }
+    }
+}
+
 /// Multi-backend fan-out (`run_synthetic_fanout`): running several methods
 /// concurrently on one pool must be bit-identical to running each method
 /// sequentially on its own, for every outer thread count — the fan-out is

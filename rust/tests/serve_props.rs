@@ -430,6 +430,71 @@ fn int8_wide_codebook_layer_serves() {
 }
 
 #[test]
+fn prefix_sharing_bit_identical_for_all_backends() {
+    // Registry-driven: for EVERY registered backend's packed export, a
+    // request served via a shared prompt prefix (LCP cache hit) must be
+    // bit-identical to the same request served from scratch
+    // (`prefix_share: false`), across threads 1/2/4/8 and both numeric
+    // paths (exact f32 and int8). The staggered arrival schedule
+    // guarantees cache hits: same-group requests admitted later start on
+    // the earlier request's cached prefix state.
+    for &backend in registry::all() {
+        let supported = backend.supported_bits();
+        let bits = if supported.contains(&2) { 2 } else { *supported.start() };
+        let spec = SyntheticSpec { blocks: 1, d_model: 32, d_ff: 64, ..SyntheticSpec::default() };
+        let cfg = PipelineConfig::new(Method::baseline(backend), bits);
+        let (model, _) = serve::build_synthetic(&spec, &cfg).unwrap();
+        for act_bits in [0usize, 8] {
+            let base = engine::ServeConfig {
+                requests: 6,
+                seed: 3,
+                act_bits,
+                arrival: engine::ArrivalKind::Every(2),
+                queue_depth: 4,
+                shared_len: 3,
+                share_groups: 1,
+                baseline: false,
+                ..Default::default()
+            };
+            let mut want: Option<(u64, u64)> = None;
+            for threads in THREAD_COUNTS {
+                let shared = engine::run(
+                    &model,
+                    &engine::ServeConfig { threads, prefix_share: true, ..base.clone() },
+                )
+                .unwrap();
+                let scratch = engine::run(
+                    &model,
+                    &engine::ServeConfig { threads, prefix_share: false, ..base.clone() },
+                )
+                .unwrap();
+                assert!(
+                    shared.prefix_hits > 0,
+                    "{backend:?} act_bits={act_bits}: staggered same-group arrivals must hit"
+                );
+                assert_eq!(scratch.prefix_hits, 0);
+                assert_eq!(
+                    shared.checksum, scratch.checksum,
+                    "{backend:?} act_bits={act_bits} threads={threads}: shared-prefix \
+                     serving diverged from from-scratch"
+                );
+                // (Completion ORDER may differ shared-vs-scratch — skipped
+                // prefill ticks finish shared requests earlier. Output bits
+                // may not.)
+                let got = (shared.checksum, shared.completion_checksum());
+                match want {
+                    None => want = Some(got),
+                    Some(w) => assert_eq!(
+                        w, got,
+                        "{backend:?} act_bits={act_bits}: diverged at {threads} threads"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn serve_engine_checksum_thread_invariant_across_methods() {
     for (method, bits) in
         [(Method::oac(Backend::SPQR), 2usize), (Method::oac(Backend::BILLM), 1)]

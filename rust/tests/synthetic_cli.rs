@@ -164,6 +164,85 @@ fn synthetic_quantize_overlap_bit_identical_to_serial() {
 }
 
 #[test]
+fn synthetic_serve_arrival_schedule_deterministic() {
+    // Continuous batching through the real binary: the same seeded arrival
+    // schedule must yield identical request-order output checksums AND
+    // identical completion orders for every --threads value. Wall-clock only
+    // moves the latency numbers, never the schedule.
+    let mut lines = Vec::new();
+    for threads in ["1", "2", "4", "8"] {
+        let out = oac_bin()
+            .args([
+                "serve", "--synthetic", "--requests", "10", "--blocks", "1",
+                "--arrival-schedule", "every:2", "--queue-depth", "3",
+                "--threads", threads,
+            ])
+            .output()
+            .expect("run oac serve --arrival-schedule");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout).to_string();
+        assert_eq!(token(&text, "mode="), "continuous", "{text}");
+        assert_eq!(token(&text, "schedule="), "every:2", "{text}");
+        assert_eq!(token(&text, "queue_depth="), "3", "{text}");
+        assert!(text.contains("p99_ms="), "{text}");
+        lines.push((
+            token(&text, "checksum=").to_string(),
+            token(&text, "completion=").to_string(),
+            token(&text, "ticks=").to_string(),
+            token(&text, "prefix_hits=").to_string(),
+        ));
+    }
+    for i in 1..lines.len() {
+        assert_eq!(lines[0], lines[i], "continuous serve diverged at run {i}");
+    }
+
+    // Legacy fixed-batch mode on the same request set: the output checksum
+    // is bit-identical (batch composition never changes a request's column),
+    // and the line reports mode=fixed.
+    let out = oac_bin()
+        .args([
+            "serve", "--synthetic", "--requests", "10", "--blocks", "1",
+            "--arrival-schedule", "every:2", "--queue-depth", "3",
+            "--threads", "2", "--no-continuous",
+        ])
+        .output()
+        .expect("run oac serve --no-continuous");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    assert_eq!(token(&text, "mode="), "fixed", "{text}");
+    assert_eq!(token(&text, "checksum="), lines[0].0, "fixed-batch checksum diverged: {text}");
+}
+
+#[test]
+fn synthetic_serve_prefix_share_toggle_is_transparent() {
+    // --no-prefix-share must not change a single output bit — only the work
+    // counters. With one share group and staggered arrivals the shared run
+    // is guaranteed cache hits; the scratch run must report zero.
+    let run = |extra: &[&str]| -> (String, String, String) {
+        let mut argv = vec![
+            "serve", "--synthetic", "--requests", "6", "--blocks", "1",
+            "--arrival-schedule", "every:2", "--queue-depth", "4",
+            "--shared-len", "3", "--share-groups", "1", "--seed", "3",
+        ];
+        argv.extend_from_slice(extra);
+        let out = oac_bin().args(&argv).output().expect("run oac serve");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout).to_string();
+        (
+            token(&text, "checksum=").to_string(),
+            token(&text, "prefix_hits=").to_string(),
+            token(&text, "shared_tokens=").to_string(),
+        )
+    };
+    let shared = run(&[]);
+    let scratch = run(&["--no-prefix-share"]);
+    assert_eq!(shared.0, scratch.0, "prefix sharing changed the output checksum");
+    assert_ne!(shared.1, "0", "staggered single-group schedule must hit the prefix cache");
+    assert_eq!(scratch.1, "0", "--no-prefix-share must report zero hits");
+    assert_eq!(scratch.2, "0", "--no-prefix-share must report zero shared tokens");
+}
+
+#[test]
 fn synthetic_serve_int8_bit_identical_across_threads() {
     // The integer-domain serving mode (`--act-bits 8`) carries the same
     // determinism contract as the exact path: one checksum for every
