@@ -153,6 +153,17 @@ fn makespan(durs: &[f64], workers: usize) -> f64 {
     free.iter().cloned().fold(0.0, f64::max)
 }
 
+/// The seeded PRNG stream a layer's synthetic calibration contributions
+/// are drawn from — a pure function of `(spec, block, layer)`. Shared by
+/// the in-process scheduler's generate stage and the distributed workers
+/// ([`crate::dist::worker`]): a worker handed only a `(block, layer,
+/// sample)` Gram unit regenerates the sample locally from this stream, so
+/// the wire carries unit indices and Gram results, never sample matrices,
+/// and every worker count stays bit-identical to single-process.
+pub fn contrib_rng(spec: &SyntheticSpec, block: usize, li: usize) -> Rng {
+    Rng::new(spec.seed ^ 0xC0DE_F00D ^ ((block as u64) << 32) ^ (li as u64 + 1))
+}
+
 /// A Phase-1 work unit for one block: a layer's whole contribution stream,
 /// or one (layer, sample) Gram shard.
 enum P1 {
@@ -265,8 +276,7 @@ pub fn run_synthetic_pipeline(
     // values match the pre-scheduler pipeline bit for bit.
     let gen_layer = |block: usize, li: usize| -> Vec<Mat> {
         let l = blocks[block][li];
-        let mut rng =
-            Rng::new(spec.seed ^ 0xC0DE_F00D ^ ((block as u64) << 32) ^ (li as u64 + 1));
+        let mut rng = contrib_rng(spec, block, li);
         (0..spec.n_contrib)
             .map(|_| {
                 let mut g = Mat::zeros(spec.contrib_rows, l.cols);

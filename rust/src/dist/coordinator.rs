@@ -1,0 +1,384 @@
+//! The distributed calibration coordinator: an explicit state machine that
+//! shards Phase-1 Gram work across workers and keeps every worker count —
+//! and every fault schedule — bit-identical to the single-process pipeline.
+//!
+//! Per block the run moves through
+//!
+//! ```text
+//!   Assigning ──▶ Accumulating ──▶ Merging ──▶ Calibrating
+//!       ▲               │
+//!       └── lease expiry┘            (after the last block) ──▶ Packing ──▶ Done
+//! ```
+//!
+//! * **Assigning** — every not-yet-done Gram unit without a live lease is
+//!   leased round-robin to a worker ([`protocol::CoordMsg::Assign`]); the
+//!   lease table records `(unit, worker, expiry tick)`.
+//! * **Accumulating** — drive the transport's virtual clock, collect
+//!   [`protocol::WorkerMsg::GramDone`] replies, verify each payload's
+//!   digest, and **deduplicate by unit** (not lease): results are pure
+//!   functions of their indices, so the first arriving copy — original,
+//!   duplicate, or stale retry — is accepted and every later copy is
+//!   discarded. Expired leases send the state machine back to Assigning
+//!   for the affected units.
+//! * **Merging** — fold the block's Grams in the fixed `(layer, sample)`
+//!   order through [`Hessian::from_grams`], exactly as the in-process
+//!   scheduler's merge stage does. Arrival order is irrelevant by
+//!   construction, which is the whole determinism argument.
+//! * **Calibrating** — run Phase 2 locally through
+//!   [`crate::coordinator::calibrate_block`] (the same per-layer pure
+//!   calibration the scheduler dispatches), writing weights back in layer
+//!   order.
+//! * **Packing** — when `cfg.pack_out` is set, export the packed model via
+//!   [`PackedModel::from_quantized`] against the regenerated original
+//!   weights.
+//!
+//! The resulting weights, report, and packed bytes are bit-identical to
+//! [`crate::coordinator::run_synthetic`] for any `--workers N` and any
+//! [`FaultPlan`] (enforced by `rust/tests/dist.rs` and CI's `dist-smoke`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{
+    calibrate_block, synthetic_layers, synthetic_weights, LayerReport, PipelineConfig,
+    QuantReport, SyntheticSpec,
+};
+use crate::hessian::{Hessian, PreparedCache};
+use crate::model::{LinearSpec, WeightStore};
+use crate::quant::BitBudget;
+use crate::serve::PackedModel;
+use crate::tensor::Mat;
+
+use super::protocol::{decode_gram, CoordMsg, GramUnit, LeaseId, WorkerMsg};
+use super::transport::{FaultPlan, LocalTransport, Transport};
+
+/// Coordinator state-machine phases, logged in transition order so tests
+/// can assert the protocol actually moved through its states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Assigning,
+    Accumulating,
+    Merging,
+    Calibrating,
+    Packing,
+    Done,
+}
+
+/// Protocol tuning knobs.
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    /// Ticks a lease stays live before its unit is reassigned.
+    pub lease_timeout: u64,
+    /// Reassignments tolerated per unit before the run aborts (guards
+    /// against a transport lossy beyond recovery).
+    pub max_retries: usize,
+}
+
+impl Default for DistConfig {
+    fn default() -> DistConfig {
+        DistConfig { lease_timeout: 8, max_retries: 64 }
+    }
+}
+
+/// Protocol accounting for one distributed run.
+#[derive(Debug, Clone, Default)]
+pub struct DistStats {
+    pub workers: usize,
+    /// Leases issued (≥ one per Gram unit).
+    pub leases: usize,
+    /// Leases reissued after expiry (worker death, dropped messages).
+    pub retried: usize,
+    /// Duplicate results discarded by the unit-keyed dedup.
+    pub duplicates: usize,
+    /// Results discarded for payload digest mismatch (corrupted frames).
+    pub corrupt: usize,
+    /// Virtual ticks the whole run took.
+    pub ticks: u64,
+    /// Phase transitions in order (deduplicated consecutive entries).
+    pub phase_log: Vec<Phase>,
+}
+
+impl DistStats {
+    fn enter(&mut self, p: Phase) {
+        if self.phase_log.last() != Some(&p) {
+            self.phase_log.push(p);
+        }
+    }
+}
+
+/// Everything a distributed run produces: the calibrated weights and
+/// report (bit-identical to [`crate::coordinator::run_synthetic`]), the
+/// packed export when `cfg.pack_out` asked for one, and the protocol
+/// accounting.
+pub struct DistRun {
+    pub weights: WeightStore,
+    pub report: QuantReport,
+    pub packed: Option<PackedModel>,
+    pub stats: DistStats,
+}
+
+/// Convenience entry: run the synthetic pipeline across `workers` virtual
+/// workers on a [`LocalTransport`] with the given fault plan.
+pub fn run_synthetic_workers(
+    spec: &SyntheticSpec,
+    cfg: &PipelineConfig,
+    workers: usize,
+    fault: FaultPlan,
+) -> Result<DistRun> {
+    let mut transport = LocalTransport::new(workers, spec, fault);
+    run_synthetic_distributed(spec, cfg, &mut transport, &DistConfig::default())
+}
+
+/// Run the synthetic two-phase pipeline with Phase 1 distributed over
+/// `transport`'s workers. See the module docs for the state machine;
+/// the output is bit-identical to the in-process pipeline.
+pub fn run_synthetic_distributed(
+    spec: &SyntheticSpec,
+    cfg: &PipelineConfig,
+    transport: &mut dyn Transport,
+    dcfg: &DistConfig,
+) -> Result<DistRun> {
+    let t_run = std::time::Instant::now();
+    let layers = synthetic_layers(spec);
+    let blocks: Vec<Vec<&LinearSpec>> = (0..spec.blocks)
+        .map(|b| layers.iter().filter(|l| l.block == b).collect())
+        .collect();
+
+    let mut ws = synthetic_weights(spec);
+    let cache = PreparedCache::new();
+    let mut stats = DistStats { workers: transport.workers(), ..DistStats::default() };
+    let mut reports: Vec<LayerReport> = Vec::new();
+    let mut budgets: Vec<BitBudget> = Vec::new();
+    let mut phase1 = 0.0f64;
+    let t_loop = std::time::Instant::now();
+
+    for b in 0..spec.blocks {
+        // Units in the fixed (layer, sample) merge order.
+        let units: Vec<GramUnit> = (0..blocks[b].len())
+            .flat_map(|layer| {
+                (0..spec.n_contrib).map(move |sample| GramUnit { block: b, layer, sample })
+            })
+            .collect();
+        let t1 = std::time::Instant::now();
+        let grams = accumulate_block(transport, &units, dcfg, &mut stats)?;
+        phase1 += t1.elapsed().as_secs_f64();
+
+        stats.enter(Phase::Merging);
+        let mut hes: BTreeMap<String, Hessian> = BTreeMap::new();
+        for (li, l) in blocks[b].iter().enumerate() {
+            let slice = &grams[li * spec.n_contrib..(li + 1) * spec.n_contrib];
+            hes.insert(l.name.clone(), Hessian::from_grams(l.cols, cfg.method.hessian, slice));
+        }
+
+        stats.enter(Phase::Calibrating);
+        let quantized = calibrate_block(&cache, &mut ws, &blocks[b], &hes, cfg)?;
+        for q in quantized {
+            reports.push(LayerReport {
+                name: q.name.clone(),
+                calib_error: q.calib_error,
+                avg_bits: q.budget.avg_bits(),
+                outliers: q.budget.outliers,
+            });
+            budgets.push(q.budget);
+        }
+        cache.clear_block(b);
+    }
+
+    let wall = t_loop.elapsed().as_secs_f64();
+    let report = QuantReport {
+        method: cfg.method.name(),
+        avg_bits: BitBudget::merged_avg(&budgets),
+        total_outliers: budgets.iter().map(|b| b.outliers).sum(),
+        layers: reports,
+        phase1_secs: phase1,
+        phase2_secs: (wall - phase1).max(0.0),
+        peak_mem_bytes: 0,
+        overlap_secs: 0.0,
+        wall_secs: t_run.elapsed().as_secs_f64(),
+    };
+
+    let packed = if cfg.pack_out.is_some() {
+        stats.enter(Phase::Packing);
+        let original = synthetic_weights(spec);
+        Some(PackedModel::from_quantized(&layers, &original, &ws, cfg.method, &cfg.calib)?)
+    } else {
+        None
+    };
+    for w in 0..transport.workers() {
+        transport.send(w, CoordMsg::Shutdown);
+    }
+    stats.ticks = transport.now();
+    stats.enter(Phase::Done);
+    Ok(DistRun { weights: ws, report, packed, stats })
+}
+
+/// Drive one block's Gram units to completion through the transport.
+/// Returns the Grams in unit (= merge) order regardless of arrival order.
+fn accumulate_block(
+    transport: &mut dyn Transport,
+    units: &[GramUnit],
+    dcfg: &DistConfig,
+    stats: &mut DistStats,
+) -> Result<Vec<Mat>> {
+    let n = units.len();
+    let n_workers = transport.workers();
+    let mut done: BTreeMap<usize, Mat> = BTreeMap::new();
+    // Live lease per unit index + the lease table proper.
+    let mut unit_lease: Vec<Option<LeaseId>> = vec![None; n];
+    let mut leases: BTreeMap<LeaseId, (usize, u64)> = BTreeMap::new(); // lease → (unit, expiry)
+    let mut retries = vec![0usize; n];
+    let mut next_lease: LeaseId = stats.leases as LeaseId;
+    let mut rr = 0usize;
+    // Unit identity → index, for deduplicating arrivals.
+    let index: BTreeMap<GramUnit, usize> =
+        units.iter().enumerate().map(|(i, u)| (*u, i)).collect();
+
+    while done.len() < n {
+        // Assigning: lease every unassigned, unfinished unit round-robin.
+        let mut assigned_any = false;
+        for u in 0..n {
+            if done.contains_key(&u) || unit_lease[u].is_some() {
+                continue;
+            }
+            if !assigned_any {
+                stats.enter(Phase::Assigning);
+                assigned_any = true;
+            }
+            let w = rr % n_workers;
+            rr += 1;
+            let lease = next_lease;
+            next_lease += 1;
+            transport.send(w, CoordMsg::Assign { lease, unit: units[u] });
+            leases.insert(lease, (u, transport.now() + dcfg.lease_timeout));
+            unit_lease[u] = Some(lease);
+            stats.leases += 1;
+        }
+
+        stats.enter(Phase::Accumulating);
+        for msg in transport.step() {
+            let WorkerMsg::GramDone { unit, payload, .. } = msg;
+            let Some(&idx) = index.get(&unit) else {
+                continue; // stale reply from an earlier block
+            };
+            if done.contains_key(&idx) {
+                stats.duplicates += 1;
+                continue;
+            }
+            match decode_gram(&payload) {
+                Ok(m) => {
+                    done.insert(idx, m);
+                    if let Some(l) = unit_lease[idx].take() {
+                        leases.remove(&l);
+                    }
+                }
+                Err(e) => {
+                    // Corrupted in transit: drop the lease so the next
+                    // Assigning pass retries the unit immediately.
+                    log::debug!("discarding corrupt result for unit {idx}: {e}");
+                    stats.corrupt += 1;
+                    if let Some(l) = unit_lease[idx].take() {
+                        leases.remove(&l);
+                    }
+                    retries[idx] += 1;
+                    stats.retried += 1;
+                }
+            }
+        }
+
+        // Expire overdue leases → back to Assigning next iteration.
+        let now = transport.now();
+        let expired: Vec<LeaseId> =
+            leases.iter().filter(|(_, &(_, exp))| exp <= now).map(|(&l, _)| l).collect();
+        for l in expired {
+            let (u, _) = leases.remove(&l).unwrap();
+            if unit_lease[u] == Some(l) {
+                unit_lease[u] = None;
+                retries[u] += 1;
+                stats.retried += 1;
+                if retries[u] > dcfg.max_retries {
+                    bail!(
+                        "gram unit {:?} exceeded {} retries — transport too lossy or all \
+                         workers dead",
+                        units[u],
+                        dcfg.max_retries
+                    );
+                }
+            }
+        }
+    }
+
+    Ok((0..n).map(|i| done.remove(&i).unwrap()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::{Backend, Method};
+    use crate::coordinator::run_synthetic;
+
+    fn spec() -> SyntheticSpec {
+        SyntheticSpec { blocks: 2, d_model: 32, d_ff: 64, n_contrib: 6, contrib_rows: 16, seed: 1 }
+    }
+
+    #[test]
+    fn phase_log_walks_the_state_machine() {
+        let spec = spec();
+        let mut cfg = PipelineConfig::new(Method::oac(Backend::RTN), 2);
+        cfg.calib.threads = 1;
+        let run = run_synthetic_workers(&spec, &cfg, 2, FaultPlan::none()).unwrap();
+        let log = &run.stats.phase_log;
+        assert_eq!(log.first(), Some(&Phase::Assigning));
+        assert_eq!(log.last(), Some(&Phase::Done));
+        assert_eq!(log.iter().filter(|&&p| p == Phase::Merging).count(), spec.blocks);
+        assert_eq!(log.iter().filter(|&&p| p == Phase::Calibrating).count(), spec.blocks);
+        // No pack requested → no Packing phase.
+        assert!(!log.contains(&Phase::Packing));
+        assert_eq!(run.stats.leases, spec.blocks * 6 * spec.n_contrib);
+        assert_eq!(run.stats.retried, 0);
+    }
+
+    #[test]
+    fn distributed_matches_single_process() {
+        let spec = spec();
+        let mut cfg = PipelineConfig::new(Method::oac(Backend::RTN), 2);
+        cfg.calib.threads = 2;
+        let (ws, report) = run_synthetic(&spec, &cfg).unwrap();
+        for workers in [1usize, 3] {
+            let run = run_synthetic_workers(&spec, &cfg, workers, FaultPlan::none()).unwrap();
+            assert_eq!(run.weights.fingerprint(), ws.fingerprint(), "workers={workers}");
+            assert_eq!(run.report.avg_bits.to_bits(), report.avg_bits.to_bits());
+            assert_eq!(run.report.total_outliers, report.total_outliers);
+        }
+    }
+
+    #[test]
+    fn lossy_transport_retries_to_the_same_bits() {
+        let spec = spec();
+        let mut cfg = PipelineConfig::new(Method::oac(Backend::RTN), 2);
+        cfg.calib.threads = 1;
+        let (ws, _) = run_synthetic(&spec, &cfg).unwrap();
+        let plan = FaultPlan { seed: 11, drop: 0.25, duplicate: 0.25, corrupt: 0.1, max_delay: 3, kill: 1 };
+        let run = run_synthetic_workers(&spec, &cfg, 4, plan).unwrap();
+        assert_eq!(run.weights.fingerprint(), ws.fingerprint());
+        // The plan is lossy enough that the protocol must have exercised
+        // its fault paths.
+        assert!(run.stats.retried > 0, "expected lease retries, stats: {:?}", run.stats);
+        assert!(run.stats.duplicates > 0, "expected deduplicated results, stats: {:?}", run.stats);
+    }
+
+    #[test]
+    fn hopeless_transport_fails_cleanly() {
+        let spec = SyntheticSpec { blocks: 1, ..spec() };
+        let mut cfg = PipelineConfig::new(Method::oac(Backend::RTN), 2);
+        cfg.calib.threads = 1;
+        // Everything dropped: the run must abort with the retry error, not
+        // hang.
+        let plan = FaultPlan { seed: 3, drop: 1.0, duplicate: 0.0, corrupt: 0.0, max_delay: 0, kill: 0 };
+        let mut transport = LocalTransport::new(2, &spec, plan);
+        let dcfg = DistConfig { lease_timeout: 2, max_retries: 3 };
+        let err = run_synthetic_distributed(&spec, &cfg, &mut transport, &dcfg)
+            .expect_err("fully lossy transport must abort");
+        assert!(err.to_string().contains("retries"), "unexpected error: {err}");
+    }
+}

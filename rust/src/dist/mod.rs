@@ -1,0 +1,53 @@
+//! The distributed calibration subsystem: a coordinator/worker protocol
+//! over a pluggable transport seam, plus a content-addressed artifact
+//! store for packed-model distribution.
+//!
+//! Phase 1 — accumulating the output-adaptive Hessian over calibration
+//! samples — dominates calibration cost, and the per-`(layer, sample)`
+//! Gram units the block scheduler already merges in fixed order are
+//! exactly the wire unit a distributed accumulation needs. This module
+//! distributes them:
+//!
+//! * [`protocol`] — the message types ([`protocol::CoordMsg`] /
+//!   [`protocol::WorkerMsg`]), the [`protocol::GramUnit`] work unit, and
+//!   the self-checking Gram byte frames crossing the transport.
+//! * [`transport`] — the [`transport::Transport`] seam and the in-process
+//!   channel-backed [`transport::LocalTransport`] with seeded fault
+//!   injection ([`transport::FaultPlan`]: drops, duplicates, delays,
+//!   payload corruption, worker death) on a virtual clock — the fake
+//!   transport CI proves the protocol on before any real socket exists.
+//! * [`worker`] — the compute half: each worker regenerates its assigned
+//!   sample from the seeded contribution stream and returns the Gram, a
+//!   pure function of the unit's indices.
+//! * [`coordinator`] — the explicit state machine (`Assigning →
+//!   Accumulating → Merging → Calibrating → Packing`) with a per-worker
+//!   lease table, deterministic retry/reassignment, and dedup-by-unit
+//!   merging in fixed `(layer, sample)` order.
+//! * [`store`] — the content-addressed [`store::ArtifactStore`]: packed
+//!   models chunked and keyed by FNV fingerprints, integrity-verified on
+//!   fetch, with resumable partial downloads (`oac artifacts`, and the
+//!   `oac serve --packed <id> --store <dir>` fetch-by-digest path).
+//!
+//! ## Determinism under faults
+//!
+//! `oac quantize --synthetic --workers N` is **bit-identical** to the
+//! single-process pipeline for every `N` and every fault schedule: units
+//! are pure functions of their indices (any recomputation or duplicate is
+//! byte-identical), results are deduplicated by unit and merged in the
+//! fixed order [`crate::hessian::Hessian::from_grams`] defines, and
+//! corrupted frames are rejected by digest and retried. Faults move only
+//! the protocol counters ([`coordinator::DistStats`]), never the bits —
+//! enforced by `rust/tests/dist.rs` and CI's `dist-smoke` job.
+
+pub mod coordinator;
+pub mod protocol;
+pub mod store;
+pub mod transport;
+pub mod worker;
+
+pub use coordinator::{
+    run_synthetic_distributed, run_synthetic_workers, DistConfig, DistRun, DistStats, Phase,
+};
+pub use protocol::{CoordMsg, GramUnit, WorkerMsg};
+pub use store::{parse_artifact_id, ArtifactStore, FetchReport, Manifest, CHUNK_SIZE};
+pub use transport::{FaultPlan, LocalTransport, Transport, TransportStats};

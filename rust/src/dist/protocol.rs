@@ -1,0 +1,176 @@
+//! Wire protocol of the distributed calibration subsystem: the message
+//! types exchanged between the coordinator and its workers, and the
+//! byte-level encoding of Gram results.
+//!
+//! The unit of distribution is one [`GramUnit`] — a `(block, layer,
+//! sample)` Phase-1 Gram shard, exactly the shard [`crate::coordinator::
+//! schedule`] merges in fixed sample order. A unit is a *pure function of
+//! its indices*: the worker regenerates the contribution matrix from the
+//! seeded stream ([`crate::coordinator::schedule::contrib_rng`]) and
+//! contracts it locally, so assignments carry only indices and replies
+//! carry only the Gram result. That purity is what makes the protocol
+//! fault-tolerant without losing bit-determinism — a duplicated,
+//! re-ordered, or re-computed result is bit-identical to the original, and
+//! the coordinator can accept whichever copy arrives first.
+//!
+//! Gram payloads cross the transport as self-checking byte frames
+//! ([`encode_gram`]/[`decode_gram`]): `OACGRAM1` magic, dimensions, raw
+//! little-endian f32 bits, and a trailing [`crate::util::digest`] FNV-1a
+//! fingerprint of everything before it. A frame corrupted in transit
+//! (the fault injector can flip payload bytes) fails `decode_gram` with an
+//! integrity error and the coordinator retries the unit instead of folding
+//! garbage into a Hessian.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Mat;
+use crate::util::digest;
+
+/// Identifies one outstanding assignment. Leases are minted by the
+/// coordinator in issue order; a unit re-assigned after a timeout gets a
+/// fresh lease, so stale replies are recognizable (but still *usable* —
+/// results are deduplicated by unit, not lease).
+pub type LeaseId = u64;
+
+/// Worker index within one transport (0-based, dense).
+pub type WorkerId = usize;
+
+/// One Phase-1 Gram shard: contract calibration sample `sample` of layer
+/// `layer` (index within the block) of block `block`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct GramUnit {
+    pub block: usize,
+    pub layer: usize,
+    pub sample: usize,
+}
+
+impl GramUnit {
+    /// Position of this unit in the block's fixed `(layer, sample)` merge
+    /// order — the same order [`crate::hessian::Hessian::from_grams`]
+    /// folds partials in.
+    pub fn merge_index(&self, n_contrib: usize) -> usize {
+        self.layer * n_contrib + self.sample
+    }
+}
+
+/// Coordinator → worker messages.
+#[derive(Debug, Clone)]
+pub enum CoordMsg {
+    /// Compute `unit` under lease `lease` and reply with a
+    /// [`WorkerMsg::GramDone`].
+    Assign { lease: LeaseId, unit: GramUnit },
+    /// End of run; the worker stops draining its inbox.
+    Shutdown,
+}
+
+/// Worker → coordinator messages.
+#[derive(Debug, Clone)]
+pub enum WorkerMsg {
+    /// A finished Gram unit. `payload` is the [`encode_gram`] frame; the
+    /// coordinator verifies its digest before accepting the result.
+    GramDone { lease: LeaseId, unit: GramUnit, worker: WorkerId, payload: Vec<u8> },
+}
+
+const GRAM_MAGIC: &[u8; 8] = b"OACGRAM1";
+
+/// Encode a Gram matrix as a self-checking byte frame: magic, `rows`/`cols`
+/// as little-endian u32, the f32 bit patterns, and a trailing FNV-1a digest
+/// of all preceding bytes.
+pub fn encode_gram(m: &Mat) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + 8 + m.data.len() * 4 + 8);
+    out.extend_from_slice(GRAM_MAGIC);
+    out.extend_from_slice(&(m.rows as u32).to_le_bytes());
+    out.extend_from_slice(&(m.cols as u32).to_le_bytes());
+    for v in &m.data {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    let d = digest::fnv1a(&out);
+    out.extend_from_slice(&d.to_le_bytes());
+    out
+}
+
+/// Decode an [`encode_gram`] frame, verifying the trailing digest first so
+/// any in-transit corruption is reported as an integrity error rather than
+/// parsed into a wrong-but-plausible matrix.
+pub fn decode_gram(bytes: &[u8]) -> Result<Mat> {
+    if bytes.len() < 8 + 8 + 8 {
+        bail!("gram frame integrity error: truncated frame ({} bytes)", bytes.len());
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let want = u64::from_le_bytes(tail.try_into().unwrap());
+    let got = digest::fnv1a(body);
+    if want != got {
+        bail!("gram frame integrity error: digest mismatch ({got:016x} != {want:016x})");
+    }
+    if &body[..8] != GRAM_MAGIC {
+        bail!("gram frame integrity error: bad magic");
+    }
+    let rows = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
+    let cols = u32::from_le_bytes(body[12..16].try_into().unwrap()) as usize;
+    let vals = &body[16..];
+    if vals.len() != rows * cols * 4 {
+        bail!(
+            "gram frame integrity error: {rows}x{cols} frame carries {} value bytes",
+            vals.len()
+        );
+    }
+    let mut m = Mat::zeros(rows, cols);
+    for (i, chunk) in vals.chunks_exact(4).enumerate() {
+        m.data[i] = f32::from_bits(u32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randmat(seed: u64, rows: usize, cols: usize) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, 1.0);
+        m
+    }
+
+    #[test]
+    fn gram_frame_roundtrip_is_bit_exact() {
+        for (seed, r, c) in [(1u64, 3usize, 5usize), (2, 1, 1), (3, 8, 8)] {
+            let m = randmat(seed, r, c);
+            let back = decode_gram(&encode_gram(&m)).unwrap();
+            assert_eq!(back.rows, m.rows);
+            assert_eq!(back.cols, m.cols);
+            let a: Vec<u32> = m.data.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = back.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn every_byte_flip_fails_decode() {
+        let frame = encode_gram(&randmat(7, 4, 6));
+        for i in 0..frame.len() {
+            let mut bad = frame.clone();
+            bad[i] ^= 0x40;
+            let err = decode_gram(&bad).expect_err("flipped frame must not decode");
+            assert!(
+                err.to_string().contains("integrity"),
+                "flip at byte {i}: unexpected error {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_frame_fails() {
+        let frame = encode_gram(&randmat(9, 2, 2));
+        assert!(decode_gram(&frame[..frame.len() - 1]).is_err());
+        assert!(decode_gram(&[]).is_err());
+    }
+
+    #[test]
+    fn merge_index_matches_layer_sample_order() {
+        let u = GramUnit { block: 0, layer: 2, sample: 3 };
+        assert_eq!(u.merge_index(8), 19);
+        assert_eq!(GramUnit { block: 1, layer: 0, sample: 0 }.merge_index(8), 0);
+    }
+}

@@ -1,0 +1,384 @@
+//! Content-addressed artifact store for packed-model distribution.
+//!
+//! A pushed artifact (typically an `OACPACK1` packed model) is split into
+//! fixed-size chunks; each chunk is stored once under its
+//! [`crate::util::digest`] FNV-1a fingerprint (`objects/<16-hex>`), and an
+//! ordered manifest (`manifests/<16-hex>`) records the chunk digests, the
+//! total length, and the whole-file digest — which doubles as the artifact
+//! id. Identical chunks across artifacts share storage by construction.
+//!
+//! Fetching reassembles the file chunk by chunk into `<dest>.part`,
+//! verifying every chunk against its manifest digest *before* appending
+//! and the whole-file digest before the final atomic rename — a flipped
+//! byte anywhere in the store surfaces as an integrity error, never as a
+//! served model with garbage weights. A partial `.part` file (an
+//! interrupted or [`ArtifactStore::fetch_limited`] fetch) is **resumed**:
+//! its chunk-aligned prefix is re-verified against the manifest, anything
+//! corrupt is truncated away, and only the missing chunks are transferred.
+//!
+//! `oac artifacts push|fetch|verify|list` is the CLI surface;
+//! `oac serve --packed <id> --store <dir>` serves straight from the store
+//! (fetch-by-digest with resume, then the normal
+//! [`crate::serve::PackedModel::load`] integrity-checked load).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::digest;
+
+/// Chunk size of stored artifacts. Small enough that the synthetic packed
+/// models in tests/CI span several chunks (so resume paths are actually
+/// exercised), large enough to keep per-chunk overhead trivial.
+pub const CHUNK_SIZE: usize = 4096;
+
+/// Ordered chunk listing of one artifact. `id` is the FNV-1a digest of the
+/// whole file — the content address served on the CLI as 16 hex digits.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub id: u64,
+    pub len: u64,
+    pub chunk_size: u32,
+    pub chunks: Vec<u64>,
+}
+
+impl Manifest {
+    fn to_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str("OACSTORE1\n");
+        s.push_str(&format!("id {:016x}\n", self.id));
+        s.push_str(&format!("len {}\n", self.len));
+        s.push_str(&format!("chunk_size {}\n", self.chunk_size));
+        for c in &self.chunks {
+            s.push_str(&format!("chunk {c:016x}\n"));
+        }
+        s
+    }
+
+    fn parse(text: &str) -> Result<Manifest> {
+        let mut lines = text.lines();
+        if lines.next() != Some("OACSTORE1") {
+            bail!("bad manifest header");
+        }
+        let mut id = None;
+        let mut len = None;
+        let mut chunk_size = None;
+        let mut chunks = Vec::new();
+        for line in lines {
+            let Some((key, val)) = line.split_once(' ') else {
+                bail!("malformed manifest line {line:?}");
+            };
+            match key {
+                "id" => id = Some(u64::from_str_radix(val, 16)?),
+                "len" => len = Some(val.parse::<u64>()?),
+                "chunk_size" => chunk_size = Some(val.parse::<u32>()?),
+                "chunk" => chunks.push(u64::from_str_radix(val, 16)?),
+                _ => bail!("unknown manifest key {key:?}"),
+            }
+        }
+        let (Some(id), Some(len), Some(chunk_size)) = (id, len, chunk_size) else {
+            bail!("manifest missing id/len/chunk_size");
+        };
+        if chunk_size == 0 {
+            bail!("manifest chunk_size 0");
+        }
+        let expect = len.div_ceil(chunk_size as u64) as usize;
+        if chunks.len() != expect {
+            bail!("manifest lists {} chunks, length {len} needs {expect}", chunks.len());
+        }
+        Ok(Manifest { id, len, chunk_size, chunks })
+    }
+
+    pub fn id_hex(&self) -> String {
+        format!("{:016x}", self.id)
+    }
+}
+
+/// Parse a CLI artifact id (16 hex digits).
+pub fn parse_artifact_id(s: &str) -> Result<u64> {
+    u64::from_str_radix(s.trim(), 16)
+        .with_context(|| format!("artifact id {s:?} is not a hex digest"))
+}
+
+/// Progress of one fetch call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FetchReport {
+    /// Chunks already present in `<dest>.part` and re-verified.
+    pub resumed: usize,
+    /// Chunks transferred by this call.
+    pub fetched: usize,
+    pub total: usize,
+    /// True once `dest` holds the fully verified artifact.
+    pub complete: bool,
+}
+
+/// A directory-backed content-addressed store.
+pub struct ArtifactStore {
+    root: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: impl AsRef<Path>) -> Result<ArtifactStore> {
+        let root = root.as_ref().to_path_buf();
+        std::fs::create_dir_all(root.join("objects"))
+            .with_context(|| format!("creating store at {}", root.display()))?;
+        std::fs::create_dir_all(root.join("manifests"))?;
+        Ok(ArtifactStore { root })
+    }
+
+    fn object_path(&self, d: u64) -> PathBuf {
+        self.root.join("objects").join(format!("{d:016x}"))
+    }
+
+    fn manifest_path(&self, id: u64) -> PathBuf {
+        self.root.join("manifests").join(format!("{id:016x}"))
+    }
+
+    /// Chunk a file into the store. Returns the manifest; pushing the same
+    /// content twice is idempotent and chunks shared with other artifacts
+    /// are stored once.
+    pub fn push(&self, path: impl AsRef<Path>) -> Result<Manifest> {
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        if bytes.is_empty() {
+            bail!("refusing to push empty artifact {}", path.as_ref().display());
+        }
+        let id = digest::fnv1a(&bytes);
+        let mut chunks = Vec::with_capacity(bytes.len().div_ceil(CHUNK_SIZE));
+        for chunk in bytes.chunks(CHUNK_SIZE) {
+            let d = digest::fnv1a(chunk);
+            let p = self.object_path(d);
+            if !p.exists() {
+                std::fs::write(&p, chunk)?;
+            }
+            chunks.push(d);
+        }
+        let m = Manifest { id, len: bytes.len() as u64, chunk_size: CHUNK_SIZE as u32, chunks };
+        std::fs::write(self.manifest_path(id), m.to_text())?;
+        Ok(m)
+    }
+
+    pub fn manifest(&self, id: u64) -> Result<Manifest> {
+        let p = self.manifest_path(id);
+        let text = std::fs::read_to_string(&p)
+            .with_context(|| format!("artifact {id:016x} not in store ({})", p.display()))?;
+        let m = Manifest::parse(&text)?;
+        if m.id != id {
+            bail!("manifest {id:016x} declares mismatching id {:016x}", m.id);
+        }
+        Ok(m)
+    }
+
+    /// Fetch an artifact into `dest`, resuming any partial download.
+    pub fn fetch(&self, id: u64, dest: impl AsRef<Path>) -> Result<FetchReport> {
+        self.fetch_limited(id, dest, usize::MAX)
+    }
+
+    /// Fetch at most `max_chunks` missing chunks, then stop — the forced
+    /// mid-fetch interruption the resume path is tested against. Returns
+    /// with `complete: false` and a `<dest>.part` file a later call picks
+    /// up.
+    pub fn fetch_limited(
+        &self,
+        id: u64,
+        dest: impl AsRef<Path>,
+        max_chunks: usize,
+    ) -> Result<FetchReport> {
+        let dest = dest.as_ref();
+        let m = self.manifest(id)?;
+        let part = part_path(dest);
+
+        // Resume: keep the longest verified chunk-aligned prefix of any
+        // existing partial file.
+        let mut have: Vec<u8> = std::fs::read(&part).unwrap_or_default();
+        let cs = m.chunk_size as usize;
+        let mut resumed = 0;
+        for (i, chunk) in have.chunks(cs).enumerate() {
+            if i < m.chunks.len()
+                && chunk.len() == cs.min(m.len as usize - i * cs)
+                && digest::fnv1a(chunk) == m.chunks[i]
+            {
+                resumed += 1;
+            } else {
+                break;
+            }
+        }
+        have.truncate(resumed * cs);
+
+        let mut fetched = 0;
+        for (i, &cd) in m.chunks.iter().enumerate().skip(resumed) {
+            if fetched >= max_chunks {
+                std::fs::write(&part, &have)?;
+                return Ok(FetchReport { resumed, fetched, total: m.chunks.len(), complete: false });
+            }
+            let p = self.object_path(cd);
+            let chunk = std::fs::read(&p)
+                .with_context(|| format!("chunk {cd:016x} of {id:016x} missing from store"))?;
+            if digest::fnv1a(&chunk) != cd {
+                bail!("chunk {cd:016x} of artifact {id:016x} failed integrity check");
+            }
+            let want_len = cs.min(m.len as usize - i * cs);
+            if chunk.len() != want_len {
+                bail!("chunk {cd:016x} of artifact {id:016x} has wrong length {}", chunk.len());
+            }
+            have.extend_from_slice(&chunk);
+            fetched += 1;
+        }
+
+        if have.len() as u64 != m.len {
+            bail!("reassembled artifact {id:016x} has length {} (manifest says {})", have.len(), m.len);
+        }
+        if digest::fnv1a(&have) != m.id {
+            bail!("reassembled artifact {id:016x} failed whole-file integrity check");
+        }
+        std::fs::write(&part, &have)?;
+        std::fs::rename(&part, dest)?;
+        Ok(FetchReport { resumed, fetched, total: m.chunks.len(), complete: true })
+    }
+
+    /// Verify that every chunk of an artifact is present and matches its
+    /// digest (without assembling the file anywhere).
+    pub fn verify(&self, id: u64) -> Result<()> {
+        let m = self.manifest(id)?;
+        let mut state = digest::FNV_OFFSET;
+        for (i, &cd) in m.chunks.iter().enumerate() {
+            let chunk = std::fs::read(self.object_path(cd))
+                .with_context(|| format!("chunk {i} ({cd:016x}) missing"))?;
+            if digest::fnv1a(&chunk) != cd {
+                bail!("chunk {i} ({cd:016x}) failed integrity check");
+            }
+            state = digest::fnv1a_with(state, &chunk);
+        }
+        if state != m.id {
+            bail!("artifact {id:016x}: chunks verify individually but whole-file digest differs");
+        }
+        Ok(())
+    }
+
+    /// All manifests in the store, ordered by id.
+    pub fn list(&self) -> Result<Vec<Manifest>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(self.root.join("manifests"))? {
+            let entry = entry?;
+            if let Some(name) = entry.file_name().to_str() {
+                if let Ok(id) = u64::from_str_radix(name, 16) {
+                    out.push(self.manifest(id)?);
+                }
+            }
+        }
+        out.sort_by_key(|m| m.id);
+        Ok(out)
+    }
+}
+
+fn part_path(dest: &Path) -> PathBuf {
+    let mut name = dest.file_name().unwrap_or_default().to_os_string();
+    name.push(".part");
+    dest.with_file_name(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("oac_store_test_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_blob(dir: &Path, len: usize, seed: u64) -> PathBuf {
+        let mut rng = Rng::new(seed);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let p = dir.join("blob.bin");
+        std::fs::write(&p, &bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn push_fetch_roundtrip() {
+        let d = tmpdir("roundtrip");
+        let blob = write_blob(&d, 3 * CHUNK_SIZE + 123, 1);
+        let store = ArtifactStore::open(d.join("store")).unwrap();
+        let m = store.push(&blob).unwrap();
+        assert_eq!(m.chunks.len(), 4);
+        store.verify(m.id).unwrap();
+        let dest = d.join("out.bin");
+        let rep = store.fetch(m.id, &dest).unwrap();
+        assert!(rep.complete);
+        assert_eq!((rep.resumed, rep.fetched), (0, 4));
+        assert_eq!(std::fs::read(&dest).unwrap(), std::fs::read(&blob).unwrap());
+        // Idempotent re-push.
+        let m2 = store.push(&blob).unwrap();
+        assert_eq!(m, m2);
+        assert_eq!(store.list().unwrap().len(), 1);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn limited_fetch_resumes_where_it_stopped() {
+        let d = tmpdir("resume");
+        let blob = write_blob(&d, 5 * CHUNK_SIZE + 7, 2);
+        let store = ArtifactStore::open(d.join("store")).unwrap();
+        let m = store.push(&blob).unwrap();
+        let dest = d.join("out.bin");
+        let r1 = store.fetch_limited(m.id, &dest, 2).unwrap();
+        assert_eq!((r1.resumed, r1.fetched, r1.complete), (0, 2, false));
+        assert!(!dest.exists());
+        assert!(part_path(&dest).exists());
+        let r2 = store.fetch(m.id, &dest).unwrap();
+        assert_eq!((r2.resumed, r2.fetched, r2.complete), (2, 4, true));
+        assert!(!part_path(&dest).exists());
+        assert_eq!(std::fs::read(&dest).unwrap(), std::fs::read(&blob).unwrap());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn corrupt_partial_prefix_is_discarded_not_trusted() {
+        let d = tmpdir("badpart");
+        let blob = write_blob(&d, 4 * CHUNK_SIZE, 3);
+        let store = ArtifactStore::open(d.join("store")).unwrap();
+        let m = store.push(&blob).unwrap();
+        let dest = d.join("out.bin");
+        store.fetch_limited(m.id, &dest, 3).unwrap();
+        // Corrupt the middle of the partial file: resume must keep only
+        // the still-valid first chunk and re-fetch the rest.
+        let part = part_path(&dest);
+        let mut bytes = std::fs::read(&part).unwrap();
+        bytes[CHUNK_SIZE + 10] ^= 0xFF;
+        std::fs::write(&part, &bytes).unwrap();
+        let rep = store.fetch(m.id, &dest).unwrap();
+        assert_eq!((rep.resumed, rep.fetched, rep.complete), (1, 3, true));
+        assert_eq!(std::fs::read(&dest).unwrap(), std::fs::read(&blob).unwrap());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn corrupt_chunk_object_fails_fetch_and_verify() {
+        let d = tmpdir("badchunk");
+        let blob = write_blob(&d, 2 * CHUNK_SIZE + 50, 4);
+        let store = ArtifactStore::open(d.join("store")).unwrap();
+        let m = store.push(&blob).unwrap();
+        let obj = store.object_path(m.chunks[1]);
+        let mut bytes = std::fs::read(&obj).unwrap();
+        bytes[0] ^= 0x01;
+        std::fs::write(&obj, &bytes).unwrap();
+        let err = store.fetch(m.id, d.join("out.bin")).expect_err("corrupt chunk must fail");
+        assert!(err.to_string().contains("integrity"), "unexpected error: {err}");
+        assert!(store.verify(m.id).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn manifest_text_roundtrip_and_id_parse() {
+        let m = Manifest { id: 0xdead_beef_0042, len: 9000, chunk_size: 4096, chunks: vec![1, 2, 3] };
+        let back = Manifest::parse(&m.to_text()).unwrap();
+        assert_eq!(m, back);
+        assert_eq!(parse_artifact_id(&m.id_hex()).unwrap(), m.id);
+        assert!(parse_artifact_id("not-hex").is_err());
+        assert!(Manifest::parse("garbage").is_err());
+    }
+}

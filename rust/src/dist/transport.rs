@@ -1,0 +1,380 @@
+//! The transport seam of the distributed calibration subsystem.
+//!
+//! [`Transport`] is the boundary a real network transport would implement;
+//! [`LocalTransport`] is the in-process, channel-backed fake that CI proves
+//! the protocol on before any socket exists. Virtual workers live inside
+//! the transport, each behind a `std::sync::mpsc` channel; delivery runs on
+//! a **virtual clock**: [`Transport::step`] advances one tick, pushes every
+//! due coordinator→worker message into its worker's channel, polls the
+//! workers, and returns the worker→coordinator messages due this tick.
+//! Nothing reads the wall clock, so a run's entire delivery trace is a pure
+//! function of `(spec, workers, fault plan)` and replays identically.
+//!
+//! ## Seeded fault injection
+//!
+//! [`FaultPlan`] injects failures *at the transport boundary only* — the
+//! protocol above it never special-cases faults, it just leases and
+//! retries. Per message (either direction, decided by one seeded
+//! [`Rng`] stream in send order): **drop** (never delivered), **duplicate**
+//! (delivered twice, each copy independently delayed), **delay** (delivery
+//! deferred up to `max_delay` ticks), and **corrupt** (one payload byte
+//! flipped — caught by the Gram frame digest, surfacing as a retried
+//! unit). Whole-worker failure is modeled by killing up to
+//! `kill ≤ workers−1` workers at seeded ticks: a dead worker's channel goes
+//! silent and its leases expire. The coordinator's dedup-by-unit merge
+//! makes every one of these schedules bit-identical to the fault-free run.
+
+use std::sync::mpsc::{channel, Sender};
+
+use crate::coordinator::SyntheticSpec;
+use crate::util::rng::Rng;
+
+use super::protocol::{CoordMsg, WorkerId, WorkerMsg};
+use super::worker::Worker;
+
+/// Seeded failure model applied to every message crossing the transport.
+/// `seed == 0` (or [`FaultPlan::none`]) disables all injection.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Per-message drop probability.
+    pub drop: f64,
+    /// Per-message duplication probability.
+    pub duplicate: f64,
+    /// Per-reply payload corruption probability (worker→coordinator only).
+    pub corrupt: f64,
+    /// Uniform extra delivery delay in ticks, `0..=max_delay`.
+    pub max_delay: u64,
+    /// Workers to kill at seeded ticks (clamped to `workers − 1` so a run
+    /// can always finish).
+    pub kill: usize,
+}
+
+impl FaultPlan {
+    pub fn none() -> FaultPlan {
+        FaultPlan { seed: 0, drop: 0.0, duplicate: 0.0, corrupt: 0.0, max_delay: 0, kill: 0 }
+    }
+
+    /// The default lossy plan used by `--fault-seed`: moderate drop /
+    /// duplication / corruption rates, short delays, one worker death.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        if seed == 0 {
+            return FaultPlan::none();
+        }
+        FaultPlan { seed, drop: 0.12, duplicate: 0.12, corrupt: 0.05, max_delay: 3, kill: 1 }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.seed != 0
+            && (self.drop > 0.0
+                || self.duplicate > 0.0
+                || self.corrupt > 0.0
+                || self.max_delay > 0
+                || self.kill > 0)
+    }
+}
+
+/// Counters of what the fault injector actually did — asserted on by tests
+/// so a "fault-injected" run provably exercised faults.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TransportStats {
+    pub sent: usize,
+    pub delivered: usize,
+    pub dropped: usize,
+    pub duplicated: usize,
+    pub delayed: usize,
+    pub corrupted: usize,
+    pub workers_killed: usize,
+}
+
+/// The message-passing boundary between the coordinator and its workers.
+///
+/// A real socket transport would implement exactly this surface; the
+/// protocol layer ([`crate::dist::coordinator`]) is written against the
+/// trait and never learns which implementation carries its messages.
+pub trait Transport {
+    /// Number of workers addressable through this transport.
+    fn workers(&self) -> usize;
+
+    /// Current virtual tick.
+    fn now(&self) -> u64;
+
+    /// Queue a coordinator→worker message (delivery is asynchronous and
+    /// may be dropped/duplicated/delayed by the fault plan).
+    fn send(&mut self, to: WorkerId, msg: CoordMsg);
+
+    /// Advance one virtual tick: deliver due coordinator→worker messages,
+    /// run the workers, and return the worker→coordinator messages whose
+    /// delivery is due.
+    fn step(&mut self) -> Vec<WorkerMsg>;
+
+    /// Fault-injection accounting.
+    fn stats(&self) -> TransportStats;
+}
+
+/// One queued message with its delivery tick and a send-order sequence
+/// number (the tie-breaker that keeps delivery order deterministic).
+struct Queued<T> {
+    due: u64,
+    seq: u64,
+    msg: T,
+}
+
+/// In-process fake transport: virtual workers behind mpsc channels, a
+/// virtual clock, and seeded fault injection on every queue crossing.
+pub struct LocalTransport {
+    inboxes: Vec<Sender<CoordMsg>>,
+    workers: Vec<Worker>,
+    /// `None` = alive forever; `Some(t)` = dies at tick `t`.
+    death_tick: Vec<Option<u64>>,
+    alive: Vec<bool>,
+    pending_to_worker: Vec<Queued<(WorkerId, CoordMsg)>>,
+    pending_to_coord: Vec<Queued<WorkerMsg>>,
+    now: u64,
+    seq: u64,
+    fault: FaultPlan,
+    rng: Rng,
+    stats: TransportStats,
+}
+
+impl LocalTransport {
+    pub fn new(workers: usize, spec: &SyntheticSpec, fault: FaultPlan) -> LocalTransport {
+        assert!(workers > 0, "transport needs at least one worker");
+        let mut inboxes = Vec::with_capacity(workers);
+        let mut procs = Vec::with_capacity(workers);
+        for id in 0..workers {
+            let (tx, rx) = channel();
+            inboxes.push(tx);
+            procs.push(Worker::new(id, spec.clone(), rx));
+        }
+        let mut rng = Rng::new(fault.seed ^ 0x0D15_77AB_1E00);
+        let mut death_tick = vec![None; workers];
+        if fault.seed != 0 {
+            // Kill at most workers−1 so at least one worker survives.
+            let kills = fault.kill.min(workers.saturating_sub(1));
+            let mut killed = 0;
+            while killed < kills {
+                let w = rng.below(workers);
+                if death_tick[w].is_none() {
+                    death_tick[w] = Some(2 + rng.below(12) as u64);
+                    killed += 1;
+                }
+            }
+        }
+        LocalTransport {
+            inboxes,
+            workers: procs,
+            death_tick,
+            alive: vec![true; workers],
+            pending_to_worker: Vec::new(),
+            pending_to_coord: Vec::new(),
+            now: 0,
+            seq: 0,
+            fault,
+            rng,
+            stats: TransportStats::default(),
+        }
+    }
+
+    /// Total units computed across all virtual workers (includes work whose
+    /// replies were later dropped).
+    pub fn units_computed(&self) -> usize {
+        self.workers.iter().map(|w| w.computed).sum()
+    }
+
+    /// Roll the fault dice for one enqueue: returns the delivery ticks of
+    /// each surviving copy (empty = dropped, two entries = duplicated).
+    fn deliveries(&mut self) -> Vec<u64> {
+        self.stats.sent += 1;
+        if self.fault.seed == 0 {
+            return vec![self.now + 1];
+        }
+        if self.rng.uniform() < self.fault.drop {
+            self.stats.dropped += 1;
+            return Vec::new();
+        }
+        let copies = if self.rng.uniform() < self.fault.duplicate {
+            self.stats.duplicated += 1;
+            2
+        } else {
+            1
+        };
+        (0..copies)
+            .map(|_| {
+                let delay = if self.fault.max_delay > 0 {
+                    self.rng.below(self.fault.max_delay as usize + 1) as u64
+                } else {
+                    0
+                };
+                if delay > 0 {
+                    self.stats.delayed += 1;
+                }
+                self.now + 1 + delay
+            })
+            .collect()
+    }
+
+    fn enqueue_to_coord(&mut self, msg: WorkerMsg) {
+        for due in self.deliveries() {
+            let mut m = msg.clone();
+            if self.fault.seed != 0 && self.fault.corrupt > 0.0 {
+                let corrupt = self.rng.uniform() < self.fault.corrupt;
+                if corrupt {
+                    let WorkerMsg::GramDone { payload, .. } = &mut m;
+                    if !payload.is_empty() {
+                        let i = self.rng.below(payload.len());
+                        payload[i] ^= 0x20;
+                        self.stats.corrupted += 1;
+                    }
+                }
+            }
+            self.pending_to_coord.push(Queued { due, seq: self.seq, msg: m });
+            self.seq += 1;
+        }
+    }
+}
+
+impl Transport for LocalTransport {
+    fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn now(&self) -> u64 {
+        self.now
+    }
+
+    fn send(&mut self, to: WorkerId, msg: CoordMsg) {
+        for due in self.deliveries() {
+            self.pending_to_worker.push(Queued { due, seq: self.seq, msg: (to, msg.clone()) });
+            self.seq += 1;
+        }
+    }
+
+    fn step(&mut self) -> Vec<WorkerMsg> {
+        self.now += 1;
+        for w in 0..self.alive.len() {
+            if self.alive[w] && self.death_tick[w].is_some_and(|t| t <= self.now) {
+                self.alive[w] = false;
+                self.stats.workers_killed += 1;
+            }
+        }
+
+        // Deliver due coordinator→worker messages in (due, seq) order into
+        // the workers' channels; messages to dead workers vanish.
+        let mut due: Vec<Queued<(WorkerId, CoordMsg)>> = Vec::new();
+        let mut rest = Vec::new();
+        for q in self.pending_to_worker.drain(..) {
+            if q.due <= self.now {
+                due.push(q);
+            } else {
+                rest.push(q);
+            }
+        }
+        self.pending_to_worker = rest;
+        due.sort_by_key(|q| (q.due, q.seq));
+        for q in due {
+            let (w, msg) = q.msg;
+            if self.alive[w] {
+                self.stats.delivered += 1;
+                // Send into the channel; the worker drains it below.
+                let _ = self.inboxes[w].send(msg);
+            } else {
+                self.stats.dropped += 1;
+            }
+        }
+
+        // Run live workers and route their replies through fault injection.
+        let mut replies = Vec::new();
+        for w in 0..self.workers.len() {
+            if self.alive[w] {
+                replies.extend(self.workers[w].poll());
+            }
+        }
+        for r in replies {
+            self.enqueue_to_coord(r);
+        }
+
+        // Collect due worker→coordinator messages in (due, seq) order.
+        let mut out: Vec<Queued<WorkerMsg>> = Vec::new();
+        let mut rest = Vec::new();
+        for q in self.pending_to_coord.drain(..) {
+            if q.due <= self.now {
+                out.push(q);
+            } else {
+                rest.push(q);
+            }
+        }
+        self.pending_to_coord = rest;
+        out.sort_by_key(|q| (q.due, q.seq));
+        self.stats.delivered += out.len();
+        out.into_iter().map(|q| q.msg).collect()
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::protocol::{decode_gram, GramUnit};
+
+    fn spec() -> SyntheticSpec {
+        SyntheticSpec { blocks: 1, d_model: 16, d_ff: 32, n_contrib: 4, contrib_rows: 8, seed: 0 }
+    }
+
+    #[test]
+    fn fault_free_send_delivers_next_tick() {
+        let spec = spec();
+        let mut t = LocalTransport::new(2, &spec, FaultPlan::none());
+        t.send(1, CoordMsg::Assign { lease: 7, unit: GramUnit { block: 0, layer: 0, sample: 1 } });
+        // Tick 1: assignment delivered + computed, reply queued for tick 2.
+        assert!(t.step().is_empty());
+        let replies = t.step();
+        assert_eq!(replies.len(), 1);
+        let WorkerMsg::GramDone { lease, worker, payload, .. } = &replies[0];
+        assert_eq!((*lease, *worker), (7, 1));
+        decode_gram(payload).expect("fault-free payload decodes");
+        assert_eq!(t.units_computed(), 1);
+    }
+
+    #[test]
+    fn seeded_trace_is_reproducible() {
+        let spec = spec();
+        let plan = FaultPlan { seed: 42, drop: 0.3, duplicate: 0.3, corrupt: 0.2, max_delay: 2, kill: 1 };
+        let run = |plan: FaultPlan| {
+            let mut t = LocalTransport::new(3, &spec, plan);
+            let mut arrivals = Vec::new();
+            for s in 0..4u64 {
+                t.send(
+                    (s % 3) as usize,
+                    CoordMsg::Assign {
+                        lease: s,
+                        unit: GramUnit { block: 0, layer: 0, sample: s as usize },
+                    },
+                );
+            }
+            for _ in 0..12 {
+                for m in t.step() {
+                    let WorkerMsg::GramDone { lease, worker, payload, .. } = m;
+                    arrivals.push((t.now(), lease, worker, payload.len(), decode_gram(&payload).is_ok()));
+                }
+            }
+            arrivals
+        };
+        assert_eq!(run(plan.clone()), run(plan));
+    }
+
+    #[test]
+    fn kill_is_clamped_to_leave_one_worker() {
+        let spec = spec();
+        let plan = FaultPlan { seed: 5, drop: 0.0, duplicate: 0.0, corrupt: 0.0, max_delay: 0, kill: 99 };
+        let mut t = LocalTransport::new(3, &spec, plan);
+        for _ in 0..40 {
+            t.step();
+        }
+        assert_eq!(t.stats().workers_killed, 2);
+        assert!(t.alive.iter().any(|&a| a), "one worker must survive");
+    }
+}

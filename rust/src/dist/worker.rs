@@ -1,0 +1,143 @@
+//! The calibration worker: the compute half of the coordinator/worker
+//! protocol.
+//!
+//! A worker owns nothing but the synthetic model spec and its inbox
+//! receiver. On every [`Worker::poll`] it drains the inbox and answers each
+//! [`CoordMsg::Assign`] with a [`WorkerMsg::GramDone`] whose payload is the
+//! encoded Gram result ([`crate::dist::protocol::encode_gram`]).
+//!
+//! The crucial property is that [`gram_for_unit`] is a **pure function of
+//! `(spec, unit)`**: the worker re-derives the contribution matrix from the
+//! same seeded stream the in-process scheduler uses
+//! ([`crate::coordinator::schedule::contrib_rng`]) and contracts it with a
+//! serial inner pool — exactly the Gram the scheduler's accumulate stage
+//! would have produced. Any worker, any retry, and any duplicate therefore
+//! computes bit-identical bytes, which is what lets the coordinator accept
+//! the first arriving copy of a result without caring which lease produced
+//! it.
+
+use std::sync::mpsc::Receiver;
+
+use crate::coordinator::schedule::contrib_rng;
+use crate::coordinator::{synthetic_layers, SyntheticSpec};
+use crate::tensor::Mat;
+use crate::util::pool::Pool;
+
+use super::protocol::{encode_gram, CoordMsg, GramUnit, WorkerId, WorkerMsg};
+
+/// Compute the Gram of one `(block, layer, sample)` unit from scratch:
+/// draw the layer's contribution stream up to `sample` (consuming the PRNG
+/// exactly as the scheduler's generate stage does) and contract the final
+/// draw. Bit-identical to the corresponding in-process Gram unit.
+pub fn gram_for_unit(spec: &SyntheticSpec, unit: &GramUnit) -> Mat {
+    let layers = synthetic_layers(spec);
+    let l = layers
+        .iter()
+        .filter(|l| l.block == unit.block)
+        .nth(unit.layer)
+        .unwrap_or_else(|| panic!("unit {unit:?} addresses a layer outside the spec"));
+    let mut rng = contrib_rng(spec, unit.block, unit.layer);
+    let mut g = Mat::zeros(spec.contrib_rows, l.cols);
+    // Redraw the full stream prefix so the PRNG state (including the
+    // Box-Muller spare) matches the sequential generate stage exactly.
+    for _ in 0..=unit.sample {
+        rng.fill_normal(&mut g.data, 1.0);
+    }
+    g.gram_with(&Pool::serial())
+}
+
+/// One virtual worker process: an id, the model spec, and an inbox.
+pub struct Worker {
+    pub id: WorkerId,
+    spec: SyntheticSpec,
+    rx: Receiver<CoordMsg>,
+    /// Units computed by this worker (includes work whose replies the
+    /// transport later dropped — the worker can't know).
+    pub computed: usize,
+}
+
+impl Worker {
+    pub fn new(id: WorkerId, spec: SyntheticSpec, rx: Receiver<CoordMsg>) -> Worker {
+        Worker { id, spec, rx, computed: 0 }
+    }
+
+    /// Drain the inbox, computing every assigned unit. Returns the replies
+    /// for the transport to route (and fault-inject) back to the
+    /// coordinator.
+    pub fn poll(&mut self) -> Vec<WorkerMsg> {
+        let mut out = Vec::new();
+        while let Ok(msg) = self.rx.try_recv() {
+            match msg {
+                CoordMsg::Assign { lease, unit } => {
+                    let gram = gram_for_unit(&self.spec, &unit);
+                    self.computed += 1;
+                    out.push(WorkerMsg::GramDone {
+                        lease,
+                        unit,
+                        worker: self.id,
+                        payload: encode_gram(&gram),
+                    });
+                }
+                CoordMsg::Shutdown => {}
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::protocol::decode_gram;
+    use std::sync::mpsc::channel;
+
+    fn spec() -> SyntheticSpec {
+        SyntheticSpec { blocks: 2, d_model: 16, d_ff: 32, n_contrib: 4, contrib_rows: 8, seed: 3 }
+    }
+
+    #[test]
+    fn gram_matches_sequential_stream() {
+        // Drawing samples 0..=s through gram_for_unit must equal drawing
+        // the whole stream once and contracting sample s.
+        let spec = spec();
+        let layers = synthetic_layers(&spec);
+        let l = layers.iter().find(|l| l.block == 1).unwrap();
+        let mut rng = contrib_rng(&spec, 1, 0);
+        let mut expect = Vec::new();
+        for _ in 0..spec.n_contrib {
+            let mut g = Mat::zeros(spec.contrib_rows, l.cols);
+            rng.fill_normal(&mut g.data, 1.0);
+            expect.push(g.gram_with(&Pool::serial()));
+        }
+        for s in 0..spec.n_contrib {
+            let got = gram_for_unit(&spec, &GramUnit { block: 1, layer: 0, sample: s });
+            let a: Vec<u32> = expect[s].data.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = got.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "sample {s} diverged");
+        }
+    }
+
+    #[test]
+    fn worker_answers_assignments_in_order() {
+        let spec = spec();
+        let (tx, rx) = channel();
+        let mut w = Worker::new(0, spec.clone(), rx);
+        tx.send(CoordMsg::Assign { lease: 1, unit: GramUnit { block: 0, layer: 1, sample: 2 } })
+            .unwrap();
+        tx.send(CoordMsg::Assign { lease: 2, unit: GramUnit { block: 0, layer: 0, sample: 0 } })
+            .unwrap();
+        let replies = w.poll();
+        assert_eq!(replies.len(), 2);
+        assert_eq!(w.computed, 2);
+        let WorkerMsg::GramDone { lease, unit, worker, payload } = &replies[0];
+        assert_eq!((*lease, *worker), (1, 0));
+        assert_eq!(unit.sample, 2);
+        let gram = decode_gram(payload).unwrap();
+        let direct = gram_for_unit(&spec, unit);
+        let a: Vec<u32> = gram.data.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = direct.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+        // Empty inbox → no replies.
+        assert!(w.poll().is_empty());
+    }
+}

@@ -93,11 +93,15 @@ impl Hessian {
     }
 
     /// Assemble a Hessian from per-sample Gram contributions computed
-    /// elsewhere (the pipeline scheduler's sample-sharded Phase 1), folding
-    /// them **in slice order** — the fixed-merge-order half of the
-    /// determinism contract. Bit-identical to [`Hessian::accumulate`]-ing
-    /// the original contributions one by one, provided each Gram was
-    /// computed with a serial inner pool (see [`Mat::gram_with`]).
+    /// elsewhere — the pipeline scheduler's sample-sharded Phase 1, and the
+    /// distributed coordinator's merge stage
+    /// ([`crate::dist::coordinator`]), which collects the same Grams from
+    /// remote workers in arbitrary arrival order and hands them over here
+    /// in unit order — folding them **in slice order**: the
+    /// fixed-merge-order half of the determinism contract. Bit-identical
+    /// to [`Hessian::accumulate`]-ing the original contributions one by
+    /// one, provided each Gram was computed with a serial inner pool (see
+    /// [`Mat::gram_with`]).
     pub fn from_grams(dim: usize, kind: HessianKind, grams: &[Mat]) -> Hessian {
         let mut h = Hessian::zeros(dim, kind);
         for g in grams {

@@ -123,6 +123,23 @@
 //! the contract is enforced by `rust/tests/serve_props.rs`,
 //! `rust/tests/parallel.rs`, the `tests/synthetic_cli.rs` binary tests, and
 //! CI's `serve-smoke`/`serve-continuous-smoke` jobs.
+//!
+//! ## The distributed calibration subsystem
+//!
+//! [`dist`] scales Phase 1 past one process: a coordinator state machine
+//! (`Assigning → Accumulating → Merging → Calibrating → Packing`, per-worker
+//! lease table with deterministic retry/reassignment) shards the
+//! per-`(layer, sample)` Gram units across `--workers N` workers over the
+//! [`dist::Transport`] seam. The in-process channel-backed
+//! [`dist::LocalTransport`] is the fake transport CI proves the protocol on
+//! (seeded fault injection: drops, duplicates, delays, payload corruption,
+//! worker death), and because every unit is a pure function of its indices
+//! and results merge deduplicated in fixed `(layer, sample)` order, every
+//! worker count and every fault schedule is bit-identical to
+//! single-process. [`dist::ArtifactStore`] distributes the packed models
+//! themselves: content-addressed FNV-keyed chunks with integrity-verified,
+//! resumable fetch (`oac artifacts push|fetch|verify|list`;
+//! `oac serve --packed <id> --store <dir>` serves straight from the store).
 
 // CI denies warnings (`cargo clippy -- -D warnings`). The style lints
 // below are deliberately tolerated crate-wide: this is index-heavy numeric
@@ -140,6 +157,7 @@
 pub mod calib;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod eval;
 pub mod experiments;
 pub mod hessian;

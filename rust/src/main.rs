@@ -6,6 +6,7 @@
 //!   train     — train a checkpoint via the AOT train_step artifact
 //!   quantize  — run a PTQ method (Algorithm 1) on a checkpoint
 //!   serve     — batched inference on packed quantized weights
+//!   artifacts — content-addressed packed-model store (push/fetch/verify)
 //!   eval      — perplexity + task accuracy of a checkpoint
 //!   sweep     — α regularization sweep (paper Table 4 style)
 //!
@@ -21,6 +22,7 @@ use oac::coordinator::{
     PipelineBuilder, PipelineConfig, SyntheticSpec,
 };
 use oac::data::{Flavor, Splits, TestSplit};
+use oac::dist::{parse_artifact_id, run_synthetic_workers, ArtifactStore, FaultPlan};
 use oac::eval::{evaluate, evaluate_packed, EvalConfig};
 use oac::experiments::{artifacts_root, baseline_row, method_row, ROW_HEADERS};
 use oac::hessian::Reduction;
@@ -62,11 +64,20 @@ USAGE:
                 shared read-only across the methods that declare it; one
                 comparative report, each method's checksum bit-identical
                 to its sequential run)
+  oac quantize --synthetic --workers N [--fault-seed S] ...
+               (distribute Phase 1 across N virtual workers behind the
+                in-process transport: per-(layer,sample) Gram units are
+                leased, retried on loss, deduplicated by unit, and merged
+                in fixed order — the checksum is bit-identical to the
+                single-process run for every N and, with --fault-seed,
+                under seeded drops/duplicates/delays/corruption/worker
+                death; prints the protocol counters)
   oac serve    --synthetic [--batch 4] [--requests 16] [--threads 4] [--method oac]
                [--bits 2] [--blocks 2] [--d-model 64] [--d-ff 128] [--seed 0]
                [--arrival-schedule burst|every:K|random:K] [--queue-depth 4]
                [--prompt-len 4] [--decode-steps 2] [--shared-len 2]
                [--share-groups 2] [--no-continuous] [--no-prefix-share]
+               [--prefix-cache-cap K]
                (quantize the synthetic model, export packed codes, and run the
                 continuous-batching packed-forward engine: requests arrive
                 mid-run from the seeded schedule, are admitted up to
@@ -82,6 +93,18 @@ USAGE:
                 reports the accuracy cost vs the exact path)
   oac serve    --packed MODEL.pack [--batch 4] [--requests 16] [--threads 4]
                [--no-baseline]  (skip the dense reference pass + bitwise check)
+  oac serve    --packed ARTIFACT_ID --store DIR ...
+               (fetch the packed model from the content-addressed store by
+                its 16-hex artifact id — resuming any partial download,
+                every chunk integrity-checked — then serve it exactly as a
+                local .pack file)
+  oac artifacts push FILE --store DIR
+               (chunk FILE into the store; prints its artifact id)
+  oac artifacts fetch ID --store DIR --out FILE [--max-chunks N]
+               (reassemble an artifact, resuming <FILE>.part if present;
+                --max-chunks stops early, leaving a resumable partial)
+  oac artifacts verify ID --store DIR
+  oac artifacts list --store DIR
   oac eval     --config small --ckpt IN.bin [--ppl-seqs 16] [--tasks 16] [--far]
                [--packed MODEL.pack]
   oac sweep    --config tiny  --ckpt IN.bin --method oac --bits 2 [--alphas 0.001,0.01,0.1,1]
@@ -177,6 +200,7 @@ fn run() -> Result<()> {
         "train" => cmd_train(&args),
         "quantize" => cmd_quantize(&args),
         "serve" => cmd_serve(&args),
+        "artifacts" => cmd_artifacts(&args),
         "eval" => cmd_eval(&args),
         "sweep" => cmd_sweep(&args),
         _ => {
@@ -361,6 +385,10 @@ fn cmd_quantize_synthetic_multi(args: &Args, list: &str) -> Result<()> {
 /// Prints a bitwise checksum of the quantized weights so callers (and the
 /// integration tests) can verify `--threads N` ≡ `--threads 1`.
 fn cmd_quantize_synthetic(args: &Args) -> Result<()> {
+    if let Some(w) = args.get("workers") {
+        let workers = w.parse().context("--workers expects an integer")?;
+        return cmd_quantize_synthetic_dist(args, workers);
+    }
     if let Some(list) = args.get("methods") {
         let list = list.to_string();
         return cmd_quantize_synthetic_multi(args, &list);
@@ -412,6 +440,56 @@ fn cmd_quantize_synthetic(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `oac quantize --synthetic --workers N`: the distributed calibration
+/// subsystem — Phase-1 Gram units sharded across N virtual workers behind
+/// the in-process transport (`--fault-seed S` turns on seeded fault
+/// injection). Prints the same `checksum=` token as the single-process
+/// path plus the protocol counters; the checksum is bit-identical to
+/// `run_synthetic` for every worker count and fault schedule.
+fn cmd_quantize_synthetic_dist(args: &Args, workers: usize) -> Result<()> {
+    anyhow::ensure!(workers > 0, "--workers must be positive");
+    anyhow::ensure!(
+        args.get("methods").is_none(),
+        "--workers needs a single --method (the distributed path has no --methods fan-out)"
+    );
+    let p = pipeline_from_args(args)?;
+    let spec = synthetic_spec_from_args(args);
+    let fault = FaultPlan::seeded(args.u64_or("fault-seed", 0));
+    let t = std::time::Instant::now();
+    let run = run_synthetic_workers(&spec, &p, workers, fault)?;
+    if let Some(pack_path) = &p.pack_out {
+        let packed = run.packed.as_ref().expect("pack_out set, coordinator packs");
+        packed.save(pack_path)?;
+        println!(
+            "saved packed model to {} ({} packed vs {} dense bytes)",
+            pack_path.display(),
+            packed.packed_bytes(),
+            packed.dense_bytes()
+        );
+    }
+    println!(
+        "method={} avg_bits={:.2} outliers={} threads={} workers={} leases={} retried={} \
+         duplicates={} corrupt={} ticks={} checksum={:016x} total={:.2}s",
+        run.report.method,
+        run.report.avg_bits,
+        run.report.total_outliers,
+        p.calib.threads,
+        run.stats.workers,
+        run.stats.leases,
+        run.stats.retried,
+        run.stats.duplicates,
+        run.stats.corrupt,
+        run.stats.ticks,
+        run.weights.fingerprint(),
+        t.elapsed().as_secs_f64()
+    );
+    if let Some(out) = args.get("out") {
+        run.weights.save(out)?;
+        println!("saved quantized checkpoint to {out}");
+    }
+    Ok(())
+}
+
 fn cmd_quantize(args: &Args) -> Result<()> {
     if args.flag("synthetic") {
         return cmd_quantize_synthetic(args);
@@ -420,6 +498,10 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         args.get("methods").is_none(),
         "--methods is synthetic-only today (add --synthetic, or run the artifact path with a \
          single --method)"
+    );
+    anyhow::ensure!(
+        args.get("workers").is_none(),
+        "--workers is synthetic-only today (add --synthetic to use the distributed path)"
     );
     let config = args.str_or("config", "tiny");
     let meta = ModelMeta::load(artifacts_root(), &config)?;
@@ -483,8 +565,32 @@ fn cmd_quantize(args: &Args) -> Result<()> {
 /// runs); latency/throughput numbers are wall-clock and vary.
 fn cmd_serve(args: &Args) -> Result<()> {
     let p = pipeline_from_args(args)?;
-    let model = if let Some(path) = args.get("packed") {
-        PackedModel::load(path)?
+    let model = if let Some(packed) = args.get("packed") {
+        if let Some(store_dir) = args.get("store") {
+            // --store: --packed names a content address, not a file. Fetch
+            // it (resuming any partial download, every chunk verified)
+            // into the store's staging area, then load as usual.
+            let id = parse_artifact_id(packed).with_context(|| {
+                format!("--store given, so --packed must be a 16-hex artifact id, got {packed:?}")
+            })?;
+            let store = ArtifactStore::open(store_dir)?;
+            let staging =
+                std::path::Path::new(store_dir).join("staging").join(format!("{id:016x}.pack"));
+            if let Some(dir) = staging.parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            let rep = store.fetch(id, &staging)?;
+            println!(
+                "fetched artifact={id:016x} resumed={} fetched={} total={} -> {}",
+                rep.resumed,
+                rep.fetched,
+                rep.total,
+                staging.display()
+            );
+            PackedModel::load(&staging)?
+        } else {
+            PackedModel::load(packed)?
+        }
     } else if args.flag("synthetic") {
         let spec = synthetic_spec_from_args(args);
         let t = std::time::Instant::now();
@@ -515,7 +621,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
         share_groups: args.usize_or("share-groups", 2),
         continuous: !args.flag("no-continuous"),
         prefix_share: !args.flag("no-prefix-share"),
+        prefix_cache_cap: args.usize_or("prefix-cache-cap", 0),
     };
+    // Reject contradictory flag combinations up front with errors that say
+    // which knob to change, instead of silently reinterpreting them.
+    if scfg.continuous && args.get("queue-depth") == Some("0") {
+        anyhow::bail!(
+            "--queue-depth 0 is contradictory in continuous mode (no request could ever be \
+             admitted); drop the flag to default to --batch, or add --no-continuous"
+        );
+    }
+    if scfg.shared_len > scfg.prompt_len {
+        anyhow::bail!(
+            "--shared-len {} exceeds --prompt-len {}: the shared prefix cannot be longer than \
+             the prompt; lower --shared-len or raise --prompt-len",
+            scfg.shared_len,
+            scfg.prompt_len
+        );
+    }
+    if scfg.share_groups == 0 && scfg.shared_len > 0 {
+        anyhow::bail!(
+            "--share-groups 0 with --shared-len {} is contradictory: shared prefixes were \
+             requested but there are no groups to draw them from; set --shared-len 0 or \
+             --share-groups >= 1",
+            scfg.shared_len
+        );
+    }
     let rep = oac::serve::engine::run(&model, &scfg)?;
     let dense_rps = match rep.dense_throughput_rps() {
         Some(rps) => format!("{rps:.1}"),
@@ -535,7 +666,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "serve: method={} layers={} blocks={} d_model={} requests={} batch={} threads={} \
          mode={} schedule={} queue_depth={} packed_bytes={} dense_bytes={} ratio={:.3} \
-         ticks={} mean_batch={:.2} prefix_hits={} shared_tokens={} \
+         ticks={} mean_batch={:.2} prefix_hits={} shared_tokens={} prefix_evictions={} \
          p50_ms={:.3} p95_ms={:.3} p99_ms={:.3} throughput_rps={:.1} \
          dense_rps={dense_rps}{int8_info} checksum={:016x} completion={:016x}",
         model.method,
@@ -555,6 +686,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         rep.mean_batch,
         rep.prefix_hits,
         rep.shared_tokens,
+        rep.prefix_evictions,
         rep.p50_ms(),
         rep.p95_ms(),
         rep.p99_ms(),
@@ -562,6 +694,67 @@ fn cmd_serve(args: &Args) -> Result<()> {
         rep.checksum,
         rep.completion_checksum()
     );
+    Ok(())
+}
+
+/// `oac artifacts push|fetch|verify|list`: the CLI surface of the
+/// content-addressed packed-artifact store. Every line is token-formatted
+/// (`artifact=… state=…`) so CI and scripts can grep results.
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    let store_dir = args
+        .get("store")
+        .context("--store DIR is required (the store root; created if missing)")?;
+    let store = ArtifactStore::open(store_dir)?;
+    match sub {
+        "push" => {
+            let file = args
+                .positional
+                .get(2)
+                .context("usage: oac artifacts push FILE --store DIR")?;
+            let m = store.push(file)?;
+            println!(
+                "pushed {file}: artifact={} len={} chunks={}",
+                m.id_hex(),
+                m.len,
+                m.chunks.len()
+            );
+        }
+        "fetch" => {
+            let id = parse_artifact_id(
+                args.positional
+                    .get(2)
+                    .context("usage: oac artifacts fetch ID --store DIR --out FILE")?,
+            )?;
+            let out = args.get("out").context("--out FILE is required for fetch")?;
+            let max = args.usize_or("max-chunks", usize::MAX);
+            let rep = store.fetch_limited(id, out, max)?;
+            println!(
+                "fetch artifact={id:016x} resumed={} fetched={} total={} state={}",
+                rep.resumed,
+                rep.fetched,
+                rep.total,
+                if rep.complete { "complete" } else { "partial" }
+            );
+        }
+        "verify" => {
+            let id = parse_artifact_id(
+                args.positional
+                    .get(2)
+                    .context("usage: oac artifacts verify ID --store DIR")?,
+            )?;
+            store.verify(id)?;
+            println!("artifact={id:016x} state=verified");
+        }
+        "list" => {
+            let manifests = store.list()?;
+            for m in &manifests {
+                println!("artifact={} len={} chunks={}", m.id_hex(), m.len, m.chunks.len());
+            }
+            println!("artifacts={}", manifests.len());
+        }
+        _ => anyhow::bail!("usage: oac artifacts push|fetch|verify|list (see `oac` usage)"),
+    }
     Ok(())
 }
 
@@ -632,7 +825,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 mod tests {
     #[test]
     fn usage_mentions_all_commands() {
-        for cmd in ["info", "backends", "train", "quantize", "serve", "eval", "sweep"] {
+        for cmd in ["info", "backends", "train", "quantize", "serve", "artifacts", "eval", "sweep"]
+        {
             assert!(super::USAGE.contains(cmd), "{cmd} missing from usage");
         }
     }

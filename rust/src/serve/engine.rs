@@ -248,6 +248,13 @@ pub struct ServeConfig {
     pub continuous: bool,
     /// LCP prefix sharing of prompt states (`--no-prefix-share` disables).
     pub prefix_share: bool,
+    /// Max entries in the prefix cache (`--prefix-cache-cap K`; 0 =
+    /// unbounded). When full, the **oldest-inserted** entry is evicted —
+    /// insertion order is pure tick/id arithmetic, so the eviction
+    /// schedule is deterministic, and because a cache hit reproduces
+    /// exactly the bits a fresh recompute would, any cap (including
+    /// pathological ones) only moves the hit counters, never the outputs.
+    pub prefix_cache_cap: usize,
 }
 
 impl Default for ServeConfig {
@@ -267,6 +274,7 @@ impl Default for ServeConfig {
             share_groups: 2,
             continuous: true,
             prefix_share: true,
+            prefix_cache_cap: 0,
         }
     }
 }
@@ -336,6 +344,9 @@ pub struct ServeReport {
     pub prefix_hits: usize,
     /// Prompt tokens skipped via the prefix cache, summed over requests.
     pub shared_tokens: usize,
+    /// Prefix-cache entries evicted under `--prefix-cache-cap` (0 when
+    /// the cache is unbounded).
+    pub prefix_evictions: usize,
     /// Mean batch width over ticks (continuous-batch occupancy).
     pub mean_batch: f64,
     /// Wall-clock of the packed pass over the whole schedule.
@@ -409,6 +420,7 @@ struct SimOut {
     decode_steps: usize,
     prefix_hits: usize,
     shared_tokens: usize,
+    prefix_evictions: usize,
     col_steps: usize,
     wall: Duration,
 }
@@ -420,9 +432,13 @@ struct Sim<'a> {
     seed: u64,
     d_model: usize,
     prefix_share: bool,
+    /// Prefix-cache entry cap (0 = unbounded).
+    cache_cap: usize,
     reqs: Vec<ReqState>,
     /// LCP cache: prompt prefix tokens → hidden state after consuming it.
     cache: BTreeMap<Vec<u64>, Vec<f32>>,
+    /// Cache keys in insertion order, the deterministic eviction queue.
+    cache_order: VecDeque<Vec<u64>>,
     bufs: LayerBufs,
     xbuf: Mat,
     embed: Vec<f32>,
@@ -432,11 +448,18 @@ struct Sim<'a> {
     decode_steps: usize,
     prefix_hits: usize,
     shared_tokens: usize,
+    prefix_evictions: usize,
     col_steps: usize,
 }
 
 impl<'a> Sim<'a> {
-    fn new(specs: &'a [RequestSpec], seed: u64, d_model: usize, prefix_share: bool) -> Sim<'a> {
+    fn new(
+        specs: &'a [RequestSpec],
+        seed: u64,
+        d_model: usize,
+        prefix_share: bool,
+        cache_cap: usize,
+    ) -> Sim<'a> {
         let reqs = specs
             .iter()
             .map(|_| ReqState {
@@ -453,8 +476,10 @@ impl<'a> Sim<'a> {
             seed,
             d_model,
             prefix_share,
+            cache_cap,
             reqs,
             cache: BTreeMap::new(),
+            cache_order: VecDeque::new(),
             bufs: LayerBufs::default(),
             xbuf: Mat::zeros(0, 0),
             embed: vec![0.0f32; d_model],
@@ -464,6 +489,7 @@ impl<'a> Sim<'a> {
             decode_steps: 0,
             prefix_hits: 0,
             shared_tokens: 0,
+            prefix_evictions: 0,
             col_steps: 0,
         }
     }
@@ -539,7 +565,19 @@ impl<'a> Sim<'a> {
                 self.prefill_steps += 1;
                 if self.prefix_share {
                     let key = self.specs[i].tokens[..r.cursor].to_vec();
-                    self.cache.entry(key).or_insert_with(|| r.state.clone());
+                    if let std::collections::btree_map::Entry::Vacant(e) = self.cache.entry(key) {
+                        self.cache_order.push_back(e.key().clone());
+                        e.insert(r.state.clone());
+                        // Evict the oldest-inserted entry past the cap.
+                        // Purely a hit-rate knob: a miss recomputes the
+                        // same bits a hit would have copied.
+                        if self.cache_cap > 0 && self.cache.len() > self.cache_cap {
+                            if let Some(old) = self.cache_order.pop_front() {
+                                self.cache.remove(&old);
+                                self.prefix_evictions += 1;
+                            }
+                        }
+                    }
                 }
             } else {
                 r.decoded += 1;
@@ -577,6 +615,7 @@ impl<'a> Sim<'a> {
             decode_steps: self.decode_steps,
             prefix_hits: self.prefix_hits,
             shared_tokens: self.shared_tokens,
+            prefix_evictions: self.prefix_evictions,
             col_steps: self.col_steps,
             wall,
         }
@@ -597,9 +636,10 @@ fn simulate<F: FnMut(&str, &Mat, &mut Mat)>(
     queue_depth: usize,
     chunk: usize,
     prefix_share: bool,
+    prefix_cache_cap: usize,
 ) -> SimOut {
     let start = Instant::now();
-    let mut sim = Sim::new(specs, seed, d_model, prefix_share);
+    let mut sim = Sim::new(specs, seed, d_model, prefix_share, prefix_cache_cap);
     let n = specs.len();
     if continuous {
         // Arrival observation order: (tick, id). specs() emits
@@ -723,6 +763,7 @@ pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
             queue_depth,
             chunk,
             cfg.prefix_share,
+            cfg.prefix_cache_cap,
         )
     } else {
         simulate(
@@ -735,6 +776,7 @@ pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
             queue_depth,
             chunk,
             cfg.prefix_share,
+            cfg.prefix_cache_cap,
         )
     };
 
@@ -758,6 +800,7 @@ pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
             queue_depth,
             chunk,
             false,
+            0,
         );
         if int8 {
             let err = output_error(
@@ -804,6 +847,7 @@ pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
         decode_steps: packed.decode_steps,
         prefix_hits: packed.prefix_hits,
         shared_tokens: packed.shared_tokens,
+        prefix_evictions: packed.prefix_evictions,
         mean_batch: packed.col_steps as f64 / (packed.ticks.max(1)) as f64,
         packed_secs: packed.wall.as_secs_f64(),
         dense_secs,
@@ -1028,6 +1072,36 @@ mod tests {
             scratch.prefill_steps
         );
         assert_eq!(scratch.prefix_hits, 0);
+    }
+
+    #[test]
+    fn prefix_cache_cap_evicts_in_insertion_order_and_stays_bit_identical() {
+        let model = small_model();
+        let base = ServeConfig {
+            requests: 8,
+            seed: 3,
+            arrival: ArrivalKind::Every(2),
+            queue_depth: 4,
+            shared_len: 3,
+            share_groups: 2,
+            baseline: false,
+            ..ServeConfig::default()
+        };
+        let unbounded = run(&model, &base.clone()).unwrap();
+        let capped =
+            run(&model, &ServeConfig { prefix_cache_cap: 2, ..base.clone() }).unwrap();
+        let scratch = run(&model, &ServeConfig { prefix_share: false, ..base }).unwrap();
+        // The cap changes hit rates, never bits: capped == unbounded ==
+        // from-scratch, with the baseline cross-check off on all three.
+        assert_eq!(unbounded.checksum, capped.checksum);
+        assert_eq!(capped.checksum, scratch.checksum);
+        assert_eq!(unbounded.completion_order, capped.completion_order);
+        // A 2-entry cache over dozens of prefix inserts must evict; the
+        // unbounded run never does.
+        assert!(capped.prefix_evictions > 0, "cap 2 must evict");
+        assert_eq!(unbounded.prefix_evictions, 0);
+        assert_eq!(scratch.prefix_evictions, 0);
+        assert!(capped.prefix_hits <= unbounded.prefix_hits);
     }
 
     #[test]

@@ -916,7 +916,19 @@ impl PackedModel {
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        std::fs::write(path, self.to_bytes()?)?;
+        Ok(())
+    }
+
+    /// The `OACPACK1` byte stream: magic, method/bits header, per-layer
+    /// scheme + codes + outliers, and a trailing FNV-1a digest of every
+    /// preceding byte (magic included). [`PackedModel::from_bytes`]
+    /// verifies the digest before parsing anything, so a flipped byte
+    /// anywhere in a saved model — header, codes, or the digest itself —
+    /// fails the load with an integrity error instead of producing garbage
+    /// weights.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let mut f: Vec<u8> = Vec::new();
         f.write_all(Self::MAGIC)?;
         write_str(&mut f, &self.method)?;
         f.write_all(&(self.bits as u32).to_le_bytes())?;
@@ -962,19 +974,34 @@ impl PackedModel {
                 f.write_all(&v.to_le_bytes())?;
             }
         }
-        Ok(())
+        let d = digest::fnv1a(&f);
+        f.write_all(&d.to_le_bytes())?;
+        Ok(f)
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<PackedModel> {
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(&path)
-                .with_context(|| format!("opening packed model {}", path.as_ref().display()))?,
-        );
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        if &magic != Self::MAGIC {
-            bail!("bad packed-model magic");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("opening packed model {}", path.as_ref().display()))?;
+        Self::from_bytes(&bytes)
+            .with_context(|| format!("loading packed model {}", path.as_ref().display()))
+    }
+
+    /// Parse an `OACPACK1` byte stream, verifying the trailing integrity
+    /// digest over the whole payload *before* interpreting any field.
+    pub fn from_bytes(bytes: &[u8]) -> Result<PackedModel> {
+        if bytes.len() < 16 {
+            bail!("packed model integrity error: truncated ({} bytes)", bytes.len());
         }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(tail.try_into().unwrap());
+        let got = digest::fnv1a(body);
+        if want != got {
+            bail!("packed model integrity error: digest mismatch ({got:016x} != {want:016x})");
+        }
+        if &body[..8] != Self::MAGIC {
+            bail!("packed model integrity error: bad magic");
+        }
+        let mut f: &[u8] = &body[8..];
         let method = read_str(&mut f)?;
         let bits = read_u32(&mut f)? as usize;
         let count = read_u32(&mut f)? as usize;

@@ -495,6 +495,107 @@ fn prefix_sharing_bit_identical_for_all_backends() {
 }
 
 #[test]
+fn every_flipped_byte_of_a_saved_pack_fails_load_with_integrity_error() {
+    // The OACPACK1 stream carries a trailing FNV-1a digest over everything
+    // before it, verified before any field is parsed. Contract: flip ANY
+    // byte of a saved packed model — magic, header, codes, outliers, or
+    // the digest itself — and the load fails with a clear integrity error,
+    // never a garbled model or a mid-parse panic.
+    let spec = SyntheticSpec { blocks: 1, d_model: 16, d_ff: 32, ..SyntheticSpec::default() };
+    let cfg = PipelineConfig::new(Method::oac(Backend::SPQR), 2);
+    let (model, _) = serve::build_synthetic(&spec, &cfg).unwrap();
+    let bytes = model.to_bytes().unwrap();
+    // Sanity: the pristine stream loads.
+    PackedModel::from_bytes(&bytes).unwrap();
+    for i in 0..bytes.len() {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x01;
+        let err = match PackedModel::from_bytes(&bad) {
+            Ok(_) => panic!("flipped byte {i} must fail the load"),
+            Err(e) => e,
+        };
+        assert!(
+            format!("{err:#}").contains("integrity"),
+            "byte {i}: error must mention integrity, got: {err:#}"
+        );
+    }
+    // Truncation fails too (shorter than magic + digest).
+    assert!(PackedModel::from_bytes(&bytes[..10]).is_err());
+    // And the same holds end-to-end through a file on disk.
+    let tmp = std::env::temp_dir().join("oac_serve_props_flip.pack");
+    let mut bad = bytes.clone();
+    let mid = bytes.len() / 2;
+    bad[mid] ^= 0x01;
+    std::fs::write(&tmp, &bad).unwrap();
+    let err = PackedModel::load(&tmp).expect_err("corrupt file must fail");
+    assert!(format!("{err:#}").contains("integrity"), "{err:#}");
+    std::fs::write(&tmp, &bytes).unwrap();
+    PackedModel::load(&tmp).unwrap();
+    std::fs::remove_file(tmp).ok();
+}
+
+#[test]
+fn prop_prefix_cache_cap_is_bit_transparent() {
+    // Any prefix-cache cap — including pathological ones that evict
+    // constantly — only changes hit/eviction counters, never output bits:
+    // capped == unbounded == prefix sharing off, for random workloads.
+    let spec = SyntheticSpec { blocks: 1, d_model: 32, d_ff: 64, ..SyntheticSpec::default() };
+    let cfg = PipelineConfig::new(Method::oac(Backend::SPQR), 2);
+    let (model, _) = serve::build_synthetic(&spec, &cfg).unwrap();
+    check(
+        "prefix-cache eviction preserves bit-identity vs --no-prefix-share",
+        PropConfig { cases: 8, seed: 0xCAC4E },
+        |rng| {
+            let requests = 4 + rng.below(6);
+            let cap = 1 + rng.below(4);
+            let shared_len = 2 + rng.below(3);
+            let seed = rng.next_u64();
+            (requests, cap, shared_len, seed)
+        },
+        |&(requests, cap, shared_len, seed)| {
+            let base = engine::ServeConfig {
+                requests,
+                seed,
+                arrival: engine::ArrivalKind::Every(2),
+                queue_depth: 3,
+                shared_len,
+                prompt_len: shared_len + 2,
+                share_groups: 2,
+                baseline: false,
+                ..Default::default()
+            };
+            let capped = engine::run(
+                &model,
+                &engine::ServeConfig { prefix_cache_cap: cap, ..base.clone() },
+            )
+            .map_err(|e| e.to_string())?;
+            let unbounded = engine::run(&model, &base.clone()).map_err(|e| e.to_string())?;
+            let off = engine::run(
+                &model,
+                &engine::ServeConfig { prefix_share: false, ..base },
+            )
+            .map_err(|e| e.to_string())?;
+            if capped.checksum != unbounded.checksum || capped.checksum != off.checksum {
+                return Err(format!(
+                    "cap {cap}: checksum diverged (capped {:016x} unbounded {:016x} off {:016x})",
+                    capped.checksum, unbounded.checksum, off.checksum
+                ));
+            }
+            if capped.prefix_evictions == 0 {
+                return Err(format!(
+                    "cap {cap} over {} prefill inserts never evicted",
+                    capped.prefill_steps
+                ));
+            }
+            if unbounded.prefix_evictions != 0 || off.prefix_evictions != 0 {
+                return Err("unbounded/off runs must not evict".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn serve_engine_checksum_thread_invariant_across_methods() {
     for (method, bits) in
         [(Method::oac(Backend::SPQR), 2usize), (Method::oac(Backend::BILLM), 1)]

@@ -377,6 +377,94 @@ fn methods_fanout_matches_sequential_single_runs() {
 }
 
 #[test]
+fn synthetic_quantize_workers_bit_identical_to_single_process() {
+    let dir = std::env::temp_dir().join("oac_workers_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Single-process reference: checksum + packed bytes.
+    let pack0 = dir.join("single.pack");
+    let out = oac_bin()
+        .args([
+            "quantize", "--synthetic", "--method", "oac", "--blocks", "1",
+            "--pack-out", pack0.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run oac");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let base = token(&String::from_utf8_lossy(&out.stdout), "checksum=").to_string();
+
+    // Every worker count reproduces it bit for bit, including packed bytes.
+    for workers in ["1", "2", "4"] {
+        let pack = dir.join(format!("w{workers}.pack"));
+        let out = oac_bin()
+            .args([
+                "quantize", "--synthetic", "--method", "oac", "--blocks", "1",
+                "--workers", workers, "--pack-out", pack.to_str().unwrap(),
+            ])
+            .output()
+            .expect("run oac --workers");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout).to_string();
+        assert_eq!(token(&text, "workers="), workers, "{text}");
+        assert_eq!(token(&text, "retried="), "0", "fault-free run must not retry: {text}");
+        assert_eq!(token(&text, "checksum="), base, "workers={workers} diverged: {text}");
+        assert_eq!(
+            std::fs::read(&pack).unwrap(),
+            std::fs::read(&pack0).unwrap(),
+            "workers={workers}: packed bytes diverged from single-process"
+        );
+    }
+
+    // Seeded fault injection (drops, duplicates, delays, corruption, one
+    // worker death): same bits, and the counters prove faults happened.
+    let out = oac_bin()
+        .args([
+            "quantize", "--synthetic", "--method", "oac", "--blocks", "1",
+            "--workers", "4", "--fault-seed", "11",
+        ])
+        .output()
+        .expect("run oac --fault-seed");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    assert_eq!(token(&text, "checksum="), base, "faulty run diverged: {text}");
+    assert_ne!(token(&text, "retried="), "0", "fault plan must force retries: {text}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_rejects_contradictory_flags() {
+    // Contradictory serve flags must be clean errors naming the knobs, not
+    // silent reinterpretation. Each case: (argv tail, stderr fragment).
+    let cases: [(&[&str], &str); 3] = [
+        (&["--queue-depth", "0"], "--queue-depth 0"),
+        (&["--shared-len", "9", "--prompt-len", "4"], "--shared-len"),
+        (&["--share-groups", "0", "--shared-len", "2"], "--share-groups 0"),
+    ];
+    for (extra, want) in cases {
+        let mut argv = vec!["serve", "--synthetic", "--blocks", "1", "--requests", "4"];
+        argv.extend_from_slice(extra);
+        let out = oac_bin().args(&argv).output().expect("run oac serve");
+        assert!(!out.status.success(), "{extra:?} should be rejected");
+        let err = String::from_utf8_lossy(&out.stderr).to_string();
+        assert!(err.contains(want), "{extra:?}: error should mention {want}: {err}");
+    }
+    // The explicit-zero check only applies to continuous mode.
+    let out = oac_bin()
+        .args([
+            "serve", "--synthetic", "--blocks", "1", "--requests", "4",
+            "--queue-depth", "0", "--no-continuous",
+        ])
+        .output()
+        .expect("run oac serve --no-continuous");
+    assert!(
+        out.status.success(),
+        "--queue-depth 0 is fine in fixed mode: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
 fn synthetic_quantize_seed_changes_output() {
     let run = |seed: &str| -> String {
         let out = oac_bin()
