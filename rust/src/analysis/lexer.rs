@@ -1,0 +1,490 @@
+//! A lightweight Rust tokenizer for the contract analyzer.
+//!
+//! This is *not* a full Rust lexer — it is exactly precise enough for the
+//! rules in [`super::rules`]: it separates identifiers, string/char
+//! literals, numbers and punctuation, skips (but records) comments, and
+//! never confuses a rule trigger inside a string or comment for real code.
+//! The hard cases it handles correctly:
+//!
+//! * nested block comments (`/* /* */ */`),
+//! * raw strings (`r"…"`, `r#"…"#`, any hash depth) and byte/raw-byte
+//!   strings,
+//! * char literals vs. lifetimes (`'a'` vs `&'a str`),
+//! * raw identifiers (`r#type`),
+//! * multi-char operators the rules match on (`::`, `==`, `!=`, `=>`).
+//!
+//! Every token and comment carries its 1-based line number so findings and
+//! pragmas anchor to real source lines.
+
+/// One lexed token.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    pub line: u32,
+    pub kind: TokKind,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (raw-identifier prefix stripped).
+    Ident(String),
+    /// String literal content (cooked or raw; escapes left as written).
+    Str(String),
+    /// Char or byte literal (content irrelevant to the rules).
+    Char,
+    /// Lifetime or loop label (`'a`).
+    Lifetime,
+    /// Numeric literal, verbatim text (`0.5f32`, `1e-3`, `0x1F`).
+    Num(String),
+    /// Punctuation: multi-char for `::`, `==`, `!=`, `=>`, `->`, `..`;
+    /// single char otherwise.
+    Punct(&'static str),
+    /// Punctuation not in the fixed set above (kept for adjacency checks).
+    OtherPunct(char),
+}
+
+/// A comment, with the text after `//` (line) or between `/* */` (block).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Comment {
+    pub line: u32,
+    /// `true` for `//…` comments (the only kind pragmas may live in).
+    pub is_line: bool,
+    pub text: String,
+}
+
+/// Tokenizer output: code tokens plus the comment stream.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+impl Lexed {
+    /// Sorted, deduplicated list of lines that carry at least one code
+    /// token (pragma target resolution).
+    pub fn code_lines(&self) -> Vec<u32> {
+        let mut lines: Vec<u32> = self.tokens.iter().map(|t| t.line).collect();
+        lines.sort_unstable();
+        lines.dedup();
+        lines
+    }
+}
+
+const MULTI_PUNCTS: &[&str] = &["::", "==", "!=", "=>", "->", "..=", ".."];
+
+/// Tokenize `src`. Never fails: unterminated literals are tolerated by
+/// consuming to end-of-input (the analyzer lints code that already compiles,
+/// so this path only triggers on malformed fixtures).
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+
+    // Advance over `b[i]`, tracking newlines.
+    macro_rules! bump {
+        () => {{
+            if b[i] == '\n' {
+                line += 1;
+            }
+            i += 1;
+        }};
+    }
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // ---------------------------------------------------- comments
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start_line = line;
+            let mut text = String::new();
+            i += 2;
+            while i < n && b[i] != '\n' {
+                text.push(b[i]);
+                i += 1;
+            }
+            out.comments.push(Comment { line: start_line, is_line: true, text });
+            continue;
+        }
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start_line = line;
+            let mut text = String::new();
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    text.push('/');
+                    i += 1;
+                    text.push('*');
+                    bump!();
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                    if depth > 0 {
+                        text.push('*');
+                        text.push('/');
+                    }
+                } else {
+                    text.push(b[i]);
+                    bump!();
+                }
+            }
+            out.comments.push(Comment { line: start_line, is_line: false, text });
+            continue;
+        }
+        // ------------------------------------- raw strings / raw idents
+        if c == 'r' || c == 'b' {
+            // r"…", r#"…"#, br"…", b"…", b'…', r#ident
+            let mut j = i;
+            let mut is_byte = false;
+            if b[j] == 'b' {
+                is_byte = true;
+                j += 1;
+            }
+            let mut raw = false;
+            if j < n && b[j] == 'r' {
+                raw = true;
+                j += 1;
+            }
+            if raw {
+                let mut hashes = 0usize;
+                while j < n && b[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == '"' {
+                    // Raw string: scan for `"` followed by `hashes` hashes.
+                    let start_line = line;
+                    // Account newlines in the skipped prefix (none possible).
+                    i = j + 1;
+                    let mut content = String::new();
+                    'raw: while i < n {
+                        if b[i] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && i + 1 + k < n && b[i + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                i += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        content.push(b[i]);
+                        bump!();
+                    }
+                    out.tokens.push(Token { line: start_line, kind: TokKind::Str(content) });
+                    continue;
+                }
+                if !is_byte && hashes > 0 && j < n && (b[j].is_alphabetic() || b[j] == '_') {
+                    // Raw identifier r#type: emit the bare identifier.
+                    i = j;
+                    let mut id = String::new();
+                    while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                        id.push(b[i]);
+                        i += 1;
+                    }
+                    out.tokens.push(Token { line, kind: TokKind::Ident(id) });
+                    continue;
+                }
+                // `r` / `br` not introducing a raw literal: plain ident path.
+            } else if is_byte && j < n && (b[j] == '"' || b[j] == '\'') {
+                // b"…" / b'…': reuse the cooked scanners below from j.
+                i = j;
+                // fall through to the cooked string/char cases with i at
+                // the quote.
+                let quote = b[i];
+                let start_line = line;
+                i += 1;
+                let mut content = String::new();
+                while i < n && b[i] != quote {
+                    if b[i] == '\\' && i + 1 < n {
+                        content.push(b[i]);
+                        bump!();
+                    }
+                    content.push(b[i]);
+                    bump!();
+                }
+                i += 1; // closing quote
+                let kind = if quote == '"' { TokKind::Str(content) } else { TokKind::Char };
+                out.tokens.push(Token { line: start_line, kind });
+                continue;
+            }
+            // Not a raw/byte literal — lex as a plain identifier below.
+        }
+        // ------------------------------------------------ cooked string
+        if c == '"' {
+            let start_line = line;
+            i += 1;
+            let mut content = String::new();
+            while i < n && b[i] != '"' {
+                if b[i] == '\\' && i + 1 < n {
+                    content.push(b[i]);
+                    bump!();
+                }
+                content.push(b[i]);
+                bump!();
+            }
+            i += 1;
+            out.tokens.push(Token { line: start_line, kind: TokKind::Str(content) });
+            continue;
+        }
+        // --------------------------------------- char literal / lifetime
+        if c == '\'' {
+            // `'a` followed by non-quote => lifetime; `'a'`, `'\n'` => char.
+            let next_ident = i + 1 < n && (b[i + 1].is_alphabetic() || b[i + 1] == '_');
+            if next_ident {
+                // Find the end of the identifier run.
+                let mut j = i + 1;
+                while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+                if j < n && b[j] == '\'' && j == i + 2 {
+                    // 'x' — single-char literal.
+                    out.tokens.push(Token { line, kind: TokKind::Char });
+                    i = j + 1;
+                    continue;
+                }
+                if j < n && b[j] == '\'' && j > i + 2 {
+                    // Multi-char between quotes can't be a char literal;
+                    // treat as lifetime + stray quote (malformed anyway).
+                }
+                out.tokens.push(Token { line, kind: TokKind::Lifetime });
+                i = j;
+                continue;
+            }
+            // Escaped or punctuation char literal: '\n', '\'', '\u{1F}', ' '.
+            let start_line = line;
+            i += 1;
+            if i < n && b[i] == '\\' {
+                bump!();
+                if i < n && b[i] == 'u' {
+                    // \u{…}
+                    bump!();
+                    if i < n && b[i] == '{' {
+                        while i < n && b[i] != '}' {
+                            bump!();
+                        }
+                    }
+                } else if i < n {
+                    bump!();
+                }
+            } else if i < n {
+                bump!();
+            }
+            if i < n && b[i] == '\'' {
+                i += 1;
+            }
+            out.tokens.push(Token { line: start_line, kind: TokKind::Char });
+            continue;
+        }
+        // ---------------------------------------------------- identifier
+        if c.is_alphabetic() || c == '_' {
+            let mut id = String::new();
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                id.push(b[i]);
+                i += 1;
+            }
+            out.tokens.push(Token { line, kind: TokKind::Ident(id) });
+            continue;
+        }
+        // -------------------------------------------------------- number
+        if c.is_ascii_digit() {
+            let mut num = String::new();
+            while i < n {
+                let d = b[i];
+                if d.is_ascii_alphanumeric() || d == '_' {
+                    num.push(d);
+                    i += 1;
+                    // 1e-3 / 2.5E+7: a sign directly after e/E stays in
+                    // the number when followed by a digit.
+                    if (d == 'e' || d == 'E')
+                        && i + 1 < n
+                        && (b[i] == '+' || b[i] == '-')
+                        && b[i + 1].is_ascii_digit()
+                        && num.chars().next().map(|f| f.is_ascii_digit()).unwrap_or(false)
+                        && !num.starts_with("0x")
+                        && !num.starts_with("0b")
+                        && !num.starts_with("0o")
+                    {
+                        num.push(b[i]);
+                        i += 1;
+                    }
+                } else if d == '.' && i + 1 < n && b[i + 1].is_ascii_digit() && !num.contains('.') {
+                    // 0.5 — but never consume `..` (range) or `.method()`.
+                    num.push(d);
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            out.tokens.push(Token { line, kind: TokKind::Num(num) });
+            continue;
+        }
+        // --------------------------------------------------- punctuation
+        let mut matched = false;
+        for p in MULTI_PUNCTS {
+            let pc: Vec<char> = p.chars().collect();
+            if i + pc.len() <= n && b[i..i + pc.len()] == pc[..] {
+                out.tokens.push(Token { line, kind: TokKind::Punct(p) });
+                i += pc.len();
+                matched = true;
+                break;
+            }
+        }
+        if matched {
+            continue;
+        }
+        let kind = match c {
+            '(' | ')' | '[' | ']' | '{' | '}' | ',' | ';' | '.' | '<' | '>' | '=' | '|' | '&'
+            | '+' | '-' | '*' | '/' | '%' | '!' | '?' | '#' | ':' | '@' | '^' | '~' | '$' => {
+                // Single-char puncts the rules look at get the static
+                // spelling; the rest are OtherPunct.
+                match c {
+                    '(' => TokKind::Punct("("),
+                    ')' => TokKind::Punct(")"),
+                    '<' => TokKind::Punct("<"),
+                    '>' => TokKind::Punct(">"),
+                    '.' => TokKind::Punct("."),
+                    ',' => TokKind::Punct(","),
+                    '|' => TokKind::Punct("|"),
+                    '=' => TokKind::Punct("="),
+                    '-' => TokKind::Punct("-"),
+                    other => TokKind::OtherPunct(other),
+                }
+            }
+            other => TokKind::OtherPunct(other),
+        };
+        out.tokens.push(Token { line, kind });
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                TokKind::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn comments_are_not_tokens() {
+        let l = lex("// HashMap here\nlet x = 1; /* HashMap too /* nested */ */\n");
+        assert!(idents("// HashMap\nlet x = 1;").contains(&"let".to_string()));
+        assert!(!l.tokens.iter().any(|t| t.kind == TokKind::Ident("HashMap".into())));
+        assert_eq!(l.comments.len(), 2);
+        assert!(l.comments[0].is_line);
+        assert!(!l.comments[1].is_line);
+        assert!(l.comments[1].text.contains("nested"));
+    }
+
+    #[test]
+    fn strings_hide_their_content() {
+        for src in [
+            "let s = \"Instant::now()\";",
+            "let s = r\"Instant::now()\";",
+            "let s = r#\"Instant::now() \"quoted\" \"#;",
+            "let s = b\"Instant::now()\";",
+        ] {
+            let l = lex(src);
+            assert!(
+                !l.tokens.iter().any(|t| t.kind == TokKind::Ident("Instant".into())),
+                "{src}"
+            );
+            assert!(
+                l.tokens.iter().any(|t| matches!(t.kind, TokKind::Str(_))),
+                "{src}"
+            );
+        }
+    }
+
+    #[test]
+    fn escaped_quote_does_not_end_string() {
+        let l = lex(r#"let s = "a\"b"; let t = HashMap;"#);
+        assert!(l.tokens.iter().any(|t| t.kind == TokKind::Ident("HashMap".into())));
+        let strs: Vec<_> = l
+            .tokens
+            .iter()
+            .filter(|t| matches!(t.kind, TokKind::Str(_)))
+            .collect();
+        assert_eq!(strs.len(), 1);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lifetimes = l.tokens.iter().filter(|t| t.kind == TokKind::Lifetime).count();
+        let chars = l.tokens.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars, 1);
+        // Escaped char literals.
+        let l = lex(r"let c = '\n'; let q = '\''; let u = '\u{1F600}';");
+        assert_eq!(l.tokens.iter().filter(|t| t.kind == TokKind::Char).count(), 3);
+    }
+
+    #[test]
+    fn multi_char_puncts() {
+        let l = lex("a == b != c => d :: e -> f .. g");
+        let puncts: Vec<_> = l
+            .tokens
+            .iter()
+            .filter_map(|t| match t.kind {
+                TokKind::Punct(p) => Some(p),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(puncts, vec!["==", "!=", "=>", "::", "->", ".."]);
+    }
+
+    #[test]
+    fn numbers_including_floats_and_ranges() {
+        let l = lex("let a = 0.5f32 + 1e-3; for i in 0..n {} let t = x.0;");
+        let nums: Vec<_> = l
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.kind {
+                TokKind::Num(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect();
+        assert!(nums.contains(&"0.5f32".to_string()), "{nums:?}");
+        assert!(nums.contains(&"1e-3".to_string()), "{nums:?}");
+        // `0..n` splits into 0, .., n — the 0 stays an integer.
+        assert!(nums.contains(&"0".to_string()), "{nums:?}");
+    }
+
+    #[test]
+    fn raw_identifiers() {
+        let l = lex("let r#type = 1;");
+        assert!(l.tokens.iter().any(|t| t.kind == TokKind::Ident("type".into())));
+    }
+
+    #[test]
+    fn line_numbers_track_newlines_in_all_constructs() {
+        let src = "let a = \"x\ny\";\n/* b\nc */\nlet d = 1;";
+        let l = lex(src);
+        let d = l
+            .tokens
+            .iter()
+            .find(|t| t.kind == TokKind::Ident("d".into()))
+            .unwrap();
+        assert_eq!(d.line, 5);
+    }
+}

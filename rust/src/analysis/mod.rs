@@ -1,0 +1,253 @@
+//! `oac lint` — the in-repo contract analyzer.
+//!
+//! The repo's standing contracts (ROADMAP "Standing contracts",
+//! `docs/CONTRACTS.md`) are behavioral: bit-determinism across
+//! `--threads`/`--workers`, one module + one registry line per backend,
+//! machine-readable benches. Property tests enforce them dynamically —
+//! this module enforces their *static* preconditions at the source line,
+//! before any test runs:
+//!
+//! - `nondet-collections` — no `HashMap`/`HashSet` in determinism-critical
+//!   modules (iteration order is a hash-seed accident);
+//! - `wallclock` — `Instant::now`/`SystemTime` confined to the timing
+//!   substrate (`util::logging`, `util::bench`, benches) or pragma'd
+//!   report-only sites;
+//! - `threading` — `thread::spawn` only in `util::pool` and
+//!   `dist::transport`;
+//! - `registry-purity` — no backend-name string comparison/match outside
+//!   the backend's own module and the registry;
+//! - `float-merge` (warn) — order-dependent float reductions in critical
+//!   modules flagged so future parallelization re-derives a merge order.
+//!
+//! Violations that are correct by construction carry an allowlist pragma
+//! with a mandatory reason:
+//!
+//! ```text
+//! let t0 = Instant::now(); // oac-lint: allow(wallclock, "report-only step timer")
+//! ```
+//!
+//! Everything is std-only: a hand-rolled token [`lexer`], the [`pragma`]
+//! parser, the [`rules`] engine, [`report`] types rendering to text and
+//! the stable JSON schema, and a sorted source [`walk`]. The pass
+//! self-hosts: `oac lint --deny-warnings` exits 0 on this repo, and the
+//! `lint-contracts` CI job keeps it that way.
+
+pub mod lexer;
+pub mod pragma;
+pub mod report;
+pub mod rules;
+pub mod walk;
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use report::{Finding, LintReport, Severity};
+
+/// Where a scanned file lives — determines which rules apply at what scope.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// `rust/src/**` — full rule set; module-scoped rules key off the top
+    /// module name.
+    Src,
+    /// `rust/tests/**` — process-wide rules (wallclock, threading,
+    /// registry-purity) still apply; module-scoped rules don't.
+    Tests,
+    /// `benches/**` — like tests, but wall-clock is the job description.
+    Benches,
+}
+
+/// Per-file rule context: the repo-relative path plus everything the rules
+/// derive from it (scope, top `rust/src` module, blessed-file status).
+#[derive(Debug, Clone)]
+pub struct FileCtx {
+    /// Repo-relative path with `/` separators, e.g. `rust/src/hessian/mod.rs`.
+    pub rel_path: String,
+    pub scope: Scope,
+    /// Top-level module under `rust/src/` (`hessian`, `serve`, `main`, …);
+    /// `None` outside `rust/src`.
+    top: Option<String>,
+}
+
+impl FileCtx {
+    pub fn from_rel_path(rel_path: &str) -> Self {
+        let (scope, top) = if let Some(rest) = rel_path.strip_prefix("rust/src/") {
+            let first = rest.split('/').next().unwrap_or(rest);
+            (Scope::Src, Some(first.trim_end_matches(".rs").to_string()))
+        } else if rel_path.starts_with("benches/") {
+            (Scope::Benches, None)
+        } else {
+            // Everything else scanned is test code (rust/tests/**, and any
+            // stray .rs handed to lint_file directly).
+            (Scope::Tests, None)
+        };
+        FileCtx { rel_path: rel_path.to_string(), scope, top }
+    }
+
+    /// Is this a `rust/src` file in a determinism-critical module?
+    pub fn in_critical_module(&self) -> bool {
+        self.scope == Scope::Src
+            && self
+                .top
+                .as_deref()
+                .is_some_and(|t| rules::DETERMINISM_CRITICAL.contains(&t))
+    }
+
+    /// Human label for messages: the top module, or the path outside src.
+    pub fn module_label(&self) -> &str {
+        self.top.as_deref().unwrap_or(&self.rel_path)
+    }
+
+    pub fn is_bench(&self) -> bool {
+        self.scope == Scope::Benches
+    }
+
+    /// Backend modules and the registry are exempt from `registry-purity`:
+    /// `rust/src/calib/<anything>.rs` *except* `calib/mod.rs`, which must
+    /// dispatch through the registry like everyone else.
+    pub fn is_backend_module(&self) -> bool {
+        self.rel_path.starts_with("rust/src/calib/") && !self.rel_path.ends_with("/mod.rs")
+    }
+}
+
+/// Lint one file's source text: lex, parse pragmas, run every rule,
+/// suppress pragma'd findings, then report pragma machinery problems
+/// (malformed/unknown directives, stale allows that suppressed nothing).
+/// Findings come back sorted by line.
+pub fn lint_source(src: &str, ctx: &FileCtx) -> Vec<Finding> {
+    let lexed = lexer::lex(src);
+    let pragmas = pragma::parse(&ctx.rel_path, &lexed);
+    let mut used = vec![false; pragmas.allows.len()];
+    let mut out = Vec::new();
+    for f in rules::check(&lexed, ctx) {
+        match pragmas.allow_index(f.rule, f.line) {
+            Some(i) => used[i] = true,
+            None => out.push(f),
+        }
+    }
+    out.extend(pragmas.errors);
+    for (i, a) in pragmas.allows.iter().enumerate() {
+        if !used[i] {
+            out.push(Finding {
+                file: ctx.rel_path.clone(),
+                line: a.pragma_line,
+                rule: "pragma",
+                severity: Severity::Warn,
+                message: format!(
+                    "unused oac-lint allow({}): nothing on line {} fires this rule — \
+                     remove the stale pragma",
+                    a.rule, a.target_line
+                ),
+            });
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Lint one file on disk. `rel_path` decides scope; `path` is read.
+pub fn lint_file(path: &Path, rel_path: &str) -> io::Result<Vec<Finding>> {
+    let src = fs::read_to_string(path)?;
+    Ok(lint_source(&src, &FileCtx::from_rel_path(rel_path)))
+}
+
+/// Lint the whole repo rooted at `root`: every `.rs` file under
+/// [`walk::SCAN_ROOTS`], fixtures excluded, findings sorted by
+/// (file, line, rule).
+pub fn lint_repo(root: &Path) -> io::Result<LintReport> {
+    let files = walk::rust_files(root)?;
+    let mut rep = LintReport { findings: Vec::new(), files_scanned: files.len() };
+    for (path, rel) in &files {
+        rep.findings.extend(lint_file(path, rel)?);
+    }
+    rep.sort();
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_derivation() {
+        let c = FileCtx::from_rel_path("rust/src/hessian/mod.rs");
+        assert_eq!(c.scope, Scope::Src);
+        assert!(c.in_critical_module());
+        assert_eq!(c.module_label(), "hessian");
+
+        let c = FileCtx::from_rel_path("rust/src/main.rs");
+        assert_eq!(c.scope, Scope::Src);
+        assert!(!c.in_critical_module());
+        assert_eq!(c.module_label(), "main");
+
+        let c = FileCtx::from_rel_path("rust/tests/parallel.rs");
+        assert_eq!(c.scope, Scope::Tests);
+        assert!(!c.in_critical_module());
+
+        let c = FileCtx::from_rel_path("benches/perf_calib.rs");
+        assert!(c.is_bench());
+
+        assert!(FileCtx::from_rel_path("rust/src/calib/rtn.rs").is_backend_module());
+        assert!(FileCtx::from_rel_path("rust/src/calib/registry.rs").is_backend_module());
+        assert!(!FileCtx::from_rel_path("rust/src/calib/mod.rs").is_backend_module());
+        assert!(!FileCtx::from_rel_path("rust/src/serve/mod.rs").is_backend_module());
+    }
+
+    #[test]
+    fn pragma_suppresses_exactly_its_line_and_rule() {
+        let ctx = FileCtx::from_rel_path("rust/src/serve/engine.rs");
+        let src = "\
+let t = Instant::now(); // oac-lint: allow(wallclock, \"report-only step timer\")
+let u = Instant::now();
+";
+        let f = lint_source(src, &ctx);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 2);
+        assert_eq!(f[0].rule, "wallclock");
+    }
+
+    #[test]
+    fn standalone_pragma_covers_the_statement_below() {
+        let ctx = FileCtx::from_rel_path("rust/src/hessian/mod.rs");
+        let src = "\
+// oac-lint: allow(nondet-collections, \"lookup-only, never iterated\")
+use std::collections::HashMap;
+";
+        assert!(lint_source(src, &ctx).is_empty());
+    }
+
+    #[test]
+    fn unused_pragma_warns() {
+        let ctx = FileCtx::from_rel_path("rust/src/serve/engine.rs");
+        let src = "// oac-lint: allow(wallclock, \"stale\")\nlet x = 1;\n";
+        let f = lint_source(src, &ctx);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "pragma");
+        assert_eq!(f[0].severity, Severity::Warn);
+        assert!(f[0].message.contains("unused"));
+    }
+
+    #[test]
+    fn wrong_rule_pragma_does_not_suppress() {
+        let ctx = FileCtx::from_rel_path("rust/src/serve/engine.rs");
+        let src =
+            "let t = Instant::now(); // oac-lint: allow(threading, \"wrong rule\")\n";
+        let f = lint_source(src, &ctx);
+        // The wallclock finding survives AND the pragma reports unused.
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().any(|x| x.rule == "wallclock"));
+        assert!(f.iter().any(|x| x.rule == "pragma"));
+    }
+
+    #[test]
+    fn repo_is_linted_in_sorted_order() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let rep = lint_repo(root).unwrap();
+        assert!(rep.files_scanned > 30, "expected a real scan, got {}", rep.files_scanned);
+        let keys: Vec<_> =
+            rep.findings.iter().map(|f| (f.file.clone(), f.line, f.rule)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+    }
+}

@@ -1,0 +1,233 @@
+//! The `oac-lint` allowlist pragma.
+//!
+//! Grammar (line comments only; the directive must start the comment):
+//!
+//! ```text
+//! // oac-lint: allow(<rule-id>, "<reason>")
+//! ```
+//!
+//! The reason is **mandatory** — an allow without a justification is itself
+//! a deny-tier finding. A pragma on a line that carries code applies to
+//! that line; a pragma on a comment-only line applies to the next line
+//! that carries code. Stacked pragmas above one statement all apply to it.
+//!
+//! Pragmas are themselves linted: an unknown rule id or a malformed
+//! directive is a deny finding (typo protection — a misspelled allow must
+//! never silently stop allowing), and a pragma that suppresses nothing is
+//! a warn finding (stale allows must not outlive the code they excused).
+
+use super::lexer::{Comment, Lexed};
+use super::report::{Finding, Severity};
+use super::rules::RULE_IDS;
+
+/// One parsed allow directive, resolved to the source line it covers.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    /// Line of the pragma comment itself.
+    pub pragma_line: u32,
+    /// Line the allow applies to (same line, or next code line below).
+    pub target_line: u32,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Parsed pragma set for one file.
+#[derive(Debug, Default)]
+pub struct Pragmas {
+    pub allows: Vec<Allow>,
+    /// Malformed/unknown directives, reported as findings directly.
+    pub errors: Vec<Finding>,
+}
+
+impl Pragmas {
+    /// Is `(rule, line)` allowed? [`super::lint_source`] marks the
+    /// returned index used so stale allows can warn.
+    pub fn allow_index(&self, rule: &str, line: u32) -> Option<usize> {
+        self.allows
+            .iter()
+            .position(|a| a.rule == rule && a.target_line == line)
+    }
+}
+
+const DIRECTIVE: &str = "oac-lint:";
+
+/// Parse every pragma in the comment stream. `file` is used only for
+/// finding locations.
+pub fn parse(file: &str, lexed: &Lexed) -> Pragmas {
+    let code_lines = lexed.code_lines();
+    let mut out = Pragmas::default();
+    for c in &lexed.comments {
+        let Some(body) = directive_body(c) else { continue };
+        match parse_allow(body) {
+            Ok((rule, reason)) => {
+                if !RULE_IDS.contains(&rule.as_str()) {
+                    out.errors.push(Finding {
+                        file: file.to_string(),
+                        line: c.line,
+                        rule: "pragma",
+                        severity: Severity::Deny,
+                        message: format!(
+                            "unknown rule `{rule}` in oac-lint pragma (known: {})",
+                            RULE_IDS.join(", ")
+                        ),
+                    });
+                    continue;
+                }
+                let target = target_line(c.line, &code_lines);
+                match target {
+                    Some(t) => out.allows.push(Allow {
+                        pragma_line: c.line,
+                        target_line: t,
+                        rule,
+                        reason,
+                    }),
+                    None => out.errors.push(Finding {
+                        file: file.to_string(),
+                        line: c.line,
+                        rule: "pragma",
+                        severity: Severity::Warn,
+                        message: format!(
+                            "dangling oac-lint pragma for `{rule}`: no code line at or below it"
+                        ),
+                    }),
+                }
+            }
+            Err(msg) => out.errors.push(Finding {
+                file: file.to_string(),
+                line: c.line,
+                rule: "pragma",
+                severity: Severity::Deny,
+                message: msg,
+            }),
+        }
+    }
+    out
+}
+
+/// Extract the text after `oac-lint:` when the comment is a directive.
+/// Only `//` comments qualify, and the directive must be the first thing
+/// in the comment — prose *mentioning* the syntax never parses as one.
+fn directive_body(c: &Comment) -> Option<&str> {
+    if !c.is_line {
+        return None;
+    }
+    let t = c.text.trim_start();
+    t.strip_prefix(DIRECTIVE)
+}
+
+/// Parse `allow(<rule>, "<reason>")`. Returns (rule, reason) or a message
+/// describing exactly what is malformed.
+fn parse_allow(body: &str) -> Result<(String, String), String> {
+    let b = body.trim();
+    let Some(rest) = b.strip_prefix("allow") else {
+        return Err(format!(
+            "oac-lint directive must be `allow(<rule>, \"reason\")`, got `{b}`"
+        ));
+    };
+    let rest = rest.trim_start();
+    let Some(inner) = rest.strip_prefix('(').and_then(|r| r.trim_end().strip_suffix(')')) else {
+        return Err("oac-lint allow needs parentheses: `allow(<rule>, \"reason\")`".to_string());
+    };
+    let Some((rule, reason_part)) = inner.split_once(',') else {
+        return Err(
+            "oac-lint allow needs a reason: `allow(<rule>, \"reason\")` — the reason is mandatory"
+                .to_string(),
+        );
+    };
+    let rule = rule.trim().to_string();
+    let reason_part = reason_part.trim();
+    let reason = reason_part
+        .strip_prefix('"')
+        .and_then(|r| r.strip_suffix('"'))
+        .map(|r| r.to_string())
+        .ok_or_else(|| "oac-lint allow reason must be a quoted string".to_string())?;
+    if rule.is_empty() {
+        return Err("oac-lint allow has an empty rule id".to_string());
+    }
+    if reason.trim().is_empty() {
+        return Err("oac-lint allow has an empty reason — say why the site is exempt".to_string());
+    }
+    Ok((rule, reason))
+}
+
+/// The line an allow at `pragma_line` covers: itself if it carries code
+/// (trailing pragma), else the first code line below it.
+fn target_line(pragma_line: u32, code_lines: &[u32]) -> Option<u32> {
+    match code_lines.binary_search(&pragma_line) {
+        Ok(_) => Some(pragma_line),
+        Err(idx) => code_lines.get(idx).copied(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn pragmas(src: &str) -> Pragmas {
+        parse("test.rs", &lex(src))
+    }
+
+    #[test]
+    fn trailing_pragma_targets_its_own_line() {
+        let p = pragmas(
+            "let t = now(); // oac-lint: allow(wallclock, \"report-only timer\")\n",
+        );
+        assert!(p.errors.is_empty(), "{:?}", p.errors);
+        assert_eq!(p.allows.len(), 1);
+        assert_eq!(p.allows[0].target_line, 1);
+        assert_eq!(p.allows[0].rule, "wallclock");
+        assert_eq!(p.allows[0].reason, "report-only timer");
+    }
+
+    #[test]
+    fn standalone_pragma_targets_next_code_line() {
+        let p = pragmas(
+            "// oac-lint: allow(threading, \"benchmark driver\")\n// another comment\nlet x = 1;\n",
+        );
+        assert!(p.errors.is_empty(), "{:?}", p.errors);
+        assert_eq!(p.allows[0].pragma_line, 1);
+        assert_eq!(p.allows[0].target_line, 3);
+    }
+
+    #[test]
+    fn missing_reason_is_a_deny_finding() {
+        for bad in [
+            "// oac-lint: allow(wallclock)\nlet x = 1;\n",
+            "// oac-lint: allow(wallclock, )\nlet x = 1;\n",
+            "// oac-lint: allow(wallclock, \"\")\nlet x = 1;\n",
+            "// oac-lint: allow(wallclock, unquoted)\nlet x = 1;\n",
+        ] {
+            let p = pragmas(bad);
+            assert_eq!(p.allows.len(), 0, "{bad}");
+            assert_eq!(p.errors.len(), 1, "{bad}");
+            assert_eq!(p.errors[0].severity, Severity::Deny, "{bad}");
+        }
+    }
+
+    #[test]
+    fn unknown_rule_is_a_deny_finding() {
+        let p = pragmas("// oac-lint: allow(wallclok, \"typo\")\nlet x = 1;\n");
+        assert!(p.allows.is_empty());
+        assert_eq!(p.errors.len(), 1);
+        assert!(p.errors[0].message.contains("unknown rule"));
+    }
+
+    #[test]
+    fn prose_mentioning_the_directive_does_not_parse() {
+        // Doc comments explaining the syntax must never register pragmas.
+        let p = pragmas(
+            "//! Use `// oac-lint: allow(wallclock, \"why\")` to exempt a line.\nlet x = 1;\n",
+        );
+        assert!(p.allows.is_empty(), "{:?}", p.allows);
+        assert!(p.errors.is_empty(), "{:?}", p.errors);
+    }
+
+    #[test]
+    fn dangling_pragma_warns() {
+        let p = pragmas("let x = 1;\n// oac-lint: allow(wallclock, \"nothing below\")\n");
+        assert!(p.allows.is_empty());
+        assert_eq!(p.errors.len(), 1);
+        assert_eq!(p.errors[0].severity, Severity::Warn);
+    }
+}

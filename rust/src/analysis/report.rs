@@ -1,0 +1,151 @@
+//! Machine-readable lint findings, in the `BENCH_*.json` spirit: every
+//! finding is `(file, line, rule, severity, message)`, the text rendering
+//! is one `file:line` line per finding (editor/CI clickable), and
+//! [`LintReport::to_json`] emits the stable schema the `lint-contracts`
+//! CI job and external tooling consume.
+
+use crate::util::json::Json;
+
+/// Finding tier. `Deny` always fails `oac lint`; `Warn` fails only under
+/// `--deny-warnings` (which CI runs, so the repo stays clean of both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warn,
+    Deny,
+}
+
+impl Severity {
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Deny => "deny",
+        }
+    }
+}
+
+/// One rule violation at one source line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Repo-relative path with `/` separators.
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// Rule id (one of [`super::rules::RULE_IDS`], or `pragma` for
+    /// allowlist-machinery diagnostics).
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub message: String,
+}
+
+impl Finding {
+    /// `file:line: severity[rule] message` — the text-mode line.
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}: {}[{}] {}",
+            self.file,
+            self.line,
+            self.severity.label(),
+            self.rule,
+            self.message
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("file", Json::str(&self.file)),
+            ("line", Json::num(self.line as f64)),
+            ("rule", Json::str(self.rule)),
+            ("severity", Json::str(self.severity.label())),
+            ("message", Json::str(&self.message)),
+        ])
+    }
+}
+
+/// The whole run: findings (file, then line order) plus scan statistics.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn deny_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Deny).count()
+    }
+
+    pub fn warn_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warn).count()
+    }
+
+    /// Deterministic order: file path, then line, then rule id.
+    pub fn sort(&mut self) {
+        self.findings
+            .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    }
+
+    /// The stable JSON schema:
+    /// `{"files_scanned": N, "deny": D, "warn": W, "findings": [...]}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            ("deny", Json::num(self.deny_count() as f64)),
+            ("warn", Json::num(self.warn_count() as f64)),
+            (
+                "findings",
+                Json::arr(self.findings.iter().map(|f| f.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_and_json_shapes() {
+        let f = Finding {
+            file: "rust/src/hessian/mod.rs".to_string(),
+            line: 224,
+            rule: "nondet-collections",
+            severity: Severity::Deny,
+            message: "HashMap in determinism-critical module".to_string(),
+        };
+        assert_eq!(
+            f.render(),
+            "rust/src/hessian/mod.rs:224: deny[nondet-collections] \
+             HashMap in determinism-critical module"
+        );
+        let mut rep = LintReport { findings: vec![f], files_scanned: 3 };
+        rep.sort();
+        let j = rep.to_json();
+        assert_eq!(j.req("deny").as_usize(), Some(1));
+        assert_eq!(j.req("warn").as_usize(), Some(0));
+        assert_eq!(j.req("files_scanned").as_usize(), Some(3));
+        let arr = j.req("findings").as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].req("line").as_usize(), Some(224));
+        assert_eq!(arr[0].req("rule").as_str(), Some("nondet-collections"));
+    }
+
+    #[test]
+    fn sort_is_by_file_then_line() {
+        let mk = |file: &str, line| Finding {
+            file: file.to_string(),
+            line,
+            rule: "wallclock",
+            severity: Severity::Warn,
+            message: String::new(),
+        };
+        let mut rep = LintReport {
+            findings: vec![mk("b.rs", 1), mk("a.rs", 9), mk("a.rs", 2)],
+            files_scanned: 2,
+        };
+        rep.sort();
+        let order: Vec<_> = rep.findings.iter().map(|f| (f.file.clone(), f.line)).collect();
+        assert_eq!(
+            order,
+            vec![("a.rs".into(), 2), ("a.rs".into(), 9), ("b.rs".into(), 1)]
+        );
+    }
+}

@@ -1,0 +1,475 @@
+//! The five contract rules.
+//!
+//! Each rule is a pure function of one file's token stream plus its
+//! [`FileCtx`] scope — no cross-file state, so findings are reproducible
+//! file by file and the whole pass is order-independent. Scoping:
+//!
+//! | rule | severity | fires in | blessed |
+//! |------|----------|----------|---------|
+//! | `nondet-collections` | deny | determinism-critical `rust/src` modules | — |
+//! | `wallclock` | deny | everywhere scanned | `util/logging.rs`, `util/bench.rs`, `benches/` |
+//! | `threading` | deny | everywhere scanned | `util/pool.rs`, `dist/transport.rs` |
+//! | `registry-purity` | deny | everywhere except backend modules | `calib/<backend>.rs`, `calib/registry.rs` |
+//! | `float-merge` | warn | determinism-critical `rust/src` modules | `util/pool.rs`, `tensor/` |
+//!
+//! The rules are token-pattern heuristics, not type-checked analyses; the
+//! known gaps (e.g. a `use std::thread::spawn as s` rename, an untyped
+//! `.sum()` whose element type is only inferable) are documented in
+//! `docs/CONTRACTS.md`. The goal is catching the way these violations are
+//! actually written, at the source line, before any test runs.
+
+use super::lexer::{Lexed, TokKind, Token};
+use super::report::{Finding, Severity};
+use super::FileCtx;
+use crate::calib::registry;
+
+/// Every rule id, for pragma validation and docs.
+pub const RULE_IDS: &[&str] = &[
+    "nondet-collections",
+    "wallclock",
+    "threading",
+    "registry-purity",
+    "float-merge",
+];
+
+/// Modules under `rust/src/` whose iteration order, scheduling and merge
+/// order are contractually bit-deterministic (ROADMAP "Standing
+/// contracts"): the calibration pipeline (`coordinator`, `hessian`,
+/// `quant`, `tensor`, `calib`), the serving path (`serve`), the
+/// distributed protocol (`dist`), and the executable cache feeding them
+/// (`runtime`).
+pub const DETERMINISM_CRITICAL: &[&str] = &[
+    "calib",
+    "coordinator",
+    "dist",
+    "hessian",
+    "quant",
+    "runtime",
+    "serve",
+    "tensor",
+];
+
+/// Files where wall-clock reads are legitimate by construction: the
+/// logging stopwatch, the bench harness substrate, and the bench drivers
+/// themselves (their whole job is timing).
+const WALLCLOCK_BLESSED: &[&str] = &["rust/src/util/logging.rs", "rust/src/util/bench.rs"];
+
+/// Files allowed to create OS threads: the deterministic scoped pool and
+/// the transport seam's worker processes.
+const THREADING_BLESSED: &[&str] = &["rust/src/util/pool.rs", "rust/src/dist/transport.rs"];
+
+/// Files whose float reductions are the blessed fixed-order merges.
+const FLOAT_MERGE_BLESSED_PREFIXES: &[&str] = &["rust/src/util/pool.rs", "rust/src/tensor/"];
+
+/// Run every rule over one lexed file.
+pub fn check(lexed: &Lexed, ctx: &FileCtx) -> Vec<Finding> {
+    let mut out = Vec::new();
+    nondet_collections(lexed, ctx, &mut out);
+    wallclock(lexed, ctx, &mut out);
+    threading(lexed, ctx, &mut out);
+    registry_purity(lexed, ctx, &mut out);
+    float_merge(lexed, ctx, &mut out);
+    out
+}
+
+fn finding(
+    ctx: &FileCtx,
+    line: u32,
+    rule: &'static str,
+    severity: Severity,
+    message: String,
+) -> Finding {
+    Finding { file: ctx.rel_path.clone(), line, rule, severity, message }
+}
+
+fn ident<'a>(t: &'a Token) -> Option<&'a str> {
+    match &t.kind {
+        TokKind::Ident(s) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn is_punct(t: &Token, p: &str) -> bool {
+    matches!(&t.kind, TokKind::Punct(q) if *q == p)
+}
+
+// --------------------------------------------------------------- rule 1
+
+/// `nondet-collections`: `HashMap`/`HashSet` anywhere in a
+/// determinism-critical module is a deny — iteration order is a hash-seed
+/// accident, and one `for (k, v) in map` in a merge path silently breaks
+/// the bit-determinism contract. Use `BTreeMap`/`BTreeSet`, or pragma a
+/// genuinely lookup-only map with a reason.
+fn nondet_collections(lexed: &Lexed, ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !ctx.in_critical_module() {
+        return;
+    }
+    for t in &lexed.tokens {
+        if let Some(name @ ("HashMap" | "HashSet")) = ident(t) {
+            out.push(finding(
+                ctx,
+                t.line,
+                "nondet-collections",
+                Severity::Deny,
+                format!(
+                    "{name} in determinism-critical module `{}`: iteration order is \
+                     nondeterministic — use {} or pragma a lookup-only use",
+                    ctx.module_label(),
+                    if name == "HashMap" { "BTreeMap" } else { "BTreeSet" },
+                ),
+            ));
+        }
+    }
+}
+
+// --------------------------------------------------------------- rule 2
+
+/// `wallclock`: `Instant::now()` / any `SystemTime` use outside the
+/// blessed timing substrate. Wall-clock values that reach scheduling or
+/// engine state break the virtual-clock determinism contract; report-only
+/// timing sites carry a pragma saying so.
+fn wallclock(lexed: &Lexed, ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if WALLCLOCK_BLESSED.contains(&ctx.rel_path.as_str()) || ctx.is_bench() {
+        return;
+    }
+    let toks = &lexed.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        let fire = match ident(t) {
+            Some("Instant") => {
+                i + 2 < toks.len()
+                    && is_punct(&toks[i + 1], "::")
+                    && ident(&toks[i + 2]) == Some("now")
+            }
+            Some("SystemTime") => true,
+            _ => false,
+        };
+        if fire {
+            out.push(finding(
+                ctx,
+                t.line,
+                "wallclock",
+                Severity::Deny,
+                "wall-clock read outside util::logging/util::bench: time must never \
+                 influence scheduling or outputs — derive spans from ticks, or pragma \
+                 a report-only timing site"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+// --------------------------------------------------------------- rule 3
+
+/// `threading`: `thread::spawn` outside `util/pool.rs` and
+/// `dist/transport.rs`. Ad-hoc threads have no fixed shard geometry and no
+/// fixed merge order; all parallelism goes through the deterministic pool
+/// (or the transport seam's workers).
+fn threading(lexed: &Lexed, ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if THREADING_BLESSED.contains(&ctx.rel_path.as_str()) {
+        return;
+    }
+    let toks = &lexed.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if ident(t) == Some("thread")
+            && i + 2 < toks.len()
+            && is_punct(&toks[i + 1], "::")
+            && ident(&toks[i + 2]) == Some("spawn")
+        {
+            out.push(finding(
+                ctx,
+                t.line,
+                "threading",
+                Severity::Deny,
+                "ad-hoc thread::spawn: all parallelism goes through util::pool \
+                 (fixed shard geometry, fixed merge order) or dist::transport"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+// --------------------------------------------------------------- rule 4
+
+/// `registry-purity`: a backend-name string literal compared with `==` /
+/// `!=` or used as a `match` arm outside the backend's own module and the
+/// registry. The ROADMAP contract is "no per-backend `match` anywhere
+/// else" — dispatch goes through `calib::registry::lookup` and trait
+/// objects, so the registry stays the single extension point.
+fn registry_purity(lexed: &Lexed, ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if ctx.is_backend_module() {
+        return;
+    }
+    let names = backend_name_set();
+    let toks = &lexed.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        let TokKind::Str(s) = &t.kind else { continue };
+        if !names.contains(&registry::normalize(s)) {
+            continue;
+        }
+        let prev_cmp = i > 0 && (is_punct(&toks[i - 1], "==") || is_punct(&toks[i - 1], "!="));
+        let next_cmp = i + 1 < toks.len()
+            && (is_punct(&toks[i + 1], "==")
+                || is_punct(&toks[i + 1], "!=")
+                || is_punct(&toks[i + 1], "=>"));
+        if prev_cmp || next_cmp {
+            out.push(finding(
+                ctx,
+                t.line,
+                "registry-purity",
+                Severity::Deny,
+                format!(
+                    "backend name \"{s}\" in a comparison/match outside its backend module: \
+                     dispatch through calib::registry (trait objects), never per-backend strings"
+                ),
+            ));
+        }
+    }
+}
+
+/// Normalized backend names + aliases from the **live registry**, plus the
+/// `oac` / `oac_<backend>` method spellings — growing the registry grows
+/// the rule automatically.
+fn backend_name_set() -> Vec<String> {
+    let mut names = Vec::new();
+    names.push("oac".to_string());
+    for b in registry::all() {
+        let n = registry::normalize(b.name());
+        names.push(format!("oac_{n}"));
+        names.push(n);
+        for a in b.aliases() {
+            names.push(registry::normalize(a));
+        }
+    }
+    names.sort();
+    names.dedup();
+    names
+}
+
+// --------------------------------------------------------------- rule 5
+
+/// `float-merge` (advisory): an order-dependent f32/f64 reduction
+/// (`.sum::<f32>()`, `.product::<f64>()`, `.fold(0.0, …)` with an additive
+/// combiner) in a determinism-critical module, outside the blessed
+/// `util::pool` fixed-shard merge and the `tensor` kernels. Serial
+/// reductions are deterministic *today*; the warn marks every site someone
+/// parallelizing the loop must re-derive a fixed merge order for.
+/// Min/max folds are order-independent and exempt.
+fn float_merge(lexed: &Lexed, ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !ctx.in_critical_module() {
+        return;
+    }
+    if FLOAT_MERGE_BLESSED_PREFIXES.iter().any(|p| ctx.rel_path.starts_with(p)) {
+        return;
+    }
+    let toks = &lexed.tokens;
+    for i in 0..toks.len() {
+        if !is_punct(&toks[i], ".") {
+            continue;
+        }
+        // `.sum::<f32>()` / `.product::<f64>()`
+        if i + 5 < toks.len()
+            && matches!(ident(&toks[i + 1]), Some("sum" | "product"))
+            && is_punct(&toks[i + 2], "::")
+            && is_punct(&toks[i + 3], "<")
+            && matches!(ident(&toks[i + 4]), Some("f32" | "f64"))
+            && is_punct(&toks[i + 5], ">")
+        {
+            out.push(finding(
+                ctx,
+                toks[i + 1].line,
+                "float-merge",
+                Severity::Warn,
+                format!(
+                    "order-dependent {}::<{}> reduction in `{}`: fine while serial, but \
+                     parallelizing this loop needs a fixed merge order (see util::pool) — \
+                     pragma the site to record that it stays serial",
+                    ident(&toks[i + 1]).unwrap(),
+                    ident(&toks[i + 4]).unwrap(),
+                    ctx.module_label(),
+                ),
+            ));
+            continue;
+        }
+        // `.fold(<float literal>, …)` with a non-min/max combiner.
+        if i + 2 < toks.len() && ident(&toks[i + 1]) == Some("fold") && is_punct(&toks[i + 2], "(")
+        {
+            let mut j = i + 3;
+            if j < toks.len() && is_punct(&toks[j], "-") {
+                j += 1;
+            }
+            let is_float_init = matches!(
+                toks.get(j).map(|t| &t.kind),
+                Some(TokKind::Num(s)) if s.contains('.') || s.ends_with("f32") || s.ends_with("f64")
+            );
+            if !is_float_init {
+                continue;
+            }
+            // Scan the combiner for min/max (order-independent → exempt).
+            let mut depth = 1usize;
+            let mut k = j + 1;
+            let mut minmax = false;
+            while k < toks.len() && depth > 0 && k < j + 48 {
+                if is_punct(&toks[k], "(") {
+                    depth += 1;
+                } else if is_punct(&toks[k], ")") {
+                    depth -= 1;
+                } else if matches!(ident(&toks[k]), Some("min" | "max")) {
+                    minmax = true;
+                }
+                k += 1;
+            }
+            if !minmax {
+                out.push(finding(
+                    ctx,
+                    toks[i + 1].line,
+                    "float-merge",
+                    Severity::Warn,
+                    format!(
+                        "order-dependent float fold in `{}`: fine while serial, but \
+                         parallelizing this loop needs a fixed merge order (see util::pool) — \
+                         pragma the site to record that it stays serial",
+                        ctx.module_label(),
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{lint_source, FileCtx};
+    use super::*;
+
+    fn ctx(path: &str) -> FileCtx {
+        FileCtx::from_rel_path(path)
+    }
+
+    fn rules_fired(src: &str, path: &str) -> Vec<&'static str> {
+        lint_source(src, &ctx(path)).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn nondet_scoped_to_critical_modules() {
+        let src = "use std::collections::HashMap;\n";
+        assert!(rules_fired(src, "rust/src/hessian/mod.rs").contains(&"nondet-collections"));
+        assert!(rules_fired(src, "rust/src/coordinator/schedule.rs")
+            .contains(&"nondet-collections"));
+        // report/ and util/ are not determinism-critical.
+        assert!(rules_fired(src, "rust/src/report/mod.rs").is_empty());
+        assert!(rules_fired(src, "rust/src/util/json.rs").is_empty());
+        // Tests and benches are not src modules.
+        assert!(rules_fired(src, "rust/tests/parallel.rs").is_empty());
+    }
+
+    #[test]
+    fn wallclock_fires_everywhere_but_blessed() {
+        let src = "fn f() { let t = std::time::Instant::now(); }\n";
+        assert!(rules_fired(src, "rust/src/serve/engine.rs").contains(&"wallclock"));
+        assert!(rules_fired(src, "rust/src/main.rs").contains(&"wallclock"));
+        assert!(rules_fired(src, "rust/tests/cli.rs").contains(&"wallclock"));
+        assert!(rules_fired(src, "rust/src/util/logging.rs").is_empty());
+        assert!(rules_fired(src, "rust/src/util/bench.rs").is_empty());
+        assert!(rules_fired(src, "benches/perf_serve.rs").is_empty());
+        // A stored Instant *type* is not an acquisition site.
+        assert!(rules_fired("fn g(t: std::time::Instant) {}\n", "rust/src/main.rs").is_empty());
+        // SystemTime is banned wholesale.
+        assert!(rules_fired(
+            "fn f() { let _ = std::time::SystemTime::UNIX_EPOCH; }\n",
+            "rust/src/main.rs"
+        )
+        .contains(&"wallclock"));
+    }
+
+    #[test]
+    fn threading_fires_outside_pool_and_transport() {
+        let src = "fn f() { std::thread::spawn(|| {}); }\n";
+        assert!(rules_fired(src, "rust/src/coordinator/mod.rs").contains(&"threading"));
+        assert!(rules_fired(src, "rust/src/util/pool.rs").is_empty());
+        assert!(rules_fired(src, "rust/src/dist/transport.rs").is_empty());
+        // Scoped pool spawns (`s.spawn(...)`) are not `thread::spawn`.
+        assert!(rules_fired("fn f(s: &S) { s.spawn(|| {}); }\n", "rust/src/util/rng.rs")
+            .is_empty());
+    }
+
+    #[test]
+    fn registry_purity_catches_matches_and_comparisons() {
+        for src in [
+            "fn f(m: &str) -> u32 { match m { \"rtn\" => 0, _ => 1 } }\n",
+            "fn f(m: &str) -> bool { m == \"optq\" }\n",
+            "fn f(m: &str) -> bool { \"oac\" == m }\n",
+            "fn f(m: &str) -> bool { m != \"oac_billm\" }\n",
+            // Hyphen/case spellings normalize like the registry does.
+            "fn f(m: &str) -> bool { m == \"Magnitude-RTN\" }\n",
+        ] {
+            assert!(
+                rules_fired(src, "rust/src/serve/mod.rs").contains(&"registry-purity"),
+                "{src}"
+            );
+        }
+        // The same code inside a backend module or the registry is fine.
+        let src = "fn f(m: &str) -> bool { m == \"rtn\" }\n";
+        assert!(rules_fired(src, "rust/src/calib/rtn.rs").is_empty());
+        assert!(rules_fired(src, "rust/src/calib/registry.rs").is_empty());
+        // calib/mod.rs is NOT exempt — it must go through the registry too.
+        assert!(rules_fired(src, "rust/src/calib/mod.rs").contains(&"registry-purity"));
+        // Non-comparison uses never fire: defaults, array elements, prints.
+        for src in [
+            "fn f() -> &'static str { \"rtn\" }\n",
+            "const M: &[&str] = &[\"rtn\", \"optq\"];\n",
+            "fn f(a: &A) { a.str_or(\"method\", \"oac\"); }\n",
+        ] {
+            assert!(rules_fired(src, "rust/src/serve/mod.rs").is_empty(), "{src}");
+        }
+    }
+
+    #[test]
+    fn float_merge_warns_on_sums_not_minmax_folds() {
+        let sum = "fn f(xs: &[f32]) -> f32 { xs.iter().sum::<f32>() }\n";
+        let fired = lint_source(sum, &ctx("rust/src/hessian/mod.rs"));
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].rule, "float-merge");
+        assert_eq!(fired[0].severity, Severity::Warn);
+        // Blessed: tensor kernels and the pool merge.
+        assert!(rules_fired(sum, "rust/src/tensor/linalg.rs").is_empty());
+        assert!(rules_fired(sum, "rust/src/util/pool.rs").is_empty());
+        // Out of scope: non-critical modules.
+        assert!(rules_fired(sum, "rust/src/eval/mod.rs").is_empty());
+        // Additive float fold fires; min/max folds are order-independent.
+        assert!(rules_fired(
+            "fn f(xs: &[f64]) -> f64 { xs.iter().fold(0.0, |a, b| a + b) }\n",
+            "rust/src/quant/mod.rs"
+        )
+        .contains(&"float-merge"));
+        for exempt in [
+            "fn f(xs: &[f64]) -> f64 { xs.iter().cloned().fold(0.0, f64::max) }\n",
+            "fn f(xs: &[f32]) -> f32 { xs.iter().cloned().fold(f32::INFINITY, f32::min) }\n",
+            "fn f(xs: &[u64]) -> u64 { xs.iter().fold(0, |a, b| a + b) }\n",
+        ] {
+            assert!(rules_fired(exempt, "rust/src/quant/mod.rs").is_empty(), "{exempt}");
+        }
+    }
+
+    #[test]
+    fn triggers_inside_strings_and_comments_never_fire() {
+        let src = r#"
+// HashMap, Instant::now(), thread::spawn — prose only.
+fn f() -> &'static str { "HashMap Instant::now() thread::spawn \"rtn\" ==" }
+"#;
+        assert!(rules_fired(src, "rust/src/hessian/mod.rs").is_empty());
+    }
+
+    #[test]
+    fn backend_name_set_tracks_the_registry() {
+        let names = backend_name_set();
+        for b in registry::all() {
+            assert!(names.contains(&registry::normalize(b.name())), "{}", b.name());
+            assert!(
+                names.contains(&format!("oac_{}", registry::normalize(b.name()))),
+                "oac_{}",
+                b.name()
+            );
+        }
+        assert!(names.contains(&"oac".to_string()));
+    }
+}

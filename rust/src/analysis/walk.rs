@@ -1,0 +1,83 @@
+//! Deterministic source-tree walk for the lint pass.
+//!
+//! Scans the three roots the contracts cover — `rust/src`, `rust/tests`,
+//! `benches` — collecting every `.rs` file in sorted order, so findings
+//! come out in the same order on every machine. The lint fixture corpus
+//! (`rust/tests/lint_fixtures/`) is excluded: its *-bad.rs* files exist to
+//! fire rules on purpose and are linted individually by `rust/tests/lint.rs`.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Directories scanned by `oac lint`, relative to the repo root.
+pub const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "benches"];
+
+/// Directory name skipped during the walk (deliberately-bad lint fixtures).
+pub const EXCLUDE_DIR: &str = "lint_fixtures";
+
+/// Every `.rs` file under [`SCAN_ROOTS`], as `(absolute path, repo-relative
+/// path with '/' separators)`, sorted by relative path.
+pub fn rust_files(root: &Path) -> io::Result<Vec<(PathBuf, String)>> {
+    let mut out = Vec::new();
+    for sr in SCAN_ROOTS {
+        let dir = root.join(sr);
+        if dir.is_dir() {
+            walk_dir(&dir, root, &mut out)?;
+        }
+    }
+    out.sort_by(|a, b| a.1.cmp(&b.1));
+    Ok(out)
+}
+
+fn walk_dir(dir: &Path, root: &Path, out: &mut Vec<(PathBuf, String)>) -> io::Result<()> {
+    let mut entries = fs::read_dir(dir)?.collect::<Result<Vec<_>, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let path = e.path();
+        let name = e.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if name == EXCLUDE_DIR {
+                continue;
+            }
+            walk_dir(&path, root, out)?;
+        } else if name.ends_with(".rs") {
+            let rel = rel_path(root, &path);
+            out.push((path, rel));
+        }
+    }
+    Ok(())
+}
+
+/// Repo-relative path with `/` separators regardless of platform.
+pub fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walk_finds_this_file_and_skips_fixtures() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let files = rust_files(root).unwrap();
+        assert!(files.iter().any(|(_, r)| r == "rust/src/analysis/walk.rs"));
+        assert!(files.iter().any(|(_, r)| r == "rust/src/lib.rs"));
+        assert!(
+            files.iter().all(|(_, r)| !r.contains(EXCLUDE_DIR)),
+            "fixture corpus must not be part of the repo walk"
+        );
+        // Sorted by relative path.
+        let rels: Vec<_> = files.iter().map(|(_, r)| r.clone()).collect();
+        let mut sorted = rels.clone();
+        sorted.sort();
+        assert_eq!(rels, sorted);
+    }
+}

@@ -65,6 +65,7 @@ fn build_plan(w: &Mat, hes: &PreparedHessian, cfg: &CalibConfig) -> BinPlan {
     let mut scores: Vec<(f32, usize)> = (0..cols)
         .map(|k| {
             let hinv_kk = hes.hinv.at(k, k).max(1e-12);
+            // oac-lint: allow(float-merge, "serial per-column saliency inside one calibrate unit")
             let s: f32 = (0..rows).map(|r| w.at(r, k).powi(2)).sum::<f32>() / hinv_kk;
             (s, k)
         })
@@ -82,6 +83,7 @@ fn build_plan(w: &Mat, hes: &PreparedHessian, cfg: &CalibConfig) -> BinPlan {
     let non_salient: Vec<usize> = (0..cols).filter(|&k| !salient[k]).collect();
     let col_mag: Vec<f32> = non_salient
         .iter()
+        // oac-lint: allow(float-merge, "serial per-column magnitude mean inside one calibrate unit")
         .map(|&k| (0..rows).map(|r| w.at(r, k).abs()).sum::<f32>() / rows as f32)
         .collect();
     let mut sorted_mags = col_mag.clone();
@@ -109,7 +111,9 @@ fn build_plan(w: &Mat, hes: &PreparedHessian, cfg: &CalibConfig) -> BinPlan {
                 .collect();
             let (_, ba) = binary::binarize(&bell_vals);
             let (_, ta) = binary::binarize(&tail_vals);
+            // oac-lint: allow(float-merge, "serial splitting-search error sum, fixed row order")
             err += bell_vals.iter().zip(&ba).map(|(v, a)| ((v - a) as f64).powi(2)).sum::<f64>();
+            // oac-lint: allow(float-merge, "serial splitting-search error sum, fixed row order")
             err += tail_vals.iter().zip(&ta).map(|(v, a)| ((v - a) as f64).powi(2)).sum::<f64>();
         }
         if err < best.0 {

@@ -135,6 +135,7 @@ pub fn optq_core(
             qvals[r] = qv;
             sal[r] = crate::hessian::saliency(v, qv, hinv_qq);
         }
+        // oac-lint: allow(float-merge, "serial per-column saliency mean inside one calibrate unit")
         let mean_sal = sal.iter().sum::<f32>() / rows as f32;
         let cutoff = outliers.threshold * mean_sal;
         // Cap the outlier count per column: among eligible rows keep only

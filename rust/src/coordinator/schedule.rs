@@ -330,7 +330,7 @@ pub fn run_synthetic_pipeline(
     // stores) comes in as parameters so each pool pass borrows it only for
     // the duration of that call.
     let run_p1 = |contribs: &BTreeMap<usize, Vec<Vec<Mat>>>, u: &P1| -> (P1Out, f64) {
-        let t = Instant::now();
+        let t = Instant::now(); // oac-lint: allow(wallclock, "report-only per-unit timing for overlap stats")
         let out = match *u {
             P1::Gen { block, li } => P1Out::Gen(gen_layer(block, li)),
             P1::Gram { block, li, sample } => {
@@ -344,7 +344,7 @@ pub fn run_synthetic_pipeline(
                   front: usize,
                   u: &P2|
      -> (Result<QuantizedLayer>, f64) {
-        let t = Instant::now();
+        let t = Instant::now(); // oac-lint: allow(wallclock, "report-only per-unit timing for overlap stats")
         let l = blocks[front][u.li];
         let cfg = &cfgs[u.method];
         let h = store
@@ -393,10 +393,10 @@ pub fn run_synthetic_pipeline(
         });
     };
 
-    let t_loop = Instant::now();
+    let t_loop = Instant::now(); // oac-lint: allow(wallclock, "report-only ScheduleStats wall timing")
     if overlap && spec.blocks > 0 {
         // -------- pipeline fill: gen(0), then gram(0) ∥ gen(1) ----------
-        let t = Instant::now();
+        let t = Instant::now(); // oac-lint: allow(wallclock, "report-only ScheduleStats wall timing")
         let gen0 = pool.map(&gen_units(0), |_, u| run_p1(&contribs, u));
         let mut secs = 0.0;
         contribs.insert(
@@ -444,13 +444,13 @@ pub fn run_synthetic_pipeline(
         // -------- steady state: calibrate(b) ∥ gram(b+1) ∥ gen(b+2) -----
         for b in 0..spec.blocks {
             if warm_prepare {
-                let tw = Instant::now();
+                let tw = Instant::now(); // oac-lint: allow(wallclock, "report-only ScheduleStats wall timing")
                 warm_block(&store, b);
                 let w = tw.elapsed().as_secs_f64();
                 phase2_block[b] += w;
                 shared_prepare += w;
             }
-            let t_step = Instant::now();
+            let t_step = Instant::now(); // oac-lint: allow(wallclock, "report-only ScheduleStats wall timing")
             let p2u = p2_units(b);
             let mut p1u = Vec::new();
             if b + 1 < spec.blocks {
@@ -514,7 +514,9 @@ pub fn run_synthetic_pipeline(
                  overlap saved ~{saved:.3}s ({:.2}s cum)",
                 phase1_block[b],
                 phase2_block[b],
+                // oac-lint: allow(float-merge, "report-only cumulative log timing")
                 phase1_block[..=b].iter().sum::<f64>(),
+                // oac-lint: allow(float-merge, "report-only cumulative log timing")
                 phase2_block[..=b].iter().sum::<f64>(),
                 stats.overlap_secs,
             );
@@ -548,7 +550,7 @@ pub fn run_synthetic_pipeline(
             contribs.remove(&b);
 
             if warm_prepare {
-                let tw = Instant::now();
+                let tw = Instant::now(); // oac-lint: allow(wallclock, "report-only ScheduleStats wall timing")
                 warm_block(&store, b);
                 let w = tw.elapsed().as_secs_f64();
                 phase2_block[b] += w;
@@ -574,13 +576,16 @@ pub fn run_synthetic_pipeline(
                 "block {b}: phase1 {:.3}s phase2 {:.3}s | cum phase1 {:.2}s phase2 {:.2}s",
                 phase1_block[b],
                 phase2_block[b],
+                // oac-lint: allow(float-merge, "report-only cumulative log timing")
                 phase1_block[..=b].iter().sum::<f64>(),
+                // oac-lint: allow(float-merge, "report-only cumulative log timing")
                 phase2_block[..=b].iter().sum::<f64>(),
             );
         }
     }
     stats.wall_secs = t_loop.elapsed().as_secs_f64();
     stats.phase1_secs = phase1_block.iter().sum();
+    // oac-lint: allow(float-merge, "report-only ScheduleStats timing sum")
     stats.phase2_secs = phase2_method.iter().sum::<f64>() + shared_prepare;
     stats.hessian_builds = store.builds();
 

@@ -13,7 +13,7 @@
 //! eq. 22 sum) machinery, which is exactly what lets OAC slot into any
 //! Hessian-based calibration backend (paper Appendix I).
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -33,7 +33,8 @@ pub enum HessianKind {
 }
 
 /// How per-sample contributions are reduced (Appendix C.3, Table 5).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// `Ord` so it can be part of the B-tree-backed [`PreparedCache`] key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Reduction {
     /// eq. 14: divide by N.
     Mean,
@@ -131,6 +132,7 @@ impl Hessian {
 /// eq. 21 damping on an arbitrary symmetric matrix.
 pub fn regularize_in_place(h: &mut Mat, alpha: f32) {
     let n = h.rows;
+    // oac-lint: allow(float-merge, "serial diagonal mean; damping stays a scalar, no parallel merge")
     let mean_diag = (0..n).map(|i| h.at(i, i) as f64).sum::<f64>() / n as f64;
     // Guard: an all-zero Hessian (dead layer) still needs to be invertible.
     let damp = (alpha as f64 * mean_diag).max(1e-8) as f32;
@@ -179,7 +181,7 @@ pub fn prepare(h: Mat) -> Result<PreparedHessian, LinalgError> {
 /// b+1's prefetched entries stay live. `samples` and the bitwise
 /// `fingerprint` of the accumulator invalidate the entry whenever the
 /// underlying Hessian content changes.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct PreparedKey {
     pub block: usize,
     pub layer: String,
@@ -218,10 +220,12 @@ impl PreparedKey {
 /// before this cache it ran once per *calibration call*, so comparing
 /// backends on the same Hessian (ablation benches, α re-use across layers
 /// of a sweep) repaid the factorization every time. Shared freely across
-/// the Phase-2 worker threads.
+/// the Phase-2 worker threads. B-tree-backed so any future iteration over
+/// live entries (stats, eviction) sees a deterministic key order — the
+/// `nondet-collections` contract (`docs/CONTRACTS.md`).
 #[derive(Default)]
 pub struct PreparedCache {
-    map: Mutex<HashMap<PreparedKey, Arc<PreparedHessian>>>,
+    map: Mutex<BTreeMap<PreparedKey, Arc<PreparedHessian>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
 }
@@ -399,6 +403,7 @@ mod tests {
         h.accumulate(&rand_contrib(&mut rng, 10, 5));
         let plain = h.reduced(Reduction::Sum);
         let reg = h.regularized(0.1, Reduction::Sum);
+        // oac-lint: allow(float-merge, "test oracle recomputes the serial diagonal mean")
         let mean_diag: f32 = (0..5).map(|i| plain.at(i, i)).sum::<f32>() / 5.0;
         for i in 0..5 {
             for j in 0..5 {

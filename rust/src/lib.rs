@@ -140,6 +140,18 @@
 //! themselves: content-addressed FNV-keyed chunks with integrity-verified,
 //! resumable fetch (`oac artifacts push|fetch|verify|list`;
 //! `oac serve --packed <id> --store <dir>` serves straight from the store).
+//!
+//! ## The contract analyzer
+//!
+//! The contracts above are also enforced *statically*: [`analysis`] is a
+//! std-only lint pass (`oac lint [--json] [--deny-warnings]`) over
+//! `rust/src`, `rust/tests`, and `benches` with five rules —
+//! `nondet-collections`, `wallclock`, `threading`, `registry-purity`, and
+//! the advisory `float-merge` — each guarding one standing contract at the
+//! source line. Exemptions are explicit pragmas with mandatory reasons
+//! (`// oac-lint: allow(<rule>, "reason")`). The repo self-hosts clean
+//! under `--deny-warnings`, and CI's `lint-contracts` job keeps it that
+//! way. The full contract ↔ rule mapping lives in `docs/CONTRACTS.md`.
 
 // CI denies warnings (`cargo clippy -- -D warnings`). The style lints
 // below are deliberately tolerated crate-wide: this is index-heavy numeric
@@ -154,6 +166,7 @@
     clippy::uninlined_format_args
 )]
 
+pub mod analysis;
 pub mod calib;
 pub mod coordinator;
 pub mod data;

@@ -107,6 +107,13 @@ USAGE:
   oac artifacts list --store DIR
   oac eval     --config small --ckpt IN.bin [--ppl-seqs 16] [--tasks 16] [--far]
                [--packed MODEL.pack]
+  oac lint     [--json] [--deny-warnings]
+               (static contract analyzer over rust/src, rust/tests, benches:
+                nondet-collections, wallclock, threading, registry-purity,
+                float-merge. Exempt a line with
+                `// oac-lint: allow(<rule>, \"reason\")` — reason mandatory.
+                Exit 1 on any deny finding; --deny-warnings promotes warns.
+                See docs/CONTRACTS.md)
   oac sweep    --config tiny  --ckpt IN.bin --method oac --bits 2 [--alphas 0.001,0.01,0.1,1]
 
 Methods (see `oac backends` for the live registry): rtn optq omniquant quip
@@ -192,6 +199,7 @@ fn run() -> Result<()> {
         "json",
         "no-continuous",
         "no-prefix-share",
+        "deny-warnings",
     ]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
@@ -202,6 +210,7 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(&args),
         "artifacts" => cmd_artifacts(&args),
         "eval" => cmd_eval(&args),
+        "lint" => cmd_lint(&args),
         "sweep" => cmd_sweep(&args),
         _ => {
             print!("{USAGE}");
@@ -345,7 +354,7 @@ fn cmd_quantize_synthetic_multi(args: &Args, list: &str) -> Result<()> {
     let threads = args.threads();
     oac::util::pool::set_threads(threads);
     let spec = synthetic_spec_from_args(args);
-    let t = std::time::Instant::now();
+    let t = std::time::Instant::now(); // oac-lint: allow(wallclock, "report-only CLI total= timer")
     let (results, stats) = run_synthetic_fanout_stats(&spec, &cfgs, threads)?;
     println!(
         "fanout: methods={} threads={threads} hessian_kinds={} hessian_builds={} \
@@ -395,7 +404,7 @@ fn cmd_quantize_synthetic(args: &Args) -> Result<()> {
     }
     let p = pipeline_from_args(args)?;
     let spec = synthetic_spec_from_args(args);
-    let t = std::time::Instant::now();
+    let t = std::time::Instant::now(); // oac-lint: allow(wallclock, "report-only CLI total= timer")
     let (ws, report) = run_synthetic(&spec, &p)?;
     if let Some(pack_path) = &p.pack_out {
         let original = oac::coordinator::synthetic_weights(&spec);
@@ -455,7 +464,7 @@ fn cmd_quantize_synthetic_dist(args: &Args, workers: usize) -> Result<()> {
     let p = pipeline_from_args(args)?;
     let spec = synthetic_spec_from_args(args);
     let fault = FaultPlan::seeded(args.u64_or("fault-seed", 0));
-    let t = std::time::Instant::now();
+    let t = std::time::Instant::now(); // oac-lint: allow(wallclock, "report-only CLI total= timer")
     let run = run_synthetic_workers(&spec, &p, workers, fault)?;
     if let Some(pack_path) = &p.pack_out {
         let packed = run.packed.as_ref().expect("pack_out set, coordinator packs");
@@ -512,7 +521,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     let p = pipeline_from_args(args)?;
 
     let calib = splits.calibration(p.n_calib, meta.seq);
-    let t = std::time::Instant::now();
+    let t = std::time::Instant::now(); // oac-lint: allow(wallclock, "report-only CLI total= timer")
     let coord = Coordinator::new(&rt, &meta)?;
     let report = if let Some(pack_path) = &p.pack_out {
         let (packed, report) = coord.quantize_model_packed(&mut ws, &calib, &p)?;
@@ -593,7 +602,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     } else if args.flag("synthetic") {
         let spec = synthetic_spec_from_args(args);
-        let t = std::time::Instant::now();
+        let t = std::time::Instant::now(); // oac-lint: allow(wallclock, "report-only CLI total= timer")
         let (model, report) = oac::serve::build_synthetic(&spec, &p)?;
         println!(
             "quantize: method={} avg_bits={:.2} outliers={} total={:.2}s",
@@ -786,6 +795,40 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `oac lint`: run the static contract analyzer over the repo and exit
+/// nonzero on violations. The scan is rooted at the current directory when
+/// it looks like the repo checkout, else at the build-time manifest dir —
+/// so both `cargo run -- lint` and a CI-invoked release binary see the
+/// sources.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = if std::path::Path::new("rust/src").is_dir() {
+        std::path::PathBuf::from(".")
+    } else {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+    };
+    let rep = oac::analysis::lint_repo(&root)
+        .with_context(|| format!("lint scan under {}", root.display()))?;
+    if args.flag("json") {
+        println!("{}", rep.to_json());
+    } else {
+        for f in &rep.findings {
+            println!("{}", f.render());
+        }
+        println!(
+            "oac lint: {} files scanned, {} deny, {} warn",
+            rep.files_scanned,
+            rep.deny_count(),
+            rep.warn_count()
+        );
+    }
+    let deny = rep.deny_count();
+    let warn = rep.warn_count();
+    if deny > 0 || (args.flag("deny-warnings") && warn > 0) {
+        anyhow::bail!("lint failed: {deny} deny, {warn} warn finding(s)");
+    }
+    Ok(())
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
     let config = args.str_or("config", "tiny");
     let meta = ModelMeta::load(artifacts_root(), &config)?;
@@ -825,7 +868,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 mod tests {
     #[test]
     fn usage_mentions_all_commands() {
-        for cmd in ["info", "backends", "train", "quantize", "serve", "artifacts", "eval", "sweep"]
+        for cmd in
+            ["info", "backends", "train", "quantize", "serve", "artifacts", "eval", "lint", "sweep"]
         {
             assert!(super::USAGE.contains(cmd), "{cmd} missing from usage");
         }

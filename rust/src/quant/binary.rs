@@ -17,6 +17,7 @@ pub fn binarize(vals: &[f32]) -> (f32, Vec<f32>) {
     if vals.is_empty() {
         return (0.0, vec![]);
     }
+    // oac-lint: allow(float-merge, "per-row serial mean |w|; row order is fixed by the caller")
     let alpha = vals.iter().map(|v| v.abs()).sum::<f32>() / vals.len() as f32;
     let approx = vals.iter().map(|v| alpha * v.signum()).collect();
     (alpha, approx)

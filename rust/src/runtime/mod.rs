@@ -8,7 +8,7 @@
 //! executable returns a single tuple literal that we decompose host-side.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
@@ -22,10 +22,12 @@ pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
 }
 
-/// PJRT CPU client + executable cache.
+/// PJRT CPU client + executable cache. The cache is B-tree-backed so any
+/// iteration over loaded executables is path-ordered, never hash-ordered
+/// (the `nondet-collections` contract, `docs/CONTRACTS.md`).
 pub struct Runtime {
     client: xla::PjRtClient,
-    cache: RefCell<HashMap<PathBuf, Rc<Executable>>>,
+    cache: RefCell<BTreeMap<PathBuf, Rc<Executable>>>,
     /// Cumulative host<->device transfer + execute counters (perf metrics).
     pub stats: RefCell<RuntimeStats>,
 }
@@ -50,7 +52,7 @@ impl Runtime {
         );
         Ok(Runtime {
             client,
-            cache: RefCell::new(HashMap::new()),
+            cache: RefCell::new(BTreeMap::new()),
             stats: RefCell::new(RuntimeStats::default()),
         })
     }
@@ -61,6 +63,7 @@ impl Runtime {
         if let Some(exe) = self.cache.borrow().get(&path) {
             return Ok(exe.clone());
         }
+        // oac-lint: allow(wallclock, "report-only compile_secs counter")
         let t = std::time::Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&path)
             .with_context(|| format!("parsing HLO text {}", path.display()))?;
@@ -114,7 +117,7 @@ impl Runtime {
     /// Execute with device-resident inputs; returns the decomposed output
     /// tuple as host literals.
     pub fn run_b(&self, exe: &Executable, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
-        let t = std::time::Instant::now();
+        let t = std::time::Instant::now(); // oac-lint: allow(wallclock, "report-only execute_secs counter")
         let outs = exe
             .exe
             .execute_b(args)
@@ -126,7 +129,7 @@ impl Runtime {
 
     /// Execute with host literals (convenience for small calls).
     pub fn run(&self, exe: &Executable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let t = std::time::Instant::now();
+        let t = std::time::Instant::now(); // oac-lint: allow(wallclock, "report-only execute_secs counter")
         let outs = exe
             .exe
             .execute::<xla::Literal>(args)
@@ -145,7 +148,7 @@ impl Runtime {
         exe: &Executable,
         args: &[&xla::PjRtBuffer],
     ) -> Result<Vec<xla::PjRtBuffer>> {
-        let t = std::time::Instant::now();
+        let t = std::time::Instant::now(); // oac-lint: allow(wallclock, "report-only execute_secs counter")
         let outs = exe
             .exe
             .execute_b(args)

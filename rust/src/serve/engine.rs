@@ -54,17 +54,23 @@
 //!
 //! ## Latency accounting
 //!
-//! A request's reported latency spans **enqueue → completion**: the
-//! [`Instant`] taken when its arrival tick is first observed (fixed mode:
-//! run start — every request is enqueued up front) to the instant after
-//! the batch that finished it. Its service time sums only the wall-clock
-//! of batches it participated in. Both are integer-nanosecond [`Duration`]s
-//! over disjoint intervals inside the latency span, so the invariant
-//! `latency ≥ service` holds exactly (and survives the f64-ms conversion,
-//! which is monotone) — asserted in tests.
+//! Engine state carries **no wall-clock values** (the `wallclock`
+//! contract, `docs/CONTRACTS.md`): every request records three *step
+//! boundaries* — the step count when its arrival was observed (fixed mode:
+//! 0, every request is enqueued up front), when it was admitted, and when
+//! the batch that finished it ended. Latency spans enqueue → completion
+//! (`completed - arrived` steps) and service spans only the batches the
+//! request participated in (`completed - admitted` steps); both are
+//! reported directly as thread-invariant tick counts
+//! ([`ServeReport::latency_ticks`] / [`ServeReport::service_ticks`]).
+//! Wall-clock enters only in the report conversion: [`simulate`] keeps a
+//! report-only table of per-step durations, and a boundary span converts
+//! to seconds through its prefix sums. Both reported spans are sums of the
+//! same disjoint per-step durations, so `latency ≥ service` holds exactly
+//! in ticks *and* in the f64-ms conversion — asserted in tests.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
@@ -327,10 +333,17 @@ pub struct ServeReport {
     /// Per-request enqueue→completion latency in ms, id order (arrival
     /// wait included).
     pub latencies_ms: Vec<f64>,
-    /// Per-request pure service time in ms, id order: the summed
-    /// wall-clock of every batch the request participated in. Invariant:
-    /// `service_ms[i] <= latencies_ms[i]`.
+    /// Per-request pure service time in ms, id order: the span of batches
+    /// the request participated in, converted through the per-step
+    /// duration table. Invariant: `service_ms[i] <= latencies_ms[i]`.
     pub service_ms: Vec<f64>,
+    /// Per-request enqueue→completion span in scheduler steps, id order.
+    /// Pure counter arithmetic — deterministic and thread-invariant,
+    /// unlike the ms conversions above.
+    pub latency_ticks: Vec<u64>,
+    /// Per-request participated-batch span in scheduler steps, id order.
+    /// Invariant: `service_ticks[i] <= latency_ticks[i]`.
+    pub service_ticks: Vec<u64>,
     /// Request ids in completion order (tick, then batch position —
     /// deterministic, thread-invariant).
     pub completion_order: Vec<usize>,
@@ -399,21 +412,34 @@ impl ServeReport {
     }
 }
 
-/// Live per-request scheduler state.
+/// Live per-request scheduler state. Timing is held as *step boundaries*
+/// (0 = before any batch ran, k = after k batches ran) — pure counters, no
+/// wall-clock values, so scheduler state is bit-reproducible by
+/// construction.
 struct ReqState {
     cursor: usize,
     decoded: usize,
     state: Vec<f32>,
-    arrived: Option<Instant>,
-    completed: Option<Instant>,
-    service: Duration,
+    /// Boundary at which the arrival was observed (fixed mode: 0).
+    arrived_at: Option<usize>,
+    /// Boundary at which the request entered the active set (fully-cached
+    /// prompts complete here with zero service).
+    admitted_at: Option<usize>,
+    /// Boundary after the batch that finished it (== `admitted_at` for
+    /// zero-work completions).
+    completed_at: Option<usize>,
 }
 
 /// One simulated pass over a schedule (counters + outputs, id order).
 struct SimOut {
     outputs: Vec<Vec<f32>>,
-    latency: Vec<Duration>,
-    service: Vec<Duration>,
+    /// Enqueue→completion spans in scheduler steps, id order.
+    latency_ticks: Vec<u64>,
+    /// Participated-batch spans in scheduler steps, id order.
+    service_ticks: Vec<u64>,
+    /// The same spans converted through the per-step duration table.
+    latency_secs: Vec<f64>,
+    service_secs: Vec<f64>,
     completion_order: Vec<usize>,
     ticks: usize,
     prefill_steps: usize,
@@ -422,7 +448,7 @@ struct SimOut {
     shared_tokens: usize,
     prefix_evictions: usize,
     col_steps: usize,
-    wall: Duration,
+    wall: f64,
 }
 
 /// The scheduler core shared by the continuous and fixed-batch modes (and
@@ -466,9 +492,9 @@ impl<'a> Sim<'a> {
                 cursor: 0,
                 decoded: 0,
                 state: vec![0.0f32; d_model],
-                arrived: None,
-                completed: None,
-                service: Duration::ZERO,
+                arrived_at: None,
+                admitted_at: None,
+                completed_at: None,
             })
             .collect();
         Sim {
@@ -503,6 +529,7 @@ impl<'a> Sim<'a> {
     /// prompt prefix. Bit-transparent: the cached state is exactly what a
     /// from-scratch prefill of the same prefix would produce.
     fn admit(&mut self, i: usize) {
+        self.reqs[i].admitted_at = Some(self.ticks);
         if self.prefix_share {
             let tokens = &self.specs[i].tokens;
             for l in (1..=tokens.len()).rev() {
@@ -518,7 +545,7 @@ impl<'a> Sim<'a> {
         // Fully-cached prompt with nothing to decode: complete at
         // admission (zero batches, zero service).
         if self.done(i) {
-            self.reqs[i].completed = self.reqs[i].arrived;
+            self.reqs[i].completed_at = Some(self.ticks);
             self.completion_order.push(i);
         }
     }
@@ -548,17 +575,13 @@ impl<'a> Sim<'a> {
                 }
             }
         }
-        let t0 = Instant::now();
         block_forward_into(apply, blocks, &self.xbuf, &mut self.bufs);
-        let t1 = Instant::now();
-        let dt = t1 - t0;
         let mut still = Vec::with_capacity(width);
         for (j, &i) in active.iter().enumerate() {
             let r = &mut self.reqs[i];
             for row in 0..self.d_model {
                 r.state[row] = self.bufs.h.at(row, j);
             }
-            r.service += dt;
             self.col_steps += 1;
             if r.cursor < self.specs[i].tokens.len() {
                 r.cursor += 1;
@@ -584,7 +607,8 @@ impl<'a> Sim<'a> {
                 self.decode_steps += 1;
             }
             if self.done(i) {
-                self.reqs[i].completed = Some(t1);
+                // Completion lands on the boundary *after* this step.
+                self.reqs[i].completed_at = Some(self.ticks + 1);
                 self.completion_order.push(i);
             } else {
                 still.push(i);
@@ -594,21 +618,42 @@ impl<'a> Sim<'a> {
         self.ticks += 1;
     }
 
-    fn finish(self, start: Instant) -> SimOut {
-        let wall = start.elapsed();
+    /// Convert the recorded step boundaries into the report: tick spans
+    /// directly, and seconds through the prefix sums of the report-only
+    /// per-step duration table. Every request's span is a sum of the same
+    /// disjoint per-step durations (arrived ≤ admitted ≤ completed), so
+    /// `latency ≥ service` holds exactly in both units.
+    fn finish(self, step_secs: &[f64], wall: f64) -> SimOut {
+        debug_assert_eq!(step_secs.len(), self.ticks);
+        let mut cum = Vec::with_capacity(step_secs.len() + 1);
+        let mut acc = 0.0f64;
+        cum.push(0.0);
+        for &s in step_secs {
+            acc += s;
+            cum.push(acc);
+        }
         let mut outputs = Vec::with_capacity(self.reqs.len());
-        let mut latency = Vec::with_capacity(self.reqs.len());
-        let mut service = Vec::with_capacity(self.reqs.len());
+        let mut latency_ticks = Vec::with_capacity(self.reqs.len());
+        let mut service_ticks = Vec::with_capacity(self.reqs.len());
+        let mut latency_secs = Vec::with_capacity(self.reqs.len());
+        let mut service_secs = Vec::with_capacity(self.reqs.len());
         for r in &self.reqs {
             outputs.push(r.state.clone());
-            let (a, c) = (r.arrived.expect("request never arrived"), r.completed.expect("request never completed"));
-            latency.push(c - a);
-            service.push(r.service);
+            let a = r.arrived_at.expect("request never arrived");
+            let ad = r.admitted_at.expect("request never admitted");
+            let c = r.completed_at.expect("request never completed");
+            debug_assert!(a <= ad && ad <= c && c <= self.ticks);
+            latency_ticks.push((c - a) as u64);
+            service_ticks.push((c - ad) as u64);
+            latency_secs.push(cum[c] - cum[a]);
+            service_secs.push(cum[c] - cum[ad]);
         }
         SimOut {
             outputs,
-            latency,
-            service,
+            latency_ticks,
+            service_ticks,
+            latency_secs,
+            service_secs,
             completion_order: self.completion_order,
             ticks: self.ticks,
             prefill_steps: self.prefill_steps,
@@ -638,7 +683,10 @@ fn simulate<F: FnMut(&str, &Mat, &mut Mat)>(
     prefix_share: bool,
     prefix_cache_cap: usize,
 ) -> SimOut {
-    let start = Instant::now();
+    // Wall-clock lives only here, in the report-only per-step duration
+    // table + overall wall; it never reaches Sim or ReqState.
+    let start = Instant::now(); // oac-lint: allow(wallclock, "report-only wall timer for throughput")
+    let mut step_secs: Vec<f64> = Vec::new();
     let mut sim = Sim::new(specs, seed, d_model, prefix_share, prefix_cache_cap);
     let n = specs.len();
     if continuous {
@@ -653,7 +701,7 @@ fn simulate<F: FnMut(&str, &Mat, &mut Mat)>(
         loop {
             while next_arrival < n && specs[order[next_arrival]].arrival_tick <= tick {
                 let i = order[next_arrival];
-                sim.reqs[i].arrived = Some(Instant::now());
+                sim.reqs[i].arrived_at = Some(sim.ticks);
                 waiting.push_back(i);
                 next_arrival += 1;
             }
@@ -661,7 +709,7 @@ fn simulate<F: FnMut(&str, &Mat, &mut Mat)>(
                 match waiting.pop_front() {
                     Some(i) => {
                         sim.admit(i);
-                        if sim.reqs[i].completed.is_none() {
+                        if sim.reqs[i].completed_at.is_none() {
                             active.push(i);
                         }
                     }
@@ -680,7 +728,7 @@ fn simulate<F: FnMut(&str, &Mat, &mut Mat)>(
                 // queue_depth 0 is rejected by run(); unreachable.
                 break;
             }
-            sim.step(apply, blocks, &mut active);
+            timed_step(&mut sim, apply, blocks, &mut active, &mut step_secs);
             tick += 1;
         }
     } else {
@@ -688,22 +736,36 @@ fn simulate<F: FnMut(&str, &Mat, &mut Mat)>(
         // front (arrival ticks ignored), chunks run to completion in id
         // order. Latency therefore includes the wait for earlier chunks.
         for r in &mut sim.reqs {
-            r.arrived = Some(start);
+            r.arrived_at = Some(0);
         }
         for cr in chunk_ranges(n, chunk) {
             let mut active: Vec<usize> = Vec::with_capacity(cr.end - cr.start);
             for i in cr.start..cr.end {
                 sim.admit(i);
-                if sim.reqs[i].completed.is_none() {
+                if sim.reqs[i].completed_at.is_none() {
                     active.push(i);
                 }
             }
             while !active.is_empty() {
-                sim.step(apply, blocks, &mut active);
+                timed_step(&mut sim, apply, blocks, &mut active, &mut step_secs);
             }
         }
     }
-    sim.finish(start)
+    let wall = start.elapsed().as_secs_f64();
+    sim.finish(&step_secs, wall)
+}
+
+/// One scheduler step plus its report-only duration-table entry.
+fn timed_step<F: FnMut(&str, &Mat, &mut Mat)>(
+    sim: &mut Sim,
+    apply: &mut F,
+    blocks: usize,
+    active: &mut Vec<usize>,
+    step_secs: &mut Vec<f64>,
+) {
+    let t0 = Instant::now(); // oac-lint: allow(wallclock, "report-only per-step latency table")
+    sim.step(apply, blocks, active);
+    step_secs.push(t0.elapsed().as_secs_f64());
 }
 
 /// Stack per-request output vectors into one matrix (column j = request j)
@@ -807,7 +869,7 @@ pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
                 &[outputs_mat(&base.outputs, d_model)],
                 &[outputs_mat(&packed.outputs, d_model)],
             );
-            (Some(base.wall.as_secs_f64()), Some(err))
+            (Some(base.wall), Some(err))
         } else {
             for (i, (a, b)) in packed.outputs.iter().zip(&base.outputs).enumerate() {
                 ensure!(
@@ -815,7 +877,7 @@ pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
                     "packed forward diverged from the from-scratch dense reference on request {i}"
                 );
             }
-            (Some(base.wall.as_secs_f64()), None)
+            (Some(base.wall), None)
         }
     } else {
         (None, None)
@@ -839,8 +901,10 @@ pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
         schedule: cfg.arrival.label(),
         packed_bytes: model.packed_bytes(),
         dense_bytes: model.dense_bytes(),
-        latencies_ms: packed.latency.iter().map(|d| d.as_secs_f64() * 1e3).collect(),
-        service_ms: packed.service.iter().map(|d| d.as_secs_f64() * 1e3).collect(),
+        latencies_ms: packed.latency_secs.iter().map(|s| s * 1e3).collect(),
+        service_ms: packed.service_secs.iter().map(|s| s * 1e3).collect(),
+        latency_ticks: packed.latency_ticks,
+        service_ticks: packed.service_ticks,
         completion_order: packed.completion_order,
         ticks: packed.ticks,
         prefill_steps: packed.prefill_steps,
@@ -849,7 +913,7 @@ pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
         shared_tokens: packed.shared_tokens,
         prefix_evictions: packed.prefix_evictions,
         mean_batch: packed.col_steps as f64 / (packed.ticks.max(1)) as f64,
-        packed_secs: packed.wall.as_secs_f64(),
+        packed_secs: packed.wall,
         dense_secs,
         int8_err,
         checksum: h,
@@ -920,6 +984,7 @@ mod tests {
     fn engine_runs_and_checksums_are_thread_invariant() {
         let model = small_model();
         let mut reference: Option<(u64, u64)> = None;
+        let mut tick_reference: Option<(Vec<u64>, Vec<u64>)> = None;
         for threads in [1usize, 2, 4, 8] {
             let cfg = ServeConfig {
                 batch: 3,
@@ -942,6 +1007,21 @@ mod tests {
             match reference {
                 None => reference = Some(got),
                 Some(want) => assert_eq!(want, got, "threads={threads}"),
+            }
+            // Regression (wallclock contract): tick-derived spans are pure
+            // scheduler arithmetic, so they are *exactly* identical across
+            // thread counts — wall-clock never reaches engine state.
+            assert_eq!(rep.latency_ticks.len(), 7);
+            for (i, (&lt, &st)) in rep.latency_ticks.iter().zip(&rep.service_ticks).enumerate()
+            {
+                assert!(st > 0, "request {i} ran batches, service_ticks must be > 0");
+                assert!(lt >= st, "request {i}: latency {lt} < service {st} ticks");
+                assert!(lt as usize <= rep.ticks);
+            }
+            let ticks = (rep.latency_ticks.clone(), rep.service_ticks.clone());
+            match &tick_reference {
+                None => tick_reference = Some(ticks),
+                Some(want) => assert_eq!(*want, ticks, "threads={threads}"),
             }
         }
     }
@@ -1131,6 +1211,18 @@ mod tests {
             .filter(|(l, s)| *l > *s)
             .count();
         assert!(waited >= 1, "burst at depth 1 must make someone wait");
+        // The same structure in pure tick units: at depth 1 requests run
+        // one at a time, so all-but-one wait, and each request's wait is
+        // exactly the steps spent serving its predecessors.
+        let tick_waited = rep
+            .latency_ticks
+            .iter()
+            .zip(&rep.service_ticks)
+            .filter(|(l, s)| *l > *s)
+            .count();
+        assert_eq!(tick_waited, 3, "burst at depth 1: everyone but the first waits");
+        let total_service: u64 = rep.service_ticks.iter().sum();
+        assert_eq!(total_service as usize, rep.ticks, "depth 1 serializes every batch");
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! Integration tests for `oac lint`, the in-repo contract analyzer.
+//!
+//! Two layers: the fixture corpus under `lint_fixtures/` (each rule has a
+//! bad snippet that must fire and an allowed snippet that must not — the
+//! fixtures are excluded from repo scans and are never compiled), and the
+//! self-hosting gate: the repo's own sources lint clean under
+//! `--deny-warnings`, which is exactly what the `lint-contracts` CI job
+//! enforces through the CLI.
+
+use std::path::Path;
+use std::process::Command;
+
+use oac::analysis::report::{Finding, Severity};
+use oac::analysis::{lint_repo, lint_source, FileCtx};
+use oac::util::json::Json;
+
+/// Lint a fixture's text as if it lived at `rel_path` (fixtures borrow a
+/// real module path so module-scoped rules apply).
+fn lint_as(src: &str, rel_path: &str) -> Vec<Finding> {
+    lint_source(src, &FileCtx::from_rel_path(rel_path))
+}
+
+fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ------------------------------------------------------------- fixtures
+
+#[test]
+fn fixture_nondet_collections() {
+    let bad = lint_as(
+        include_str!("lint_fixtures/nondet_bad.rs"),
+        "rust/src/hessian/fixture.rs",
+    );
+    assert!(!bad.is_empty());
+    assert!(
+        bad.iter().all(|f| f.rule == "nondet-collections" && f.severity == Severity::Deny),
+        "{bad:?}"
+    );
+
+    let ok = lint_as(
+        include_str!("lint_fixtures/nondet_allowed.rs"),
+        "rust/src/hessian/fixture.rs",
+    );
+    assert!(ok.is_empty(), "{ok:?}");
+}
+
+#[test]
+fn fixture_wallclock() {
+    let bad = lint_as(
+        include_str!("lint_fixtures/wallclock_bad.rs"),
+        "rust/src/serve/fixture.rs",
+    );
+    // One Instant::now acquisition + every SystemTime mention.
+    assert!(bad.len() >= 2, "{bad:?}");
+    assert!(
+        bad.iter().all(|f| f.rule == "wallclock" && f.severity == Severity::Deny),
+        "{bad:?}"
+    );
+
+    let ok = lint_as(
+        include_str!("lint_fixtures/wallclock_allowed.rs"),
+        "rust/src/serve/fixture.rs",
+    );
+    assert!(ok.is_empty(), "{ok:?}");
+
+    // The same bad source is fine where timing is the job description.
+    let bench = lint_as(include_str!("lint_fixtures/wallclock_bad.rs"), "benches/fixture.rs");
+    assert!(bench.is_empty(), "{bench:?}");
+}
+
+#[test]
+fn fixture_threading() {
+    let bad = lint_as(
+        include_str!("lint_fixtures/threading_bad.rs"),
+        "rust/src/coordinator/fixture.rs",
+    );
+    assert_eq!(rules_of(&bad), vec!["threading"], "{bad:?}");
+    assert_eq!(bad[0].severity, Severity::Deny);
+
+    let ok = lint_as(
+        include_str!("lint_fixtures/threading_allowed.rs"),
+        "rust/src/coordinator/fixture.rs",
+    );
+    assert!(ok.is_empty(), "{ok:?}");
+
+    // Blessed files may spawn without a pragma.
+    let pool = lint_as(include_str!("lint_fixtures/threading_bad.rs"), "rust/src/util/pool.rs");
+    assert!(pool.is_empty(), "{pool:?}");
+}
+
+#[test]
+fn fixture_registry_purity() {
+    let bad = lint_as(
+        include_str!("lint_fixtures/registry_bad.rs"),
+        "rust/src/serve/fixture.rs",
+    );
+    // `name == "optq"` plus the two backend-name match arms.
+    assert_eq!(bad.len(), 3, "{bad:?}");
+    assert!(
+        bad.iter().all(|f| f.rule == "registry-purity" && f.severity == Severity::Deny),
+        "{bad:?}"
+    );
+
+    let ok = lint_as(
+        include_str!("lint_fixtures/registry_allowed.rs"),
+        "rust/src/serve/fixture.rs",
+    );
+    assert!(ok.is_empty(), "{ok:?}");
+
+    // Inside the backend's own module the same code is the implementation.
+    let own = lint_as(include_str!("lint_fixtures/registry_bad.rs"), "rust/src/calib/optq.rs");
+    assert!(own.is_empty(), "{own:?}");
+}
+
+#[test]
+fn fixture_float_merge() {
+    let bad = lint_as(
+        include_str!("lint_fixtures/float_merge_bad.rs"),
+        "rust/src/hessian/fixture.rs",
+    );
+    // The typed sum and the additive fold; both advisory.
+    assert_eq!(bad.len(), 2, "{bad:?}");
+    assert!(
+        bad.iter().all(|f| f.rule == "float-merge" && f.severity == Severity::Warn),
+        "{bad:?}"
+    );
+
+    let ok = lint_as(
+        include_str!("lint_fixtures/float_merge_allowed.rs"),
+        "rust/src/hessian/fixture.rs",
+    );
+    assert!(ok.is_empty(), "{ok:?}");
+}
+
+#[test]
+fn fixture_pragma_machinery() {
+    let f = lint_as(include_str!("lint_fixtures/pragma_bad.rs"), "rust/src/serve/fixture.rs");
+    // Reasonless allow (deny) + unsuppressed Instant::now (deny) +
+    // unknown rule id (deny) + stale allow (warn).
+    let denies = f.iter().filter(|x| x.severity == Severity::Deny).count();
+    let warns = f.iter().filter(|x| x.severity == Severity::Warn).count();
+    assert_eq!((denies, warns), (3, 1), "{f:?}");
+    assert!(f.iter().any(|x| x.rule == "wallclock"), "{f:?}");
+    assert!(
+        f.iter().any(|x| x.rule == "pragma" && x.message.contains("unknown rule")),
+        "{f:?}"
+    );
+    assert!(
+        f.iter().any(|x| x.rule == "pragma" && x.message.contains("unused")),
+        "{f:?}"
+    );
+}
+
+// ---------------------------------------------------------- self-hosting
+
+/// The repo lints clean under `--deny-warnings` — every wall-clock or
+/// float-merge site in the tree either moved to the blessed substrate or
+/// carries a reasoned pragma. This is the library-level twin of the
+/// `lint-contracts` CI job.
+#[test]
+fn repo_lints_clean_with_deny_warnings() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let rep = lint_repo(root).unwrap();
+    assert!(rep.files_scanned > 30, "suspiciously small scan: {}", rep.files_scanned);
+    let rendered: Vec<String> = rep.findings.iter().map(|f| f.render()).collect();
+    assert_eq!(
+        (rep.deny_count(), rep.warn_count()),
+        (0, 0),
+        "repo must self-host clean:\n{}",
+        rendered.join("\n")
+    );
+}
+
+/// Fixtures never leak into the repo scan (they are deliberately dirty).
+#[test]
+fn repo_scan_excludes_fixtures() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let files = oac::analysis::walk::rust_files(root).unwrap();
+    assert!(files.iter().all(|(_, rel)| !rel.contains("lint_fixtures")), "fixtures scanned");
+    // But this very test file is scanned.
+    assert!(files.iter().any(|(_, rel)| rel == "rust/tests/lint.rs"));
+}
+
+// ------------------------------------------------------------ CLI layer
+
+/// `oac lint --json --deny-warnings` through the real binary: exit 0 on
+/// this repo and the stable JSON schema on stdout.
+#[test]
+fn cli_lint_json_clean() {
+    let out = Command::new(env!("CARGO_BIN_EXE_oac"))
+        .args(["lint", "--json", "--deny-warnings"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("run oac lint");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "lint failed:\n{stdout}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let j = Json::parse(&stdout).expect("lint --json emits valid JSON");
+    assert_eq!(j.req("deny").as_usize(), Some(0), "{stdout}");
+    assert_eq!(j.req("warn").as_usize(), Some(0), "{stdout}");
+    assert!(j.req("files_scanned").as_usize().unwrap() > 30, "{stdout}");
+    assert_eq!(j.req("findings").as_arr().map(<[Json]>::len), Some(0), "{stdout}");
+}

@@ -1,0 +1,11 @@
+// Fixture (not compiled): the pragma'd serial sum and the exempt
+// order-independent fold. Linted as `rust/src/hessian/fixture.rs` — clean.
+
+pub fn mean(xs: &[f32]) -> f32 {
+    // oac-lint: allow(float-merge, "report-only statistic, stays serial")
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+pub fn peak(xs: &[f32]) -> f32 {
+    xs.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+}

@@ -1,0 +1,11 @@
+// Fixture (not compiled): order-dependent float reductions in a
+// determinism-critical module. Linted as `rust/src/hessian/fixture.rs` —
+// the typed sum and the additive fold are `float-merge` warns.
+
+pub fn mean(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+pub fn log_sum(xs: &[f64]) -> f64 {
+    xs.iter().fold(0.0, |acc, x| acc + x.ln())
+}

@@ -1,0 +1,14 @@
+// Fixture (not compiled): the deterministic spelling plus one pragma'd
+// lookup-only HashMap. Linted as `rust/src/hessian/fixture.rs` — clean.
+
+use std::collections::BTreeMap;
+// oac-lint: allow(nondet-collections, "lookup-only alias table, never iterated")
+use std::collections::HashMap;
+
+pub fn histogram(xs: &[u32]) -> BTreeMap<u32, usize> {
+    let mut h = BTreeMap::new();
+    for &x in xs {
+        *h.entry(x).or_insert(0) += 1;
+    }
+    h
+}

@@ -1,0 +1,13 @@
+// Fixture (not compiled): HashMap in a determinism-critical module.
+// Linted as `rust/src/hessian/fixture.rs` — every HashMap mention is a
+// `nondet-collections` deny.
+
+use std::collections::HashMap;
+
+pub fn histogram(xs: &[u32]) -> HashMap<u32, usize> {
+    let mut h = HashMap::new();
+    for &x in xs {
+        *h.entry(x).or_insert(0) += 1;
+    }
+    h
+}

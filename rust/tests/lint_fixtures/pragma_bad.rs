@@ -1,0 +1,19 @@
+// Fixture (not compiled): broken pragma machinery. Linted under any
+// path — the reasonless allow and the unknown rule are `pragma` denies,
+// and the allow that suppresses nothing is a `pragma` warn.
+
+pub fn reasonless() -> f64 {
+    // oac-lint: allow(wallclock)
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn typo() -> u32 {
+    // oac-lint: allow(wallclok, "rule id misspelled")
+    1
+}
+
+pub fn stale() -> u32 {
+    // oac-lint: allow(threading, "nothing here spawns")
+    2
+}

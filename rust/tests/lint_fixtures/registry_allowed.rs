@@ -1,0 +1,14 @@
+// Fixture (not compiled): a pragma'd backend-name comparison plus the
+// uses that never fire (defaults, tables, prints). Linted as
+// `rust/src/serve/fixture.rs` — clean.
+
+pub fn is_paper_default(method: &str) -> bool {
+    // oac-lint: allow(registry-purity, "fixture: documenting the blessed alias check")
+    method == "oac"
+}
+
+pub const KNOWN: &[&str] = &["rtn", "optq", "billm"];
+
+pub fn default_method() -> &'static str {
+    "oac"
+}

@@ -1,0 +1,15 @@
+// Fixture (not compiled): backend-name string dispatch outside the
+// backend's module. Linted as `rust/src/serve/fixture.rs` — the `==`
+// comparison and both match arms are `registry-purity` denies.
+
+pub fn is_default_backend(name: &str) -> bool {
+    name == "optq"
+}
+
+pub fn backend_code(name: &str) -> u32 {
+    match name {
+        "rtn" => 0,
+        "billm" => 1,
+        _ => 9,
+    }
+}

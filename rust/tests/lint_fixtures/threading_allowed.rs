@@ -1,0 +1,6 @@
+// Fixture (not compiled): a pragma'd spawn site. Linted as
+// `rust/src/coordinator/fixture.rs` — clean.
+
+pub fn spawn_one() -> std::thread::JoinHandle<()> {
+    std::thread::spawn(|| {}) // oac-lint: allow(threading, "fixture: joined immediately by the caller")
+}

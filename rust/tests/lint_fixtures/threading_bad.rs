@@ -1,0 +1,12 @@
+// Fixture (not compiled): ad-hoc thread::spawn outside util::pool and
+// dist::transport. Linted as `rust/src/coordinator/fixture.rs` — deny.
+
+pub fn fan_out(n: usize) {
+    let mut handles = Vec::new();
+    for _ in 0..n {
+        handles.push(std::thread::spawn(|| {}));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}

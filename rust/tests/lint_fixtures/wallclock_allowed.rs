@@ -1,0 +1,8 @@
+// Fixture (not compiled): a report-only timer with a trailing pragma.
+// Linted as `rust/src/serve/fixture.rs` — clean.
+
+pub fn report_only(work: impl FnOnce()) -> f64 {
+    let t0 = std::time::Instant::now(); // oac-lint: allow(wallclock, "report-only wall timer")
+    work();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,16 @@
+// Fixture (not compiled): wall-clock reads outside the timing substrate.
+// Linted as `rust/src/serve/fixture.rs` — `Instant::now` and every
+// `SystemTime` mention are `wallclock` denies.
+
+pub fn step_duration(work: impl FnOnce()) -> f64 {
+    let t0 = std::time::Instant::now();
+    work();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn epoch_millis() -> u128 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_millis()
+}

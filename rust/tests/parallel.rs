@@ -320,6 +320,7 @@ fn serve_schedule_bit_identical_across_threads_and_modes() {
                 ..Default::default()
             };
             let mut want: Option<(u64, u64, Vec<usize>, usize)> = None;
+            let mut want_ticks: Option<(Vec<u64>, Vec<u64>)> = None;
             for threads in THREAD_COUNTS {
                 let rep = engine::run(
                     &model,
@@ -332,6 +333,17 @@ fn serve_schedule_bit_identical_across_threads_and_modes() {
                         "{kind:?} act_bits={act_bits} threads={threads} request {i}: \
                          latency {l}ms < service {s}ms"
                     );
+                }
+                // Engine state carries no wall-clock (wallclock contract):
+                // the tick-derived spans are scheduler arithmetic and must
+                // be bit-identical across thread counts, not just ordered.
+                let ticks = (rep.latency_ticks.clone(), rep.service_ticks.clone());
+                match &want_ticks {
+                    None => want_ticks = Some(ticks),
+                    Some(w) => assert_eq!(
+                        w, &ticks,
+                        "{kind:?} act_bits={act_bits} tick spans diverged at {threads} threads"
+                    ),
                 }
                 let got = (
                     rep.checksum,
