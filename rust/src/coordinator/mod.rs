@@ -106,6 +106,12 @@ pub struct PipelineConfig {
     /// Where to save the packed serving export (`--pack-out`); None skips
     /// the export.
     pub pack_out: Option<PathBuf>,
+    /// Directory of the distributed coordinator's crash-recovery journal
+    /// (`--journal`); None runs unjournaled. Only meaningful with
+    /// `--workers`.
+    pub journal: Option<PathBuf>,
+    /// Resume a killed distributed run from its journal (`--resume`).
+    pub resume: bool,
 }
 
 impl PipelineConfig {
@@ -118,6 +124,8 @@ impl PipelineConfig {
             use_kernel: true,
             overlap: true,
             pack_out: None,
+            journal: None,
+            resume: false,
         }
     }
 }
@@ -153,6 +161,8 @@ impl Pipeline {
             use_kernel: None,
             overlap: None,
             pack_out: None,
+            journal: None,
+            resume: None,
         }
     }
 }
@@ -172,6 +182,8 @@ pub struct PipelineBuilder {
     use_kernel: Option<bool>,
     overlap: Option<bool>,
     pack_out: Option<PathBuf>,
+    journal: Option<PathBuf>,
+    resume: Option<bool>,
 }
 
 impl PipelineBuilder {
@@ -242,6 +254,22 @@ impl PipelineBuilder {
         self
     }
 
+    /// Directory for the distributed coordinator's crash-recovery journal
+    /// (`--journal <dir>`). Carried on [`PipelineConfig::journal`] for the
+    /// `--workers` run driver, which journals every state transition and
+    /// can resume a killed run (see [`crate::dist::journal`]).
+    pub fn journal(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.journal = Some(dir.into());
+        self
+    }
+
+    /// Resume a killed distributed run from its `--journal` directory
+    /// (`--resume`).
+    pub fn resume(mut self, resume: bool) -> Self {
+        self.resume = Some(resume);
+        self
+    }
+
     pub fn build(self) -> Result<PipelineConfig> {
         let supported = self.method.backend.supported_bits();
         let bits = match self.bits {
@@ -287,6 +315,8 @@ impl PipelineBuilder {
             p.overlap = v;
         }
         p.pack_out = self.pack_out;
+        p.journal = self.journal;
+        p.resume = self.resume.unwrap_or(false);
         Ok(p)
     }
 }
@@ -785,7 +815,7 @@ pub fn calibrate_block(
 /// executions. Exists so the parallel engine (and the CLI) can be exercised
 /// end-to-end — and its `--threads` determinism contract tested — on
 /// machines without the XLA toolchain or prebuilt artifacts.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SyntheticSpec {
     pub blocks: usize,
     pub d_model: usize,

@@ -10,16 +10,17 @@
 //!       └── lease expiry┘            (after the last block) ──▶ Packing ──▶ Done
 //! ```
 //!
-//! * **Assigning** — every not-yet-done Gram unit without a live lease is
-//!   leased round-robin to a worker ([`protocol::CoordMsg::Assign`]); the
-//!   lease table records `(unit, worker, expiry tick)`.
+//! * **Assigning** — every not-yet-done Gram unit without a live lease
+//!   whose deterministic retry backoff has elapsed is leased round-robin to
+//!   a worker ([`protocol::CoordMsg::Assign`]); the lease table records
+//!   `(unit, worker, expiry tick)`.
 //! * **Accumulating** — drive the transport's virtual clock, collect
 //!   [`protocol::WorkerMsg::GramDone`] replies, verify each payload's
 //!   digest, and **deduplicate by unit** (not lease): results are pure
 //!   functions of their indices, so the first arriving copy — original,
 //!   duplicate, or stale retry — is accepted and every later copy is
 //!   discarded. Expired leases send the state machine back to Assigning
-//!   for the affected units.
+//!   for the affected units after [`retry_backoff`] ticks.
 //! * **Merging** — fold the block's Grams in the fixed `(layer, sample)`
 //!   order through [`Hessian::from_grams`], exactly as the in-process
 //!   scheduler's merge stage does. Arrival order is irrelevant by
@@ -32,13 +33,32 @@
 //!   [`PackedModel::from_quantized`] against the regenerated original
 //!   weights.
 //!
+//! ## Crash recovery
+//!
+//! When a [`Journal`](super::journal::Journal) is attached, every state
+//! transition above is journaled *before* it is applied in memory, and a
+//! seeded [`CoordKill`] schedule can kill the coordinator at any of them
+//! (at a tick, after K accepted results, or at a block's Merging entry).
+//! [`run_synthetic_journal`] with `resume = true` replays the journal back
+//! into [`Recovered`] state — completed blocks are rebuilt from their
+//! journaled Gram payloads and verified against their journaled weight
+//! fingerprints, in-flight leases are treated as expired and re-leased
+//! after the same deterministic backoff, and stragglers from the previous
+//! incarnation dedup by unit — then finishes the run **bit-identically**
+//! (same checksum and packed bytes) to an uninterrupted single-process
+//! run. [`retry_backoff`] derives retry delays from the retry count alone,
+//! never the wall clock, preserving the virtual-clock contract across
+//! incarnations.
+//!
 //! The resulting weights, report, and packed bytes are bit-identical to
-//! [`crate::coordinator::run_synthetic`] for any `--workers N` and any
-//! [`FaultPlan`] (enforced by `rust/tests/dist.rs` and CI's `dist-smoke`).
+//! [`crate::coordinator::run_synthetic`] for any `--workers N`, any
+//! [`FaultPlan`], and any kill/resume chain (enforced by
+//! `rust/tests/dist.rs` and CI's `dist-smoke` / `dist-chaos-smoke`).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::coordinator::{
     calibrate_block, synthetic_layers, synthetic_weights, LayerReport, PipelineConfig,
@@ -49,9 +69,11 @@ use crate::model::{LinearSpec, WeightStore};
 use crate::quant::BitBudget;
 use crate::serve::PackedModel;
 use crate::tensor::Mat;
+use crate::util::digest;
 
-use super::protocol::{decode_gram, CoordMsg, GramUnit, LeaseId, WorkerMsg};
-use super::transport::{FaultPlan, LocalTransport, Transport};
+use super::journal::{Event, Journal, Recovered, RunMeta};
+use super::protocol::{decode_gram, CoordMsg, GramUnit, LeaseId, WorkerId, WorkerMsg};
+use super::transport::{CoordKill, FaultPlan, LocalTransport, Transport, TransportStats};
 
 /// Coordinator state-machine phases, logged in transition order so tests
 /// can assert the protocol actually moved through its states.
@@ -63,6 +85,41 @@ pub enum Phase {
     Calibrating,
     Packing,
     Done,
+}
+
+impl Phase {
+    /// Stable one-byte encoding used by the journal.
+    pub fn code(&self) -> u8 {
+        match self {
+            Phase::Assigning => 0,
+            Phase::Accumulating => 1,
+            Phase::Merging => 2,
+            Phase::Calibrating => 3,
+            Phase::Packing => 4,
+            Phase::Done => 5,
+        }
+    }
+
+    /// Inverse of [`Phase::code`].
+    pub fn from_code(code: u8) -> Option<Phase> {
+        Some(match code {
+            0 => Phase::Assigning,
+            1 => Phase::Accumulating,
+            2 => Phase::Merging,
+            3 => Phase::Calibrating,
+            4 => Phase::Packing,
+            5 => Phase::Done,
+            _ => return None,
+        })
+    }
+}
+
+/// Deterministic re-lease backoff: how many ticks a unit waits after its
+/// `retry`-th failure before it is assignable again. A pure function of
+/// the retry count — never the wall clock — so recovery replays the same
+/// schedule the dead coordinator would have run (capped at 32 ticks).
+pub fn retry_backoff(retry: usize) -> u64 {
+    1u64 << retry.min(5)
 }
 
 /// Protocol tuning knobs.
@@ -97,13 +154,24 @@ pub struct DistStats {
     pub ticks: u64,
     /// Phase transitions in order (deduplicated consecutive entries).
     pub phase_log: Vec<Phase>,
+    /// Per-fault-kind transport counters: what the fault injector
+    /// actually did (drops, duplicates, delays, corruptions, kills).
+    pub faults: TransportStats,
+    /// Coordinator incarnations that contributed (1 = never killed).
+    pub incarnations: u32,
+    /// Journal events replayed on resume (0 for a fresh run).
+    pub replayed: usize,
 }
 
 impl DistStats {
-    fn enter(&mut self, p: Phase) {
+    /// Record a phase transition; returns `true` when the phase actually
+    /// changed (the journal writes one record per real transition).
+    fn enter(&mut self, p: Phase) -> bool {
         if self.phase_log.last() != Some(&p) {
             self.phase_log.push(p);
+            return true;
         }
+        false
     }
 }
 
@@ -118,8 +186,150 @@ pub struct DistRun {
     pub stats: DistStats,
 }
 
+/// How the coordinator died when a [`CoordKill`] schedule fired.
+#[derive(Debug, Clone)]
+pub struct KillReport {
+    /// The schedule that fired, in `--coord-kill` spelling.
+    pub schedule: String,
+    /// Virtual tick at the kill point.
+    pub ticks: u64,
+    /// Protocol accounting up to the kill.
+    pub stats: DistStats,
+}
+
+/// Outcome of a journaled run: finished, or killed mid-run by the
+/// configured [`CoordKill`] schedule (restart with `--resume` to finish).
+pub enum DistOutcome {
+    Done(Box<DistRun>),
+    Killed(KillReport),
+}
+
+impl DistOutcome {
+    /// Unwrap the finished run; errors if the kill schedule fired.
+    pub fn into_done(self) -> Result<DistRun> {
+        match self {
+            DistOutcome::Done(run) => Ok(*run),
+            DistOutcome::Killed(k) => {
+                bail!("coordinator killed by schedule {} at tick {}", k.schedule, k.ticks)
+            }
+        }
+    }
+}
+
+/// The configured [`CoordKill`] schedule plus the probes the run loop
+/// fires at each transition. `accepted` counts cumulatively across
+/// incarnations (seeded from the journal on resume).
+struct KillSwitch {
+    plan: CoordKill,
+    accepted: usize,
+    fired: Option<String>,
+}
+
+impl KillSwitch {
+    fn new(plan: CoordKill, accepted_so_far: usize) -> KillSwitch {
+        KillSwitch { plan, accepted: accepted_so_far, fired: None }
+    }
+
+    fn on_tick(&mut self, now: u64) -> bool {
+        if self.fired.is_some() {
+            return true;
+        }
+        if let CoordKill::AtTick(t) = self.plan {
+            if now >= t {
+                self.fired = Some(format!("tick:{t}"));
+                return true;
+            }
+        }
+        false
+    }
+
+    fn on_accept(&mut self) -> bool {
+        if self.fired.is_some() {
+            return true;
+        }
+        self.accepted += 1;
+        if let CoordKill::AfterAccepted(k) = self.plan {
+            if self.accepted >= k {
+                self.fired = Some(format!("accepted:{k}"));
+                return true;
+            }
+        }
+        false
+    }
+
+    fn on_merging(&mut self, block: usize) -> bool {
+        if self.fired.is_some() {
+            return true;
+        }
+        if self.plan == (CoordKill::AtMerging { block }) {
+            self.fired = Some(format!("merging:{block}"));
+            return true;
+        }
+        false
+    }
+}
+
+/// Optional journal attachment: `record` is a no-op when no journal is
+/// configured, so the journal-free paths pay nothing.
+struct JournalSink<'a>(Option<&'a mut Journal>);
+
+impl JournalSink<'_> {
+    fn record(&mut self, ev: &Event) -> Result<()> {
+        if let Some(j) = self.0.as_mut() {
+            j.append(ev)?;
+        }
+        Ok(())
+    }
+}
+
+/// Per-block accumulation state seeded from recovery (or fresh).
+struct BlockInit {
+    done: BTreeMap<usize, Mat>,
+    retries: Vec<usize>,
+    /// Earliest tick each unit may be (re)assigned — the deterministic
+    /// backoff gate.
+    eligible_at: Vec<u64>,
+}
+
+impl BlockInit {
+    fn fresh(n: usize) -> BlockInit {
+        BlockInit { done: BTreeMap::new(), retries: vec![0; n], eligible_at: vec![0; n] }
+    }
+
+    /// Seed a block's state from recovered journal history: accepted
+    /// payloads become done entries, carried retry counts resume their
+    /// backoff schedule, and units in flight at the kill are treated as
+    /// expired (the lease died with the coordinator) — retried once more
+    /// and gated behind [`retry_backoff`].
+    fn recovered(
+        units: &[GramUnit],
+        rec_accepted: &BTreeMap<GramUnit, Vec<u8>>,
+        rec_retries: &BTreeMap<GramUnit, usize>,
+        rec_in_flight: &BTreeSet<GramUnit>,
+        now: u64,
+        stats: &mut DistStats,
+    ) -> Result<BlockInit> {
+        let mut init = BlockInit::fresh(units.len());
+        for (i, u) in units.iter().enumerate() {
+            if let Some(payload) = rec_accepted.get(u) {
+                init.done.insert(i, decode_gram(payload)?);
+            }
+            if let Some(&r) = rec_retries.get(u) {
+                init.retries[i] = r;
+            }
+            if rec_in_flight.contains(u) && !init.done.contains_key(&i) {
+                init.retries[i] += 1;
+                stats.retried += 1;
+                init.eligible_at[i] = now + retry_backoff(init.retries[i]);
+            }
+        }
+        Ok(init)
+    }
+}
+
 /// Convenience entry: run the synthetic pipeline across `workers` virtual
-/// workers on a [`LocalTransport`] with the given fault plan.
+/// workers on a [`LocalTransport`] with the given fault plan. Coordinator
+/// kill schedules require a journal — use [`run_synthetic_journal`].
 pub fn run_synthetic_workers(
     spec: &SyntheticSpec,
     cfg: &PipelineConfig,
@@ -131,14 +341,78 @@ pub fn run_synthetic_workers(
 }
 
 /// Run the synthetic two-phase pipeline with Phase 1 distributed over
-/// `transport`'s workers. See the module docs for the state machine;
-/// the output is bit-identical to the in-process pipeline.
+/// `transport`'s workers, without a journal (and therefore without
+/// coordinator-kill schedules). See the module docs for the state
+/// machine; the output is bit-identical to the in-process pipeline.
 pub fn run_synthetic_distributed(
     spec: &SyntheticSpec,
     cfg: &PipelineConfig,
     transport: &mut dyn Transport,
     dcfg: &DistConfig,
 ) -> Result<DistRun> {
+    match run_synthetic_journaled(spec, cfg, transport, dcfg, CoordKill::None, None, None)? {
+        DistOutcome::Done(run) => Ok(*run),
+        DistOutcome::Killed(k) => {
+            bail!("coordinator killed without a kill schedule (schedule {})", k.schedule)
+        }
+    }
+}
+
+/// The journaled entry point behind `--journal <dir>` / `--resume`: create
+/// (or resume) the on-disk journal, then drive the run over a fresh
+/// [`LocalTransport`] under `fault` — including its [`CoordKill`]
+/// schedule. On resume the journal's [`RunMeta`] must match this
+/// invocation's spec/method/bits; the worker count may differ (results
+/// are pure functions of their unit indices).
+pub fn run_synthetic_journal(
+    spec: &SyntheticSpec,
+    cfg: &PipelineConfig,
+    workers: usize,
+    fault: FaultPlan,
+    dcfg: &DistConfig,
+    journal_dir: &Path,
+    resume: bool,
+) -> Result<DistOutcome> {
+    let kill = fault.coord_kill;
+    let (mut journal, recovered) = if resume {
+        let (mut journal, events) = Journal::resume(journal_dir)?;
+        let mut rec = Recovered::from_events(events)?;
+        rec.meta.check_matches(spec, &cfg.method.name(), cfg.calib.bits)?;
+        rec.incarnations += 1;
+        journal.append(&Event::Resumed { incarnation: rec.incarnations })?;
+        (journal, Some(rec))
+    } else {
+        let meta = RunMeta {
+            spec: spec.clone(),
+            method: cfg.method.name(),
+            bits: cfg.calib.bits,
+            workers,
+        };
+        (Journal::create(journal_dir, &meta)?, None)
+    };
+    let mut transport = LocalTransport::new(workers, spec, fault);
+    run_synthetic_journaled(
+        spec,
+        cfg,
+        &mut transport,
+        dcfg,
+        kill,
+        Some(&mut journal),
+        recovered,
+    )
+}
+
+/// The full run loop: fresh or recovered, journaled or not, kill schedule
+/// or not. Everything above is a thin wrapper around this.
+fn run_synthetic_journaled(
+    spec: &SyntheticSpec,
+    cfg: &PipelineConfig,
+    transport: &mut dyn Transport,
+    dcfg: &DistConfig,
+    kill: CoordKill,
+    journal: Option<&mut Journal>,
+    recovered: Option<Recovered>,
+) -> Result<DistOutcome> {
     let t_run = std::time::Instant::now(); // oac-lint: allow(wallclock, "report-only DistStats wall timing")
     let layers = synthetic_layers(spec);
     let blocks: Vec<Vec<&LinearSpec>> = (0..spec.blocks)
@@ -147,7 +421,34 @@ pub fn run_synthetic_distributed(
 
     let mut ws = synthetic_weights(spec);
     let cache = PreparedCache::new();
+    let mut sink = JournalSink(journal);
     let mut stats = DistStats { workers: transport.workers(), ..DistStats::default() };
+    stats.incarnations = 1;
+
+    // Recovery state (empty for a fresh run).
+    let mut rec_accepted: BTreeMap<GramUnit, Vec<u8>> = BTreeMap::new();
+    let mut rec_retries: BTreeMap<GramUnit, usize> = BTreeMap::new();
+    let mut rec_in_flight: BTreeSet<GramUnit> = BTreeSet::new();
+    let mut blocks_done = 0usize;
+    let mut block_fps: Vec<u64> = Vec::new();
+    let mut finished: Option<(u64, u64)> = None;
+    if let Some(rec) = recovered {
+        stats.leases = rec.leases;
+        stats.retried = rec.retried;
+        stats.duplicates = rec.duplicates;
+        stats.corrupt = rec.corrupt;
+        stats.phase_log = rec.phase_log;
+        stats.incarnations = rec.incarnations;
+        stats.replayed = rec.replayed;
+        rec_accepted = rec.accepted;
+        rec_retries = rec.retries;
+        rec_in_flight = rec.in_flight;
+        blocks_done = rec.blocks_done;
+        block_fps = rec.block_fps;
+        finished = rec.finished;
+    }
+    let mut kills = KillSwitch::new(kill, rec_accepted.len());
+
     let mut reports: Vec<LayerReport> = Vec::new();
     let mut budgets: Vec<BitBudget> = Vec::new();
     let mut phase1 = 0.0f64;
@@ -160,18 +461,58 @@ pub fn run_synthetic_distributed(
                 (0..spec.n_contrib).map(move |sample| GramUnit { block: b, layer, sample })
             })
             .collect();
-        let t1 = std::time::Instant::now(); // oac-lint: allow(wallclock, "report-only DistStats phase timing")
-        let grams = accumulate_block(transport, &units, dcfg, &mut stats)?;
-        phase1 += t1.elapsed().as_secs_f64();
+        let replaying = b < blocks_done;
+        let grams: Vec<Mat> = if replaying {
+            // The journal committed this block: rebuild its Grams from the
+            // journaled payloads alone, no transport traffic.
+            units
+                .iter()
+                .map(|u| {
+                    let payload = rec_accepted.get(u).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "journal integrity error: block {b} is marked done but unit {u:?} \
+                             has no accepted result"
+                        )
+                    })?;
+                    decode_gram(payload)
+                })
+                .collect::<Result<Vec<Mat>>>()?
+        } else {
+            let t1 = std::time::Instant::now(); // oac-lint: allow(wallclock, "report-only DistStats phase timing")
+            let init = BlockInit::recovered(
+                &units,
+                &rec_accepted,
+                &rec_retries,
+                &rec_in_flight,
+                transport.now(),
+                &mut stats,
+            )?;
+            let got =
+                accumulate_block(transport, &units, dcfg, &mut stats, &mut sink, &mut kills, init)?;
+            phase1 += t1.elapsed().as_secs_f64();
+            match got {
+                Some(g) => g,
+                None => return Ok(DistOutcome::Killed(killed(&kills, transport, &mut stats))),
+            }
+        };
 
-        stats.enter(Phase::Merging);
+        if !replaying {
+            if kills.on_merging(b) {
+                return Ok(DistOutcome::Killed(killed(&kills, transport, &mut stats)));
+            }
+            if stats.enter(Phase::Merging) {
+                sink.record(&Event::PhaseEnter { block: b, phase: Phase::Merging })?;
+            }
+        }
         let mut hes: BTreeMap<String, Hessian> = BTreeMap::new();
         for (li, l) in blocks[b].iter().enumerate() {
             let slice = &grams[li * spec.n_contrib..(li + 1) * spec.n_contrib];
             hes.insert(l.name.clone(), Hessian::from_grams(l.cols, cfg.method.hessian, slice));
         }
 
-        stats.enter(Phase::Calibrating);
+        if !replaying && stats.enter(Phase::Calibrating) {
+            sink.record(&Event::PhaseEnter { block: b, phase: Phase::Calibrating })?;
+        }
         let quantized = calibrate_block(&cache, &mut ws, &blocks[b], &hes, cfg)?;
         for q in quantized {
             reports.push(LayerReport {
@@ -183,6 +524,20 @@ pub fn run_synthetic_distributed(
             budgets.push(q.budget);
         }
         cache.clear_block(b);
+
+        // Merge commit: fingerprint the weight store after the block. On
+        // replay this *verifies* the journaled fingerprint instead.
+        let fp = ws.fingerprint();
+        if replaying {
+            ensure!(
+                fp == block_fps[b],
+                "journal integrity error: replayed block {b} fingerprints {fp:016x}, journal \
+                 committed {:016x}",
+                block_fps[b]
+            );
+        } else {
+            sink.record(&Event::BlockDone { block: b, weights_fp: fp })?;
+        }
     }
 
     let wall = t_loop.elapsed().as_secs_f64();
@@ -199,63 +554,148 @@ pub fn run_synthetic_distributed(
     };
 
     let packed = if cfg.pack_out.is_some() {
-        stats.enter(Phase::Packing);
+        if stats.enter(Phase::Packing) && finished.is_none() {
+            sink.record(&Event::PhaseEnter { block: spec.blocks, phase: Phase::Packing })?;
+        }
         let original = synthetic_weights(spec);
         Some(PackedModel::from_quantized(&layers, &original, &ws, cfg.method, &cfg.calib)?)
     } else {
         None
     };
+
+    let weights_fp = ws.fingerprint();
+    let packed_digest = match &packed {
+        Some(p) => digest::fnv1a(&p.to_bytes()?),
+        None => 0,
+    };
+    match finished {
+        Some((journaled_fp, journaled_pack)) => {
+            // The journal says this run already finished; the replay above
+            // must land on the very same bits.
+            ensure!(
+                journaled_fp == weights_fp,
+                "journal integrity error: finished run replays to weights {weights_fp:016x}, \
+                 journal committed {journaled_fp:016x}"
+            );
+            ensure!(
+                journaled_pack == 0 || packed_digest == 0 || journaled_pack == packed_digest,
+                "journal integrity error: finished run replays to packed digest \
+                 {packed_digest:016x}, journal committed {journaled_pack:016x}"
+            );
+        }
+        None => sink.record(&Event::RunDone { weights_fp, packed_digest })?,
+    }
+
     for w in 0..transport.workers() {
         transport.send(w, CoordMsg::Shutdown);
     }
     stats.ticks = transport.now();
+    stats.faults = transport.stats();
     stats.enter(Phase::Done);
-    Ok(DistRun { weights: ws, report, packed, stats })
+    Ok(DistOutcome::Done(Box::new(DistRun { weights: ws, report, packed, stats })))
 }
 
-/// Drive one block's Gram units to completion through the transport.
-/// Returns the Grams in unit (= merge) order regardless of arrival order.
+/// Snapshot the accounting at the kill point. No shutdown broadcast — a
+/// killed coordinator leaves its workers exactly as a real crash would.
+fn killed(kills: &KillSwitch, transport: &mut dyn Transport, stats: &mut DistStats) -> KillReport {
+    stats.ticks = transport.now();
+    stats.faults = transport.stats();
+    KillReport {
+        schedule: kills.fired.clone().unwrap_or_else(|| "none".to_string()),
+        ticks: stats.ticks,
+        stats: stats.clone(),
+    }
+}
+
+/// Build the retry-exhaustion diagnostic: the unit that died, its full
+/// lease history with per-worker counts, and the stats snapshot.
+fn exhaustion_report(
+    unit: GramUnit,
+    history: &[(LeaseId, WorkerId)],
+    retries: usize,
+    dcfg: &DistConfig,
+    stats: &DistStats,
+) -> String {
+    let mut per_worker: BTreeMap<WorkerId, usize> = BTreeMap::new();
+    for &(_, w) in history {
+        *per_worker.entry(w).or_insert(0) += 1;
+    }
+    let leases: Vec<String> = history.iter().map(|(l, w)| format!("#{l}→w{w}")).collect();
+    let workers: Vec<String> = per_worker.iter().map(|(w, n)| format!("w{w}×{n}")).collect();
+    format!(
+        "gram unit {unit:?} exhausted {retries} retries (max {}) — transport too lossy or all \
+         workers dead; lease history [{}] (per worker: {}); stats: {stats:?}",
+        dcfg.max_retries,
+        leases.join(", "),
+        workers.join(", "),
+    )
+}
+
+/// Drive one block's Gram units to completion through the transport,
+/// starting from `init` (fresh, or seeded from journal recovery). Returns
+/// the Grams in unit (= merge) order regardless of arrival order, or
+/// `None` when the kill schedule fired mid-block.
 fn accumulate_block(
     transport: &mut dyn Transport,
     units: &[GramUnit],
     dcfg: &DistConfig,
     stats: &mut DistStats,
-) -> Result<Vec<Mat>> {
+    journal: &mut JournalSink,
+    kills: &mut KillSwitch,
+    init: BlockInit,
+) -> Result<Option<Vec<Mat>>> {
     let n = units.len();
     let n_workers = transport.workers();
-    let mut done: BTreeMap<usize, Mat> = BTreeMap::new();
+    let block = units.first().map(|u| u.block).unwrap_or(0);
+    let BlockInit { mut done, mut retries, mut eligible_at } = init;
     // Live lease per unit index + the lease table proper.
     let mut unit_lease: Vec<Option<LeaseId>> = vec![None; n];
     let mut leases: BTreeMap<LeaseId, (usize, u64)> = BTreeMap::new(); // lease → (unit, expiry)
-    let mut retries = vec![0usize; n];
     let mut next_lease: LeaseId = stats.leases as LeaseId;
     let mut rr = 0usize;
+    // Per-unit (lease, worker) assignment history for exhaustion reports.
+    let mut history: Vec<Vec<(LeaseId, WorkerId)>> = vec![Vec::new(); n];
     // Unit identity → index, for deduplicating arrivals.
     let index: BTreeMap<GramUnit, usize> =
         units.iter().enumerate().map(|(i, u)| (*u, i)).collect();
 
     while done.len() < n {
-        // Assigning: lease every unassigned, unfinished unit round-robin.
+        // Assigning: lease every unassigned, unfinished unit whose backoff
+        // has elapsed, round-robin across workers.
+        let now = transport.now();
         let mut assigned_any = false;
         for u in 0..n {
-            if done.contains_key(&u) || unit_lease[u].is_some() {
+            if done.contains_key(&u) || unit_lease[u].is_some() || eligible_at[u] > now {
                 continue;
             }
             if !assigned_any {
-                stats.enter(Phase::Assigning);
+                if stats.enter(Phase::Assigning) {
+                    journal.record(&Event::PhaseEnter { block, phase: Phase::Assigning })?;
+                }
                 assigned_any = true;
             }
             let w = rr % n_workers;
             rr += 1;
             let lease = next_lease;
             next_lease += 1;
+            let expiry = now + dcfg.lease_timeout;
+            journal.record(&Event::Assigned {
+                lease,
+                unit: units[u],
+                worker: w,
+                expiry,
+                retry: retries[u],
+            })?;
             transport.send(w, CoordMsg::Assign { lease, unit: units[u] });
-            leases.insert(lease, (u, transport.now() + dcfg.lease_timeout));
+            leases.insert(lease, (u, expiry));
             unit_lease[u] = Some(lease);
+            history[u].push((lease, w));
             stats.leases += 1;
         }
 
-        stats.enter(Phase::Accumulating);
+        if stats.enter(Phase::Accumulating) {
+            journal.record(&Event::PhaseEnter { block, phase: Phase::Accumulating })?;
+        }
         for msg in transport.step() {
             let WorkerMsg::GramDone { unit, payload, .. } = msg;
             let Some(&idx) = index.get(&unit) else {
@@ -263,30 +703,39 @@ fn accumulate_block(
             };
             if done.contains_key(&idx) {
                 stats.duplicates += 1;
+                journal.record(&Event::Dedup { unit })?;
                 continue;
             }
             match decode_gram(&payload) {
                 Ok(m) => {
+                    // Journal-first: the accepted result must be durable
+                    // before the in-memory state advances past it.
+                    journal.record(&Event::Accepted { unit, payload })?;
                     done.insert(idx, m);
                     if let Some(l) = unit_lease[idx].take() {
                         leases.remove(&l);
                     }
+                    if kills.on_accept() {
+                        return Ok(None);
+                    }
                 }
                 Err(e) => {
-                    // Corrupted in transit: drop the lease so the next
-                    // Assigning pass retries the unit immediately.
+                    // Corrupted in transit: drop the lease so the unit is
+                    // retried after its deterministic backoff.
                     log::debug!("discarding corrupt result for unit {idx}: {e}");
+                    journal.record(&Event::CorruptFrame { unit })?;
                     stats.corrupt += 1;
                     if let Some(l) = unit_lease[idx].take() {
                         leases.remove(&l);
                     }
                     retries[idx] += 1;
                     stats.retried += 1;
+                    eligible_at[idx] = transport.now() + retry_backoff(retries[idx]);
                 }
             }
         }
 
-        // Expire overdue leases → back to Assigning next iteration.
+        // Expire overdue leases → back to Assigning after the backoff.
         let now = transport.now();
         let expired: Vec<LeaseId> =
             leases.iter().filter(|(_, &(_, exp))| exp <= now).map(|(&l, _)| l).collect();
@@ -296,19 +745,20 @@ fn accumulate_block(
                 unit_lease[u] = None;
                 retries[u] += 1;
                 stats.retried += 1;
+                eligible_at[u] = now + retry_backoff(retries[u]);
+                journal.record(&Event::Expired { lease: l, unit: units[u], retry: retries[u] })?;
                 if retries[u] > dcfg.max_retries {
-                    bail!(
-                        "gram unit {:?} exceeded {} retries — transport too lossy or all \
-                         workers dead",
-                        units[u],
-                        dcfg.max_retries
-                    );
+                    bail!("{}", exhaustion_report(units[u], &history[u], retries[u], dcfg, stats));
                 }
             }
         }
+
+        if kills.on_tick(now) {
+            return Ok(None);
+        }
     }
 
-    Ok((0..n).map(|i| done.remove(&i).unwrap()).collect())
+    Ok(Some((0..n).map(|i| done.remove(&i).unwrap()).collect()))
 }
 
 #[cfg(test)]
@@ -319,6 +769,13 @@ mod tests {
 
     fn spec() -> SyntheticSpec {
         SyntheticSpec { blocks: 2, d_model: 32, d_ff: 64, n_contrib: 6, contrib_rows: 16, seed: 1 }
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("oac_dist_coord_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
     }
 
     #[test]
@@ -336,6 +793,7 @@ mod tests {
         assert!(!log.contains(&Phase::Packing));
         assert_eq!(run.stats.leases, spec.blocks * 6 * spec.n_contrib);
         assert_eq!(run.stats.retried, 0);
+        assert_eq!(run.stats.incarnations, 1);
     }
 
     #[test]
@@ -358,7 +816,15 @@ mod tests {
         let mut cfg = PipelineConfig::new(Method::oac(Backend::RTN), 2);
         cfg.calib.threads = 1;
         let (ws, _) = run_synthetic(&spec, &cfg).unwrap();
-        let plan = FaultPlan { seed: 11, drop: 0.25, duplicate: 0.25, corrupt: 0.1, max_delay: 3, kill: 1 };
+        let plan = FaultPlan {
+            seed: 11,
+            drop: 0.25,
+            duplicate: 0.25,
+            corrupt: 0.1,
+            max_delay: 3,
+            kill: 1,
+            ..FaultPlan::none()
+        };
         let run = run_synthetic_workers(&spec, &cfg, 4, plan).unwrap();
         assert_eq!(run.weights.fingerprint(), ws.fingerprint());
         // The plan is lossy enough that the protocol must have exercised
@@ -368,17 +834,65 @@ mod tests {
     }
 
     #[test]
-    fn hopeless_transport_fails_cleanly() {
+    fn hopeless_transport_fails_with_full_diagnostics() {
         let spec = SyntheticSpec { blocks: 1, ..spec() };
         let mut cfg = PipelineConfig::new(Method::oac(Backend::RTN), 2);
         cfg.calib.threads = 1;
         // Everything dropped: the run must abort with the retry error, not
         // hang.
-        let plan = FaultPlan { seed: 3, drop: 1.0, duplicate: 0.0, corrupt: 0.0, max_delay: 0, kill: 0 };
+        let plan = FaultPlan { seed: 3, drop: 1.0, ..FaultPlan::none() };
         let mut transport = LocalTransport::new(2, &spec, plan);
         let dcfg = DistConfig { lease_timeout: 2, max_retries: 3 };
         let err = run_synthetic_distributed(&spec, &cfg, &mut transport, &dcfg)
             .expect_err("fully lossy transport must abort");
-        assert!(err.to_string().contains("retries"), "unexpected error: {err}");
+        let msg = err.to_string();
+        assert!(msg.contains("retries"), "unexpected error: {msg}");
+        // The diagnostic names the exhausted unit, its lease history with
+        // per-worker counts, and the stats snapshot.
+        let first_unit = format!("{:?}", GramUnit { block: 0, layer: 0, sample: 0 });
+        assert!(msg.contains(&first_unit), "error must name the unit: {msg}");
+        assert!(msg.contains("lease history"), "error must carry the lease history: {msg}");
+        assert!(msg.contains("per worker"), "error must count per-worker leases: {msg}");
+        assert!(msg.contains("stats:"), "error must snapshot DistStats: {msg}");
+    }
+
+    #[test]
+    fn backoff_is_a_pure_function_of_retry_count() {
+        assert_eq!(retry_backoff(0), 1);
+        assert_eq!(retry_backoff(1), 2);
+        assert_eq!(retry_backoff(4), 16);
+        assert_eq!(retry_backoff(5), 32);
+        // Capped: high retry counts keep a bounded, deterministic delay.
+        assert_eq!(retry_backoff(6), 32);
+        assert_eq!(retry_backoff(64), 32);
+    }
+
+    #[test]
+    fn kill_at_tick_then_resume_matches_uninterrupted_run() {
+        let spec = spec();
+        let mut cfg = PipelineConfig::new(Method::oac(Backend::RTN), 2);
+        cfg.calib.threads = 1;
+        let (ws, _) = run_synthetic(&spec, &cfg).unwrap();
+        let dir = tmpdir("kill_tick");
+
+        let plan = FaultPlan { coord_kill: CoordKill::AtTick(3), ..FaultPlan::none() };
+        let dcfg = DistConfig::default();
+        let outcome = run_synthetic_journal(&spec, &cfg, 3, plan, &dcfg, &dir, false).unwrap();
+        let k = match outcome {
+            DistOutcome::Killed(k) => k,
+            DistOutcome::Done(_) => panic!("tick:3 must kill mid-run"),
+        };
+        assert_eq!(k.schedule, "tick:3");
+        assert!(k.ticks >= 3);
+
+        let resumed =
+            run_synthetic_journal(&spec, &cfg, 3, FaultPlan::none(), &dcfg, &dir, true)
+                .unwrap()
+                .into_done()
+                .unwrap();
+        assert_eq!(resumed.weights.fingerprint(), ws.fingerprint());
+        assert_eq!(resumed.stats.incarnations, 2);
+        assert!(resumed.stats.replayed > 0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,777 @@
+//! The coordinator's crash-recovery journal: an append-only, self-checking
+//! on-disk event log written at every state transition of a distributed
+//! run, so a coordinator killed at any tick can be restarted and replay to
+//! the exact state it died in — then finish bit-identically.
+//!
+//! ## Record framing
+//!
+//! The file is the `OACJRNL1` magic followed by framed records, the same
+//! integrity discipline as the `OACGRAM1` frames and the `OACPACK1`
+//! whole-file digest:
+//!
+//! ```text
+//!   [len: u32 LE] [kind: u8] [hdr_digest: u64 LE]   ← header (13 bytes)
+//!   [payload: len bytes]
+//!   [digest: u64 LE]                                ← chained trailer
+//! ```
+//!
+//! `hdr_digest` is the FNV-1a of the five header bytes before it, so a
+//! corrupted length can never masquerade as a truncation. The trailing
+//! `digest` chains: it is FNV-1a over `kind ++ payload` seeded with the
+//! *previous* record's digest (the first record seeds from the digest of
+//! the magic), so records cannot be reordered, spliced, or replaced
+//! without detection. The two failure modes are deliberately distinct:
+//!
+//! * **Truncated tail** (a crash mid-append): fewer bytes remain than one
+//!   complete record — replay stops cleanly at the last complete record
+//!   and [`Journal::resume`] truncates the torn bytes before appending.
+//! * **Interior corruption** (any flipped bit in complete records): a
+//!   digest mismatch — replay fails hard with an "integrity" error. FNV-1a
+//!   is injective per byte position under a single-byte change, so *every*
+//!   single-bit flip is caught (swept exhaustively by the tests here,
+//!   mirroring the `OACPACK1` byte-flip sweep).
+//!
+//! ## Recovery invariant
+//!
+//! [`Recovered::from_events`] folds the event history back into the
+//! coordinator's state: completed blocks with their weight fingerprints,
+//! every accepted Gram payload (deduplicated by unit), per-unit retry
+//! counts, and the set of leases in flight at the kill. The coordinator
+//! (`run_synthetic_journaled`) rebuilds completed blocks from journaled
+//! payloads alone, verifies each against its journaled fingerprint,
+//! re-leases in-flight units after a deterministic retry backoff, and
+//! produces the same checksum and packed bytes as an uninterrupted
+//! single-process run — the contract `rust/tests/dist.rs` and CI's
+//! `dist-chaos-smoke` enforce.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::SyntheticSpec;
+use crate::util::digest;
+
+use super::coordinator::Phase;
+use super::protocol::{decode_gram, GramUnit, LeaseId, WorkerId, UNIT_WIRE_BYTES};
+
+const JOURNAL_MAGIC: &[u8; 8] = b"OACJRNL1";
+const HEADER_BYTES: usize = 4 + 1 + 8;
+const FORMAT_VERSION: u32 = 1;
+
+/// File name of the journal inside its `--journal` directory.
+pub const JOURNAL_FILE: &str = "journal.oaclog";
+
+/// Identity of the run a journal belongs to, written as the first record
+/// and checked on resume so a journal can never be replayed into a
+/// different spec, method, or bit width.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunMeta {
+    pub spec: SyntheticSpec,
+    /// Registry method name (`Method::name()`).
+    pub method: String,
+    pub bits: usize,
+    /// Worker count of the incarnation that created the journal. Recorded
+    /// for diagnostics only: results are pure functions of their unit
+    /// indices, so a resume may legally use a different worker count.
+    pub workers: usize,
+}
+
+impl RunMeta {
+    /// Refuse to resume a journal that belongs to a different run.
+    pub fn check_matches(&self, spec: &SyntheticSpec, method: &str, bits: usize) -> Result<()> {
+        ensure!(
+            self.spec == *spec,
+            "refusing to resume: journal records spec {:?}, this invocation asks for {:?}",
+            self.spec,
+            spec
+        );
+        ensure!(
+            self.method == method,
+            "refusing to resume: journal records method {}, this invocation asks for {method}",
+            self.method
+        );
+        ensure!(
+            self.bits == bits,
+            "refusing to resume: journal records {} bits, this invocation asks for {bits}",
+            self.bits
+        );
+        Ok(())
+    }
+}
+
+/// One journaled state transition. Every mutation of coordinator state is
+/// written *before* it is applied in memory (write-ahead), so the journal
+/// is always at least as advanced as the state that died with the process.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// First record of every journal: which run this is.
+    Meta(RunMeta),
+    /// The state machine entered `phase` while working block `block` (the
+    /// Packing entry uses `block == spec.blocks` as there is no block).
+    PhaseEnter { block: usize, phase: Phase },
+    /// Lease `lease` granted: `unit` assigned to `worker`, expiring at
+    /// tick `expiry`, with `retry` prior retries.
+    Assigned { lease: LeaseId, unit: GramUnit, worker: WorkerId, expiry: u64, retry: usize },
+    /// Lease `lease` expired; `retry` is the unit's new retry count.
+    Expired { lease: LeaseId, unit: GramUnit, retry: usize },
+    /// A Gram result accepted for `unit`; `payload` is the verified
+    /// `OACGRAM1` frame exactly as received (self-checking again on
+    /// replay).
+    Accepted { unit: GramUnit, payload: Vec<u8> },
+    /// A duplicate result for an already-accepted unit was discarded.
+    Dedup { unit: GramUnit },
+    /// A result failed its frame digest and was discarded (unit retried).
+    CorruptFrame { unit: GramUnit },
+    /// Block `block` merged and calibrated; `weights_fp` fingerprints the
+    /// weight store afterwards (the merge-commit marker replay verifies).
+    BlockDone { block: usize, weights_fp: u64 },
+    /// The run finished: final weight checksum and packed-bytes digest
+    /// (0 when no pack was requested).
+    RunDone { weights_fp: u64, packed_digest: u64 },
+    /// A resumed coordinator took over as incarnation `incarnation`.
+    Resumed { incarnation: u32 },
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_u32(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+
+/// Little-endian field reader over one record payload. All failures are
+/// integrity errors: a digest-valid record must parse completely.
+struct Rd<'a> {
+    bytes: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(bytes: &'a [u8]) -> Rd<'a> {
+        Rd { bytes, off: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.off + n <= self.bytes.len(),
+            "journal integrity error: record payload truncated mid-field"
+        );
+        let s = &self.bytes[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize32(&mut self) -> Result<usize> {
+        Ok(self.u32()? as usize)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.usize32()?;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| anyhow::anyhow!("journal integrity error: non-UTF-8 string field"))
+    }
+
+    fn bytes_field(&mut self) -> Result<Vec<u8>> {
+        let n = self.usize32()?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn unit(&mut self) -> Result<GramUnit> {
+        let b: [u8; UNIT_WIRE_BYTES] = self.take(UNIT_WIRE_BYTES)?.try_into().unwrap();
+        Ok(GramUnit::decode_from(&b))
+    }
+
+    fn finish(self) -> Result<()> {
+        ensure!(
+            self.off == self.bytes.len(),
+            "journal integrity error: {} trailing bytes after record payload",
+            self.bytes.len() - self.off
+        );
+        Ok(())
+    }
+}
+
+impl Event {
+    /// Stable one-byte record kind.
+    pub fn kind(&self) -> u8 {
+        match self {
+            Event::Meta(_) => 0,
+            Event::PhaseEnter { .. } => 1,
+            Event::Assigned { .. } => 2,
+            Event::Expired { .. } => 3,
+            Event::Accepted { .. } => 4,
+            Event::Dedup { .. } => 5,
+            Event::CorruptFrame { .. } => 6,
+            Event::BlockDone { .. } => 7,
+            Event::RunDone { .. } => 8,
+            Event::Resumed { .. } => 9,
+        }
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        match self {
+            Event::Meta(m) => {
+                put_u32(&mut p, FORMAT_VERSION);
+                put_u32(&mut p, m.spec.blocks as u32);
+                put_u32(&mut p, m.spec.d_model as u32);
+                put_u32(&mut p, m.spec.d_ff as u32);
+                put_u32(&mut p, m.spec.n_contrib as u32);
+                put_u32(&mut p, m.spec.contrib_rows as u32);
+                put_u64(&mut p, m.spec.seed);
+                put_str(&mut p, &m.method);
+                put_u32(&mut p, m.bits as u32);
+                put_u32(&mut p, m.workers as u32);
+            }
+            Event::PhaseEnter { block, phase } => {
+                put_u32(&mut p, *block as u32);
+                p.push(phase.code());
+            }
+            Event::Assigned { lease, unit, worker, expiry, retry } => {
+                put_u64(&mut p, *lease);
+                unit.encode_to(&mut p);
+                put_u32(&mut p, *worker as u32);
+                put_u64(&mut p, *expiry);
+                put_u32(&mut p, *retry as u32);
+            }
+            Event::Expired { lease, unit, retry } => {
+                put_u64(&mut p, *lease);
+                unit.encode_to(&mut p);
+                put_u32(&mut p, *retry as u32);
+            }
+            Event::Accepted { unit, payload } => {
+                unit.encode_to(&mut p);
+                put_bytes(&mut p, payload);
+            }
+            Event::Dedup { unit } | Event::CorruptFrame { unit } => {
+                unit.encode_to(&mut p);
+            }
+            Event::BlockDone { block, weights_fp } => {
+                put_u32(&mut p, *block as u32);
+                put_u64(&mut p, *weights_fp);
+            }
+            Event::RunDone { weights_fp, packed_digest } => {
+                put_u64(&mut p, *weights_fp);
+                put_u64(&mut p, *packed_digest);
+            }
+            Event::Resumed { incarnation } => {
+                put_u32(&mut p, *incarnation);
+            }
+        }
+        p
+    }
+
+    fn decode(kind: u8, payload: &[u8]) -> Result<Event> {
+        let mut rd = Rd::new(payload);
+        let ev = match kind {
+            0 => {
+                let version = rd.u32()?;
+                ensure!(
+                    version == FORMAT_VERSION,
+                    "journal integrity error: format version {version} (this build reads {FORMAT_VERSION})"
+                );
+                let spec = SyntheticSpec {
+                    blocks: rd.usize32()?,
+                    d_model: rd.usize32()?,
+                    d_ff: rd.usize32()?,
+                    n_contrib: rd.usize32()?,
+                    contrib_rows: rd.usize32()?,
+                    seed: rd.u64()?,
+                };
+                let method = rd.str()?;
+                let bits = rd.usize32()?;
+                let workers = rd.usize32()?;
+                Event::Meta(RunMeta { spec, method, bits, workers })
+            }
+            1 => {
+                let block = rd.usize32()?;
+                let code = rd.u8()?;
+                let phase = Phase::from_code(code).ok_or_else(|| {
+                    anyhow::anyhow!("journal integrity error: unknown phase code {code}")
+                })?;
+                Event::PhaseEnter { block, phase }
+            }
+            2 => Event::Assigned {
+                lease: rd.u64()?,
+                unit: rd.unit()?,
+                worker: rd.usize32()?,
+                expiry: rd.u64()?,
+                retry: rd.usize32()?,
+            },
+            3 => Event::Expired { lease: rd.u64()?, unit: rd.unit()?, retry: rd.usize32()? },
+            4 => Event::Accepted { unit: rd.unit()?, payload: rd.bytes_field()? },
+            5 => Event::Dedup { unit: rd.unit()? },
+            6 => Event::CorruptFrame { unit: rd.unit()? },
+            7 => Event::BlockDone { block: rd.usize32()?, weights_fp: rd.u64()? },
+            8 => Event::RunDone { weights_fp: rd.u64()?, packed_digest: rd.u64()? },
+            9 => Event::Resumed { incarnation: rd.u32()? },
+            k => bail!("journal integrity error: unknown record kind {k}"),
+        };
+        rd.finish()?;
+        Ok(ev)
+    }
+}
+
+/// Parse a journal byte image. Returns the complete records, the byte
+/// offset of the last complete record's end (the clean-truncation point),
+/// and the digest chain state at that point. Truncated tails stop the
+/// parse cleanly; any digest mismatch in complete bytes is a hard error.
+fn parse(bytes: &[u8]) -> Result<(Vec<Event>, usize, u64)> {
+    ensure!(
+        bytes.len() >= JOURNAL_MAGIC.len(),
+        "journal integrity error: file too short for magic ({} bytes)",
+        bytes.len()
+    );
+    ensure!(&bytes[..JOURNAL_MAGIC.len()] == JOURNAL_MAGIC, "journal integrity error: bad magic");
+    let mut chain = digest::fnv1a(JOURNAL_MAGIC);
+    let mut events = Vec::new();
+    let mut off = JOURNAL_MAGIC.len();
+    while off < bytes.len() {
+        let rem = bytes.len() - off;
+        if rem < HEADER_BYTES {
+            break; // torn header: clean truncation point
+        }
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        let kind = bytes[off + 4];
+        let want_hdr = u64::from_le_bytes(bytes[off + 5..off + 13].try_into().unwrap());
+        let got_hdr = digest::fnv1a(&bytes[off..off + 5]);
+        if got_hdr != want_hdr {
+            bail!("journal integrity error: record header digest mismatch at byte {off}");
+        }
+        let need = HEADER_BYTES + len + 8;
+        if rem < need {
+            break; // torn payload/trailer: clean truncation point
+        }
+        let payload = &bytes[off + HEADER_BYTES..off + HEADER_BYTES + len];
+        let want = u64::from_le_bytes(bytes[off + need - 8..off + need].try_into().unwrap());
+        let got = digest::fnv1a_with(digest::fnv1a_with(chain, &[kind]), payload);
+        if got != want {
+            bail!("journal integrity error: record digest mismatch at byte {off}");
+        }
+        events.push(
+            Event::decode(kind, payload)
+                .with_context(|| format!("journal integrity error: record at byte {off}"))?,
+        );
+        chain = got;
+        off += need;
+    }
+    Ok((events, off, chain))
+}
+
+/// Append handle over the on-disk event log. Every [`Journal::append`] is
+/// flushed before it returns, so a coordinator killed between appends
+/// leaves at worst a torn tail — never a half-applied state transition.
+pub struct Journal {
+    file: fs::File,
+    path: PathBuf,
+    chain: u64,
+}
+
+impl Journal {
+    /// Where the journal lives inside its `--journal` directory.
+    pub fn path_in(dir: &Path) -> PathBuf {
+        dir.join(JOURNAL_FILE)
+    }
+
+    /// Start a fresh journal for a new run: write the magic and the
+    /// [`Event::Meta`] record. Refuses to clobber an existing journal —
+    /// resume it or delete it explicitly.
+    pub fn create(dir: &Path, meta: &RunMeta) -> Result<Journal> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating journal directory {}", dir.display()))?;
+        let path = Journal::path_in(dir);
+        ensure!(
+            !path.exists(),
+            "journal already exists at {} — pass --resume to continue that run, or delete the \
+             file to start fresh",
+            path.display()
+        );
+        let mut file = fs::OpenOptions::new()
+            .create_new(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("creating journal {}", path.display()))?;
+        file.write_all(JOURNAL_MAGIC)?;
+        file.flush()?;
+        let mut j = Journal { file, path, chain: digest::fnv1a(JOURNAL_MAGIC) };
+        j.append(&Event::Meta(meta.clone()))?;
+        Ok(j)
+    }
+
+    /// Reopen an existing journal for recovery: replay every complete
+    /// record, truncate any torn tail left by a mid-append crash, and
+    /// return the events plus an append handle positioned after the last
+    /// valid record. Interior corruption fails hard.
+    pub fn resume(dir: &Path) -> Result<(Journal, Vec<Event>)> {
+        let path = Journal::path_in(dir);
+        let bytes = fs::read(&path).with_context(|| {
+            format!("no journal at {} — run without --resume to start one", path.display())
+        })?;
+        let (events, valid_end, chain) = parse(&bytes)?;
+        ensure!(
+            !events.is_empty(),
+            "journal at {} holds no complete records — nothing to resume",
+            path.display()
+        );
+        let mut file = fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("reopening journal {}", path.display()))?;
+        if valid_end < bytes.len() {
+            // A crash mid-append left a torn record; drop it so the next
+            // append starts at a clean boundary.
+            file.set_len(valid_end as u64)?;
+        }
+        file.seek(SeekFrom::Start(valid_end as u64))?;
+        Ok((Journal { file, path, chain }, events))
+    }
+
+    /// Strict read of a journal file: every complete record (truncated
+    /// tails are tolerated exactly as in [`Journal::resume`]).
+    pub fn replay(path: &Path) -> Result<Vec<Event>> {
+        let bytes =
+            fs::read(path).with_context(|| format!("reading journal {}", path.display()))?;
+        let (events, _, _) = parse(&bytes)?;
+        Ok(events)
+    }
+
+    /// Append one event: header, payload, and chained digest, flushed
+    /// before returning (write-ahead of the in-memory state change).
+    pub fn append(&mut self, ev: &Event) -> Result<()> {
+        let kind = ev.kind();
+        let payload = ev.encode();
+        let mut rec = Vec::with_capacity(HEADER_BYTES + payload.len() + 8);
+        rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        rec.push(kind);
+        let hdr_dig = digest::fnv1a(&rec[..5]);
+        rec.extend_from_slice(&hdr_dig.to_le_bytes());
+        rec.extend_from_slice(&payload);
+        let dig = digest::fnv1a_with(digest::fnv1a_with(self.chain, &[kind]), &payload);
+        rec.extend_from_slice(&dig.to_le_bytes());
+        self.file
+            .write_all(&rec)
+            .with_context(|| format!("appending to journal {}", self.path.display()))?;
+        self.file.flush()?;
+        self.chain = dig;
+        Ok(())
+    }
+}
+
+/// Coordinator state folded back out of a journal's event history —
+/// everything `run_synthetic_journaled` needs to continue the run from the
+/// exact position the previous incarnation died in.
+#[derive(Debug)]
+pub struct Recovered {
+    pub meta: RunMeta,
+    /// Blocks whose `BlockDone` committed, in order.
+    pub blocks_done: usize,
+    /// Weight-store fingerprint after each completed block (verified
+    /// against the local recomputation during recovery).
+    pub block_fps: Vec<u64>,
+    /// Every accepted Gram payload, deduplicated by unit (the journal is
+    /// written behind the same dedup-by-unit rule the live run applies).
+    pub accepted: BTreeMap<GramUnit, Vec<u8>>,
+    /// Retry counts per unit (expiries + corrupt frames).
+    pub retries: BTreeMap<GramUnit, usize>,
+    /// Units with a lease in flight at the kill point: assigned, never
+    /// accepted/expired. Recovery re-leases them after a deterministic
+    /// backoff; if their result still arrives it dedups by unit.
+    pub in_flight: BTreeSet<GramUnit>,
+    /// Phase transitions journaled so far (consecutive duplicates folded).
+    pub phase_log: Vec<Phase>,
+    /// Counters carried across incarnations.
+    pub leases: usize,
+    pub retried: usize,
+    pub duplicates: usize,
+    pub corrupt: usize,
+    /// `Some((weights_fp, packed_digest))` when the run already finished —
+    /// a resume then just replays and verifies.
+    pub finished: Option<(u64, u64)>,
+    /// Highest incarnation recorded (1 when never resumed).
+    pub incarnations: u32,
+    /// Number of events replayed.
+    pub replayed: usize,
+}
+
+impl Recovered {
+    /// Fold an event history into recovered coordinator state. Accepted
+    /// payloads are digest-verified again here — a journal that passed the
+    /// record digests but holds a bad Gram frame is still rejected.
+    pub fn from_events(events: Vec<Event>) -> Result<Recovered> {
+        let replayed = events.len();
+        let mut it = events.into_iter();
+        let meta = match it.next() {
+            Some(Event::Meta(m)) => m,
+            _ => bail!("journal integrity error: journal does not begin with a run-metadata record"),
+        };
+        let mut r = Recovered {
+            meta,
+            blocks_done: 0,
+            block_fps: Vec::new(),
+            accepted: BTreeMap::new(),
+            retries: BTreeMap::new(),
+            in_flight: BTreeSet::new(),
+            phase_log: Vec::new(),
+            leases: 0,
+            retried: 0,
+            duplicates: 0,
+            corrupt: 0,
+            finished: None,
+            incarnations: 1,
+            replayed,
+        };
+        for ev in it {
+            match ev {
+                Event::Meta(_) => bail!("journal integrity error: duplicate run-metadata record"),
+                Event::PhaseEnter { phase, .. } => {
+                    if r.phase_log.last() != Some(&phase) {
+                        r.phase_log.push(phase);
+                    }
+                }
+                Event::Assigned { unit, .. } => {
+                    r.leases += 1;
+                    r.in_flight.insert(unit);
+                }
+                Event::Expired { unit, .. } => {
+                    r.retried += 1;
+                    *r.retries.entry(unit).or_insert(0) += 1;
+                    r.in_flight.remove(&unit);
+                }
+                Event::Accepted { unit, payload } => {
+                    decode_gram(&payload).with_context(|| {
+                        format!(
+                            "journal integrity error: accepted payload for {unit:?} fails its \
+                             gram digest"
+                        )
+                    })?;
+                    r.in_flight.remove(&unit);
+                    r.accepted.insert(unit, payload);
+                }
+                Event::Dedup { .. } => r.duplicates += 1,
+                Event::CorruptFrame { unit } => {
+                    r.corrupt += 1;
+                    r.retried += 1;
+                    *r.retries.entry(unit).or_insert(0) += 1;
+                    r.in_flight.remove(&unit);
+                }
+                Event::BlockDone { block, weights_fp } => {
+                    ensure!(
+                        block == r.blocks_done,
+                        "journal integrity error: block-done records out of order (block \
+                         {block} after {} completed)",
+                        r.blocks_done
+                    );
+                    r.blocks_done += 1;
+                    r.block_fps.push(weights_fp);
+                }
+                Event::RunDone { weights_fp, packed_digest } => {
+                    r.finished = Some((weights_fp, packed_digest));
+                }
+                Event::Resumed { incarnation } => {
+                    r.incarnations = r.incarnations.max(incarnation);
+                }
+            }
+        }
+        Ok(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::protocol::encode_gram;
+    use crate::tensor::Mat;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("oac_journal_test_{tag}_{}", std::process::id()));
+        fs::remove_dir_all(&dir).ok();
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn meta() -> RunMeta {
+        RunMeta {
+            spec: SyntheticSpec::default(),
+            method: "oac_rtn".to_string(),
+            bits: 2,
+            workers: 3,
+        }
+    }
+
+    fn sample_events() -> Vec<Event> {
+        let unit = GramUnit { block: 0, layer: 1, sample: 2 };
+        let mut m = Mat::zeros(3, 3);
+        m.data[4] = 1.5;
+        let payload = encode_gram(&m);
+        vec![
+            Event::PhaseEnter { block: 0, phase: Phase::Assigning },
+            Event::Assigned { lease: 0, unit, worker: 2, expiry: 9, retry: 0 },
+            Event::PhaseEnter { block: 0, phase: Phase::Accumulating },
+            Event::Accepted { unit, payload },
+            Event::Dedup { unit },
+            Event::CorruptFrame { unit },
+            Event::Expired { lease: 0, unit, retry: 1 },
+            Event::PhaseEnter { block: 0, phase: Phase::Merging },
+            Event::BlockDone { block: 0, weights_fp: 0xDEAD_BEEF },
+            Event::Resumed { incarnation: 2 },
+            Event::RunDone { weights_fp: 0xFEED_FACE, packed_digest: 0 },
+        ]
+    }
+
+    fn write_journal(dir: &Path) -> PathBuf {
+        let mut j = Journal::create(dir, &meta()).unwrap();
+        for ev in sample_events() {
+            j.append(&ev).unwrap();
+        }
+        Journal::path_in(dir)
+    }
+
+    #[test]
+    fn round_trip_replays_every_event_kind() {
+        let dir = tmpdir("roundtrip");
+        let path = write_journal(&dir);
+        let got = Journal::replay(&path).unwrap();
+        let mut want = vec![Event::Meta(meta())];
+        want.extend(sample_events());
+        assert_eq!(got, want);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn every_bit_flip_fails_replay_with_integrity_error() {
+        let dir = tmpdir("flip");
+        let path = write_journal(&dir);
+        let bytes = fs::read(&path).unwrap();
+        for i in 0..bytes.len() {
+            for bit in [0x01u8, 0x80] {
+                let mut bad = bytes.clone();
+                bad[i] ^= bit;
+                fs::write(&path, &bad).unwrap();
+                let err = Journal::replay(&path)
+                    .expect_err(&format!("flip of bit {bit:#x} at byte {i} must fail replay"));
+                assert!(
+                    err.to_string().contains("integrity"),
+                    "flip at byte {i}: unexpected error {err}"
+                );
+            }
+        }
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_tail_resumes_from_last_complete_record() {
+        let dir = tmpdir("trunc");
+        let path = write_journal(&dir);
+        let bytes = fs::read(&path).unwrap();
+        let all = Journal::replay(&path).unwrap();
+        for cut in JOURNAL_MAGIC.len()..bytes.len() {
+            fs::write(&path, &bytes[..cut]).unwrap();
+            let got = Journal::replay(&path)
+                .unwrap_or_else(|e| panic!("cut at {cut} must replay cleanly: {e}"));
+            assert!(got.len() <= all.len());
+            assert_eq!(got[..], all[..got.len()], "cut at {cut}: prefix mismatch");
+        }
+        // Below the magic it is not a journal at all.
+        fs::write(&path, &bytes[..4]).unwrap();
+        assert!(Journal::replay(&path).is_err());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_truncates_torn_tail_and_appends_cleanly() {
+        let dir = tmpdir("resume");
+        let path = write_journal(&dir);
+        let bytes = fs::read(&path).unwrap();
+        // Tear the file mid-record, as a crash during append would.
+        fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        let (mut j, events) = Journal::resume(&dir).unwrap();
+        let n = events.len();
+        assert!(n < 1 + sample_events().len(), "torn record must be dropped");
+        j.append(&Event::Resumed { incarnation: 9 }).unwrap();
+        drop(j);
+        let got = Journal::replay(&path).unwrap();
+        assert_eq!(got.len(), n + 1);
+        assert_eq!(got.last(), Some(&Event::Resumed { incarnation: 9 }));
+        assert_eq!(got[..n], events[..]);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn create_refuses_an_existing_journal() {
+        let dir = tmpdir("refuse");
+        write_journal(&dir);
+        let err = Journal::create(&dir, &meta()).expect_err("must refuse to clobber");
+        assert!(err.to_string().contains("already exists"), "unexpected: {err}");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recovered_state_reflects_the_event_history() {
+        let u = |sample| GramUnit { block: 0, layer: 0, sample };
+        let m = Mat::zeros(2, 2);
+        let payload = encode_gram(&m);
+        let events = vec![
+            Event::Meta(meta()),
+            Event::Assigned { lease: 0, unit: u(0), worker: 0, expiry: 8, retry: 0 },
+            Event::Assigned { lease: 1, unit: u(1), worker: 1, expiry: 8, retry: 0 },
+            Event::Assigned { lease: 2, unit: u(2), worker: 2, expiry: 8, retry: 0 },
+            Event::Accepted { unit: u(0), payload: payload.clone() },
+            Event::Dedup { unit: u(0) },
+            Event::Expired { lease: 1, unit: u(1), retry: 1 },
+            Event::CorruptFrame { unit: u(2) },
+            Event::Assigned { lease: 3, unit: u(3), worker: 0, expiry: 12, retry: 0 },
+        ];
+        let r = Recovered::from_events(events).unwrap();
+        assert_eq!(r.blocks_done, 0);
+        assert_eq!(r.leases, 4);
+        assert_eq!(r.retried, 2);
+        assert_eq!(r.duplicates, 1);
+        assert_eq!(r.corrupt, 1);
+        assert!(r.accepted.contains_key(&u(0)));
+        assert_eq!(r.retries.get(&u(1)), Some(&1));
+        assert_eq!(r.retries.get(&u(2)), Some(&1));
+        assert!(r.in_flight.contains(&u(3)), "lease 3 was in flight at the kill");
+        assert!(!r.in_flight.contains(&u(0)), "accepted units are not in flight");
+        assert!(r.finished.is_none());
+        assert_eq!(r.incarnations, 1);
+    }
+
+    #[test]
+    fn recovery_rejects_a_journal_for_a_different_run() {
+        let m = meta();
+        let r = Recovered::from_events(vec![Event::Meta(m.clone())]).unwrap();
+        r.meta.check_matches(&m.spec, "oac_rtn", 2).unwrap();
+        let other = SyntheticSpec { d_model: 96, ..m.spec.clone() };
+        assert!(r.meta.check_matches(&other, "oac_rtn", 2).is_err());
+        assert!(r.meta.check_matches(&m.spec, "oac_optq", 2).is_err());
+        assert!(r.meta.check_matches(&m.spec, "oac_rtn", 3).is_err());
+    }
+}

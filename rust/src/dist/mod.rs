@@ -27,6 +27,13 @@
 //!   models chunked and keyed by FNV fingerprints, integrity-verified on
 //!   fetch, with resumable partial downloads (`oac artifacts`, and the
 //!   `oac serve --packed <id> --store <dir>` fetch-by-digest path).
+//! * [`journal`] — the coordinator's crash-recovery event log: an
+//!   append-only, self-checking on-disk journal written ahead of every
+//!   state transition (`oac quantize --synthetic --workers N --journal
+//!   <dir>`), so a coordinator killed at any tick (seeded
+//!   [`transport::CoordKill`] schedules) restarts with `--resume`, replays
+//!   to the exact state machine position, lease table, and done set, and
+//!   finishes bit-identically.
 //!
 //! ## Determinism under faults
 //!
@@ -34,20 +41,27 @@
 //! single-process pipeline for every `N` and every fault schedule: units
 //! are pure functions of their indices (any recomputation or duplicate is
 //! byte-identical), results are deduplicated by unit and merged in the
-//! fixed order [`crate::hessian::Hessian::from_grams`] defines, and
-//! corrupted frames are rejected by digest and retried. Faults move only
-//! the protocol counters ([`coordinator::DistStats`]), never the bits —
-//! enforced by `rust/tests/dist.rs` and CI's `dist-smoke` job.
+//! fixed order [`crate::hessian::Hessian::from_grams`] defines, corrupted
+//! frames are rejected by digest and retried after a deterministic
+//! backoff ([`coordinator::retry_backoff`] — a pure function of the retry
+//! count, never the wall clock), and a killed-and-resumed coordinator
+//! replays its journal back onto the same bits. Faults move only the
+//! protocol counters ([`coordinator::DistStats`]), never the bits —
+//! enforced by `rust/tests/dist.rs` and CI's `dist-smoke` and
+//! `dist-chaos-smoke` jobs.
 
 pub mod coordinator;
+pub mod journal;
 pub mod protocol;
 pub mod store;
 pub mod transport;
 pub mod worker;
 
 pub use coordinator::{
-    run_synthetic_distributed, run_synthetic_workers, DistConfig, DistRun, DistStats, Phase,
+    retry_backoff, run_synthetic_distributed, run_synthetic_journal, run_synthetic_workers,
+    DistConfig, DistOutcome, DistRun, DistStats, KillReport, Phase,
 };
+pub use journal::{Journal, Recovered, RunMeta};
 pub use protocol::{CoordMsg, GramUnit, WorkerMsg};
 pub use store::{parse_artifact_id, ArtifactStore, FetchReport, Manifest, CHUNK_SIZE};
-pub use transport::{FaultPlan, LocalTransport, Transport, TransportStats};
+pub use transport::{CoordKill, FaultPlan, LocalTransport, Transport, TransportStats};

@@ -44,12 +44,34 @@ pub struct GramUnit {
     pub sample: usize,
 }
 
+/// Size of the canonical [`GramUnit`] wire encoding: three little-endian
+/// u32 indices. Shared with the coordinator journal
+/// ([`crate::dist::journal`]) so unit identity bytes are identical
+/// everywhere they are framed.
+pub const UNIT_WIRE_BYTES: usize = 12;
+
 impl GramUnit {
     /// Position of this unit in the block's fixed `(layer, sample)` merge
     /// order — the same order [`crate::hessian::Hessian::from_grams`]
     /// folds partials in.
     pub fn merge_index(&self, n_contrib: usize) -> usize {
         self.layer * n_contrib + self.sample
+    }
+
+    /// Append the canonical [`UNIT_WIRE_BYTES`]-byte encoding.
+    pub fn encode_to(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.block as u32).to_le_bytes());
+        out.extend_from_slice(&(self.layer as u32).to_le_bytes());
+        out.extend_from_slice(&(self.sample as u32).to_le_bytes());
+    }
+
+    /// Inverse of [`GramUnit::encode_to`].
+    pub fn decode_from(bytes: &[u8; UNIT_WIRE_BYTES]) -> GramUnit {
+        GramUnit {
+            block: u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize,
+            layer: u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize,
+            sample: u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize,
+        }
     }
 }
 
@@ -165,6 +187,16 @@ mod tests {
         let frame = encode_gram(&randmat(9, 2, 2));
         assert!(decode_gram(&frame[..frame.len() - 1]).is_err());
         assert!(decode_gram(&[]).is_err());
+    }
+
+    #[test]
+    fn unit_wire_encoding_round_trips() {
+        let u = GramUnit { block: 3, layer: 5, sample: 7 };
+        let mut buf = Vec::new();
+        u.encode_to(&mut buf);
+        assert_eq!(buf.len(), UNIT_WIRE_BYTES);
+        let arr: [u8; UNIT_WIRE_BYTES] = buf.try_into().unwrap();
+        assert_eq!(GramUnit::decode_from(&arr), u);
     }
 
     #[test]

@@ -26,14 +26,100 @@
 
 use std::sync::mpsc::{channel, Sender};
 
+use anyhow::{bail, Result};
+
 use crate::coordinator::SyntheticSpec;
 use crate::util::rng::Rng;
 
 use super::protocol::{CoordMsg, WorkerId, WorkerMsg};
 use super::worker::Worker;
 
+/// A seeded coordinator-kill schedule: *when* the coordinator process dies
+/// mid-run. Unlike the per-message faults below, this fault fires in the
+/// coordinator itself (the journal-aware run loop probes it at every state
+/// transition) — the transport only carries the schedule so one
+/// [`FaultPlan`] describes an entire chaos run. A killed coordinator
+/// leaves its journal behind; `--resume` replays it and finishes
+/// bit-identically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoordKill {
+    /// Never kill the coordinator.
+    None,
+    /// Die the first time the virtual clock reaches tick `T` (probed
+    /// after each transport step, so mid-Assigning/Accumulating).
+    AtTick(u64),
+    /// Die immediately after the `K`-th accepted Gram result, counted
+    /// cumulatively across incarnations.
+    AfterAccepted(usize),
+    /// Die when block `block` enters its Merging phase — after every Gram
+    /// of the block is accepted but before the merge commits.
+    AtMerging { block: usize },
+}
+
+impl CoordKill {
+    /// Parse the `--coord-kill` CLI spelling: `none`, `tick:T`,
+    /// `accepted:K`, `merging[:B]`, or `seed:S` (a seeded random choice of
+    /// the other three).
+    pub fn parse(s: &str) -> Result<CoordKill> {
+        let (kind, arg) = match s.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (s, None),
+        };
+        let num = |what: &str| -> Result<u64> {
+            match arg {
+                Some(a) => a
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("--coord-kill {kind}: bad {what} {a:?}")),
+                None => bail!("--coord-kill {kind} needs an argument, e.g. {kind}:4"),
+            }
+        };
+        Ok(match kind {
+            "none" => CoordKill::None,
+            "tick" => CoordKill::AtTick(num("tick")?),
+            "accepted" => CoordKill::AfterAccepted(num("count")? as usize),
+            "merging" => CoordKill::AtMerging {
+                block: match arg {
+                    Some(_) => num("block")? as usize,
+                    None => 0,
+                },
+            },
+            "seed" => CoordKill::seeded(num("seed")?),
+            _ => bail!(
+                "unknown --coord-kill schedule {s:?} (expected none, tick:T, accepted:K, \
+                 merging[:B], or seed:S)"
+            ),
+        })
+    }
+
+    /// Derive one of the three kill kinds from a seed — the chaos-schedule
+    /// analog of [`FaultPlan::seeded`].
+    pub fn seeded(seed: u64) -> CoordKill {
+        if seed == 0 {
+            return CoordKill::None;
+        }
+        let mut rng = Rng::new(seed ^ 0xC0_0DD1_E5ED);
+        match rng.below(3) {
+            0 => CoordKill::AtTick(3 + rng.below(10) as u64),
+            1 => CoordKill::AfterAccepted(1 + rng.below(12)),
+            _ => CoordKill::AtMerging { block: rng.below(2) },
+        }
+    }
+
+    /// Stable display form, matching the [`CoordKill::parse`] spelling.
+    pub fn label(&self) -> String {
+        match self {
+            CoordKill::None => "none".to_string(),
+            CoordKill::AtTick(t) => format!("tick:{t}"),
+            CoordKill::AfterAccepted(k) => format!("accepted:{k}"),
+            CoordKill::AtMerging { block } => format!("merging:{block}"),
+        }
+    }
+}
+
 /// Seeded failure model applied to every message crossing the transport.
-/// `seed == 0` (or [`FaultPlan::none`]) disables all injection.
+/// `seed == 0` (or [`FaultPlan::none`]) disables all per-message injection;
+/// `coord_kill` is independent of `seed` so a kill schedule can run over a
+/// fault-free transport.
 #[derive(Debug, Clone)]
 pub struct FaultPlan {
     pub seed: u64,
@@ -48,20 +134,39 @@ pub struct FaultPlan {
     /// Workers to kill at seeded ticks (clamped to `workers − 1` so a run
     /// can always finish).
     pub kill: usize,
+    /// Coordinator-kill schedule (requires a journal to be recoverable).
+    pub coord_kill: CoordKill,
 }
 
 impl FaultPlan {
     pub fn none() -> FaultPlan {
-        FaultPlan { seed: 0, drop: 0.0, duplicate: 0.0, corrupt: 0.0, max_delay: 0, kill: 0 }
+        FaultPlan {
+            seed: 0,
+            drop: 0.0,
+            duplicate: 0.0,
+            corrupt: 0.0,
+            max_delay: 0,
+            kill: 0,
+            coord_kill: CoordKill::None,
+        }
     }
 
     /// The default lossy plan used by `--fault-seed`: moderate drop /
     /// duplication / corruption rates, short delays, one worker death.
+    /// Coordinator kills are scheduled separately (`--coord-kill`).
     pub fn seeded(seed: u64) -> FaultPlan {
         if seed == 0 {
             return FaultPlan::none();
         }
-        FaultPlan { seed, drop: 0.12, duplicate: 0.12, corrupt: 0.05, max_delay: 3, kill: 1 }
+        FaultPlan {
+            seed,
+            drop: 0.12,
+            duplicate: 0.12,
+            corrupt: 0.05,
+            max_delay: 3,
+            kill: 1,
+            coord_kill: CoordKill::None,
+        }
     }
 
     pub fn is_active(&self) -> bool {
@@ -342,7 +447,15 @@ mod tests {
     #[test]
     fn seeded_trace_is_reproducible() {
         let spec = spec();
-        let plan = FaultPlan { seed: 42, drop: 0.3, duplicate: 0.3, corrupt: 0.2, max_delay: 2, kill: 1 };
+        let plan = FaultPlan {
+            seed: 42,
+            drop: 0.3,
+            duplicate: 0.3,
+            corrupt: 0.2,
+            max_delay: 2,
+            kill: 1,
+            ..FaultPlan::none()
+        };
         let run = |plan: FaultPlan| {
             let mut t = LocalTransport::new(3, &spec, plan);
             let mut arrivals = Vec::new();
@@ -369,12 +482,34 @@ mod tests {
     #[test]
     fn kill_is_clamped_to_leave_one_worker() {
         let spec = spec();
-        let plan = FaultPlan { seed: 5, drop: 0.0, duplicate: 0.0, corrupt: 0.0, max_delay: 0, kill: 99 };
+        let plan = FaultPlan { seed: 5, kill: 99, ..FaultPlan::none() };
         let mut t = LocalTransport::new(3, &spec, plan);
         for _ in 0..40 {
             t.step();
         }
         assert_eq!(t.stats().workers_killed, 2);
         assert!(t.alive.iter().any(|&a| a), "one worker must survive");
+    }
+
+    #[test]
+    fn coord_kill_parses_every_spelling() {
+        assert_eq!(CoordKill::parse("none").unwrap(), CoordKill::None);
+        assert_eq!(CoordKill::parse("tick:4").unwrap(), CoordKill::AtTick(4));
+        assert_eq!(CoordKill::parse("accepted:9").unwrap(), CoordKill::AfterAccepted(9));
+        assert_eq!(CoordKill::parse("merging").unwrap(), CoordKill::AtMerging { block: 0 });
+        assert_eq!(CoordKill::parse("merging:1").unwrap(), CoordKill::AtMerging { block: 1 });
+        assert_eq!(CoordKill::parse("seed:7").unwrap(), CoordKill::seeded(7));
+        assert_ne!(CoordKill::seeded(7), CoordKill::None);
+        assert!(CoordKill::parse("tick").is_err());
+        assert!(CoordKill::parse("tick:x").is_err());
+        assert!(CoordKill::parse("sometimes").is_err());
+        for k in [
+            CoordKill::None,
+            CoordKill::AtTick(6),
+            CoordKill::AfterAccepted(3),
+            CoordKill::AtMerging { block: 1 },
+        ] {
+            assert_eq!(CoordKill::parse(&k.label()).unwrap(), k, "label round-trips");
+        }
     }
 }

@@ -136,10 +136,20 @@
 //! worker death), and because every unit is a pure function of its indices
 //! and results merge deduplicated in fixed `(layer, sample)` order, every
 //! worker count and every fault schedule is bit-identical to
-//! single-process. [`dist::ArtifactStore`] distributes the packed models
-//! themselves: content-addressed FNV-keyed chunks with integrity-verified,
-//! resumable fetch (`oac artifacts push|fetch|verify|list`;
-//! `oac serve --packed <id> --store <dir>` serves straight from the store).
+//! single-process. The coordinator is crash-recoverable: [`dist::Journal`]
+//! is an append-only, self-checking event log (hash-chained FNV frames —
+//! any single-bit flip is a hard integrity error, a torn tail a clean
+//! resume point) written ahead of every state transition, so a coordinator
+//! killed at any tick (seeded [`dist::CoordKill`] schedules via
+//! `--coord-kill`) restarts with `--journal <dir> --resume`, replays to the
+//! exact state-machine position, dedups in-flight results, re-leases them
+//! after a deterministic retry backoff ([`dist::retry_backoff`]), and
+//! finishes checksum- and packed-byte-identical to the uninterrupted run
+//! (CI's `dist-chaos-smoke`). [`dist::ArtifactStore`] distributes the
+//! packed models themselves: content-addressed FNV-keyed chunks with
+//! integrity-verified, resumable fetch (`oac artifacts
+//! push|fetch|verify|list`; `oac serve --packed <id> --store <dir>` serves
+//! straight from the store).
 //!
 //! ## The contract analyzer
 //!

@@ -22,7 +22,10 @@ use oac::coordinator::{
     PipelineBuilder, PipelineConfig, SyntheticSpec,
 };
 use oac::data::{Flavor, Splits, TestSplit};
-use oac::dist::{parse_artifact_id, run_synthetic_workers, ArtifactStore, FaultPlan};
+use oac::dist::{
+    parse_artifact_id, run_synthetic_journal, run_synthetic_workers, ArtifactStore, CoordKill,
+    DistConfig, DistOutcome, FaultPlan,
+};
 use oac::eval::{evaluate, evaluate_packed, EvalConfig};
 use oac::experiments::{artifacts_root, baseline_row, method_row, ROW_HEADERS};
 use oac::hessian::Reduction;
@@ -72,6 +75,17 @@ USAGE:
                 single-process run for every N and, with --fault-seed,
                 under seeded drops/duplicates/delays/corruption/worker
                 death; prints the protocol counters)
+  oac quantize --synthetic --workers N --journal DIR [--resume]
+               [--coord-kill none|tick:T|accepted:K|merging[:B]|seed:S] ...
+               (crash-recoverable distributed run: every coordinator state
+                transition is appended to DIR/journal.oaclog — an FNV-framed,
+                self-checking event log — ahead of the in-memory change.
+                --coord-kill kills the coordinator at the scheduled
+                transition and prints state=killed; rerunning with --resume
+                replays the journal to the exact kill point, dedups results
+                that were in flight, re-leases them after a deterministic
+                retry backoff, and finishes with the same checksum and
+                packed bytes as an uninterrupted single-process run)
   oac serve    --synthetic [--batch 4] [--requests 16] [--threads 4] [--method oac]
                [--bits 2] [--blocks 2] [--d-model 64] [--d-ff 128] [--seed 0]
                [--arrival-schedule burst|every:K|random:K] [--queue-depth 4]
@@ -166,6 +180,12 @@ fn apply_pipeline_args(mut b: PipelineBuilder, args: &Args) -> Result<PipelineBu
     if let Some(p) = args.get("pack-out") {
         b = b.pack_out(p);
     }
+    if let Some(dir) = args.get("journal") {
+        b = b.journal(dir);
+    }
+    if args.flag("resume") {
+        b = b.resume(true);
+    }
     // --threads N: Phase-2 fan-out width + the global pool for the sharded
     // tensor reductions. Bit-identical output for every N (see util::pool).
     Ok(b.threads(args.threads()))
@@ -200,6 +220,7 @@ fn run() -> Result<()> {
         "no-continuous",
         "no-prefix-share",
         "deny-warnings",
+        "resume",
     ]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
@@ -452,9 +473,11 @@ fn cmd_quantize_synthetic(args: &Args) -> Result<()> {
 /// `oac quantize --synthetic --workers N`: the distributed calibration
 /// subsystem — Phase-1 Gram units sharded across N virtual workers behind
 /// the in-process transport (`--fault-seed S` turns on seeded fault
-/// injection). Prints the same `checksum=` token as the single-process
-/// path plus the protocol counters; the checksum is bit-identical to
-/// `run_synthetic` for every worker count and fault schedule.
+/// injection; `--journal DIR` makes the run crash-recoverable, with
+/// `--coord-kill` schedules and `--resume`). Prints the same `checksum=`
+/// token as the single-process path plus the protocol counters; the
+/// checksum is bit-identical to `run_synthetic` for every worker count,
+/// fault schedule, and kill/resume chain.
 fn cmd_quantize_synthetic_dist(args: &Args, workers: usize) -> Result<()> {
     anyhow::ensure!(workers > 0, "--workers must be positive");
     anyhow::ensure!(
@@ -463,9 +486,49 @@ fn cmd_quantize_synthetic_dist(args: &Args, workers: usize) -> Result<()> {
     );
     let p = pipeline_from_args(args)?;
     let spec = synthetic_spec_from_args(args);
-    let fault = FaultPlan::seeded(args.u64_or("fault-seed", 0));
+    let mut fault = FaultPlan::seeded(args.u64_or("fault-seed", 0));
+    if let Some(k) = args.get("coord-kill") {
+        fault.coord_kill = CoordKill::parse(k)?;
+    }
+    anyhow::ensure!(
+        fault.coord_kill == CoordKill::None || p.journal.is_some(),
+        "--coord-kill needs --journal <dir> (a killed coordinator is only recoverable from \
+         its journal)"
+    );
+    anyhow::ensure!(
+        !p.resume || p.journal.is_some(),
+        "--resume needs --journal <dir> (the journal holds the state to resume from)"
+    );
     let t = std::time::Instant::now(); // oac-lint: allow(wallclock, "report-only CLI total= timer")
-    let run = run_synthetic_workers(&spec, &p, workers, fault)?;
+    let run = match &p.journal {
+        Some(dir) => {
+            let outcome = run_synthetic_journal(
+                &spec,
+                &p,
+                workers,
+                fault,
+                &DistConfig::default(),
+                dir,
+                p.resume,
+            )?;
+            match outcome {
+                DistOutcome::Done(run) => *run,
+                DistOutcome::Killed(k) => {
+                    println!(
+                        "coordinator state=killed schedule={} ticks={} workers={} leases={} \
+                         journal={} (restart with --resume to finish the run)",
+                        k.schedule,
+                        k.ticks,
+                        k.stats.workers,
+                        k.stats.leases,
+                        dir.display()
+                    );
+                    return Ok(());
+                }
+            }
+        }
+        None => run_synthetic_workers(&spec, &p, workers, fault)?,
+    };
     if let Some(pack_path) = &p.pack_out {
         let packed = run.packed.as_ref().expect("pack_out set, coordinator packs");
         packed.save(pack_path)?;
@@ -478,7 +541,8 @@ fn cmd_quantize_synthetic_dist(args: &Args, workers: usize) -> Result<()> {
     }
     println!(
         "method={} avg_bits={:.2} outliers={} threads={} workers={} leases={} retried={} \
-         duplicates={} corrupt={} ticks={} checksum={:016x} total={:.2}s",
+         duplicates={} corrupt={} ticks={} incarnations={} state=done checksum={:016x} \
+         total={:.2}s",
         run.report.method,
         run.report.avg_bits,
         run.report.total_outliers,
@@ -489,6 +553,7 @@ fn cmd_quantize_synthetic_dist(args: &Args, workers: usize) -> Result<()> {
         run.stats.duplicates,
         run.stats.corrupt,
         run.stats.ticks,
+        run.stats.incarnations,
         run.weights.fingerprint(),
         t.elapsed().as_secs_f64()
     );

@@ -12,10 +12,18 @@
 //! 3. **Store round-trip.** A packed model pushed to the content-addressed
 //!    store and fetched chunk-by-chunk — including a forced mid-fetch
 //!    resume — serves byte-identically to the directly built model.
+//! 4. **Crash recovery.** A journaled coordinator killed at any of the
+//!    seeded kill schedules (at a tick, after K accepts, mid-Merging) and
+//!    restarted with resume replays its journal and finishes with the same
+//!    checksum and packed bytes as the uninterrupted single-process run.
 
 use oac::calib::{Backend, Method};
 use oac::coordinator::{run_synthetic, PipelineConfig, SyntheticSpec};
-use oac::dist::{run_synthetic_workers, ArtifactStore, FaultPlan};
+use oac::dist::journal::Event;
+use oac::dist::{
+    run_synthetic_journal, run_synthetic_workers, ArtifactStore, CoordKill, DistConfig,
+    DistOutcome, FaultPlan, Journal,
+};
 use oac::serve::{build_synthetic, engine, PackedModel};
 
 fn small_spec() -> SyntheticSpec {
@@ -82,6 +90,175 @@ fn dist_packed_export_matches_single_process_pack() {
             "workers={workers}: packed bytes diverged"
         );
     }
+}
+
+fn chaos_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("oac_dist_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn kill_and_resume_bit_identical_across_three_phases() {
+    let spec = SyntheticSpec { blocks: 2, ..small_spec() };
+    let mut cfg = PipelineConfig::new(Method::oac(Backend::SPQR), 2);
+    let (want_model, _) = build_synthetic(&spec, &cfg).expect("single-process pack");
+    let want_ws = run_synthetic(&spec, &cfg).expect("single-process run").0.fingerprint();
+    // pack_out just has to be Some for the Packing phase to run.
+    cfg.pack_out = Some(std::path::PathBuf::from("unused.pack"));
+    let dcfg = DistConfig::default();
+
+    // Three distinct kill points: mid-Accumulating by tick, after the 5th
+    // accepted result, and at the second block's Merging entry.
+    let kills = [
+        ("tick", CoordKill::AtTick(4)),
+        ("accepted", CoordKill::AfterAccepted(5)),
+        ("merging", CoordKill::AtMerging { block: 1 }),
+    ];
+    for (tag, kill) in kills {
+        let dir = chaos_dir(tag);
+        let fault = FaultPlan { coord_kill: kill, ..FaultPlan::seeded(7) };
+        let outcome = run_synthetic_journal(&spec, &cfg, 4, fault, &dcfg, &dir, false)
+            .expect("killed run still returns cleanly");
+        let report = match outcome {
+            DistOutcome::Killed(k) => k,
+            DistOutcome::Done(_) => panic!("{tag}: kill schedule must fire"),
+        };
+        assert_eq!(report.schedule, kill.label(), "{tag}: wrong schedule fired");
+
+        // Fresh coordinator, fresh transport, same journal: --resume.
+        let run = run_synthetic_journal(&spec, &cfg, 4, FaultPlan::seeded(7), &dcfg, &dir, true)
+            .expect("resume")
+            .into_done()
+            .expect("resumed run finishes");
+        assert_eq!(run.stats.incarnations, 2, "{tag}");
+        assert!(run.stats.replayed > 0, "{tag}: resume must replay journal events");
+        assert_eq!(run.weights.fingerprint(), want_ws, "{tag}: weights diverged after resume");
+        let packed = run.packed.expect("pack_out set, so the run must pack");
+        assert_eq!(
+            packed.to_bytes().expect("serialize"),
+            want_model.to_bytes().expect("serialize"),
+            "{tag}: packed bytes diverged after resume"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn double_kill_chain_resumes_to_identical_bits() {
+    let spec = SyntheticSpec { blocks: 2, ..small_spec() };
+    let cfg = PipelineConfig::new(Method::oac(Backend::SPQR), 2);
+    let want = run_synthetic(&spec, &cfg).expect("single-process run").0.fingerprint();
+    let dir = chaos_dir("doublekill");
+    let dcfg = DistConfig::default();
+
+    let f1 = FaultPlan { coord_kill: CoordKill::AtTick(3), ..FaultPlan::none() };
+    let k1 = run_synthetic_journal(&spec, &cfg, 3, f1, &dcfg, &dir, false).expect("first run");
+    assert!(matches!(k1, DistOutcome::Killed(_)), "first kill must fire");
+
+    let f2 = FaultPlan { coord_kill: CoordKill::AtMerging { block: 1 }, ..FaultPlan::none() };
+    let k2 = run_synthetic_journal(&spec, &cfg, 3, f2, &dcfg, &dir, true).expect("second run");
+    assert!(matches!(k2, DistOutcome::Killed(_)), "second kill must fire at block 1 merging");
+
+    let run = run_synthetic_journal(&spec, &cfg, 3, FaultPlan::none(), &dcfg, &dir, true)
+        .expect("third run")
+        .into_done()
+        .expect("third incarnation finishes");
+    assert_eq!(run.stats.incarnations, 3);
+    assert_eq!(run.weights.fingerprint(), want, "weights diverged across a double-kill chain");
+
+    // The journal itself tells the story: metadata first, two resume
+    // markers, one merge commit per block, and a final run-done record.
+    let events = Journal::replay(&Journal::path_in(&dir)).expect("journal replays");
+    assert!(matches!(events.first(), Some(Event::Meta(_))));
+    assert_eq!(events.iter().filter(|e| matches!(e, Event::Resumed { .. })).count(), 2);
+    assert_eq!(
+        events.iter().filter(|e| matches!(e, Event::BlockDone { .. })).count(),
+        spec.blocks
+    );
+    assert!(matches!(events.last(), Some(Event::RunDone { .. })));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_refuses_a_mismatched_run() {
+    let spec = SyntheticSpec { blocks: 2, ..small_spec() };
+    let cfg = PipelineConfig::new(Method::oac(Backend::SPQR), 2);
+    let dir = chaos_dir("mismatch");
+    let dcfg = DistConfig::default();
+    let fault = FaultPlan { coord_kill: CoordKill::AtTick(3), ..FaultPlan::none() };
+    let outcome =
+        run_synthetic_journal(&spec, &cfg, 2, fault, &dcfg, &dir, false).expect("killed run");
+    assert!(matches!(outcome, DistOutcome::Killed(_)));
+
+    // A different spec must be refused.
+    let other_spec = SyntheticSpec { d_model: 64, ..spec.clone() };
+    let err = run_synthetic_journal(&other_spec, &cfg, 2, FaultPlan::none(), &dcfg, &dir, true)
+        .expect_err("spec mismatch must refuse");
+    assert!(err.to_string().contains("refusing to resume"), "unexpected: {err}");
+
+    // A different method must be refused.
+    let other_cfg = PipelineConfig::new(Method::oac(Backend::RTN), 2);
+    let err = run_synthetic_journal(&spec, &other_cfg, 2, FaultPlan::none(), &dcfg, &dir, true)
+        .expect_err("method mismatch must refuse");
+    assert!(err.to_string().contains("refusing to resume"), "unexpected: {err}");
+
+    // And starting fresh over an existing journal must be refused too.
+    let err = run_synthetic_journal(&spec, &cfg, 2, FaultPlan::none(), &dcfg, &dir, false)
+        .expect_err("existing journal must not be clobbered");
+    assert!(err.to_string().contains("already exists"), "unexpected: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_of_a_finished_journal_replays_to_the_same_bits() {
+    let spec = SyntheticSpec { blocks: 2, ..small_spec() };
+    let cfg = PipelineConfig::new(Method::oac(Backend::SPQR), 2);
+    let dir = chaos_dir("finished");
+    let dcfg = DistConfig::default();
+    let first = run_synthetic_journal(&spec, &cfg, 2, FaultPlan::none(), &dcfg, &dir, false)
+        .expect("uninterrupted journaled run")
+        .into_done()
+        .expect("finishes");
+    assert_eq!(first.stats.incarnations, 1);
+    let again = run_synthetic_journal(&spec, &cfg, 2, FaultPlan::none(), &dcfg, &dir, true)
+        .expect("resume of a finished run")
+        .into_done()
+        .expect("replays to done");
+    assert_eq!(again.weights.fingerprint(), first.weights.fingerprint());
+    assert_eq!(again.stats.incarnations, 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn every_configured_fault_kind_fires() {
+    let spec = small_spec();
+    let cfg = PipelineConfig::new(Method::oac(Backend::SPQR), 2);
+    let mut dropped = 0usize;
+    let mut duplicated = 0usize;
+    let mut delayed = 0usize;
+    let mut corrupted = 0usize;
+    let mut workers_killed = 0usize;
+    for seed in [1u64, 7, 11, 23] {
+        let plan = FaultPlan::seeded(seed);
+        assert!(plan.is_active(), "seeded plan must be active");
+        let run = run_synthetic_workers(&spec, &cfg, 4, plan)
+            .expect("faulty distributed run must still complete");
+        let f = run.stats.faults;
+        dropped += f.dropped;
+        duplicated += f.duplicated;
+        delayed += f.delayed;
+        corrupted += f.corrupted;
+        workers_killed += f.workers_killed;
+    }
+    // Every fault kind the seeded plan configures must actually have
+    // fired somewhere in the sweep — a schedule that exercises nothing
+    // proves nothing.
+    assert!(dropped > 0, "configured drop rate never dropped a message");
+    assert!(duplicated > 0, "configured duplicate rate never duplicated a message");
+    assert!(delayed > 0, "configured max_delay never delayed a message");
+    assert!(corrupted > 0, "configured corrupt rate never corrupted a payload");
+    assert!(workers_killed > 0, "configured worker kill never fired");
 }
 
 #[test]
