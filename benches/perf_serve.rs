@@ -1,26 +1,30 @@
-//! Perf: serving forward throughput across the three compute paths — dense
-//! f32 GEMM, packed-f32 fused unpack-GEMM, and the integer-domain
-//! packed-int8 kernel — on 1/2/4/8 threads, plus an engine-level tokens/s
-//! comparison on the synthetic packed model.
+//! Perf: serving forward throughput across the compute paths — dense f32
+//! GEMM, packed-f32 fused unpack-GEMM, and the integer-domain path
+//! (pre-widened weight cache × int8 or nibble-packed int4 activations)
+//! under every kernel variant this host supports — on 1/2/4/8 threads,
+//! plus an engine-level tokens/s comparison on the synthetic packed model.
 //!
 //! Run:  cargo bench --bench perf_serve [-- --quick]
 //! Emits a machine-readable `BENCH_serve.json` (tokens/s and ns/token per
-//! path × bits × threads, the continuous-batching latency curves —
-//! p50/p95/p99 + throughput per queue depth × threads under a seeded
-//! arrival schedule — and the headline `int8_speedup_t4` = geomean
-//! packed-f32 / packed-int8 wall-clock at 4 threads) so the serving perf
-//! trajectory is tracked across PRs. `--quick` shrinks shapes and iteration
-//! counts for CI smoke.
+//! path × bits × threads — integer rows carry a `kernel` field per
+//! dispatch variant — the continuous-batching latency curves, and the
+//! headline `int8_speedup_t4` / `int4_speedup_t4` = geomean packed-f32 /
+//! integer-path wall-clock at 4 threads under the auto-dispatched kernel)
+//! so the serving perf trajectory is tracked across PRs. `--quick`
+//! shrinks shapes and iteration counts for CI smoke.
 //!
-//! Expected: packed-int8 ≥ 1.5x the packed-f32 fused path at 4 threads
-//! (integer dot kernel + i8 activation tiles staying L1-resident), and the
+//! Expected: cached+dispatched packed-int8 ≥ 3x the packed-f32 fused path
+//! at 4 threads (no per-call unpack+widen, SIMD madd kernels, i8
+//! activation tiles staying L1-resident), int4 at or above int8, and the
 //! exact packed path within ~1.2x of dense at 4-16x lower weight bytes.
 
 use std::time::Duration;
 
 use oac::calib::{Backend, Method};
 use oac::coordinator::{PipelineConfig, SyntheticSpec};
-use oac::serve::{self, engine, PackedLinear};
+use oac::quant::act_quant::{self, QuantizedActs};
+use oac::serve::{self, engine, LayerCache, PackedLinear, ServeScratch};
+use oac::tensor::arch::{KernelDispatch, KernelKind};
 use oac::tensor::Mat;
 use oac::util::bench::{bench_cfg, black_box, BenchConfig, BenchJson};
 use oac::util::json::Json;
@@ -58,10 +62,22 @@ fn main() {
             ("group", Json::num(group as f64)),
         ]),
     );
-    let mut speedups_t4: Vec<f64> = Vec::new();
+    // Kernel variants to sweep: every variant this host supports (scalar
+    // first), with the auto pick carrying the headline speedups.
+    let variants = KernelKind::available();
+    let auto_kind = KernelDispatch::auto().kind;
+    println!("kernel variants: {:?} (auto -> {})", variants, auto_kind.name());
+
+    let mut int8_speedups_t4: Vec<f64> = Vec::new();
+    let mut int4_speedups_t4: Vec<f64> = Vec::new();
     for &bits in bits_axis {
         let pl: PackedLinear = serve::encode_uniform("w", &w, group, bits);
         let dense = pl.dequantize();
+        // The pre-widened cache is built once per layer (as PackedModel
+        // does at load); the timed loops charge activation quantization +
+        // the cached integer forward, never the unpack+widen.
+        let cache = LayerCache::build(&pl);
+        let scratch = ServeScratch::default();
         println!(
             "\n== {bits}-bit {rows}x{cols} @ batch {batch}: {} packed vs {} dense bytes ==",
             pl.packed_bytes(),
@@ -75,21 +91,7 @@ fn main() {
             let rf = bench_cfg(&format!("packed_f32_fwd_b{bits}_t{threads}"), cfg, &mut || {
                 black_box(pl.forward_with(&pool, &x).data.len());
             });
-            let ri = bench_cfg(&format!("packed_int8_fwd_b{bits}_t{threads}"), cfg, &mut || {
-                black_box(pl.forward_int8_with(&pool, &x).data.len());
-            });
-            let int8_speedup = rf.mean_ns / ri.mean_ns;
-            if threads == 4 {
-                speedups_t4.push(int8_speedup);
-            }
-            println!(
-                "  -> t{threads}: int8 {:.2}x vs packed-f32 ({:.0} vs {:.0} ns/token), dense {:.0} ns/token",
-                int8_speedup,
-                ri.mean_ns / batch as f64,
-                rf.mean_ns / batch as f64,
-                rd.mean_ns / batch as f64,
-            );
-            for (path, r) in [("dense", &rd), ("packed-f32", &rf), ("packed-int8", &ri)] {
+            for (path, r) in [("dense", &rd), ("packed-f32", &rf)] {
                 out.record(vec![
                     ("section", Json::str("layer")),
                     ("path", Json::str(path)),
@@ -102,11 +104,60 @@ fn main() {
                     ("dense_bytes", Json::num(pl.dense_bytes() as f64)),
                 ]);
             }
+            println!(
+                "  t{threads}: packed-f32 {:.0} ns/token, dense {:.0} ns/token",
+                rf.mean_ns / batch as f64,
+                rd.mean_ns / batch as f64,
+            );
+            let mut acts = QuantizedActs::default();
+            let mut y = Mat::zeros(pl.rows, batch);
+            for &kind in &variants {
+                let kern = KernelDispatch::of(kind);
+                for act_bits in [8usize, 4] {
+                    let name = format!(
+                        "packed_int{act_bits}_{}_b{bits}_t{threads}",
+                        kind.name()
+                    );
+                    let r = bench_cfg(&name, cfg, &mut || {
+                        act_quant::quantize_into_bits(&x, pl.act_group(), act_bits, &mut acts);
+                        pl.forward_int8_into(&pool, &x, &acts, &cache, &kern, &scratch, &mut y);
+                        black_box(y.data.len());
+                    });
+                    let speedup = rf.mean_ns / r.mean_ns;
+                    if threads == 4 && kind == auto_kind {
+                        if act_bits == 8 {
+                            int8_speedups_t4.push(speedup);
+                        } else {
+                            int4_speedups_t4.push(speedup);
+                        }
+                    }
+                    println!(
+                        "  -> t{threads} {} int{act_bits}: {speedup:.2}x vs packed-f32 \
+                         ({:.0} ns/token)",
+                        kind.name(),
+                        r.mean_ns / batch as f64,
+                    );
+                    out.record(vec![
+                        ("section", Json::str("layer")),
+                        ("path", Json::str(&format!("packed-int{act_bits}"))),
+                        ("kernel", Json::str(kind.name())),
+                        ("bits", Json::num(bits as f64)),
+                        ("threads", Json::num(threads as f64)),
+                        ("mean_ns", Json::num(r.mean_ns)),
+                        ("ns_per_token", Json::num(r.mean_ns / batch as f64)),
+                        ("tokens_per_s", Json::num(batch as f64 / r.mean_secs())),
+                        ("packed_bytes", Json::num(pl.packed_bytes() as f64)),
+                        ("dense_bytes", Json::num(pl.dense_bytes() as f64)),
+                        ("weight_cache_bytes", Json::num(cache.bytes() as f64)),
+                    ]);
+                }
+            }
         }
     }
 
     // Engine-level tokens/s on the synthetic packed model: the full batched
-    // request loop (block forward + norms), exact vs int8.
+    // request loop (block forward + norms), exact vs int8 vs int4, under
+    // the auto-dispatched kernel.
     let spec = if quick {
         SyntheticSpec { blocks: 1, d_model: 64, d_ff: 128, ..SyntheticSpec::default() }
     } else {
@@ -118,7 +169,7 @@ fn main() {
     let ebatch = if quick { 8 } else { 16 };
     println!("\n== engine: synthetic model d_model={} blocks={} ==", spec.d_model, spec.blocks);
     for &threads in threads_axis {
-        for act_bits in [0usize, 8] {
+        for act_bits in [0usize, 4, 8] {
             let scfg = engine::ServeConfig {
                 batch: ebatch,
                 requests,
@@ -129,15 +180,21 @@ fn main() {
                 ..engine::ServeConfig::default()
             };
             let rep = engine::run(&model, &scfg).expect("engine run");
-            let label = if act_bits == 8 { "packed-int8" } else { "packed-f32" };
+            let label = match act_bits {
+                8 => "packed-int8",
+                4 => "packed-int4",
+                _ => "packed-f32",
+            };
             println!(
-                "  engine {label} t{threads}: {:.1} req/s (checksum {:016x})",
+                "  engine {label} t{threads} kernel={}: {:.1} req/s (checksum {:016x})",
+                rep.kernel,
                 rep.throughput_rps(),
                 rep.checksum
             );
             out.record(vec![
                 ("section", Json::str("engine")),
                 ("path", Json::str(label)),
+                ("kernel", Json::str(&rep.kernel)),
                 ("threads", Json::num(threads as f64)),
                 ("requests", Json::num(requests as f64)),
                 ("tokens_per_s", Json::num(rep.throughput_rps())),
@@ -145,6 +202,7 @@ fn main() {
                     "ns_per_token",
                     Json::num(rep.packed_secs * 1e9 / requests as f64),
                 ),
+                ("weight_cache_bytes", Json::num(rep.weight_cache_bytes as f64)),
             ]);
         }
     }
@@ -196,7 +254,14 @@ fn main() {
         }
     }
 
-    out.field("int8_speedup_t4", Json::num(stats::geomean(&speedups_t4)));
+    out.field("kernel", Json::str(auto_kind.name()));
+    out.field("int8_speedup_t4", Json::num(stats::geomean(&int8_speedups_t4)));
+    out.field("int4_speedup_t4", Json::num(stats::geomean(&int4_speedups_t4)));
     out.write("BENCH_serve.json");
-    println!("int8_speedup_t4 = {:.2}x", stats::geomean(&speedups_t4));
+    println!(
+        "kernel = {} | int8_speedup_t4 = {:.2}x | int4_speedup_t4 = {:.2}x",
+        auto_kind.name(),
+        stats::geomean(&int8_speedups_t4),
+        stats::geomean(&int4_speedups_t4)
+    );
 }

@@ -101,9 +101,11 @@ USAGE:
                 every request from scratch. The printed output and
                 completion checksums are bit-identical for every --threads
                 value and for continuous vs fixed scheduling)
-  oac serve    ... [--act-bits 8]
-               (integer-domain forward: int8 activations x weight codes,
-                i32-accumulating kernel; deterministic and thread-invariant,
+  oac serve    ... [--act-bits 8|4] [--kernel auto|scalar|avx2|neon]
+               (integer-domain forward: int8 or nibble-packed int4
+                activations x pre-widened cached weight codes, through the
+                runtime-dispatched i32-accumulating kernel; deterministic,
+                thread-invariant and bit-identical across kernel variants,
                 reports the accuracy cost vs the exact path)
   oac serve    --packed MODEL.pack [--batch 4] [--requests 16] [--threads 4]
                [--no-baseline]  (skip the dense reference pass + bitwise check)
@@ -687,6 +689,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 0),
         baseline: !args.flag("no-baseline"),
         act_bits: args.usize_or("act-bits", 0),
+        kernel: args.str_or("kernel", "auto"),
         arrival: ArrivalKind::parse(&args.str_or("arrival-schedule", "burst"))?,
         queue_depth: args.usize_or("queue-depth", 0),
         prompt_len: args.usize_or("prompt-len", 4),
@@ -730,12 +733,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // default exact-mode report line is byte-stable across PRs.
     let int8_info = match (&rep.int8_err, rep.act_bits) {
         (Some(e), bits) => format!(
-            " act_bits={bits} int8_rel_rmse={:.3e} int8_max_err={:.3e}",
+            " act_bits={bits} kernel={} weight_cache_bytes={} int8_rel_rmse={:.3e} \
+             int8_max_err={:.3e}",
+            rep.kernel,
+            rep.weight_cache_bytes,
             e.rel_rmse(),
             e.max_abs
         ),
         (None, 0) => String::new(),
-        (None, bits) => format!(" act_bits={bits}"),
+        (None, bits) => format!(
+            " act_bits={bits} kernel={} weight_cache_bytes={}",
+            rep.kernel, rep.weight_cache_bytes
+        ),
     };
     println!(
         "serve: method={} layers={} blocks={} d_model={} requests={} batch={} threads={} \

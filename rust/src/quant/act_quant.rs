@@ -1,21 +1,25 @@
-//! Per-group symmetric int8 activation quantization — the activation half
-//! of the integer-domain serving path.
+//! Per-group symmetric integer activation quantization — the activation
+//! half of the integer-domain serving path, at 8 or 4 bits.
 //!
 //! An activation matrix `x` (K rows = the weight's input dim, N cols = the
 //! request batch) is quantized per (K-group, column): each group of a
-//! column gets one symmetric scale `amax / 127` and int8 codes
-//! `round(x / scale)` clamped to ±127. Grouping along K mirrors the weight
-//! grid — a uniform-scheme layer quantizes activations with its own weight
-//! `group_size`, so one `(weight scale × activation scale)` product per
-//! group turns the group's i32 code dot straight into f32 output
-//! ([`crate::serve::PackedLinear::forward_int8_with`]).
+//! column gets one symmetric scale `amax / qmax` (`qmax` = 127 at 8 bits,
+//! 7 at 4) and codes `round(x / scale)` clamped to ±qmax. Grouping along K
+//! mirrors the weight grid — a uniform-scheme layer quantizes activations
+//! with its own weight `group_size`, so one `(weight scale × activation
+//! scale)` product per group turns the group's i32 code dot straight into
+//! f32 output ([`crate::serve::PackedLinear::forward_int8_with`]).
 //!
-//! The codes are stored twice, in the two layouts the integer kernels
-//! want: transposed and pre-widened to i16 (`qt`, column-major — the
-//! [`crate::tensor::igemm::idot`] operand) and row-major i8 (`q8` — the
-//! codebook LUT walk and the sparse-outlier f32 epilogue). Per-group code
-//! sums (`gsums`) are precomputed once so the uniform epilogue's zero-point
-//! correction costs one multiply per output cell.
+//! The codes are stored twice, in the layouts the integer kernels want:
+//! row-major i8 (`q8` — the codebook LUT walk and the sparse-outlier f32
+//! epilogue, at either bit width) plus the dense-dot operand for the
+//! selected width — transposed i16 codes (`qt`, the
+//! [`crate::tensor::igemm::idot`] operand) at 8 bits, or nibble-packed
+//! transposed codes (`q4t`, the paired-nibble `idot4` operand; low nibble
+//! first, each (column, K-group) cell byte-aligned so cell slices line up
+//! with the weight group grid) at 4 bits. Per-group code sums (`gsums`)
+//! are precomputed once so the uniform epilogue's zero-point correction
+//! costs one multiply per output cell.
 //!
 //! Quantization happens once per layer application, before any worker
 //! fan-out, so every panel worker reads the same codes — thread-invariance
@@ -29,9 +33,9 @@ use crate::util::pool::chunk_ranges;
 /// exact in f32 conversion, large enough to amortize the per-group epilogue.
 pub const DEFAULT_ACT_GROUP: usize = 64;
 
-/// One activation matrix quantized to int8, in the layouts the integer
-/// kernels consume. Reusable: [`quantize_into`] resizes without
-/// reallocating once buffers reach their high-water mark.
+/// One activation matrix quantized to int8 or int4, in the layouts the
+/// integer kernels consume. Reusable: [`quantize_into_bits`] resizes
+/// without reallocating once buffers reach their high-water mark.
 #[derive(Debug, Clone, Default)]
 pub struct QuantizedActs {
     /// K — the quantized matrix's row count (= weight cols).
@@ -40,11 +44,24 @@ pub struct QuantizedActs {
     pub cols: usize,
     /// K-group size (the last group may be ragged).
     pub group: usize,
+    /// Code bit width: 8 or 4.
+    pub bits: usize,
     /// Transposed, i16-widened codes: `qt[j * rows + c]` is the code of
     /// `x[c, j]`. One contiguous K-slice per batch column — the `idot`
-    /// operand.
+    /// operand. Populated only at `bits == 8`.
     pub qt: Vec<i16>,
+    /// Nibble-packed transposed codes (`bits == 4` only): per column, per
+    /// K-group, the group's codes as 4-bit two's-complement nibbles, low
+    /// nibble first, zero-padded to whole bytes per group. The cell for
+    /// (column `j`, group `g`) is
+    /// `q4t[j * q4_stride() + q4_off[g] .. j * q4_stride() + q4_off[g+1]]`
+    /// — the `idot4` operand.
+    pub q4t: Vec<u8>,
+    /// Per-group byte offsets within one column's `q4t` block
+    /// (`n_groups + 1` entries; empty unless `bits == 4`).
+    pub q4_off: Vec<usize>,
     /// Row-major i8 codes, same layout as `x.data`: `q8[c * cols + j]`.
+    /// Populated at every bit width (int4 codes fit i8).
     pub q8: Vec<i8>,
     /// Per-(group, column) symmetric scale, `scales[g * cols + j]`;
     /// 0.0 for all-zero (or non-finite) groups, whose codes are all 0.
@@ -66,18 +83,27 @@ impl QuantizedActs {
         let g = c / self.group;
         self.scales[g * self.cols + j] * self.q8[c * self.cols + j] as f32
     }
+
+    /// Bytes per column of the nibble-packed layout (`bits == 4` only).
+    pub fn q4_stride(&self) -> usize {
+        self.q4_off.last().copied().unwrap_or(0)
+    }
 }
 
-/// Quantize `x` into `out` with K-groups of `group` rows. Deterministic in
-/// `(x, group)`; buffers in `out` are reused across calls.
-pub fn quantize_into(x: &Mat, group: usize, out: &mut QuantizedActs) {
+/// Quantize `x` into `out` with K-groups of `group` rows at `bits` ∈
+/// {8, 4}. Deterministic in `(x, group, bits)`; buffers in `out` are
+/// reused across calls. The dense-dot operand layout follows the bit
+/// width: `qt` at 8 bits, `q4t`/`q4_off` at 4 (the other stays empty).
+pub fn quantize_into_bits(x: &Mat, group: usize, bits: usize, out: &mut QuantizedActs) {
     assert!(group > 0, "activation group must be positive");
+    assert!(bits == 8 || bits == 4, "activation bits {bits} unsupported (8 or 4)");
     let (k, n) = (x.rows, x.cols);
     let groups = chunk_ranges(k, group);
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32; // 127 or 7, symmetric
     out.rows = k;
     out.cols = n;
     out.group = group;
-    resize(&mut out.qt, k * n);
+    out.bits = bits;
     resize(&mut out.q8, k * n);
     resize(&mut out.scales, groups.len() * n);
     resize(&mut out.gsums, groups.len() * n);
@@ -94,7 +120,7 @@ pub fn quantize_into(x: &Mat, group: usize, out: &mut QuantizedActs) {
             }
         }
         for s in scales.iter_mut() {
-            *s = if *s > 0.0 && s.is_finite() { *s / 127.0 } else { 0.0 };
+            *s = if *s > 0.0 && s.is_finite() { *s / qmax } else { 0.0 };
         }
         let gsums = &mut out.gsums[g * n..(g + 1) * n];
         gsums.fill(0);
@@ -104,7 +130,7 @@ pub fn quantize_into(x: &Mat, group: usize, out: &mut QuantizedActs) {
             for j in 0..n {
                 let s = scales[j];
                 let q = if s > 0.0 {
-                    (xrow[j] / s).round().clamp(-127.0, 127.0) as i32
+                    (xrow[j] / s).round().clamp(-qmax, qmax) as i32
                 } else {
                     0
                 };
@@ -113,20 +139,59 @@ pub fn quantize_into(x: &Mat, group: usize, out: &mut QuantizedActs) {
             }
         }
     }
-    // Second pass: the transposed i16 copy (contiguous writes per column).
-    for j in 0..n {
-        let qt = &mut out.qt[j * k..(j + 1) * k];
-        for (c, slot) in qt.iter_mut().enumerate() {
-            *slot = out.q8[c * n + j] as i16;
+    // Second pass: the dense-dot operand (contiguous writes per column).
+    if bits == 8 {
+        resize(&mut out.qt, k * n);
+        resize(&mut out.q4t, 0);
+        resize(&mut out.q4_off, 0);
+        for j in 0..n {
+            let qt = &mut out.qt[j * k..(j + 1) * k];
+            for (c, slot) in qt.iter_mut().enumerate() {
+                *slot = out.q8[c * n + j] as i16;
+            }
+        }
+    } else {
+        resize(&mut out.qt, 0);
+        resize(&mut out.q4_off, groups.len() + 1);
+        for (g, gr) in groups.iter().enumerate() {
+            out.q4_off[g + 1] = out.q4_off[g] + gr.len().div_ceil(2);
+        }
+        let stride = out.q4_off[groups.len()];
+        resize(&mut out.q4t, n * stride);
+        for j in 0..n {
+            let col = &mut out.q4t[j * stride..(j + 1) * stride];
+            for (g, gr) in groups.iter().enumerate() {
+                let cell = &mut col[out.q4_off[g]..out.q4_off[g + 1]];
+                for (bi, byte) in cell.iter_mut().enumerate() {
+                    let c0 = gr.start + 2 * bi;
+                    let lo = (out.q8[c0 * n + j] as u8) & 0x0F;
+                    let hi = if c0 + 1 < gr.end {
+                        (out.q8[(c0 + 1) * n + j] as u8) & 0x0F
+                    } else {
+                        0 // odd-length group: zero high nibble
+                    };
+                    *byte = lo | (hi << 4);
+                }
+            }
         }
     }
 }
 
-/// Allocating convenience wrapper around [`quantize_into`].
-pub fn quantize(x: &Mat, group: usize) -> QuantizedActs {
+/// Int8 compatibility entry: [`quantize_into_bits`] at 8 bits.
+pub fn quantize_into(x: &Mat, group: usize, out: &mut QuantizedActs) {
+    quantize_into_bits(x, group, 8, out);
+}
+
+/// Allocating convenience wrapper around [`quantize_into_bits`].
+pub fn quantize_bits(x: &Mat, group: usize, bits: usize) -> QuantizedActs {
     let mut out = QuantizedActs::default();
-    quantize_into(x, group, &mut out);
+    quantize_into_bits(x, group, bits, &mut out);
     out
+}
+
+/// Allocating convenience wrapper around [`quantize_into`] (int8).
+pub fn quantize(x: &Mat, group: usize) -> QuantizedActs {
+    quantize_bits(x, group, 8)
 }
 
 fn resize<T: Clone + Default>(v: &mut Vec<T>, len: usize) {
@@ -208,6 +273,74 @@ mod tests {
         assert_eq!(acts.qt, fresh.qt);
         assert_eq!(acts.scales, fresh.scales);
         assert_eq!(acts.gsums, fresh.gsums);
+    }
+
+    #[test]
+    fn int4_codes_within_half_step_and_range() {
+        let mut rng = Rng::new(3);
+        let x = randmat(&mut rng, 70, 5); // ragged last group at group=32
+        let acts = quantize_bits(&x, 32, 4);
+        assert_eq!(acts.bits, 4);
+        assert!(acts.qt.is_empty(), "qt must stay empty at 4 bits");
+        for c in 0..x.rows {
+            for j in 0..x.cols {
+                let q = acts.q8[c * x.cols + j] as i32;
+                assert!((-7..=7).contains(&q), "({c},{j}): code {q}");
+                let err = (x.at(c, j) - acts.dequant_at(c, j)).abs();
+                let s = acts.scales[(c / 32) * x.cols + j];
+                assert!(err <= 0.5 * s * 1.0001 + 1e-7, "({c},{j}): err {err} scale {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn int4_nibble_layout_round_trips() {
+        // Unpacking every (column, group) cell of q4t with sign extension
+        // must reproduce q8 exactly — including the ragged last group.
+        let mut rng = Rng::new(4);
+        for (k, group) in [(70usize, 32usize), (64, 16), (33, 64), (7, 3)] {
+            let x = randmat(&mut rng, k, 4);
+            let acts = quantize_bits(&x, group, 4);
+            let groups = chunk_ranges(k, group);
+            assert_eq!(acts.q4_off.len(), groups.len() + 1);
+            let stride = acts.q4_stride();
+            for j in 0..x.cols {
+                for (g, gr) in groups.iter().enumerate() {
+                    let cell = &acts.q4t
+                        [j * stride + acts.q4_off[g]..j * stride + acts.q4_off[g + 1]];
+                    assert_eq!(cell.len(), gr.len().div_ceil(2), "cell bytes");
+                    for (i, c) in gr.clone().enumerate() {
+                        let nib = if i % 2 == 0 { cell[i / 2] & 0x0F } else { cell[i / 2] >> 4 };
+                        let got = ((nib as i8) << 4 >> 4) as i32;
+                        assert_eq!(
+                            got,
+                            acts.q8[c * x.cols + j] as i32,
+                            "k={k} group={group} ({c},{j})"
+                        );
+                    }
+                    if gr.len() % 2 == 1 {
+                        assert_eq!(cell[cell.len() - 1] >> 4, 0, "odd-tail pad nibble");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bit_width_switch_reuses_buffers_cleanly() {
+        let mut rng = Rng::new(5);
+        let x = randmat(&mut rng, 64, 3);
+        let mut acts = QuantizedActs::default();
+        quantize_into_bits(&x, 16, 4, &mut acts);
+        quantize_into_bits(&x, 16, 8, &mut acts);
+        let fresh8 = quantize_bits(&x, 16, 8);
+        assert_eq!(acts.qt, fresh8.qt);
+        assert!(acts.q4t.is_empty() && acts.q4_off.is_empty());
+        quantize_into_bits(&x, 16, 4, &mut acts);
+        let fresh4 = quantize_bits(&x, 16, 4);
+        assert_eq!(acts.q4t, fresh4.q4t);
+        assert_eq!(acts.q8, fresh4.q8);
+        assert!(acts.qt.is_empty());
     }
 
     #[test]

@@ -76,6 +76,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::eval::{output_error, OutputError};
 use crate::quant::act_quant::{self, QuantizedActs};
+use crate::tensor::arch::KernelDispatch;
 use crate::tensor::Mat;
 use crate::util::digest;
 use crate::util::pool::{chunk_ranges, Pool};
@@ -217,7 +218,8 @@ pub fn embed_token(seed: u64, token: u64, out: &mut [f32]) {
 
 /// Engine knobs (`oac serve --requests M --threads T --seed S
 /// [--arrival-schedule burst|every:K|random:K] [--queue-depth D]
-/// [--no-continuous] [--no-prefix-share] [--act-bits 8]`).
+/// [--no-continuous] [--no-prefix-share] [--act-bits 8|4]
+/// [--kernel auto|scalar|avx2|neon]`).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Fixed-batch chunk size in `--no-continuous` mode, and the default
@@ -235,8 +237,14 @@ pub struct ServeConfig {
     /// `--no-baseline` for pure packed serving.
     pub baseline: bool,
     /// Activation quantization width: 0 = exact f32 forward (default),
-    /// 8 = integer-domain forward (int8 activations × weight codes).
+    /// 8 or 4 = integer-domain forward (int8/int4 activations × weight
+    /// codes).
     pub act_bits: usize,
+    /// Integer-kernel dispatch spec: `auto` (best supported variant,
+    /// default) | `scalar` | `avx2` | `neon`. Forcing an unsupported
+    /// variant is a config error; every variant is bit-identical
+    /// ([`crate::tensor::arch`]).
+    pub kernel: String,
     /// Arrival process for the admission queue.
     pub arrival: ArrivalKind,
     /// Max requests in flight at once in continuous mode (0 = `batch`).
@@ -272,6 +280,7 @@ impl Default for ServeConfig {
             seed: 0,
             baseline: true,
             act_bits: 0,
+            kernel: "auto".to_string(),
             arrival: ArrivalKind::Burst,
             queue_depth: 0,
             prompt_len: 4,
@@ -320,6 +329,13 @@ pub struct ServeReport {
     pub d_model: usize,
     /// Activation quantization width (0 = exact f32 path).
     pub act_bits: usize,
+    /// Integer-kernel variant the run dispatched to (`scalar` | `avx2` |
+    /// `neon`; resolved from [`ServeConfig::kernel`], reported even for
+    /// the exact path where it goes unused).
+    pub kernel: String,
+    /// Heap bytes of the pre-widened weight panel cache the model carries
+    /// ([`crate::serve::WeightCache`]).
+    pub weight_cache_bytes: usize,
     /// Continuous scheduler (vs legacy fixed-batch chunks).
     pub continuous: bool,
     /// Effective in-flight cap of the continuous scheduler.
@@ -367,8 +383,8 @@ pub struct ServeReport {
     /// Wall-clock of the dense-baseline pass, when it ran (excludes the
     /// one-off dequantization setup).
     pub dense_secs: Option<f64>,
-    /// int8-vs-dense output error over every request (act_bits 8 with the
-    /// baseline pass enabled).
+    /// Integer-vs-dense output error over every request (act_bits 8 or 4
+    /// with the baseline pass enabled).
     pub int8_err: Option<OutputError>,
     /// FNV-1a over every request's output vector bits, in request order.
     pub checksum: u64,
@@ -781,11 +797,12 @@ fn outputs_mat(outs: &[Vec<f32>], d_model: usize) -> Mat {
 pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
     ensure!(cfg.requests > 0, "--requests must be positive");
     ensure!(
-        cfg.act_bits == 0 || cfg.act_bits == 8,
-        "--act-bits supports only 8 (or 0 = exact f32); got {}",
+        cfg.act_bits == 0 || cfg.act_bits == 8 || cfg.act_bits == 4,
+        "--act-bits supports only 8 or 4 (or 0 = exact f32); got {}",
         cfg.act_bits
     );
-    let int8 = cfg.act_bits == 8;
+    let int_path = cfg.act_bits > 0;
+    let kern = KernelDispatch::select(&cfg.kernel)?;
     let blocks = model.block_count();
     ensure!(blocks > 0, "packed model has no blocks.*.q layers");
     // Validate the full block structure up front so a truncated or
@@ -809,13 +826,15 @@ pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
     let scratch = ServeScratch::default();
     let mut actbuf = QuantizedActs::default();
 
-    // Packed pass: the fused forward, no dense weights anywhere.
-    let packed = if int8 {
+    // Packed pass: the fused forward, no dense weights anywhere. The
+    // integer path reads the model's pre-widened weight cache and the
+    // dispatched kernel — both resolved once, shared read-only.
+    let packed = if int_path {
         simulate(
             &mut |name, x, out| {
-                let l = model.get(name);
-                act_quant::quantize_into(x, l.act_group(), &mut actbuf);
-                l.forward_int8_into(&pool, x, &actbuf, &scratch, out);
+                let (l, lc) = model.get_entry(name);
+                act_quant::quantize_into_bits(x, l.act_group(), cfg.act_bits, &mut actbuf);
+                l.forward_int8_into(&pool, x, &actbuf, lc, &kern, &scratch, out);
             },
             blocks,
             d_model,
@@ -847,8 +866,9 @@ pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
     // OFF through the legacy chunk loop. In exact mode the packed
     // continuous pass must agree bit-for-bit — per-column independence
     // makes scheduling, packing and prefix sharing all storage/ordering
-    // changes, never numerics changes. In int8 mode the deviation IS the
-    // measurement: the end-to-end accuracy cost of activation quantization.
+    // changes, never numerics changes. In integer mode the deviation IS
+    // the measurement: the end-to-end accuracy cost of activation
+    // quantization at the chosen width.
     let (dense_secs, int8_err) = if cfg.baseline {
         let dense: BTreeMap<String, Mat> =
             model.layers.iter().map(|l| (l.name.clone(), l.dequantize())).collect();
@@ -864,7 +884,7 @@ pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
             false,
             0,
         );
-        if int8 {
+        if int_path {
             let err = output_error(
                 &[outputs_mat(&base.outputs, d_model)],
                 &[outputs_mat(&packed.outputs, d_model)],
@@ -896,6 +916,8 @@ pub fn run(model: &PackedModel, cfg: &ServeConfig) -> Result<ServeReport> {
         blocks,
         d_model,
         act_bits: cfg.act_bits,
+        kernel: kern.kind.name().to_string(),
+        weight_cache_bytes: model.weight_cache_bytes(),
         continuous: cfg.continuous,
         queue_depth,
         schedule: cfg.arrival.label(),
@@ -1027,55 +1049,113 @@ mod tests {
     }
 
     #[test]
-    fn int8_engine_checksum_thread_invariant_and_error_small() {
+    fn int_engine_checksum_thread_invariant_and_error_small() {
         let model = small_model();
-        let mut reference: Option<u64> = None;
-        let mut exact_checksum = None;
-        for threads in [1usize, 2, 4, 8] {
-            let cfg = ServeConfig {
+        let exact_checksum = run(
+            &model,
+            &ServeConfig {
                 batch: 3,
                 requests: 7,
-                threads,
-                act_bits: 8,
                 arrival: ArrivalKind::Every(1),
                 ..ServeConfig::default()
-            };
-            let rep = run(&model, &cfg).unwrap();
-            assert_eq!(rep.act_bits, 8);
-            let err = rep.int8_err.expect("baseline on -> error stats");
-            // int8 serving approximates the exact path closely but not
-            // exactly: small relative error, strictly nonzero.
-            assert!(err.rel_rmse() < 0.05, "rel rmse {}", err.rel_rmse());
-            assert!(err.max_abs > 0.0);
-            match reference {
-                None => reference = Some(rep.checksum),
-                Some(want) => assert_eq!(want, rep.checksum, "threads={threads}"),
+            },
+        )
+        .unwrap()
+        .checksum;
+        // int8 tracks the exact path tightly; int4 is coarser (half-step
+        // amax/7 grids) but still bounded well below total breakdown.
+        for (act_bits, bound) in [(8usize, 0.05f64), (4, 0.6)] {
+            let mut reference: Option<u64> = None;
+            for threads in [1usize, 2, 4, 8] {
+                let cfg = ServeConfig {
+                    batch: 3,
+                    requests: 7,
+                    threads,
+                    act_bits,
+                    arrival: ArrivalKind::Every(1),
+                    ..ServeConfig::default()
+                };
+                let rep = run(&model, &cfg).unwrap();
+                assert_eq!(rep.act_bits, act_bits);
+                assert!(!rep.kernel.is_empty());
+                assert!(rep.weight_cache_bytes > 0);
+                let err = rep.int8_err.expect("baseline on -> error stats");
+                // Integer serving approximates the exact path closely but
+                // not exactly: bounded relative error, strictly nonzero.
+                assert!(
+                    err.rel_rmse() < bound,
+                    "act_bits={act_bits}: rel rmse {}",
+                    err.rel_rmse()
+                );
+                assert!(err.max_abs > 0.0);
+                match reference {
+                    None => reference = Some(rep.checksum),
+                    Some(want) => {
+                        assert_eq!(want, rep.checksum, "act_bits={act_bits} threads={threads}")
+                    }
+                }
             }
-            if exact_checksum.is_none() {
-                let exact = run(
-                    &model,
-                    &ServeConfig {
-                        batch: 3,
-                        requests: 7,
-                        threads,
-                        arrival: ArrivalKind::Every(1),
-                        ..ServeConfig::default()
-                    },
-                )
-                .unwrap();
-                exact_checksum = Some(exact.checksum);
-            }
+            // The integer path is a different numeric path: its checksum
+            // differs from the exact one (same requests, same model).
+            assert_ne!(reference.unwrap(), exact_checksum, "act_bits={act_bits}");
         }
-        // The int8 path is a different numeric path: its checksum differs
-        // from the exact one (same requests, same model).
-        assert_ne!(reference.unwrap(), exact_checksum.unwrap());
     }
 
     #[test]
     fn rejects_unsupported_act_bits() {
         let model = small_model();
-        let cfg = ServeConfig { act_bits: 4, ..ServeConfig::default() };
+        let cfg = ServeConfig { act_bits: 3, ..ServeConfig::default() };
         assert!(run(&model, &cfg).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_or_unsupported_kernel() {
+        let model = small_model();
+        let err = run(
+            &model,
+            &ServeConfig { kernel: "mmx".to_string(), ..ServeConfig::default() },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown --kernel"), "{err}");
+        // Exactly one of avx2/neon can be native to any one host; the
+        // other must be rejected as unsupported, not silently downgraded.
+        let foreign = if cfg!(target_arch = "x86_64") { "neon" } else { "avx2" };
+        let err = run(
+            &model,
+            &ServeConfig { kernel: foreign.to_string(), ..ServeConfig::default() },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("not supported"), "{err}");
+    }
+
+    #[test]
+    fn forced_kernel_variants_match_auto_bitwise() {
+        use crate::tensor::arch::KernelKind;
+        let model = small_model();
+        for act_bits in [4usize, 8] {
+            let base = ServeConfig {
+                batch: 3,
+                requests: 6,
+                threads: 2,
+                seed: 5,
+                act_bits,
+                baseline: false,
+                ..ServeConfig::default()
+            };
+            let auto = run(&model, &ServeConfig { kernel: "auto".into(), ..base.clone() })
+                .unwrap();
+            for kind in KernelKind::available() {
+                let forced =
+                    run(&model, &ServeConfig { kernel: kind.name().into(), ..base.clone() })
+                        .unwrap();
+                assert_eq!(forced.kernel, kind.name());
+                assert_eq!(
+                    forced.checksum, auto.checksum,
+                    "act_bits={act_bits} kernel={}",
+                    kind.name()
+                );
+            }
+        }
     }
 
     #[test]
@@ -1093,7 +1173,7 @@ mod tests {
         // identical for the continuous admission queue and the legacy
         // chunk loop, in both numeric modes, at any queue depth.
         let model = small_model();
-        for act_bits in [0usize, 8] {
+        for act_bits in [0usize, 4, 8] {
             let cont = run(
                 &model,
                 &ServeConfig {

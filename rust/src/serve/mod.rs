@@ -39,30 +39,49 @@
 //! 2. the result is **bit-identical for every thread count**, extending the
 //!    calibration engine's `--threads` contract to serving.
 //!
-//! ## The integer-domain forward (`--act-bits 8`)
+//! ## The integer-domain forward (`--act-bits 8` / `--act-bits 4`)
 //!
-//! [`PackedLinear::forward_int8_with`] never leaves the integer domain in
+//! [`PackedLinear::forward_int8_into`] never leaves the integer domain in
 //! its inner loop: activations are quantized per (K-group, column) to
-//! symmetric int8 ([`crate::quant::act_quant`], group = the weight
+//! symmetric int8 or int4 ([`crate::quant::act_quant`], group = the weight
 //! `group_size` for uniform schemes so the two grids align), and each
-//! panel × K-group cell reduces weight *codes* against activation codes in
-//! i32 ([`crate::tensor::igemm::idot`]) — uniform grids via an integer dot
-//! plus a fused `scale·act_scale·(dot − zero·Σq)` epilogue, binary planes
-//! via ±1 sign dots, codebooks via per-row i32 LUT partial sums
-//! ([`crate::tensor::igemm::LutAcc`]). Sparse FP32 outliers are applied in
-//! a separate f32 epilogue against the *full-precision* activations, so
-//! SpQR-style saliency preservation is untouched by activation
-//! quantization.
+//! panel × K-group cell reduces *pre-widened* weight codes against
+//! activation codes in i32 — uniform grids via an integer dot plus a fused
+//! `scale·act_scale·(dot − zero·Σq)` epilogue, binary planes via ±1 sign
+//! dots, codebooks via per-group-localized i32 LUT partial sums
+//! ([`crate::tensor::igemm::LutAcc::begin_dense`]). Sparse FP32 outliers
+//! are applied in a separate f32 epilogue against the *full-precision*
+//! activations, so SpQR-style saliency preservation is untouched by
+//! activation quantization.
 //!
-//! The int8 path is an approximation of the exact forward (bounded by half
-//! an activation quantization step per element — property-tested), but its
-//! determinism contract is identical: panel geometry is fixed, every f32
-//! accumulation order is a function of the layer shape alone, and the i32
-//! reductions are order-free by construction, so output bits are identical
-//! for every thread count. **The exact f32 path remains the default and is
+//! Two pieces feed that inner loop:
+//!
+//! * [`WeightCache`] (see [`weight_cache`]) — each layer's codes are
+//!   unpacked and widened **once at model construction** (i16 code/sign
+//!   arrays for uniform/binary, per-(row, K-group) localized code cells
+//!   for codebooks), replacing the per-panel `packing::unpack_into` +
+//!   widen loop that used to repeat every tick for every request. The
+//!   cache is built in [`PackedModel::from_layers`] (the single
+//!   construction funnel) and shared read-only across panel workers.
+//! * [`crate::tensor::arch::KernelDispatch`] — the integer dots run
+//!   through a kernel table selected once at startup (`--kernel
+//!   auto|scalar|avx2|neon`). Every variant is bit-identical to the
+//!   scalar reference (i32 accumulation is exact and order-free), so
+//!   dispatch never weakens the determinism contract below.
+//!
+//! The integer path is an approximation of the exact forward (bounded by
+//! half an activation quantization step per element — property-tested at
+//! both bit widths), but its determinism contract is identical: panel
+//! geometry is fixed, every f32 accumulation order is a function of the
+//! layer shape alone, and the i32 reductions are order-free by
+//! construction, so output bits are identical for every thread count and
+//! every kernel variant. **The exact f32 path remains the default and is
 //! bit-identical to pre-integer-path builds.**
 
 pub mod engine;
+pub mod weight_cache;
+
+pub use weight_cache::{LayerCache, WeightCache};
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -78,7 +97,8 @@ use crate::quant::act_quant::{self, QuantizedActs};
 use crate::quant::packing;
 use crate::quant::uniform::{self, GroupParams};
 use crate::quant::PackSpec;
-use crate::tensor::igemm::{idot, LutAcc};
+use crate::tensor::arch::KernelDispatch;
+use crate::tensor::igemm::LutAcc;
 use crate::tensor::{gemm_row_into, Mat};
 use crate::util::digest;
 use crate::util::pool::{chunk_ranges, Pool};
@@ -104,23 +124,23 @@ pub struct CodeBuf {
     wide: Vec<u16>,
 }
 
-/// Per-worker scratch for one forward panel: unpack buffers, the f32
-/// dequant tile of the exact path, and the integer path's widened code
-/// panel / LUT accumulators. Checked out of a [`ServeScratch`] arena per
-/// panel and returned afterwards, so the steady-state request loop runs
-/// without allocation.
+/// Per-worker scratch for one forward panel. Checked out of a
+/// [`ServeScratch`] arena per panel and returned afterwards, so the
+/// steady-state request loop runs without allocation. Every buffer is
+/// lazy (empty until its path first grows it): the exact f32 path touches
+/// only `codebuf`/`tile`, the integer path only `lut`/`facc` — weight
+/// codes come pre-widened from the [`WeightCache`], so the integer path
+/// carries no per-panel unpack/widen scratch at all.
 #[derive(Debug, Clone, Default)]
 pub struct PanelScratch {
+    /// Code unpack buffers (exact f32 path only).
     codebuf: CodeBuf,
-    /// f32 dequant tile (exact path only).
+    /// f32 dequant tile (exact f32 path only).
     tile: Vec<f32>,
-    /// Panel weight codes widened to i16 (uniform codes, ±1 sign planes).
-    codes16: Vec<i16>,
-    /// Panel codebook indices (u16, wide unpack).
-    wcodes: Vec<u16>,
-    /// Codebook LUT partial sums.
+    /// Codebook LUT partial sums (integer path only).
     lut: LutAcc,
-    /// f32 per-group partial row for the codebook epilogue.
+    /// f32 per-group partial row for the codebook epilogue (integer path
+    /// only).
     facc: Vec<f32>,
 }
 
@@ -358,28 +378,44 @@ impl PackedLinear {
     }
 
     /// Integer-domain `Y ≈ Ŵ @ X`: quantizes `x` to int8 per
-    /// (K-group, column) and runs [`Self::forward_int8_into`]. Deterministic
-    /// and bit-identical across thread counts; approximation error is
-    /// bounded by half an activation step per element (property-tested in
-    /// `rust/tests/serve_props.rs`).
+    /// (K-group, column), builds a one-shot [`LayerCache`], and runs
+    /// [`Self::forward_int8_into`] with the auto-selected kernel.
+    /// Deterministic and bit-identical across thread counts and kernel
+    /// variants; approximation error is bounded by half an activation
+    /// step per element (property-tested in `rust/tests/serve_props.rs`).
+    /// Steady-state callers (the engine, benches) should prebuild the
+    /// cache instead — [`PackedModel::get_entry`] serves it for free.
     pub fn forward_int8_with(&self, pool: &Pool, x: &Mat) -> Mat {
-        let acts = act_quant::quantize(x, self.act_group());
+        self.forward_int_with(pool, x, 8)
+    }
+
+    /// [`Self::forward_int8_with`] generalized over the activation width
+    /// (8 or 4) — the per-layer convenience the property tests and benches
+    /// use to drive the int4 path without an engine run.
+    pub fn forward_int_with(&self, pool: &Pool, x: &Mat, act_bits: usize) -> Mat {
+        let acts = act_quant::quantize_bits(x, self.act_group(), act_bits);
+        let cache = LayerCache::build(self);
+        let kern = KernelDispatch::auto();
         let scratch = ServeScratch::default();
         let mut out = Mat::zeros(self.rows, x.cols);
-        self.forward_int8_into(pool, x, &acts, &scratch, &mut out);
+        self.forward_int8_into(pool, x, &acts, &cache, &kern, &scratch, &mut out);
         out
     }
 
-    /// The int8 panel forward over pre-quantized activations. `x` is still
-    /// needed: sparse FP32 outliers multiply the *full-precision*
-    /// activations in their epilogue (saliency preservation), and the
-    /// quantized contribution of the code they shadow is subtracted back
-    /// out.
+    /// The integer panel forward over pre-quantized activations (int8 or
+    /// int4 — the dot kernel follows `acts.bits`), a prebuilt weight
+    /// cache, and a startup-selected kernel table. `x` is still needed:
+    /// sparse FP32 outliers multiply the *full-precision* activations in
+    /// their epilogue (saliency preservation), and the quantized
+    /// contribution of the code they shadow is subtracted back out.
+    #[allow(clippy::too_many_arguments)]
     pub fn forward_int8_into(
         &self,
         pool: &Pool,
         x: &Mat,
         acts: &QuantizedActs,
+        cache: &LayerCache,
+        kern: &KernelDispatch,
         scratch: &ServeScratch,
         out: &mut Mat,
     ) {
@@ -397,21 +433,29 @@ impl PackedLinear {
             // SAFETY: panels are disjoint row ranges of `out` (SendPtr
             // contract); `out` outlives the pool scope.
             let dst = unsafe { std::slice::from_raw_parts_mut(optr.0.add(r.start * n), nr * n) };
-            self.int8_panel(r.start, r.end, x, acts, &mut s, dst);
+            self.int8_panel(r.start, r.end, x, acts, cache, kern, &mut s, dst);
             scratch.restore(s);
         });
     }
 
-    /// One [`SERVE_PANEL_ROWS`] panel of the integer forward: widen the
-    /// panel's codes once, then reduce K-group × row cells through the
+    /// One [`SERVE_PANEL_ROWS`] panel of the integer forward: reduce
+    /// K-group × row cells of the pre-widened cache through the dispatched
     /// integer kernels with a fused f32 epilogue, and finally apply the
-    /// sparse FP32 outlier corrections.
+    /// sparse FP32 outlier corrections. The dense dot follows the
+    /// activation width — [`KernelDispatch::idot`] over `acts.qt` at 8
+    /// bits, the paired-nibble [`KernelDispatch::idot4`] over `acts.q4t`
+    /// at 4 — and every f32 accumulation order (epilogue per cell,
+    /// first-seen codebook level order) is unchanged from the uncached
+    /// path, so cached and on-the-fly forwards are bit-identical.
+    #[allow(clippy::too_many_arguments)]
     fn int8_panel(
         &self,
         r0: usize,
         r1: usize,
         x: &Mat,
         acts: &QuantizedActs,
+        cache: &LayerCache,
+        kern: &KernelDispatch,
         s: &mut PanelScratch,
         dst: &mut [f32],
     ) {
@@ -420,33 +464,37 @@ impl PackedLinear {
         let nr = r1 - r0;
         let cpr = self.codes_per_row();
         let groups = chunk_ranges(cols, acts.group);
-        match &self.scheme {
-            PackScheme::Uniform { bits, group_size, params } => {
+        let q4_stride = acts.q4_stride();
+        match (&self.scheme, cache) {
+            (PackScheme::Uniform { group_size, params, .. }, LayerCache::Wide16 { codes16 }) => {
                 let gpr = cols / group_size;
-                ensure(&mut s.codebuf.narrow, cpr);
-                ensure(&mut s.codes16, nr * cpr);
-                for tr in 0..nr {
-                    let buf = &mut s.codebuf.narrow[..cpr];
-                    packing::unpack_into(&self.codes, *bits, (r0 + tr) * cpr, buf);
-                    for (d, &c) in s.codes16[tr * cpr..(tr + 1) * cpr].iter_mut().zip(buf.iter())
-                    {
-                        *d = c as i16;
-                    }
-                }
                 for (g, gr) in groups.iter().enumerate() {
                     let sx = &acts.scales[g * n..(g + 1) * n];
                     let gsum = &acts.gsums[g * n..(g + 1) * n];
                     for tr in 0..nr {
-                        let p = params[(r0 + tr) * gpr + g];
+                        let r = r0 + tr;
+                        let p = params[r * gpr + g];
                         let orow = &mut dst[tr * n..(tr + 1) * n];
                         if p.scale > 0.0 {
-                            let wrow = &s.codes16[tr * cpr + gr.start..tr * cpr + gr.end];
-                            for j in 0..n {
-                                let q = &acts.qt[j * acts.rows + gr.start
-                                    ..j * acts.rows + gr.end];
-                                let dot = idot(wrow, q);
-                                orow[j] +=
-                                    p.scale * sx[j] * (dot as f32 - p.zero * gsum[j] as f32);
+                            let wrow = &codes16[r * cpr + gr.start..r * cpr + gr.end];
+                            if acts.bits == 4 {
+                                for j in 0..n {
+                                    let q4 = &acts.q4t[j * q4_stride + acts.q4_off[g]
+                                        ..j * q4_stride + acts.q4_off[g + 1]];
+                                    let dot = (kern.idot4)(wrow, q4);
+                                    orow[j] += p.scale
+                                        * sx[j]
+                                        * (dot as f32 - p.zero * gsum[j] as f32);
+                                }
+                            } else {
+                                for j in 0..n {
+                                    let q = &acts.qt
+                                        [j * acts.rows + gr.start..j * acts.rows + gr.end];
+                                    let dot = (kern.idot)(wrow, q);
+                                    orow[j] += p.scale
+                                        * sx[j]
+                                        * (dot as f32 - p.zero * gsum[j] as f32);
+                                }
                             }
                         } else {
                             // Degenerate group: every element decodes to the
@@ -459,63 +507,62 @@ impl PackedLinear {
                     }
                 }
             }
-            PackScheme::Binary { alphas } => {
-                ensure(&mut s.codebuf.narrow, cpr);
-                ensure(&mut s.codes16, nr * cpr);
-                for tr in 0..nr {
-                    let buf = &mut s.codebuf.narrow[..cpr];
-                    packing::unpack_into(&self.codes, 1, (r0 + tr) * cpr, buf);
-                    for (d, &b) in s.codes16[tr * cpr..(tr + 1) * cpr].iter_mut().zip(buf.iter())
-                    {
-                        *d = 2 * b as i16 - 1; // sign plane -> ±1
-                    }
-                }
+            (PackScheme::Binary { alphas }, LayerCache::Wide16 { codes16 }) => {
                 for (g, gr) in groups.iter().enumerate() {
                     let sx = &acts.scales[g * n..(g + 1) * n];
                     for tr in 0..nr {
-                        let (a1, a2) = alphas[r0 + tr];
-                        let p1 = &s.codes16[tr * cpr + gr.start..tr * cpr + gr.end];
-                        let p2 =
-                            &s.codes16[tr * cpr + cols + gr.start..tr * cpr + cols + gr.end];
+                        let r = r0 + tr;
+                        let (a1, a2) = alphas[r];
+                        let p1 = &codes16[r * cpr + gr.start..r * cpr + gr.end];
+                        let p2 = &codes16[r * cpr + cols + gr.start..r * cpr + cols + gr.end];
                         let orow = &mut dst[tr * n..(tr + 1) * n];
-                        for j in 0..n {
-                            let q =
-                                &acts.qt[j * acts.rows + gr.start..j * acts.rows + gr.end];
-                            let d1 = idot(p1, q);
-                            let d2 = idot(p2, q);
-                            orow[j] += sx[j] * (a1 * d1 as f32 + a2 * d2 as f32);
+                        if acts.bits == 4 {
+                            for j in 0..n {
+                                let q4 = &acts.q4t[j * q4_stride + acts.q4_off[g]
+                                    ..j * q4_stride + acts.q4_off[g + 1]];
+                                let d1 = (kern.idot4)(p1, q4);
+                                let d2 = (kern.idot4)(p2, q4);
+                                orow[j] += sx[j] * (a1 * d1 as f32 + a2 * d2 as f32);
+                            }
+                        } else {
+                            for j in 0..n {
+                                let q = &acts.qt
+                                    [j * acts.rows + gr.start..j * acts.rows + gr.end];
+                                let d1 = (kern.idot)(p1, q);
+                                let d2 = (kern.idot)(p2, q);
+                                orow[j] += sx[j] * (a1 * d1 as f32 + a2 * d2 as f32);
+                            }
                         }
                     }
                 }
             }
-            PackScheme::Codebook { bits, levels } => {
+            (
+                PackScheme::Codebook { levels, .. },
+                LayerCache::Codebook { n_groups, local, cell_off, uniq, .. },
+            ) => {
                 let k = levels.len() / self.rows;
-                ensure(&mut s.wcodes, nr * cpr);
-                for tr in 0..nr {
-                    packing::unpack_wide_into(
-                        &self.codes,
-                        *bits,
-                        (r0 + tr) * cpr,
-                        &mut s.wcodes[tr * cpr..(tr + 1) * cpr],
-                    );
-                }
+                let n_groups = *n_groups;
                 ensure(&mut s.facc, n);
                 for (g, gr) in groups.iter().enumerate() {
                     let sx = &acts.scales[g * n..(g + 1) * n];
                     for tr in 0..nr {
-                        let row_levels = &levels[(r0 + tr) * k..(r0 + tr + 1) * k];
-                        s.lut.begin(k, n);
+                        let r = r0 + tr;
+                        let row_levels = &levels[r * k..(r + 1) * k];
+                        let cell = r * n_groups + g;
+                        let lo = cell_off[cell] as usize;
+                        let len = cell_off[cell + 1] as usize - lo;
+                        s.lut.begin_dense(len, n);
                         for c in gr.clone() {
-                            s.lut.add_row(
-                                s.wcodes[tr * cpr + c],
-                                &acts.q8[c * n..(c + 1) * n],
-                            );
+                            s.lut.add_local(local[r * cols + c], &acts.q8[c * n..(c + 1) * n]);
                         }
                         let facc = &mut s.facc[..n];
                         facc.fill(0.0);
-                        for &v in s.lut.touched() {
-                            let lvl = row_levels[v as usize];
-                            for (f, &b) in facc.iter_mut().zip(s.lut.bucket(v)) {
+                        // Dense local ids are first-seen order, so this
+                        // reproduces the stamped path's level order bit
+                        // for bit.
+                        for li in 0..len {
+                            let lvl = row_levels[uniq[lo + li] as usize];
+                            for (f, &b) in facc.iter_mut().zip(s.lut.bucket_local(li)) {
                                 *f += lvl * b as f32;
                             }
                         }
@@ -525,6 +572,9 @@ impl PackedLinear {
                         }
                     }
                 }
+            }
+            (scheme, cache) => {
+                unreachable!("weight cache variant mismatch: {scheme:?} vs {cache:?}")
             }
         }
         // FP32 outlier epilogue: the outlier weight multiplies the exact
@@ -787,11 +837,15 @@ pub fn encode_codebook(name: &str, m: &Mat) -> Result<PackedLinear> {
 // --------------------------------------------------------------- PackedModel
 
 /// A named collection of packed layers — the serving-side twin of
-/// [`WeightStore`], holding codes instead of dense f32.
+/// [`WeightStore`], holding codes instead of dense f32 — plus the
+/// pre-widened [`WeightCache`] the integer forward reads (index-aligned
+/// with `layers`, built once in [`Self::from_layers`], never serialized:
+/// [`Self::from_bytes`] rebuilds it from the codes).
 #[derive(Debug, Clone)]
 pub struct PackedModel {
     pub layers: Vec<PackedLinear>,
     index: BTreeMap<String, usize>,
+    cache: WeightCache,
     /// Calibration method the codes came from (reporting only).
     pub method: String,
     /// Nominal weight bit width (reporting only; codebook layers may pack
@@ -802,11 +856,25 @@ pub struct PackedModel {
 impl PackedModel {
     pub fn from_layers(layers: Vec<PackedLinear>, method: String, bits: usize) -> PackedModel {
         let index = layers.iter().enumerate().map(|(i, l)| (l.name.clone(), i)).collect();
-        PackedModel { layers, index, method, bits }
+        let cache = WeightCache::build(&layers);
+        PackedModel { layers, index, cache, method, bits }
     }
 
     pub fn get(&self, name: &str) -> &PackedLinear {
         &self.layers[*self.index.get(name).unwrap_or_else(|| panic!("no packed layer {name}"))]
+    }
+
+    /// A layer together with its pre-widened cache entry — what the
+    /// integer serving path looks up per application.
+    pub fn get_entry(&self, name: &str) -> (&PackedLinear, &LayerCache) {
+        let i = *self.index.get(name).unwrap_or_else(|| panic!("no packed layer {name}"));
+        (&self.layers[i], self.cache.entry(i))
+    }
+
+    /// Heap bytes held by the pre-widened weight cache (the serve
+    /// report's `weight_cache_bytes`).
+    pub fn weight_cache_bytes(&self) -> usize {
+        self.cache.bytes()
     }
 
     pub fn contains(&self, name: &str) -> bool {
@@ -1240,12 +1308,15 @@ impl PackedModel {
     }
 
     /// One incremental engine step over the whole block stack,
-    /// integer-domain path (per-layer int8 activation quantization feeding
-    /// the codes×int8 kernel). Result in `bufs.hidden()`.
+    /// integer-domain path (per-layer int8/int4 activation quantization
+    /// feeding the dispatched codes×codes kernel against the pre-widened
+    /// weight cache). Result in `bufs.hidden()`.
     pub fn step_int8(
         &self,
         pool: &Pool,
         scratch: &ServeScratch,
+        kern: &KernelDispatch,
+        act_bits: usize,
         acts: &mut QuantizedActs,
         x: &Mat,
         bufs: &mut LayerBufs,
@@ -1253,9 +1324,9 @@ impl PackedModel {
         let blocks = self.block_count();
         block_forward_into(
             &mut |name, xin, out| {
-                let l = self.get(name);
-                act_quant::quantize_into(xin, l.act_group(), acts);
-                l.forward_int8_into(pool, xin, acts, scratch, out);
+                let (l, lc) = self.get_entry(name);
+                act_quant::quantize_into_bits(xin, l.act_group(), act_bits, acts);
+                l.forward_int8_into(pool, xin, acts, lc, kern, scratch, out);
             },
             blocks,
             x,

@@ -1,0 +1,247 @@
+//! Pre-widened weight panel cache for the integer serving path.
+//!
+//! PR 4's int8 forward re-unpacked and re-widened every panel's weight
+//! codes on every call — per tick, per request, per layer. This module
+//! does that work exactly once, at [`super::PackedModel`] construction:
+//!
+//! * **Uniform / binary** layers widen their whole code stream to a
+//!   contiguous i16 array ([`LayerCache::Wide16`]) in the same
+//!   row-major `codes_per_row` layout the packed stream uses (binary: two
+//!   ±1 sign planes per row), so a panel's (row, K-group) slice is just
+//!   `codes16[r * cpr + gr.start .. r * cpr + gr.end]` — the direct
+//!   [`crate::tensor::arch`] `idot`/`idot4` operand.
+//! * **Codebook** layers are *localized per (row, act-K-group) cell*
+//!   ([`LayerCache::Codebook`]): each cell stores its distinct codes in
+//!   first-seen order (`uniq`, delimited by `cell_off`) and, per column,
+//!   the dense local id of that column's code (`local`). The LUT
+//!   accumulator then works on `cell_len ≤ group` dense buckets
+//!   ([`crate::tensor::igemm::LutAcc::begin_dense`]) instead of stamping
+//!   a `2^bits`-wide table — the per-group-codebook shrink that makes
+//!   wide (u16) codebooks cheap to serve.
+//!
+//! Determinism: the cache is a pure function of the layer (built
+//! serially, read-only afterwards), and the first-seen `uniq` order per
+//! cell reproduces the exact f32 epilogue order of the stamped
+//! `LutAcc::touched` path it replaces — cached and on-the-fly forwards
+//! are bit-identical (unit-tested below for all three schemes).
+
+use crate::quant::packing;
+use crate::serve::{PackScheme, PackedLinear};
+use crate::util::pool::chunk_ranges;
+
+/// One layer's pre-widened integer-kernel operands. Variant matches the
+/// layer's [`PackScheme`] (`Wide16` for uniform and binary, `Codebook`
+/// for codebooks).
+#[derive(Debug, Clone)]
+pub enum LayerCache {
+    /// Whole-layer contiguous i16 codes, row-major, `codes_per_row` per
+    /// row: raw 0..2^bits codes (uniform) or ±1 sign planes (binary).
+    Wide16 { codes16: Vec<i16> },
+    /// Per-(row, act-K-group) localized codebook cells, built for the
+    /// layer's fixed [`PackedLinear::act_group`] grid.
+    Codebook {
+        /// Act-quant K-group width the cells were built for.
+        group: usize,
+        /// Number of K-groups (`cols.div_ceil(group)`).
+        n_groups: usize,
+        /// Dense local code id per weight position: `local[r * cols + c]`
+        /// indexes the (r, c/group) cell's `uniq` run.
+        local: Vec<u16>,
+        /// Cell delimiters into `uniq`: cell `(r, g)` owns
+        /// `uniq[cell_off[r * n_groups + g] .. cell_off[r * n_groups + g + 1]]`.
+        cell_off: Vec<u32>,
+        /// Distinct codebook codes per cell, first-seen order, concatenated.
+        uniq: Vec<u16>,
+    },
+}
+
+impl LayerCache {
+    /// Build the cache for one layer — the once-per-load unpack+widen the
+    /// per-panel forward used to repeat.
+    pub fn build(pl: &PackedLinear) -> LayerCache {
+        let cpr = pl.codes_per_row();
+        match &pl.scheme {
+            PackScheme::Uniform { bits, .. } => {
+                let mut narrow = vec![0u8; pl.rows * cpr];
+                packing::unpack_into(&pl.codes, *bits, 0, &mut narrow);
+                LayerCache::Wide16 { codes16: narrow.iter().map(|&c| c as i16).collect() }
+            }
+            PackScheme::Binary { .. } => {
+                let mut narrow = vec![0u8; pl.rows * cpr];
+                packing::unpack_into(&pl.codes, 1, 0, &mut narrow);
+                LayerCache::Wide16 {
+                    codes16: narrow.iter().map(|&b| 2 * b as i16 - 1).collect(),
+                }
+            }
+            PackScheme::Codebook { bits, .. } => {
+                let group = pl.act_group();
+                let groups = chunk_ranges(pl.cols, group);
+                let n_groups = groups.len();
+                let mut rowbuf = vec![0u16; cpr];
+                let mut local = vec![0u16; pl.rows * pl.cols];
+                let mut cell_off = Vec::with_capacity(pl.rows * n_groups + 1);
+                cell_off.push(0u32);
+                let mut uniq: Vec<u16> = Vec::new();
+                for r in 0..pl.rows {
+                    packing::unpack_wide_into(&pl.codes, *bits, r * cpr, &mut rowbuf);
+                    for gr in &groups {
+                        let start = uniq.len();
+                        for c in gr.clone() {
+                            let code = rowbuf[c];
+                            let li = match uniq[start..].iter().position(|&u| u == code) {
+                                Some(i) => i,
+                                None => {
+                                    uniq.push(code);
+                                    uniq.len() - 1 - start
+                                }
+                            };
+                            local[r * pl.cols + c] = li as u16;
+                        }
+                        cell_off.push(uniq.len() as u32);
+                    }
+                }
+                LayerCache::Codebook { group, n_groups, local, cell_off, uniq }
+            }
+        }
+    }
+
+    /// Heap bytes this cache entry holds (the serve report's
+    /// `weight_cache_bytes` accounting).
+    pub fn bytes(&self) -> usize {
+        match self {
+            LayerCache::Wide16 { codes16 } => codes16.len() * 2,
+            LayerCache::Codebook { local, cell_off, uniq, .. } => {
+                local.len() * 2 + cell_off.len() * 4 + uniq.len() * 2
+            }
+        }
+    }
+}
+
+/// The per-model collection of [`LayerCache`] entries, index-aligned with
+/// [`super::PackedModel::layers`]. Built once at model construction,
+/// shared read-only across every panel worker.
+#[derive(Debug, Clone, Default)]
+pub struct WeightCache {
+    entries: Vec<LayerCache>,
+    bytes: usize,
+}
+
+impl WeightCache {
+    pub fn build(layers: &[PackedLinear]) -> WeightCache {
+        let entries: Vec<LayerCache> = layers.iter().map(LayerCache::build).collect();
+        let bytes = entries.iter().map(LayerCache::bytes).sum();
+        WeightCache { entries, bytes }
+    }
+
+    /// Cache entry of layer `i` (index-aligned with the model's layers).
+    pub fn entry(&self, i: usize) -> &LayerCache {
+        &self.entries[i]
+    }
+
+    /// Total heap bytes across all entries.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::uniform;
+    use crate::serve::{encode_binary, encode_codebook, encode_uniform};
+    use crate::tensor::Mat;
+    use crate::util::rng::Rng;
+
+    fn randmat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, 0.5);
+        m
+    }
+
+    /// The cache must round-trip bit-exactly against on-the-fly unpacking
+    /// for all three schemes — the cached forward reads these arrays in
+    /// place of `packing::unpack_into` per panel.
+    #[test]
+    fn cache_round_trips_against_on_the_fly_unpacking() {
+        let mut rng = Rng::new(11);
+        // Uniform: widened codes equal the freshly unpacked stream.
+        let w = randmat(&mut rng, 9, 64);
+        let pl = encode_uniform("u", &w, 16, 3);
+        let cpr = pl.codes_per_row();
+        match LayerCache::build(&pl) {
+            LayerCache::Wide16 { codes16 } => {
+                assert_eq!(codes16.len(), pl.rows * cpr);
+                let raw = packing::unpack(&pl.codes, 3, pl.rows * cpr);
+                for (i, (&c16, &c8)) in codes16.iter().zip(raw.iter()).enumerate() {
+                    assert_eq!(c16, c8 as i16, "uniform code {i}");
+                }
+            }
+            c => panic!("uniform layer built {c:?}"),
+        }
+        // Binary: ±1 widening of both sign planes.
+        let pl = encode_binary("b", &randmat(&mut rng, 5, 48));
+        let cpr = pl.codes_per_row();
+        match LayerCache::build(&pl) {
+            LayerCache::Wide16 { codes16 } => {
+                assert_eq!(codes16.len(), pl.rows * cpr);
+                let raw = packing::unpack(&pl.codes, 1, pl.rows * cpr);
+                for (i, (&c16, &b)) in codes16.iter().zip(raw.iter()).enumerate() {
+                    assert_eq!(c16, 2 * b as i16 - 1, "plane bit {i}");
+                    assert!(c16 == 1 || c16 == -1);
+                }
+            }
+            c => panic!("binary layer built {c:?}"),
+        }
+        // Codebook: local ids resolve through uniq back to the exact code
+        // stream, and each cell's uniq run is distinct + first-seen order.
+        let m = uniform::qdq_mat(&randmat(&mut rng, 6, 96), 32, 2);
+        let pl = encode_codebook("c", &m).unwrap();
+        match LayerCache::build(&pl) {
+            LayerCache::Codebook { group, n_groups, local, cell_off, uniq } => {
+                assert_eq!(group, pl.act_group());
+                assert_eq!(n_groups, pl.cols.div_ceil(group));
+                let bits = match &pl.scheme {
+                    PackScheme::Codebook { bits, .. } => *bits,
+                    _ => unreachable!(),
+                };
+                let mut raw = vec![0u16; pl.rows * pl.cols];
+                packing::unpack_wide_into(&pl.codes, bits, 0, &mut raw);
+                for r in 0..pl.rows {
+                    for (g, gr) in chunk_ranges(pl.cols, group).iter().enumerate() {
+                        let cell = r * n_groups + g;
+                        let run =
+                            &uniq[cell_off[cell] as usize..cell_off[cell + 1] as usize];
+                        let mut seen: Vec<u16> = Vec::new();
+                        for c in gr.clone() {
+                            let code = raw[r * pl.cols + c];
+                            if !seen.contains(&code) {
+                                seen.push(code);
+                            }
+                            assert_eq!(
+                                run[local[r * pl.cols + c] as usize],
+                                code,
+                                "({r},{c}) local id resolves wrong"
+                            );
+                        }
+                        assert_eq!(run, &seen[..], "cell ({r},{g}) uniq order");
+                    }
+                }
+            }
+            c => panic!("codebook layer built {c:?}"),
+        }
+    }
+
+    #[test]
+    fn bytes_accounting_is_consistent() {
+        let mut rng = Rng::new(12);
+        let layers = vec![
+            encode_uniform("a", &randmat(&mut rng, 8, 32), 16, 2),
+            encode_binary("b", &randmat(&mut rng, 4, 32)),
+        ];
+        let cache = WeightCache::build(&layers);
+        let want: usize = (0..layers.len()).map(|i| cache.entry(i).bytes()).sum();
+        assert_eq!(cache.bytes(), want);
+        // Wide16 stores i16 per code: 8*32 codes + 4*64 plane bits.
+        assert_eq!(cache.bytes(), (8 * 32 + 4 * 64) * 2);
+    }
+}

@@ -1,0 +1,308 @@
+//! Arch-aware integer kernel dispatch for the packed serving path.
+//!
+//! The integer forward reduces weight codes against activation codes in
+//! i32 ([`crate::tensor::igemm::idot`] and the nibble-paired
+//! [`idot4_scalar`] shape).
+//! Because every product fits i32 with huge margin and integer addition is
+//! associative, **every** evaluation order — scalar loop, AVX2
+//! `_mm256_madd_epi16`, NEON `smlal` — produces the same i32 bit pattern.
+//! That makes explicit SIMD kernels safe to dispatch at runtime: variants
+//! are bit-identical by construction, testable with hard equality, and the
+//! bit-determinism contract (`docs/CONTRACTS.md`, "kernel dispatch") never
+//! depends on which variant ran.
+//!
+//! [`KernelDispatch::select`] picks a variant once at startup
+//! (`--kernel auto|scalar|avx2|neon`): `auto` takes the best kernel the
+//! host supports (runtime feature detection — compile-time `cfg` gates
+//! only decide what *can* be selected), a forced variant errors cleanly on
+//! an unsupporting host, and `scalar` is always available as the checked
+//! reference.
+//!
+//! Arch-specific code lives in the `x86` / `neon` submodules. Convention
+//! (see `docs/CONTRACTS.md`): every `unsafe` block there carries a
+//! `SAFETY:` comment naming the cpu-feature precondition, and the only
+//! path to those blocks is a [`KernelKind`] whose `supported()` check
+//! passed. The files sit inside the `tensor` determinism-critical lint
+//! scope — `oac lint` scans them like any other module, and nothing in
+//! them needs a pragma: the rules fire on nondeterminism sources
+//! (HashMap, wall-clock, ad-hoc threads), not on `unsafe`/`cfg` per se.
+
+use anyhow::{bail, Result};
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+/// i16 × i16 → i32 dot kernel signature (weight codes × activation codes).
+pub type IdotFn = fn(&[i16], &[i16]) -> i32;
+
+/// Paired-nibble dot kernel signature: i16 weight codes against
+/// nibble-packed int4 activation codes (`q4.len() == w.len().div_ceil(2)`,
+/// low nibble first, odd-length tail padded with a zero nibble).
+pub type Idot4Fn = fn(&[i16], &[u8]) -> i32;
+
+/// The selectable kernel variants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Autovectorizer-friendly plain loops — always available, the checked
+    /// reference every SIMD variant must equal bit-for-bit.
+    Scalar,
+    /// x86-64 AVX2: `_mm256_madd_epi16` widening multiply-add.
+    Avx2,
+    /// aarch64 NEON: `smlal`-style widening multiply-accumulate.
+    Neon,
+}
+
+impl KernelKind {
+    /// Canonical CLI spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Neon => "neon",
+        }
+    }
+
+    /// Whether this host can run the variant (compile target + runtime
+    /// feature detection). `Scalar` is always true.
+    pub fn supported(&self) -> bool {
+        match self {
+            KernelKind::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(not(target_arch = "x86_64"))]
+            KernelKind::Avx2 => false,
+            #[cfg(target_arch = "aarch64")]
+            KernelKind::Neon => true,
+            #[cfg(not(target_arch = "aarch64"))]
+            KernelKind::Neon => false,
+        }
+    }
+
+    /// Every variant this host supports, scalar first — the axis the
+    /// bit-identity property tests and benches sweep.
+    pub fn available() -> Vec<KernelKind> {
+        [KernelKind::Scalar, KernelKind::Avx2, KernelKind::Neon]
+            .into_iter()
+            .filter(KernelKind::supported)
+            .collect()
+    }
+}
+
+/// The kernel set one serving run uses, selected once at startup and
+/// shared read-only by every panel worker. Which variant ran is recorded
+/// in the serve report (`kernel=` token) so speedups are attributable.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelDispatch {
+    pub kind: KernelKind,
+    /// i16 dot (int8 activation path).
+    pub idot: IdotFn,
+    /// Paired-nibble dot (int4 activation path).
+    pub idot4: Idot4Fn,
+}
+
+impl KernelDispatch {
+    /// The always-available scalar reference kernels.
+    pub fn scalar() -> KernelDispatch {
+        KernelDispatch {
+            kind: KernelKind::Scalar,
+            idot: idot_scalar,
+            idot4: idot4_scalar,
+        }
+    }
+
+    /// The best variant this host supports (`--kernel auto`).
+    pub fn auto() -> KernelDispatch {
+        #[cfg(target_arch = "x86_64")]
+        if KernelKind::Avx2.supported() {
+            return KernelDispatch::of(KernelKind::Avx2);
+        }
+        #[cfg(target_arch = "aarch64")]
+        if KernelKind::Neon.supported() {
+            return KernelDispatch::of(KernelKind::Neon);
+        }
+        KernelDispatch::scalar()
+    }
+
+    /// Dispatch table for a *supported* kind (callers go through
+    /// [`KernelDispatch::select`] or check [`KernelKind::supported`]).
+    pub fn of(kind: KernelKind) -> KernelDispatch {
+        debug_assert!(kind.supported(), "kernel {} not supported on this host", kind.name());
+        match kind {
+            KernelKind::Scalar => KernelDispatch::scalar(),
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2 => KernelDispatch {
+                kind: KernelKind::Avx2,
+                idot: x86::idot_avx2,
+                idot4: x86::idot4_avx2,
+            },
+            #[cfg(target_arch = "aarch64")]
+            KernelKind::Neon => KernelDispatch {
+                kind: KernelKind::Neon,
+                idot: neon::idot_neon,
+                idot4: neon::idot4_neon,
+            },
+            #[allow(unreachable_patterns)]
+            _ => KernelDispatch::scalar(),
+        }
+    }
+
+    /// Parse a `--kernel` spec. `auto` picks the best supported variant; a
+    /// forced variant errors if this host cannot run it (never a silent
+    /// scalar fallback — the report's `kernel=` token must mean what it
+    /// says).
+    pub fn select(spec: &str) -> Result<KernelDispatch> {
+        let kind = match spec {
+            "auto" => return Ok(KernelDispatch::auto()),
+            "scalar" => KernelKind::Scalar,
+            "avx2" => KernelKind::Avx2,
+            "neon" => KernelKind::Neon,
+            other => bail!("unknown --kernel `{other}` (auto | scalar | avx2 | neon)"),
+        };
+        if !kind.supported() {
+            bail!(
+                "--kernel {} is not supported on this host (available: {})",
+                kind.name(),
+                KernelKind::available()
+                    .iter()
+                    .map(|k| k.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+        }
+        Ok(KernelDispatch::of(kind))
+    }
+}
+
+/// Scalar i16 dot — the reference reduction loop (also the body
+/// [`crate::tensor::igemm::idot`] wraps).
+pub fn idot_scalar(w: &[i16], q: &[i16]) -> i32 {
+    debug_assert_eq!(w.len(), q.len(), "idot length mismatch");
+    let mut dot = 0i32;
+    for (a, b) in w.iter().zip(q.iter()) {
+        dot += *a as i32 * *b as i32;
+    }
+    dot
+}
+
+/// Sign-extend the low 4 bits of a nibble (two's-complement int4).
+#[inline]
+pub fn sext4(n: u8) -> i32 {
+    ((n as i8) << 4 >> 4) as i32
+}
+
+/// Scalar paired-nibble dot: each activation byte holds two int4 codes
+/// (low nibble = even element). `w.len()` may be odd; the padding nibble
+/// of the final byte is zero by the packing contract
+/// ([`crate::quant::act_quant`]) so the tail needs no branch in SIMD
+/// variants — this reference still guards it for arbitrary inputs.
+pub fn idot4_scalar(w: &[i16], q4: &[u8]) -> i32 {
+    debug_assert_eq!(q4.len(), w.len().div_ceil(2), "idot4 length mismatch");
+    let mut dot = 0i32;
+    let pairs = w.len() / 2;
+    for i in 0..pairs {
+        let b = q4[i];
+        dot += w[2 * i] as i32 * sext4(b & 0x0F);
+        dot += w[2 * i + 1] as i32 * sext4(b >> 4);
+    }
+    if w.len() % 2 == 1 {
+        dot += w[w.len() - 1] as i32 * sext4(q4[pairs] & 0x0F);
+    }
+    dot
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_codes(rng: &mut Rng, len: usize) -> (Vec<i16>, Vec<i16>) {
+        let w: Vec<i16> = (0..len).map(|_| rng.below(256) as i16).collect();
+        let q: Vec<i16> = (0..len).map(|_| rng.below(255) as i16 - 127).collect();
+        (w, q)
+    }
+
+    fn pack_nibbles(codes: &[i8]) -> Vec<u8> {
+        let mut out = vec![0u8; codes.len().div_ceil(2)];
+        for (i, &c) in codes.iter().enumerate() {
+            let n = (c as u8) & 0x0F;
+            out[i / 2] |= if i % 2 == 0 { n } else { n << 4 };
+        }
+        out
+    }
+
+    #[test]
+    fn scalar_idot_matches_i64_reference() {
+        let mut rng = Rng::new(0);
+        for len in [0usize, 1, 15, 16, 17, 64, 257] {
+            let (w, q) = rand_codes(&mut rng, len);
+            let want: i64 = w.iter().zip(&q).map(|(&a, &b)| a as i64 * b as i64).sum();
+            assert_eq!(idot_scalar(&w, &q) as i64, want, "len={len}");
+        }
+    }
+
+    #[test]
+    fn scalar_idot4_matches_unpacked_reference() {
+        let mut rng = Rng::new(1);
+        for len in [0usize, 1, 2, 15, 16, 17, 63, 64, 129] {
+            let w: Vec<i16> = (0..len).map(|_| rng.below(256) as i16).collect();
+            let codes: Vec<i8> = (0..len).map(|_| rng.below(15) as i8 - 7).collect();
+            let q4 = pack_nibbles(&codes);
+            let want: i64 =
+                w.iter().zip(&codes).map(|(&a, &b)| a as i64 * b as i64).sum();
+            assert_eq!(idot4_scalar(&w, &q4) as i64, want, "len={len}");
+        }
+    }
+
+    #[test]
+    fn sext4_covers_the_int4_range() {
+        for v in -8i32..=7 {
+            assert_eq!(sext4((v as u8) & 0x0F), v);
+        }
+    }
+
+    #[test]
+    fn every_available_variant_is_bit_identical_to_scalar() {
+        // Hard equality across dispatch variants: i32 accumulation is
+        // exact, so SIMD lane orders change nothing. Covers ragged tails
+        // (lengths straddling 16/32-lane boundaries) and extreme codes.
+        let mut rng = Rng::new(2);
+        let variants = KernelKind::available();
+        assert!(variants.contains(&KernelKind::Scalar));
+        for len in [0usize, 1, 7, 8, 15, 16, 17, 31, 32, 33, 63, 64, 65, 255] {
+            let (w, q) = rand_codes(&mut rng, len);
+            let codes: Vec<i8> = (0..len).map(|_| rng.below(15) as i8 - 7).collect();
+            let q4 = pack_nibbles(&codes);
+            let want = idot_scalar(&w, &q);
+            let want4 = idot4_scalar(&w, &q4);
+            for &kind in &variants {
+                let d = KernelDispatch::of(kind);
+                assert_eq!((d.idot)(&w, &q), want, "{} idot len={len}", kind.name());
+                assert_eq!((d.idot4)(&w, &q4), want4, "{} idot4 len={len}", kind.name());
+            }
+        }
+        // Magnitude ceiling: 1000 elements at |255·127| stays exact.
+        let w = vec![255i16; 1000];
+        let q = vec![-127i16; 1000];
+        for &kind in &variants {
+            assert_eq!((KernelDispatch::of(kind).idot)(&w, &q), -255 * 127 * 1000);
+        }
+    }
+
+    #[test]
+    fn select_parses_and_rejects() {
+        assert_eq!(KernelDispatch::select("scalar").unwrap().kind, KernelKind::Scalar);
+        let auto = KernelDispatch::select("auto").unwrap();
+        assert!(auto.kind.supported());
+        assert!(KernelDispatch::select("sse9").is_err());
+        // A forced variant either selects or errors with the host's
+        // available list — never silently falls back.
+        for spec in ["avx2", "neon"] {
+            match KernelDispatch::select(spec) {
+                Ok(d) => assert_eq!(d.kind.name(), spec),
+                Err(e) => assert!(e.to_string().contains("not supported"), "{e}"),
+            }
+        }
+    }
+}

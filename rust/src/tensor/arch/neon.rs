@@ -1,0 +1,86 @@
+//! NEON integer dot kernels (aarch64).
+//!
+//! Both kernels reduce through `smlal`/`smlal2` widening multiply-
+//! accumulates (`vmlal_s16`) into i32 accumulator vectors, with a scalar
+//! tail for ragged lengths. As with the AVX2 variants, every partial
+//! product fits i32 and integer addition is associative, so results are
+//! bit-identical to the scalar reference for every input.
+//!
+//! Safety convention (`docs/CONTRACTS.md`, "kernel dispatch"): NEON is
+//! baseline on aarch64, so [`super::KernelKind::supported`] is true for
+//! `Neon` whenever this module compiles at all; the `unsafe` blocks below
+//! carry `SAFETY:` comments for the load bounds.
+
+use std::arch::aarch64::*;
+
+use super::sext4;
+
+/// NEON i16 dot. Bit-identical to [`super::idot_scalar`].
+pub fn idot_neon(w: &[i16], q: &[i16]) -> i32 {
+    debug_assert_eq!(w.len(), q.len(), "idot length mismatch");
+    let n = w.len();
+    let mut i = 0usize;
+    // SAFETY: NEON is mandatory on aarch64 (this module only compiles
+    // there); all loads below are bounded by `i + 8 <= n`.
+    let mut dot = unsafe {
+        let mut acc = vdupq_n_s32(0);
+        while i + 8 <= n {
+            let wv = vld1q_s16(w.as_ptr().add(i));
+            let qv = vld1q_s16(q.as_ptr().add(i));
+            acc = vmlal_s16(acc, vget_low_s16(wv), vget_low_s16(qv));
+            acc = vmlal_high_s16(acc, wv, qv);
+            i += 8;
+        }
+        vaddvq_s32(acc)
+    };
+    while i < n {
+        dot += w[i] as i32 * q[i] as i32;
+        i += 1;
+    }
+    dot
+}
+
+/// NEON paired-nibble dot. Bit-identical to [`super::idot4_scalar`].
+pub fn idot4_neon(w: &[i16], q4: &[u8]) -> i32 {
+    debug_assert_eq!(q4.len(), w.len().div_ceil(2), "idot4 length mismatch");
+    let n = w.len();
+    let mut i = 0usize; // element (nibble) index; byte index is i / 2
+    // SAFETY: NEON is mandatory on aarch64; the 8-byte activation load and
+    // the two 8-lane w loads are bounded by `i + 16 <= n`.
+    let mut dot = unsafe {
+        let mut acc = vdupq_n_s32(0);
+        let lo_mask = vdup_n_u8(0x0F);
+        while i + 16 <= n {
+            let bytes = vld1_u8(q4.as_ptr().add(i / 2));
+            // Split nibbles and interleave so element order matches w:
+            // lo0,hi0,lo1,hi1,… (low nibble is the even element).
+            let lo = vand_u8(bytes, lo_mask);
+            let hi = vshr_n_u8::<4>(bytes);
+            let inter = vzip_u8(lo, hi); // .0 = elements 0..8, .1 = 8..16
+            // Widen u8 → i16, then sign-extend the 4-bit payload.
+            let a =
+                vshrq_n_s16::<12>(vshlq_n_s16::<12>(vreinterpretq_s16_u16(vmovl_u8(inter.0))));
+            let b =
+                vshrq_n_s16::<12>(vshlq_n_s16::<12>(vreinterpretq_s16_u16(vmovl_u8(inter.1))));
+            let w0 = vld1q_s16(w.as_ptr().add(i));
+            let w1 = vld1q_s16(w.as_ptr().add(i + 8));
+            acc = vmlal_s16(acc, vget_low_s16(w0), vget_low_s16(a));
+            acc = vmlal_high_s16(acc, w0, a);
+            acc = vmlal_s16(acc, vget_low_s16(w1), vget_low_s16(b));
+            acc = vmlal_high_s16(acc, w1, b);
+            i += 16;
+        }
+        vaddvq_s32(acc)
+    };
+    // Scalar tail over whole bytes (i is even here by construction).
+    while i + 2 <= n {
+        let byte = q4[i / 2];
+        dot += w[i] as i32 * sext4(byte & 0x0F);
+        dot += w[i + 1] as i32 * sext4(byte >> 4);
+        i += 2;
+    }
+    if i < n {
+        dot += w[i] as i32 * sext4(q4[i / 2] & 0x0F);
+    }
+    dot
+}

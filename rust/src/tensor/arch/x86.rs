@@ -1,0 +1,109 @@
+//! AVX2 integer dot kernels (x86-64).
+//!
+//! Both kernels reduce through `_mm256_madd_epi16` — the widening i16×i16
+//! multiply with pairwise i32 add — into an i32 accumulator vector, with a
+//! scalar tail for ragged lengths. Every partial product fits i32 and
+//! integer addition is associative, so the result is bit-identical to the
+//! scalar reference for every input (hard-equality tested in
+//! `arch::tests` and swept per-scheme in `rust/tests/serve_props.rs`).
+//!
+//! Safety convention (`docs/CONTRACTS.md`, "kernel dispatch"): the public
+//! wrappers here are safe fns that are only reachable through a
+//! [`super::KernelKind::supported`]-checked dispatch; each carries the one
+//! `unsafe` call into its `#[target_feature(enable = "avx2")]` inner fn,
+//! with a `SAFETY:` comment naming that precondition.
+
+use std::arch::x86_64::*;
+
+use super::sext4;
+
+/// AVX2 i16 dot. Bit-identical to [`super::idot_scalar`].
+pub fn idot_avx2(w: &[i16], q: &[i16]) -> i32 {
+    debug_assert_eq!(w.len(), q.len(), "idot length mismatch");
+    debug_assert!(super::KernelKind::Avx2.supported());
+    // SAFETY: dispatch only hands out this fn after
+    // `is_x86_feature_detected!("avx2")` returned true (KernelKind::
+    // supported), so the target-feature precondition holds.
+    unsafe { idot_avx2_impl(w, q) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn idot_avx2_impl(w: &[i16], q: &[i16]) -> i32 {
+    let n = w.len();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        // SAFETY: i + 16 <= n bounds both 32-byte unaligned loads.
+        let wv = _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i);
+        let qv = _mm256_loadu_si256(q.as_ptr().add(i) as *const __m256i);
+        // madd: pairwise i16×i16 → i32 sums; exact, order-free.
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(wv, qv));
+        i += 16;
+    }
+    let mut dot = hsum_epi32(acc);
+    while i < n {
+        dot += w[i] as i32 * q[i] as i32;
+        i += 1;
+    }
+    dot
+}
+
+/// AVX2 paired-nibble dot. Bit-identical to [`super::idot4_scalar`].
+pub fn idot4_avx2(w: &[i16], q4: &[u8]) -> i32 {
+    debug_assert_eq!(q4.len(), w.len().div_ceil(2), "idot4 length mismatch");
+    debug_assert!(super::KernelKind::Avx2.supported());
+    // SAFETY: same precondition as `idot_avx2` — only reachable through a
+    // supported() AVX2 dispatch.
+    unsafe { idot4_avx2_impl(w, q4) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn idot4_avx2_impl(w: &[i16], q4: &[u8]) -> i32 {
+    let n = w.len();
+    let mut acc = _mm256_setzero_si256();
+    let lo_mask = _mm_set1_epi8(0x0F);
+    let mut i = 0usize; // element (nibble) index; byte index is i / 2
+    while i + 32 <= n {
+        // SAFETY: i + 32 <= n means bytes i/2 .. i/2 + 16 exist, bounding
+        // the 16-byte load; the two 32-byte w loads are bounded likewise.
+        let bytes = _mm_loadu_si128(q4.as_ptr().add(i / 2) as *const __m128i);
+        // Split nibbles, then interleave bytewise so element order matches
+        // w: lo0,hi0,lo1,hi1,… (low nibble is the even element).
+        let lo = _mm_and_si128(bytes, lo_mask);
+        let hi = _mm_and_si128(_mm_srli_epi16::<4>(bytes), lo_mask);
+        let even = _mm_unpacklo_epi8(lo, hi); // elements 0..16
+        let odd = _mm_unpackhi_epi8(lo, hi); // elements 16..32
+        // Widen u8 → i16, then sign-extend the 4-bit payload: <<12 >>12
+        // arithmetic on i16 lanes.
+        let a = _mm256_srai_epi16::<12>(_mm256_slli_epi16::<12>(_mm256_cvtepu8_epi16(even)));
+        let b = _mm256_srai_epi16::<12>(_mm256_slli_epi16::<12>(_mm256_cvtepu8_epi16(odd)));
+        let w0 = _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i);
+        let w1 = _mm256_loadu_si256(w.as_ptr().add(i + 16) as *const __m256i);
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(w0, a));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(w1, b));
+        i += 32;
+    }
+    let mut dot = hsum_epi32(acc);
+    // Scalar tail over whole bytes (i is even here by construction).
+    while i + 2 <= n {
+        let byte = q4[i / 2];
+        dot += w[i] as i32 * sext4(byte & 0x0F);
+        dot += w[i + 1] as i32 * sext4(byte >> 4);
+        i += 2;
+    }
+    if i < n {
+        dot += w[i] as i32 * sext4(q4[i / 2] & 0x0F);
+    }
+    dot
+}
+
+/// Horizontal i32 sum of a 256-bit accumulator (order-free: i32 adds).
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi32(v: __m256i) -> i32 {
+    let hi = _mm256_extracti128_si256::<1>(v);
+    let lo = _mm256_castsi256_si128(v);
+    let s = _mm_add_epi32(lo, hi);
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_01_10_11>(s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_00_01>(s));
+    _mm_cvtsi128_si32(s)
+}

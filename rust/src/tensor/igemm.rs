@@ -98,6 +98,39 @@ impl LutAcc {
         let v = code as usize;
         &self.buckets[v * self.n..(v + 1) * self.n]
     }
+
+    /// Start accumulating one (row, K-group) cell addressed by *dense
+    /// local* code ids `0..len` (the per-group codebook localization built
+    /// by `serve::weight_cache`). Unlike [`Self::begin`], buckets are
+    /// cleared eagerly — `len` is bounded by the K-group size, so the
+    /// clear is O(group·n) instead of O(codebook·n), which is the whole
+    /// point of per-group codebooks for wide (up to 16-bit) LUTs.
+    pub fn begin_dense(&mut self, len: usize, n: usize) {
+        self.n = n;
+        if self.buckets.len() < len * n {
+            self.buckets.resize(len * n, 0);
+        }
+        self.buckets[..len * n].fill(0);
+    }
+
+    /// Fold one activation row into the bucket of dense local id `local`.
+    pub fn add_local(&mut self, local: u16, qx_row: &[i8]) {
+        let v = local as usize;
+        let n = self.n;
+        debug_assert_eq!(qx_row.len(), n, "LutAcc row width mismatch");
+        let row = &mut self.buckets[v * n..(v + 1) * n];
+        for (b, &q) in row.iter_mut().zip(qx_row.iter()) {
+            *b += q as i32;
+        }
+    }
+
+    /// The i32 partial-sum row of dense local id `local` (valid after
+    /// [`Self::begin_dense`]; local ids index the cell's first-seen-order
+    /// distinct-code list, so iterating `0..len` reproduces the exact f32
+    /// epilogue order of the stamped [`Self::touched`] path).
+    pub fn bucket_local(&self, local: usize) -> &[i32] {
+        &self.buckets[local * self.n..(local + 1) * self.n]
+    }
 }
 
 #[cfg(test)]
@@ -154,6 +187,38 @@ mod tests {
             }
             let distinct: std::collections::BTreeSet<u16> = codes.iter().copied().collect();
             assert_eq!(seen, distinct, "round {round}");
+        }
+    }
+
+    #[test]
+    fn dense_buckets_match_stamped_buckets() {
+        let mut rng = Rng::new(2);
+        let (k, n, cols) = (64usize, 3usize, 24usize);
+        let codes: Vec<u16> = (0..cols).map(|_| rng.below(k) as u16).collect();
+        let qx: Vec<i8> = (0..cols * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        // Localize codes to dense first-seen ids, as the weight cache does.
+        let mut uniq: Vec<u16> = Vec::new();
+        let local: Vec<u16> = codes
+            .iter()
+            .map(|&c| match uniq.iter().position(|&u| u == c) {
+                Some(i) => i as u16,
+                None => {
+                    uniq.push(c);
+                    (uniq.len() - 1) as u16
+                }
+            })
+            .collect();
+        let mut stamped = LutAcc::default();
+        stamped.begin(k, n);
+        let mut dense = LutAcc::default();
+        dense.begin_dense(uniq.len(), n);
+        for c in 0..cols {
+            stamped.add_row(codes[c], &qx[c * n..(c + 1) * n]);
+            dense.add_local(local[c], &qx[c * n..(c + 1) * n]);
+        }
+        assert_eq!(stamped.touched(), &uniq[..], "first-seen order must agree");
+        for (li, &code) in uniq.iter().enumerate() {
+            assert_eq!(dense.bucket_local(li), stamped.bucket(code), "local {li}");
         }
     }
 

@@ -8,6 +8,7 @@
 //! Table-3 precision study, and `igemm` the integer-domain dot/LUT kernels
 //! behind the int8 serving forward.
 
+pub mod arch;
 pub mod half;
 pub mod hadamard;
 pub mod igemm;

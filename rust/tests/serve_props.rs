@@ -10,11 +10,18 @@
 //! 2. **Export == calibration, bitwise.** A `PackedModel` exported from a
 //!    calibrated synthetic run must decode to exactly the weights the
 //!    calibration produced, for every servable backend.
-//! 3. **Int8 is deterministic and bounded.** The integer-domain forward
-//!    (`forward_int8_with`) must be bit-identical across thread counts
+//! 3. **Integer serving is deterministic and bounded.** The
+//!    integer-domain forward (`forward_int_with`, int8 and nibble-packed
+//!    int4 activations) must be bit-identical across thread counts
 //!    (checksum-stable) for every scheme and bit width, and its deviation
 //!    from the exact forward must stay within half an activation
-//!    quantization step per element.
+//!    quantization step per element — at either width, since the bound is
+//!    expressed in that width's own scales.
+//! 4. **Kernel dispatch is numerics-free.** `--kernel scalar` must
+//!    checksum-equal `--kernel auto` (and every forced variant the host
+//!    supports) for every registered backend × act-bits {0, 4, 8} ×
+//!    threads {1, 2, 4, 8}: i32 accumulation is exact, so vectorization
+//!    is never a numerics change.
 
 use oac::calib::{registry, Backend, CalibConfig, Method};
 use oac::coordinator::{
@@ -287,11 +294,12 @@ fn schemes_of(rng: &mut Rng, rows: usize, cols16: usize, bits: usize) -> Vec<ser
 }
 
 #[test]
-fn prop_int8_forward_thread_invariant_all_schemes() {
+fn prop_int_forward_thread_invariant_all_schemes() {
     // The integer-domain forward must be bit-identical (checksum-stable)
-    // across thread counts for every scheme and every bit width 1-8.
+    // across thread counts for every scheme, every weight bit width 1-8,
+    // and both activation widths (int8 and nibble-packed int4).
     check(
-        "int8 forward bit-identical across threads, schemes x bits 1-8",
+        "int forward bit-identical across threads, schemes x bits 1-8 x act-bits 8/4",
         PropConfig { cases: 12, seed: 0x18A7 },
         |rng| {
             let bits = 1 + rng.below(8);
@@ -305,18 +313,24 @@ fn prop_int8_forward_thread_invariant_all_schemes() {
             let mut rng = Rng::new(seed);
             for pl in schemes_of(&mut rng, rows, cols16, bits) {
                 let x = randmat(&mut rng, pl.cols, batch);
-                let want = bits_of(&pl.forward_int8_with(&Pool::serial(), &x));
-                let checksum = {
-                    let y = pl.forward_int8_with(&Pool::serial(), &x);
-                    digest::fnv1a_f32(digest::FNV_OFFSET, &y.data)
-                };
-                for t in THREAD_COUNTS {
-                    let y = pl.forward_int8_with(&Pool::new(t), &x);
-                    if bits_of(&y) != want {
-                        return Err(format!("{}: int8 diverged at {t} threads", pl.name));
-                    }
-                    if digest::fnv1a_f32(digest::FNV_OFFSET, &y.data) != checksum {
-                        return Err(format!("{}: checksum unstable at {t} threads", pl.name));
+                for act_bits in [8usize, 4] {
+                    let y0 = pl.forward_int_with(&Pool::serial(), &x, act_bits);
+                    let want = bits_of(&y0);
+                    let checksum = digest::fnv1a_f32(digest::FNV_OFFSET, &y0.data);
+                    for t in THREAD_COUNTS {
+                        let y = pl.forward_int_with(&Pool::new(t), &x, act_bits);
+                        if bits_of(&y) != want {
+                            return Err(format!(
+                                "{}: int{act_bits} diverged at {t} threads",
+                                pl.name
+                            ));
+                        }
+                        if digest::fnv1a_f32(digest::FNV_OFFSET, &y.data) != checksum {
+                            return Err(format!(
+                                "{}: int{act_bits} checksum unstable at {t} threads",
+                                pl.name
+                            ));
+                        }
                     }
                 }
             }
@@ -325,15 +339,22 @@ fn prop_int8_forward_thread_invariant_all_schemes() {
     );
 }
 
-/// The per-element error bound of the int8 path against the exact decoded
-/// weights: `bound(r,j) = Σ_c |ŵ[r,c]| · sx[g(c),j] / 2` (outlier columns
-/// excluded — they see full-precision activations), with multiplicative and
-/// additive slop for f32 accumulation-order differences.
-fn assert_int8_error_bounded(pl: &serve::PackedLinear, x: &Mat) -> Result<(), String> {
+/// The per-element error bound of the integer path against the exact
+/// decoded weights: `bound(r,j) = Σ_c |ŵ[r,c]| · sx[g(c),j] / 2` (outlier
+/// columns excluded — they see full-precision activations), with
+/// multiplicative and additive slop for f32 accumulation-order
+/// differences. The same formula covers int8 and int4: `sx` comes from
+/// the width actually served (amax/127 vs amax/7 grids), and round-to-
+/// nearest stays within half a step of either.
+fn assert_int_error_bounded(
+    pl: &serve::PackedLinear,
+    x: &Mat,
+    act_bits: usize,
+) -> Result<(), String> {
     let dq = pl.dequantize();
     let exact = dq.matmul_with(&Pool::serial(), x);
-    let got = pl.forward_int8_with(&Pool::serial(), x);
-    let acts = act_quant::quantize(x, pl.act_group());
+    let got = pl.forward_int_with(&Pool::serial(), x, act_bits);
+    let acts = act_quant::quantize_bits(x, pl.act_group(), act_bits);
     let outliers: std::collections::BTreeSet<(usize, usize)> =
         pl.outliers.iter().map(|&(r, c, _)| (r as usize, c as usize)).collect();
     for r in 0..pl.rows {
@@ -352,7 +373,7 @@ fn assert_int8_error_bounded(pl: &serve::PackedLinear, x: &Mat) -> Result<(), St
             let limit = bound * 1.01 + mag * 1e-3 + 1e-4;
             if err > limit {
                 return Err(format!(
-                    "{}: ({r},{j}) err {err:.3e} > limit {limit:.3e}",
+                    "{} act_bits={act_bits}: ({r},{j}) err {err:.3e} > limit {limit:.3e}",
                     pl.name
                 ));
             }
@@ -362,12 +383,13 @@ fn assert_int8_error_bounded(pl: &serve::PackedLinear, x: &Mat) -> Result<(), St
 }
 
 #[test]
-fn prop_int8_forward_error_bounded_all_schemes() {
-    // |int8 - exact| per output element is bounded by the activation
+fn prop_int_forward_error_bounded_all_schemes() {
+    // |int - exact| per output element is bounded by the activation
     // quantization half-steps weighted by the decoded weight magnitudes
-    // (plus f32 accumulation slop): err(r,j) <= Σ_c |ŵ[r,c]|·sx[g(c),j]/2.
+    // (plus f32 accumulation slop): err(r,j) <= Σ_c |ŵ[r,c]|·sx[g(c),j]/2
+    // — at 8 bits AND at 4 bits, each in its own (coarser) scales.
     check(
-        "int8 forward error within activation half-steps",
+        "int8/int4 forward error within activation half-steps",
         PropConfig { cases: 10, seed: 0xB04D },
         |rng| {
             let bits = 2 + rng.below(7);
@@ -381,7 +403,9 @@ fn prop_int8_forward_error_bounded_all_schemes() {
             let mut rng = Rng::new(seed);
             for pl in schemes_of(&mut rng, rows, cols16, bits) {
                 let x = randmat(&mut rng, pl.cols, batch);
-                assert_int8_error_bounded(&pl, &x)?;
+                for act_bits in [8usize, 4] {
+                    assert_int_error_bounded(&pl, &x, act_bits)?;
+                }
             }
             Ok(())
         },
@@ -404,8 +428,9 @@ fn int8_outliers_see_full_precision_activations() {
     assert_eq!(pl.outliers.len(), 2);
     let x = randmat(&mut rng, 32, 4);
     // The bound below EXCLUDES the outlier positions: it only passes if the
-    // outlier columns are served at full precision.
-    assert_int8_error_bounded(&pl, &x).unwrap();
+    // outlier columns are served at full precision — at both act widths.
+    assert_int_error_bounded(&pl, &x, 8).unwrap();
+    assert_int_error_bounded(&pl, &x, 4).unwrap();
     // And the outputs really carry the outlier contribution.
     let exact = pl.dequantize().matmul_with(&Pool::serial(), &x);
     let got = pl.forward_int8_with(&Pool::serial(), &x);
@@ -426,7 +451,8 @@ fn int8_wide_codebook_layer_serves() {
     for t in THREAD_COUNTS {
         assert_eq!(bits_of(&pl.forward_int8_with(&Pool::new(t), &x)), want, "threads={t}");
     }
-    assert_int8_error_bounded(&pl, &x).unwrap();
+    assert_int_error_bounded(&pl, &x, 8).unwrap();
+    assert_int_error_bounded(&pl, &x, 4).unwrap();
 }
 
 #[test]
@@ -434,8 +460,8 @@ fn prefix_sharing_bit_identical_for_all_backends() {
     // Registry-driven: for EVERY registered backend's packed export, a
     // request served via a shared prompt prefix (LCP cache hit) must be
     // bit-identical to the same request served from scratch
-    // (`prefix_share: false`), across threads 1/2/4/8 and both numeric
-    // paths (exact f32 and int8). The staggered arrival schedule
+    // (`prefix_share: false`), across threads 1/2/4/8 and every numeric
+    // path (exact f32, int8, int4). The staggered arrival schedule
     // guarantees cache hits: same-group requests admitted later start on
     // the earlier request's cached prefix state.
     for &backend in registry::all() {
@@ -444,7 +470,7 @@ fn prefix_sharing_bit_identical_for_all_backends() {
         let spec = SyntheticSpec { blocks: 1, d_model: 32, d_ff: 64, ..SyntheticSpec::default() };
         let cfg = PipelineConfig::new(Method::baseline(backend), bits);
         let (model, _) = serve::build_synthetic(&spec, &cfg).unwrap();
-        for act_bits in [0usize, 8] {
+        for act_bits in [0usize, 4, 8] {
             let base = engine::ServeConfig {
                 requests: 6,
                 seed: 3,
@@ -593,6 +619,61 @@ fn prop_prefix_cache_cap_is_bit_transparent() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn kernel_dispatch_bit_identical_for_all_backends() {
+    // Contract 4: which integer kernel runs is a vectorization choice,
+    // never a numerics choice. For every registered backend's packed
+    // export, `--kernel scalar`, `--kernel auto`, and every forced variant
+    // this host supports must produce ONE checksum per (act-bits) — stable
+    // across threads 1/2/4/8 too, so thread count and kernel variant are
+    // checked against each other simultaneously. The exact path (act-bits
+    // 0) rides along: it never calls the kernels, but selection must still
+    // succeed and report honestly.
+    use oac::tensor::arch::KernelKind;
+    let specs: Vec<String> = std::iter::once("auto".to_string())
+        .chain(KernelKind::available().iter().map(|k| k.name().to_string()))
+        .collect();
+    for &backend in registry::all() {
+        let supported = backend.supported_bits();
+        let bits = if supported.contains(&2) { 2 } else { *supported.start() };
+        let spec = SyntheticSpec { blocks: 1, d_model: 32, d_ff: 64, ..SyntheticSpec::default() };
+        let cfg = PipelineConfig::new(Method::baseline(backend), bits);
+        let (model, _) = serve::build_synthetic(&spec, &cfg).unwrap();
+        for act_bits in [0usize, 4, 8] {
+            let mut reference: Option<u64> = None;
+            for threads in THREAD_COUNTS {
+                for kernel in &specs {
+                    let rep = engine::run(
+                        &model,
+                        &engine::ServeConfig {
+                            requests: 5,
+                            threads,
+                            seed: 7,
+                            act_bits,
+                            kernel: kernel.clone(),
+                            baseline: false,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap();
+                    if kernel != "auto" {
+                        assert_eq!(&rep.kernel, kernel, "report must name the forced variant");
+                    }
+                    assert!(rep.weight_cache_bytes > 0);
+                    match reference {
+                        None => reference = Some(rep.checksum),
+                        Some(want) => assert_eq!(
+                            want, rep.checksum,
+                            "{backend:?} act_bits={act_bits} threads={threads} \
+                             kernel={kernel}: checksum diverged"
+                        ),
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[test]
